@@ -1,0 +1,57 @@
+//! End-to-end validation driver (Fig. 4 + Table 1): trains a real
+//! transformer with EVERY method of the paper over the synthetic
+//! corpus through the full three-layer stack, logging loss curves and
+//! the probe-PPL table. This is the run recorded in EXPERIMENTS.md.
+//!
+//! Run:   cargo run --release --example convergence -- \
+//!            [--model tiny] [--steps 240] [--noisy] [--mesh 2x4]
+//! Costs: ~minutes at the default `test` scale; use `--model tiny
+//!        --steps 240` for the headline run (longer).
+
+use edit_train::coordinator::{MeshSpec, Method};
+use edit_train::experiments::{convergence, ExpOpts};
+use edit_train::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let mesh = {
+        let s = args.str("mesh", "2x4");
+        let (m, n) = s.split_once('x').unwrap_or(("2", "4"));
+        MeshSpec::new(m.parse()?, n.parse()?)
+    };
+    let opts = ExpOpts {
+        model: args.str("model", "test"),
+        steps: args.u64("steps", 96),
+        tau: args.u64("tau", 8),
+        mesh,
+        log: args.flag("log"),
+        ..ExpOpts::default()
+    };
+    let noisy = args.flag("noisy");
+    let methods = Method::ALL;
+
+    println!(
+        "convergence driver: model={} steps={} mesh={}x{} corpus={}",
+        opts.model,
+        opts.steps,
+        opts.mesh.shard,
+        opts.mesh.replicas,
+        if noisy { "noisy" } else { "clean" }
+    );
+    let finals = convergence::fig4(&opts, &methods, noisy)?;
+    convergence::table1(&opts, &methods, noisy)?;
+
+    // The paper's headline ordering: EDiT at or near the best loss.
+    let edit = finals.iter().find(|(m, _, _)| *m == Method::Edit).unwrap();
+    let best = finals
+        .iter()
+        .map(|&(_, loss, _)| loss)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nEDiT final loss {:.4} vs best {:.4} (gap {:+.4})",
+        edit.1,
+        best,
+        edit.1 - best
+    );
+    Ok(())
+}

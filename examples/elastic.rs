@@ -1,0 +1,20 @@
+//! Elastic-training scenario (Fig. 6c): scale the replica count
+//! 1→2→4→8 and 8→4→2→1 at a fixed learning rate and compare the PPL
+//! trajectories of Baseline vs EDiT across rescale boundaries.
+//!
+//! Run: cargo run --release --example elastic -- [--phase-steps 24] [--lr 2e-3]
+
+use edit_train::experiments::{scaling, ExpOpts};
+use edit_train::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let opts = ExpOpts {
+        model: args.str("model", "test"),
+        tau: args.u64("tau", 4),
+        ..ExpOpts::default()
+    };
+    scaling::fig6c(&opts, args.u64("phase-steps", 24), args.f64("lr", 2e-3))?;
+    println!("curves -> results/fig6c_elastic.csv");
+    Ok(())
+}

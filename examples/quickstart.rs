@@ -1,0 +1,60 @@
+//! Quickstart: the smallest end-to-end tour of the three-layer stack.
+//!
+//! 1. Load the AOT artifacts (L2 JAX model + L1 Pallas kernels, lowered
+//!    to HLO text by `make artifacts`) into the PJRT CPU runtime.
+//! 2. Train a few EDiT rounds on a 2×2 mesh over the synthetic corpus.
+//! 3. Run one pseudo-gradient penalty combine through the AOT Pallas
+//!    kernel (the L1 path the coordinator can use at sync time).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use edit_train::collectives::{CostModel, Topology};
+use edit_train::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
+use edit_train::data::{Corpus, Quality};
+use edit_train::runtime::Engine;
+use edit_train::tensor;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // --- 1. runtime ---------------------------------------------------------
+    let engine = Engine::load(&artifacts, "test")?;
+    println!(
+        "loaded '{}' on {}: {} params, {} modules",
+        engine.manifest.model.name,
+        engine.platform(),
+        engine.manifest.total_params,
+        engine.manifest.table.num_modules()
+    );
+
+    // --- 2. a short EDiT run ------------------------------------------------
+    let corpus = Corpus::new(engine.manifest.model.vocab_size, 42, Quality::clean());
+    let mesh = MeshSpec::new(2, 2); // 2-way sharding x 2 replicas
+    let mut cfg = TrainConfig::paper_default(Method::Edit, mesh, 24);
+    cfg.tau = 4;
+    cfg.t_warm = 4;
+    cfg.log_every = 1;
+    let mut trainer = Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100()))?;
+    let summary = trainer.run()?;
+    println!(
+        "EDiT: final loss {:.3}, val PPL {:.2}, {} syncs, {:.1} simulated s",
+        summary.final_loss, summary.final_ppl, summary.syncs, summary.sim_seconds
+    );
+
+    // --- 3. the L1 penalty kernel through PJRT ------------------------------
+    let engine = trainer.engine_mut();
+    let n = engine.manifest.total_params;
+    let deltas: Vec<Vec<f32>> = (0..2)
+        .map(|j| (0..n).map(|i| ((i + j) % 13) as f32 / 13.0 - 0.5).collect())
+        .collect();
+    let norms: Vec<f32> = deltas.iter().map(|d| tensor::norm(d) as f32).collect();
+    let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+    let combined = engine.penalty_combine(&refs, &norms)?;
+    println!(
+        "penalty combine via Pallas HLO: |out| = {:.4} (phi = {})",
+        tensor::norm(&combined),
+        engine.manifest.penalty_phi
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT bridge: lower every exported program to HLO text + manifest.
+
+Python runs ONCE (``make artifacts``); the Rust binary is self-contained
+afterwards.  Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config this writes ``artifacts/<config>/``:
+
+  train_step.hlo.txt    fused inner step (fwd+bwd+clip+AdamW)
+  grad_step.hlo.txt     grads+loss (DDP / warmup path)
+  apply_step.hlo.txt    AdamW apply of externally averaged grads
+  eval_step.hlo.txt     loss only
+  penalty_w{N}.hlo.txt  Alg. 2 combine for sync groups of N workers
+  init.bin              initial flat parameters (little-endian f32)
+  manifest.json         flat layout table, shapes, hyperparameters
+
+plus ``artifacts/golden/penalty.json`` — golden vectors the Rust unit
+tests use to cross-check their pure-Rust penalty implementation against
+the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import penalty as P
+
+PENALTY_GROUP_SIZES = (2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (NOT proto serialization)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def export_config(cfg: M.ModelConfig, out_root: str, *, phi: float = 10.0,
+                  group_sizes=PENALTY_GROUP_SIZES, seed: int = 0) -> dict:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    _, total, table = M.flatten_spec(cfg)
+    programs = M.build_programs(cfg)
+
+    files = {}
+    for name, (fn, args) in programs.items():
+        text = lower_fn(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[name] = fname
+        print(f"  {cfg.name}/{fname}: {len(text)} chars")
+
+    penalty_files = {}
+    for n in group_sizes:
+        fn, args = P.penalty_for_aot(n, total, phi=phi)
+        text = lower_fn(fn, args)
+        fname = f"penalty_w{n}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        penalty_files[str(n)] = fname
+        print(f"  {cfg.name}/{fname}: {len(text)} chars")
+
+    init = np.asarray(M.init_flat(cfg, seed=seed), dtype="<f4")
+    init.tofile(os.path.join(out_dir, "init.bin"))
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "vocab_size": cfg.vocab_size,
+            "num_layers": cfg.num_layers,
+            "hidden_size": cfg.hidden_size,
+            "intermediate_size": cfg.intermediate_size,
+            "num_heads": cfg.num_heads,
+            "seq_len": cfg.seq_len,
+            "batch_size": cfg.batch_size,
+            "beta1": cfg.beta1,
+            "beta2": cfg.beta2,
+            "adam_eps": cfg.adam_eps,
+            "weight_decay": cfg.weight_decay,
+            "grad_clip": cfg.grad_clip,
+        },
+        "total_params": total,
+        "init_seed": seed,
+        "penalty_phi": phi,
+        "tensors": [
+            {
+                "name": name,
+                "shape": list(shape),
+                "offset": offset,
+                "size": size,
+                # Stacked per-layer tensors: leading dim == num_layers.
+                "stacked": name.startswith("layers.")
+                and len(shape) >= 1
+                and shape[0] == cfg.num_layers,
+            }
+            for (name, shape, offset, size) in table
+        ],
+        "programs": files,
+        "penalty_programs": penalty_files,
+        "init_file": "init.bin",
+        "token_shape": [cfg.batch_size, cfg.seq_len + 1],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def export_golden(out_root: str, *, phi: float = 10.0, seed: int = 7) -> None:
+    """Golden penalty vectors for the Rust cross-check tests."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for w, n, anomalies in [(2, 16, []), (4, 64, [2]), (8, 32, [0, 5]),
+                            (4, 48, [0, 1, 2, 3])]:
+        deltas = rng.standard_normal((w, n)).astype(np.float32)
+        norms = np.sqrt((deltas.astype(np.float64) ** 2).sum(-1)).astype(
+            np.float32
+        )
+        norms[anomalies] = np.inf
+        out, weights, beta = P.penalty_combine(
+            jnp.asarray(deltas), jnp.asarray(norms), phi=phi, chunk=16
+        )
+        cases.append(
+            {
+                "phi": phi,
+                "deltas": deltas.reshape(-1).tolist(),
+                "num_workers": w,
+                "n": n,
+                "norms": ["inf" if not np.isfinite(x) else float(x)
+                          for x in norms],
+                "expected": np.asarray(out).reshape(-1).tolist(),
+                "weights": np.asarray(weights).tolist(),
+                "beta": float(beta),
+            }
+        )
+    os.makedirs(os.path.join(out_root, "golden"), exist_ok=True)
+    with open(os.path.join(out_root, "golden", "penalty.json"), "w") as f:
+        json.dump(cases, f)
+    print(f"  golden/penalty.json: {len(cases)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts root directory")
+    ap.add_argument("--configs", nargs="*", default=["test", "tiny"],
+                    help=f"model presets to export (of {list(M.CONFIGS)})")
+    ap.add_argument("--phi", type=float, default=10.0,
+                    help="pseudo-gradient clip threshold baked into penalty")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.configs:
+        cfg = M.CONFIGS[name]
+        print(f"exporting config '{name}' ...")
+        export_config(cfg, args.out, phi=args.phi)
+    export_golden(args.out, phi=args.phi)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

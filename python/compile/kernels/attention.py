@@ -1,0 +1,316 @@
+"""Pallas flash attention (forward + backward), TPU-idiom, interpret mode.
+
+The paper's compute hot-spot is the transformer forward/backward; its
+attention is re-thought for TPU Pallas rather than ported from CUDA
+(DESIGN.md §8 Hardware-Adaptation):
+
+  * CUDA threadblock tiling     -> BlockSpec grid over (batch*heads, q-blocks)
+  * shared-memory staging       -> VMEM blocks (q/k/v tiles)
+  * warp-level online softmax   -> per-block running (max, sum) carried in
+                                   registers/VMEM, no HBM round-trip of QK^T
+  * HBM<->SMEM double buffering -> grid-order prefetch implied by the
+                                   BlockSpec index maps
+
+Kernels run with ``interpret=True`` so the lowered HLO executes on the
+CPU PJRT client (real-TPU lowering emits a Mosaic custom-call the CPU
+plugin cannot run); block shapes are still chosen MXU-sized (multiples
+of 128 when the sequence allows) so the same code is TPU-plausible.
+
+The backward pass is implemented as two Pallas kernels (dq, then dk/dv)
+wired through ``jax.custom_vjp`` using the standard flash-attention
+recomputation trick: the forward saves only O and the per-row
+log-sum-exp; the backward rebuilds P block-by-block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+_NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() exactly 0 without NaNs
+
+
+def _pick_block(seq_len: int, requested: int) -> int:
+    """Largest power-of-two block <= requested that divides seq_len."""
+    b = min(requested, seq_len)
+    while b > 1 and seq_len % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, sm_scale, block_k,
+                causal, block_q, seq_len):
+    """One (batch*head, q-block) program of the online-softmax forward.
+
+    Block shapes (VMEM):
+      q_ref:   (block_q, d)     o_ref: (block_q, d)
+      k_ref:   (seq_len, d)     lse_ref: (block_q,)
+      v_ref:   (seq_len, d)
+    """
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    block_d = q.shape[-1]
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, block_d), jnp.float32)
+
+    num_kb = seq_len // block_k
+    row_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (block_q, block_k)
+        if causal:
+            col_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+def _fwd(q, k, v, causal, sm_scale, block_q, block_k):
+    batch, heads, seq, d = q.shape
+    bq = _pick_block(seq, block_q)
+    bk = _pick_block(seq, block_k)
+    bh = batch * heads
+    qf = q.reshape(bh, seq, d)
+    kf = k.reshape(bh, seq, d)
+    vf = v.reshape(bh, seq, d)
+
+    grid = (bh, seq // bq)
+    kernel = functools.partial(
+        _fwd_kernel, sm_scale=sm_scale, block_k=bk, causal=causal,
+        block_q=bq, seq_len=seq,
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, bq), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(batch, heads, seq, d), lse.reshape(batch, heads, seq)
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+                   sm_scale, block_k, causal, block_q, seq_len):
+    """dq for one q-block: dq = sum_j dS_j @ K_j * scale."""
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].astype(jnp.float32)
+    delta = delta_ref[...].astype(jnp.float32)
+    row_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    num_kb = seq_len // block_k
+
+    def body(j, dq):
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = (q @ k.T) * sm_scale
+        if causal:
+            col_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # softmax probs, rebuilt from lse
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ k
+
+    dq = jax.lax.fori_loop(
+        0, num_kb, body, jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    )
+    dq_ref[...] = (dq * sm_scale).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, sm_scale, block_q, causal, block_k,
+                    seq_len):
+    """dk/dv for one k-block: dv = P^T dO ; dk = dS^T Q * scale."""
+    ki = pl.program_id(1)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    col_ids = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    num_qb = seq_len // block_q
+    d = k.shape[-1]
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        do = do_ref[pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        lse = lse_ref[pl.ds(i * block_q, block_q)].astype(jnp.float32)
+        delta = delta_ref[pl.ds(i * block_q, block_q)].astype(jnp.float32)
+        s = (q @ k.T) * sm_scale  # (block_q, block_k)
+        if causal:
+            row_ids = i * block_q + jax.lax.iota(jnp.int32, block_q)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv_new = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        dk_new = dk + ds.T @ q
+        return dk_new, dv_new
+
+    dk0 = jnp.zeros((block_k, d), jnp.float32)
+    dv0 = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, num_qb, body, (dk0, dv0))
+    dk_ref[...] = (dk * sm_scale).astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(q, k, v, o, lse, do, causal, sm_scale, block_q, block_k):
+    batch, heads, seq, d = q.shape
+    bq = _pick_block(seq, block_q)
+    bk = _pick_block(seq, block_k)
+    bh = batch * heads
+    qf, kf, vf = (t.reshape(bh, seq, d) for t in (q, k, v))
+    dof = do.reshape(bh, seq, d)
+    lsef = lse.reshape(bh, seq)
+    # delta_i = rowsum(dO_i * O_i) — cheap elementwise preprocess.
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    ).reshape(bh, seq)
+
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, sm_scale=sm_scale, block_k=bk, causal=causal,
+        block_q=bq, seq_len=seq,
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(bh, seq // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, bq), lambda b, i: (b, i)),
+            pl.BlockSpec((None, bq), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, sm_scale=sm_scale, block_q=bq, causal=causal,
+        block_k=bk, seq_len=seq,
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(bh, seq // bk),
+        in_specs=[
+            pl.BlockSpec((None, seq, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, seq), lambda b, j: (b, 0)),
+            pl.BlockSpec((None, seq), lambda b, j: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        ],
+        interpret=True,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    shape = (batch, heads, seq, d)
+    return dq.reshape(shape), dk.reshape(shape), dv.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK, block_k: int = DEFAULT_BLOCK):
+    """Tiled online-softmax attention with a Pallas fwd and bwd.
+
+    Args:
+      q, k, v: f32[batch, heads, seq, head_dim]; seq must be divisible by
+        the (auto-shrunk) block sizes.
+      causal: lower-triangular masking.
+      sm_scale: defaults to 1/sqrt(head_dim).
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, _ = _fwd(q, k, v, causal, sm_scale, block_q, block_k)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, sm_scale, block_q, block_k):
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, lse = _fwd(q, k, v, causal, sm_scale, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, sm_scale, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    dq, dk, dv = _bwd(q, k, v, out, lse, do, causal, sm_scale, block_q, block_k)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def vmem_bytes_estimate(seq: int, head_dim: int, block_q: int = DEFAULT_BLOCK,
+                        block_k: int = DEFAULT_BLOCK) -> int:
+    """Rough per-program VMEM footprint of the forward kernel (f32 bytes).
+
+    Used by DESIGN.md/EXPERIMENTS.md to argue real-TPU viability: the
+    v5e/v4 VMEM budget is ~16 MiB/core.
+    """
+    bq = _pick_block(seq, block_q)
+    f32 = 4
+    q = bq * head_dim
+    kv = 2 * seq * head_dim      # full K,V staged per program (this variant)
+    acc = bq * head_dim
+    stats = 2 * bq
+    s = bq * _pick_block(seq, block_k)
+    return f32 * (q + kv + acc + stats + s)

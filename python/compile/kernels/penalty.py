@@ -1,0 +1,140 @@
+"""Pallas kernels for the pseudo-gradient penalty combine (Alg. 2).
+
+The penalty pipeline at each EDiT synchronization is, per model sync
+group of W workers over n sharded parameters:
+
+  1. G_i   = ||Delta_i||_2                       (per-worker norms)
+  2. w_i   = softmax(-G)_i  (anomalous G_i=inf -> w_i=0)
+  3. bar   = sum_i w_i * Delta_i                 (weighted average)
+  4. beta  = min(phi / (||bar|| + eps), 1)       (pseudo-gradient clip)
+  5. out   = beta * bar
+
+Steps 1/3/5 touch O(W*n) data and are the hot part; they are Pallas
+kernels tiled over the parameter axis (grid over n/chunk; the W axis
+rides along in VMEM, W is small).  Steps 2/4 are O(W) scalar math done
+in plain jnp.  ``penalty_combine`` wires the whole pipeline into one
+jittable function, which ``aot.py`` lowers to ``penalty_*.hlo.txt`` so
+the Rust coordinator can execute the paper's contribution through the
+same PJRT path as the model.  The EMA z-test anomaly *detection* is
+stateful control logic and lives in the Rust coordinator; anomalies
+arrive here as ``inf`` norms.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 65536
+
+
+def _pick_chunk(n: int, requested: int) -> int:
+    c = min(requested, n)
+    while c > 1 and n % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def _sq_norm_kernel(x_ref, out_ref):
+    """Partial squared norms for one parameter chunk: (W, C) -> (W,)."""
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(x * x, axis=-1)
+
+
+def sq_norms(deltas, chunk: int = DEFAULT_CHUNK):
+    """Per-worker squared L2 norms via a chunked Pallas reduction.
+
+    deltas: f32[W, n] -> f32[W]
+    """
+    w, n = deltas.shape
+    c = _pick_chunk(n, chunk)
+    grid = (n // c,)
+    partials = pl.pallas_call(
+        _sq_norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((w, c), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((None, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // c, w), jnp.float32),
+        interpret=True,
+    )(deltas)
+    return jnp.sum(partials, axis=0)
+
+
+def _wsum_scale_kernel(x_ref, w_ref, beta_ref, out_ref):
+    """out[c] = beta * sum_i w[i] * x[i, c] for one chunk."""
+    x = x_ref[...].astype(jnp.float32)
+    wts = w_ref[...].astype(jnp.float32)
+    beta = beta_ref[0]
+    out_ref[...] = beta * (wts @ x)
+
+
+def weighted_sum_scaled(deltas, weights, beta, chunk: int = DEFAULT_CHUNK):
+    """beta * (weights @ deltas), tiled over the parameter axis.
+
+    deltas: f32[W, n], weights: f32[W], beta: f32[] -> f32[n]
+    """
+    w, n = deltas.shape
+    c = _pick_chunk(n, chunk)
+    beta_arr = jnp.reshape(beta.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _wsum_scale_kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((w, c), lambda i: (0, i)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(deltas, weights, beta_arr)
+
+
+def softmax_neg_weights(norms):
+    """w = softmax(-G) with inf-norm (anomalous) workers masked to 0.
+
+    Stabilized by subtracting the min finite norm; if every worker is
+    anomalous, returns all-zeros (caller rolls back).
+    """
+    norms = norms.astype(jnp.float32)
+    finite = jnp.isfinite(norms)
+    gmin = jnp.min(jnp.where(finite, norms, jnp.inf))
+    gmin = jnp.where(jnp.isfinite(gmin), gmin, 0.0)
+    raw = jnp.where(finite, jnp.exp(-(norms - gmin)), 0.0)
+    total = jnp.sum(raw)
+    return jnp.where(total > 0, raw / jnp.maximum(total, 1e-30), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("phi", "eps", "chunk"))
+def penalty_combine(deltas, norms, *, phi: float = 10.0, eps: float = 1e-8,
+                    chunk: int = DEFAULT_CHUNK):
+    """Full Alg. 2 combine: (deltas[W,n], norms[W]) -> (out[n], w[W], beta).
+
+    ``norms`` are the per-worker pseudo-gradient norms after anomaly
+    elimination (anomalous workers carry ``inf``).  Returns the clipped
+    synchronized pseudo gradient, the averaging weights, and the clip
+    coefficient beta.
+    """
+    weights = softmax_neg_weights(norms)
+    # ||bar||^2 via the same chunked kernel (W=1 row).
+    bar = weighted_sum_scaled(deltas, weights, jnp.float32(1.0), chunk=chunk)
+    cnorm = jnp.sqrt(sq_norms(bar[None, :], chunk=chunk)[0])
+    beta = jnp.minimum(phi / (cnorm + eps), 1.0)
+    out = weighted_sum_scaled(deltas, weights, beta, chunk=chunk)
+    return out, weights, beta
+
+
+def penalty_for_aot(num_workers: int, n: int, phi: float = 10.0):
+    """Build the (deltas, norms) -> (out, weights, beta) fn for AOT lowering."""
+
+    def fn(deltas, norms):
+        return penalty_combine(deltas, norms, phi=phi)
+
+    specs = (
+        jax.ShapeDtypeStruct((num_workers, n), jnp.float32),
+        jax.ShapeDtypeStruct((num_workers,), jnp.float32),
+    )
+    return fn, specs

@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything in this file is deliberately naive: materialize the full
+attention matrix, use straight-line softmax, etc.  These are the
+correctness ground truth that the Pallas kernels (and the Rust
+re-implementations of the penalty math) are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Naive multi-head attention.
+
+    Args:
+      q, k, v: f32[batch, heads, seq, head_dim]
+      causal: apply a lower-triangular mask.
+      sm_scale: softmax scale; defaults to 1/sqrt(head_dim).
+
+    Returns:
+      f32[batch, heads, seq, head_dim]
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * sm_scale
+    if causal:
+        seq_q, seq_k = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    probs = jnp.exp(logits)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v).astype(q.dtype)
+
+
+def penalty_ref(deltas, norms, phi: float, eps: float = 1e-8):
+    """Reference pseudo-gradient penalty combine (Alg. 2 lines 10-12).
+
+    Given per-worker pseudo gradients and their (possibly inf, for
+    anomalous workers) norms, produce the synchronized, clipped pseudo
+    gradient shared by every worker in the model sync group.
+
+    Args:
+      deltas: f32[num_workers, n] per-worker pseudo gradients.
+      norms:  f32[num_workers] pseudo-gradient norms (inf == anomalous).
+      phi:    clip threshold (paper uses 10).
+
+    Returns:
+      (combined f32[n], weights f32[num_workers], beta f32 scalar)
+      If all workers are anomalous (sum of weights == 0) the combined
+      update is all-zeros (the caller performs the parameter rollback).
+    """
+    norms = norms.astype(jnp.float32)
+    # Stabilized softmax(-norms): exp(-(G_i - min_G)) / sum_j exp(-(G_j - min_G)).
+    finite = jnp.isfinite(norms)
+    gmin = jnp.min(jnp.where(finite, norms, jnp.inf))
+    gmin = jnp.where(jnp.isfinite(gmin), gmin, 0.0)
+    raw = jnp.where(finite, jnp.exp(-(norms - gmin)), 0.0)
+    total = jnp.sum(raw)
+    weights = jnp.where(total > 0, raw / jnp.maximum(total, 1e-30), 0.0)
+    combined = jnp.einsum("w,wn->n", weights, deltas.astype(jnp.float32))
+    cnorm = jnp.sqrt(jnp.sum(combined * combined))
+    beta = jnp.minimum(phi / (cnorm + eps), 1.0)
+    return combined * beta, weights, beta
+
+
+def weighted_sum_ref(deltas, weights):
+    """f32[w, n] x f32[w] -> f32[n]."""
+    return jnp.einsum(
+        "w,wn->n", weights.astype(jnp.float32), deltas.astype(jnp.float32)
+    )
+
+
+def sq_norms_ref(deltas):
+    """Per-worker squared L2 norms: f32[w, n] -> f32[w]."""
+    d = deltas.astype(jnp.float32)
+    return jnp.sum(d * d, axis=-1)

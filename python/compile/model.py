@@ -1,0 +1,290 @@
+"""Layer 2: Llama-style decoder in JAX, built for AOT export to Rust.
+
+The model is the paper's workload (Llama family, Table 3): RMSNorm,
+SwiGLU MLP, rotary position embeddings, causal multi-head attention
+(the Pallas flash-attention kernel from ``kernels.attention``), untied
+LM head, cross-entropy loss over next-token prediction.
+
+Export contract with the Rust coordinator (see ``aot.py``):
+
+  * All parameters/optimizer moments travel as ONE flat f32 vector so
+    the Rust side marshals exactly three big literals per step; the
+    flatten order and the per-tensor/per-layer offsets are recorded in
+    ``artifacts/<config>/manifest.json`` and drive the coordinator's
+    layer-wise synchronization accounting.
+  * Layer parameters are stacked on a leading L axis and the forward
+    runs ``lax.scan`` over them, so the lowered HLO is O(1) in depth.
+  * Four programs are exported per config:
+      - train_step : fused fwd + bwd + grad-clip + AdamW inner update
+                     (the local-SGD inner step, one PJRT call)
+      - grad_step  : fwd + bwd only, returns grads (DDP/warmup path:
+                     the coordinator all-reduces grads, then applies)
+      - apply_step : grad-clip + AdamW given externally averaged grads
+      - eval_step  : loss only
+    LR and step index are runtime scalars so the Rust scheduler owns
+    the schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.attention import flash_attention
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style architecture hyperparameters (paper Table 3, scaled)."""
+
+    name: str = "tiny"
+    vocab_size: int = 512
+    num_layers: int = 4
+    hidden_size: int = 128
+    intermediate_size: int = 352
+    num_heads: int = 4
+    seq_len: int = 128
+    batch_size: int = 4
+    # Inner AdamW hyperparameters (baked; lr/step are runtime inputs).
+    beta1: float = 0.9
+    beta2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    rope_theta: float = 10000.0
+    # Pallas attention block sizes (auto-shrunk to divide seq_len).
+    block_q: int = 128
+    block_k: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden_size % self.num_heads == 0
+        return self.hidden_size // self.num_heads
+
+
+# Model presets. The four paper scales (350M..7B) are represented
+# analytically in the Rust simulator (rust/src/simulator); the presets
+# here are the CPU-trainable scales used for the real convergence runs.
+CONFIGS: Dict[str, ModelConfig] = {
+    "test": ModelConfig(
+        name="test", vocab_size=256, num_layers=2, hidden_size=32,
+        intermediate_size=96, num_heads=2, seq_len=32, batch_size=2,
+    ),
+    "petite": ModelConfig(
+        name="petite", vocab_size=512, num_layers=4, hidden_size=64,
+        intermediate_size=176, num_heads=2, seq_len=128, batch_size=4,
+    ),
+    "tiny": ModelConfig(
+        name="tiny", vocab_size=512, num_layers=4, hidden_size=128,
+        intermediate_size=352, num_heads=4, seq_len=128, batch_size=4,
+    ),
+    "mini": ModelConfig(
+        name="mini", vocab_size=1024, num_layers=6, hidden_size=256,
+        intermediate_size=704, num_heads=8, seq_len=128, batch_size=4,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """muP-flavoured init: embeddings at sigma=0.02, hidden matrices scaled
+    by 1/sqrt(fan_in), residual-output matrices further by 1/sqrt(2L) (the
+    GPT-2/muP depth correction that keeps the residual stream O(1))."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 10)
+    d, f, v, nl = (
+        cfg.hidden_size, cfg.intermediate_size, cfg.vocab_size, cfg.num_layers
+    )
+    depth_scale = 1.0 / (2.0 * nl) ** 0.5
+
+    def stack(k, shape, fan_in, residual=False):
+        std = fan_in ** -0.5 * (depth_scale if residual else 1.0)
+        return jax.random.normal(k, (nl,) + shape, jnp.float32) * std
+
+    # NOTE: dict keys sorted alphabetically == jax pytree flatten order;
+    # the manifest table in flatten_spec relies on that.
+    return {
+        "embed": jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02,
+        "layers": {
+            "ln1": jnp.ones((nl, d), jnp.float32),
+            "ln2": jnp.ones((nl, d), jnp.float32),
+            "w1": stack(ks[5], (d, f), d),
+            "w2": stack(ks[7], (f, d), f, residual=True),
+            "w3": stack(ks[6], (d, f), d),
+            "wk": stack(ks[2], (d, d), d),
+            "wo": stack(ks[4], (d, d), d, residual=True),
+            "wq": stack(ks[1], (d, d), d),
+            "wv": stack(ks[3], (d, d), d),
+        },
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "head": jax.random.normal(ks[8], (d, v), jnp.float32) * (d ** -0.5),
+    }
+
+
+def flatten_spec(cfg: ModelConfig):
+    """(unravel_fn, total_size, table) for the canonical flat layout.
+
+    ``table`` is a list of (dotted-name, shape, offset, size) in flatten
+    order — the manifest contract consumed by the Rust module table.
+    """
+    concrete = init_params(cfg, seed=0)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(concrete)[0]
+    table = []
+    offset = 0
+    for path, leaf in leaves_with_path:
+        name = ".".join(p.key if hasattr(p, "key") else str(p) for p in path)
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        table.append((name, tuple(leaf.shape), offset, size))
+        offset += size
+
+    flat, unravel = ravel_pytree(concrete)
+    assert flat.shape[0] == offset, (flat.shape, offset)
+    return unravel, offset, table
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, theta: float):
+    """Rotary embeddings over f32[b, h, s, hd] (hd even)."""
+    half = x.shape[-1] // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(x.shape[-2], dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]  # (s, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _layer(cfg: ModelConfig, x, lp):
+    """One decoder block; x: f32[b, s, d], lp: this layer's param slice."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+
+    y = _rms_norm(x, lp["ln1"])
+    q = (y @ lp["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (y @ lp["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (y @ lp["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+    attn = flash_attention(q, k, v, True, None, cfg.block_q, cfg.block_k)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + attn @ lp["wo"]
+
+    y = _rms_norm(x, lp["ln2"])
+    gate = jax.nn.silu(y @ lp["w1"])
+    x = x + (gate * (y @ lp["w3"])) @ lp["w2"]
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens):
+    """tokens i32[b, s] -> logits f32[b, s, vocab]."""
+    x = params["embed"][tokens]
+
+    def step(x, lp):
+        return _layer(cfg, x, lp), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    x = _rms_norm(x, params["ln_f"])
+    return x @ params["head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens):
+    """Next-token mean cross entropy; tokens i32[b, s+1]."""
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Inner optimizer (AdamW) over the flat vector
+# ---------------------------------------------------------------------------
+
+
+def _clip_by_global_norm(g, max_norm):
+    norm = jnp.sqrt(jnp.sum(g * g))
+    scale = jnp.minimum(max_norm / (norm + 1e-12), 1.0)
+    return g * scale
+
+
+def adamw_update(cfg: ModelConfig, flat_p, flat_m, flat_v, flat_g, lr, step):
+    """One AdamW step over flat vectors. ``step`` is 1-based (i32)."""
+    g = _clip_by_global_norm(flat_g, cfg.grad_clip)
+    m = cfg.beta1 * flat_m + (1.0 - cfg.beta1) * g
+    v = cfg.beta2 * flat_v + (1.0 - cfg.beta2) * g * g
+    t = step.astype(jnp.float32)
+    mhat = m / (1.0 - cfg.beta1 ** t)
+    vhat = v / (1.0 - cfg.beta2 ** t)
+    update = mhat / (jnp.sqrt(vhat) + cfg.adam_eps) + cfg.weight_decay * flat_p
+    return flat_p - lr * update, m, v
+
+
+# ---------------------------------------------------------------------------
+# Exported programs
+# ---------------------------------------------------------------------------
+
+
+def build_programs(cfg: ModelConfig):
+    """Return {name: (fn, example_args)} for every exported program."""
+    unravel, total, _ = flatten_spec(cfg)
+    b, s = cfg.batch_size, cfg.seq_len
+
+    def _loss_flat(flat_p, tokens):
+        return loss_fn(cfg, unravel(flat_p), tokens)
+
+    def train_step(flat_p, flat_m, flat_v, tokens, lr, step):
+        loss, g = jax.value_and_grad(_loss_flat)(flat_p, tokens)
+        new_p, new_m, new_v = adamw_update(
+            cfg, flat_p, flat_m, flat_v, g, lr, step
+        )
+        return new_p, new_m, new_v, loss
+
+    def grad_step(flat_p, tokens):
+        loss, g = jax.value_and_grad(_loss_flat)(flat_p, tokens)
+        return g, loss
+
+    def apply_step(flat_p, flat_m, flat_v, flat_g, lr, step):
+        return adamw_update(cfg, flat_p, flat_m, flat_v, flat_g, lr, step)
+
+    def eval_step(flat_p, tokens):
+        return (_loss_flat(flat_p, tokens),)
+
+    fp = jax.ShapeDtypeStruct((total,), jnp.float32)
+    tok = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    st = jax.ShapeDtypeStruct((), jnp.int32)
+
+    return {
+        "train_step": (train_step, (fp, fp, fp, tok, lr, st)),
+        "grad_step": (grad_step, (fp, tok)),
+        "apply_step": (apply_step, (fp, fp, fp, fp, lr, st)),
+        "eval_step": (eval_step, (fp, tok)),
+    }
+
+
+def init_flat(cfg: ModelConfig, seed: int = 0):
+    """Initial flat parameter vector (the coordinator broadcasts this)."""
+    flat, _ = ravel_pytree(init_params(cfg, seed))
+    return flat

@@ -1,0 +1,82 @@
+"""AOT export contract: HLO text well-formedness + manifest consistency."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import penalty as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_eval_step_produces_hlo_text():
+    cfg = M.CONFIGS["test"]
+    fn, args = M.build_programs(cfg)["eval_step"]
+    text = aot.lower_fn(fn, args)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+def test_lower_penalty_produces_hlo_text():
+    fn, args = P.penalty_for_aot(2, 64, phi=10.0)
+    text = aot.lower_fn(fn, args)
+    assert text.startswith("HloModule")
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(os.path.join(ARTIFACTS, "test")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "test", "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_total_matches_model(self, manifest):
+        _, total, _ = M.flatten_spec(M.CONFIGS["test"])
+        assert manifest["total_params"] == total
+
+    def test_tensor_table_contiguous(self, manifest):
+        pos = 0
+        for t in manifest["tensors"]:
+            assert t["offset"] == pos
+            assert t["size"] == int(np.prod(t["shape"]))
+            pos += t["size"]
+        assert pos == manifest["total_params"]
+
+    def test_init_bin_matches_model_init(self, manifest):
+        path = os.path.join(ARTIFACTS, "test", manifest["init_file"])
+        data = np.fromfile(path, dtype="<f4")
+        expect = np.asarray(
+            M.init_flat(M.CONFIGS["test"], seed=manifest["init_seed"])
+        )
+        np.testing.assert_array_equal(data, expect)
+
+    def test_all_program_files_exist(self, manifest):
+        for fname in list(manifest["programs"].values()) + list(
+            manifest["penalty_programs"].values()
+        ):
+            path = os.path.join(ARTIFACTS, "test", fname)
+            assert os.path.isfile(path)
+            with open(path) as f:
+                assert f.read(9) == "HloModule"
+
+    def test_golden_penalty_cases_valid(self):
+        path = os.path.join(ARTIFACTS, "golden", "penalty.json")
+        with open(path) as f:
+            cases = json.load(f)
+        assert len(cases) >= 3
+        for case in cases:
+            w, n = case["num_workers"], case["n"]
+            assert len(case["deltas"]) == w * n
+            assert len(case["expected"]) == n
+            assert abs(sum(case["weights"]) - 1.0) < 1e-5 or sum(
+                case["weights"]
+            ) == 0.0

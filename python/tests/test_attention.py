@@ -1,0 +1,141 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle.
+
+The core L1 correctness signal: hypothesis sweeps shapes/blocks/masking
+and asserts allclose for forward AND both backward kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    _pick_block,
+    flash_attention,
+    vmem_bytes_estimate,
+)
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def _check(b, h, s, d, causal, bq, bk, seed=0, fwd_tol=2e-5, bwd_tol=2e-4):
+    q, k, v = (_rand((b, h, s, d), seed + i) for i in range(3))
+    out = flash_attention(q, k, v, causal, None, bq, bk)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=fwd_tol, rtol=1e-4)
+
+    def scalar_loss(fn):
+        return lambda q, k, v: jnp.sum(jnp.tanh(fn(q, k, v)))
+
+    g_pl = jax.grad(
+        scalar_loss(lambda q, k, v: flash_attention(q, k, v, causal, None, bq, bk)),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    g_ref = jax.grad(
+        scalar_loss(lambda q, k, v: attention_ref(q, k, v, causal=causal)),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    for got, want in zip(g_pl, g_ref):
+        np.testing.assert_allclose(got, want, atol=bwd_tol, rtol=1e-3)
+
+
+class TestForwardBackward:
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_basic(self, causal):
+        _check(2, 2, 64, 16, causal, 32, 16)
+
+    def test_single_block(self):
+        _check(1, 1, 32, 8, True, 32, 32)
+
+    def test_block_larger_than_seq_shrinks(self):
+        _check(1, 2, 16, 8, True, 128, 128)
+
+    def test_uneven_blocks(self):
+        # bq != bk exercises the rectangular masking path.
+        _check(1, 2, 64, 8, True, 16, 32)
+
+    def test_head_dim_one(self):
+        _check(1, 1, 16, 2, True, 8, 8)
+
+    def test_matches_under_jit(self):
+        q, k, v = (_rand((1, 2, 32, 8), i) for i in range(3))
+        f = jax.jit(lambda q, k, v: flash_attention(q, k, v, True, None, 16, 16))
+        np.testing.assert_allclose(
+            f(q, k, v), attention_ref(q, k, v, causal=True), atol=2e-5, rtol=1e-4
+        )
+
+    def test_custom_scale(self):
+        q, k, v = (_rand((1, 1, 32, 8), i + 5) for i in range(3))
+        out = flash_attention(q, k, v, True, 0.25, 16, 16)
+        ref = attention_ref(q, k, v, causal=True, sm_scale=0.25)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+    def test_value_and_grad_composes_with_matmul(self):
+        # The kernel must differentiate correctly when composed into a
+        # larger graph (as model.py does).
+        q, k, v = (_rand((1, 2, 32, 8), i + 9) for i in range(3))
+        w = _rand((8, 8), 42)
+
+        def f(q, k, v, w):
+            o = flash_attention(q, k, v, True, None, 16, 16)
+            return jnp.sum((o @ w) ** 2)
+
+        def f_ref(q, k, v, w):
+            o = attention_ref(q, k, v, causal=True)
+            return jnp.sum((o @ w) ** 2)
+
+        got = jax.grad(f, argnums=(0, 1, 2, 3))(q, k, v, w)
+        want = jax.grad(f_ref, argnums=(0, 1, 2, 3))(q, k, v, w)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=5e-4, rtol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    logs=st.integers(3, 6),  # seq = 8..64
+    logd=st.integers(1, 4),  # head_dim = 2..16
+    causal=st.booleans(),
+    bq=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_hypothesis_sweep(b, h, logs, logd, causal, bq, bk, seed):
+    _check(b, h, 2 ** logs, 2 ** logd, causal, bq, bk, seed=seed)
+
+
+class TestPickBlock:
+    def test_divides(self):
+        for s in [8, 24, 96, 128, 384]:
+            for r in [8, 64, 128, 100]:
+                blk = _pick_block(s, r)
+                assert s % blk == 0 and 1 <= blk <= max(r, 1)
+
+    def test_exact(self):
+        assert _pick_block(128, 128) == 128
+        assert _pick_block(96, 128) == 96
+        # halving from the request: 64 -> 32 (divides 96)
+        assert _pick_block(96, 64) == 32
+
+
+def test_vmem_estimate_within_tpu_budget():
+    # The real-TPU viability claim: fwd working set fits v4/v5e VMEM (~16 MiB)
+    # for the paper's context length (4096) at head_dim 128.
+    assert vmem_bytes_estimate(4096, 128) < 16 * 1024 * 1024
+
+
+def test_lse_not_materializing_full_matrix():
+    # Long-seq sanity run: would OOM/N^2 blow up if the kernel materialized
+    # the full attention matrix in one block. 1x1x512x8 stays fast & finite.
+    q, k, v = (_rand((1, 1, 512, 8), i) for i in range(3))
+    out = flash_attention(q, k, v, True, None, 64, 64)
+    assert bool(jnp.all(jnp.isfinite(out)))

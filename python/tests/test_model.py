@@ -1,0 +1,182 @@
+"""L2 model: shapes, flat-layout contract, AdamW reference, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["test"]
+
+
+def _tokens(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(
+        0, cfg.vocab_size, (cfg.batch_size, cfg.seq_len + 1)
+    ).astype(np.int32)
+
+
+class TestFlatLayout:
+    def test_table_covers_vector_exactly(self):
+        _, total, table = M.flatten_spec(CFG)
+        offsets = sorted((off, size) for _, _, off, size in table)
+        pos = 0
+        for off, size in offsets:
+            assert off == pos
+            pos += size
+        assert pos == total
+
+    def test_table_matches_init_flat(self):
+        _, total, _ = M.flatten_spec(CFG)
+        assert M.init_flat(CFG).shape == (total,)
+
+    def test_unravel_roundtrip(self):
+        unravel, total, _ = M.flatten_spec(CFG)
+        flat = M.init_flat(CFG, seed=3)
+        from jax.flatten_util import ravel_pytree
+
+        flat2, _ = ravel_pytree(unravel(flat))
+        np.testing.assert_array_equal(flat, flat2)
+
+    def test_stacked_tensors_marked(self):
+        _, _, table = M.flatten_spec(CFG)
+        for name, shape, _, _ in table:
+            if name.startswith("layers."):
+                assert shape[0] == CFG.num_layers
+
+    def test_param_count_formula(self):
+        # embed + head + L*(2 ln + 4 attn + 3 mlp) + ln_f
+        d, f, v, nl = (
+            CFG.hidden_size,
+            CFG.intermediate_size,
+            CFG.vocab_size,
+            CFG.num_layers,
+        )
+        expected = v * d * 2 + d + nl * (2 * d + 4 * d * d + 2 * d * f + f * d)
+        _, total, _ = M.flatten_spec(CFG)
+        assert total == expected
+
+    def test_deterministic_init(self):
+        np.testing.assert_array_equal(
+            M.init_flat(CFG, seed=1), M.init_flat(CFG, seed=1)
+        )
+        assert not np.array_equal(M.init_flat(CFG, 1), M.init_flat(CFG, 2))
+
+
+class TestForward:
+    def test_logit_shape(self):
+        params = M.init_params(CFG)
+        toks = _tokens(CFG)[:, :-1]
+        logits = M.forward(CFG, params, toks)
+        assert logits.shape == (
+            CFG.batch_size,
+            CFG.seq_len,
+            CFG.vocab_size,
+        )
+
+    def test_causality(self):
+        # Changing a future token must not change past logits.
+        params = M.init_params(CFG)
+        toks = _tokens(CFG)[:, :-1]
+        logits1 = M.forward(CFG, params, toks)
+        toks2 = toks.copy()
+        toks2[:, -1] = (toks2[:, -1] + 1) % CFG.vocab_size
+        logits2 = M.forward(CFG, params, toks2)
+        np.testing.assert_allclose(
+            logits1[:, :-1], logits2[:, :-1], atol=1e-5
+        )
+
+    def test_initial_loss_near_uniform(self):
+        params = M.init_params(CFG)
+        loss = M.loss_fn(CFG, params, _tokens(CFG))
+        assert abs(float(loss) - np.log(CFG.vocab_size)) < 1.0
+
+
+class TestAdamW:
+    def _numpy_adamw(self, cfg, p, m, v, g, lr, t):
+        norm = np.sqrt((g.astype(np.float64) ** 2).sum())
+        g = g * min(cfg.grad_clip / (norm + 1e-12), 1.0)
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mh = m / (1 - cfg.beta1 ** t)
+        vh = v / (1 - cfg.beta2 ** t)
+        upd = mh / (np.sqrt(vh) + cfg.adam_eps) + cfg.weight_decay * p
+        return p - lr * upd, m, v
+
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        n = 257
+        p, m, v, g = (rng.standard_normal(n).astype(np.float32) for _ in range(4))
+        m = np.abs(m) * 0.01
+        v = np.abs(v) * 0.01
+        got = M.adamw_update(
+            CFG,
+            jnp.asarray(p),
+            jnp.asarray(m),
+            jnp.asarray(v),
+            jnp.asarray(g),
+            jnp.float32(1e-3),
+            jnp.int32(3),
+        )
+        want = self._numpy_adamw(CFG, p, m, v, g, 1e-3, 3)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+
+    def test_clip_engages(self):
+        n = 64
+        g = np.full(n, 100.0, np.float32)
+        z = np.zeros(n, np.float32)
+        p1, _, _ = M.adamw_update(
+            CFG, jnp.asarray(z), jnp.asarray(z), jnp.asarray(z),
+            jnp.asarray(g), jnp.float32(1.0), jnp.int32(1),
+        )
+        # Clipped grad has norm 1 -> per-element update bounded.
+        assert float(jnp.max(jnp.abs(p1))) < 1.5
+
+
+class TestPrograms:
+    @pytest.fixture(scope="class")
+    def progs(self):
+        return M.build_programs(CFG)
+
+    def test_train_step_decreases_loss(self, progs):
+        flat = M.init_flat(CFG)
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        tok = _tokens(CFG)
+        ts = jax.jit(progs["train_step"][0])
+        losses = []
+        for i in range(8):
+            flat, m, v, loss = ts(flat, m, v, tok, jnp.float32(3e-3), jnp.int32(i + 1))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5
+
+    def test_grad_then_apply_equals_train(self, progs):
+        flat = M.init_flat(CFG)
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        tok = _tokens(CFG)
+        lr, st = jnp.float32(1e-3), jnp.int32(1)
+        p1, m1, v1, loss1 = jax.jit(progs["train_step"][0])(flat, m, v, tok, lr, st)
+        g, loss2 = jax.jit(progs["grad_step"][0])(flat, tok)
+        p2, m2, v2 = jax.jit(progs["apply_step"][0])(flat, m, v, g, lr, st)
+        assert abs(float(loss1) - float(loss2)) < 1e-6
+        np.testing.assert_allclose(p1, p2, atol=1e-6)
+        np.testing.assert_allclose(m1, m2, atol=1e-7)
+        np.testing.assert_allclose(v1, v2, atol=1e-7)
+
+    def test_eval_matches_loss(self, progs):
+        flat = M.init_flat(CFG)
+        tok = _tokens(CFG)
+        ev = jax.jit(progs["eval_step"][0])(flat, tok)[0]
+        _, loss = jax.jit(progs["grad_step"][0])(flat, tok)
+        assert abs(float(ev) - float(loss)) < 1e-6
+
+    def test_example_arg_shapes(self, progs):
+        _, total, _ = M.flatten_spec(CFG)
+        fn, args = progs["train_step"]
+        assert args[0].shape == (total,)
+        assert args[3].shape == (CFG.batch_size, CFG.seq_len + 1)

@@ -1,0 +1,130 @@
+"""Pallas pseudo-gradient-penalty kernels vs oracle + invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.penalty import (
+    penalty_combine,
+    softmax_neg_weights,
+    sq_norms,
+    weighted_sum_scaled,
+)
+from compile.kernels.ref import penalty_ref, sq_norms_ref, weighted_sum_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _deltas(w, n, seed, scale=1.0):
+    return (
+        jax.random.normal(jax.random.PRNGKey(seed), (w, n), jnp.float32) * scale
+    )
+
+
+class TestKernelsVsRef:
+    def test_sq_norms(self):
+        d = _deltas(4, 96, 0)
+        np.testing.assert_allclose(
+            sq_norms(d, chunk=32), sq_norms_ref(d), rtol=1e-5
+        )
+
+    def test_weighted_sum(self):
+        d = _deltas(3, 60, 1)
+        w = jnp.asarray([0.2, 0.5, 0.3], jnp.float32)
+        np.testing.assert_allclose(
+            weighted_sum_scaled(d, w, jnp.float32(1.0), chunk=10),
+            weighted_sum_ref(d, w),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    def test_combine_matches_ref(self):
+        d = _deltas(4, 128, 2)
+        norms = jnp.sqrt(sq_norms_ref(d))
+        out, w, beta = penalty_combine(d, norms, phi=10.0, chunk=32)
+        ro, rw, rb = penalty_ref(d, norms, 10.0)
+        np.testing.assert_allclose(out, ro, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(w, rw, rtol=1e-5)
+        np.testing.assert_allclose(beta, rb, rtol=1e-5)
+
+    def test_combine_with_anomaly(self):
+        d = _deltas(4, 64, 3)
+        norms = jnp.sqrt(sq_norms_ref(d)).at[1].set(jnp.inf)
+        out, w, beta = penalty_combine(d, norms, phi=10.0, chunk=16)
+        ro, rw, _ = penalty_ref(d, norms, 10.0)
+        assert float(w[1]) == 0.0
+        np.testing.assert_allclose(out, ro, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(w, rw, rtol=1e-5)
+
+
+class TestInvariants:
+    def test_weights_simplex(self):
+        norms = jnp.asarray([1.0, 2.0, 0.5, 3.0])
+        w = softmax_neg_weights(norms)
+        assert float(jnp.sum(w)) == 1.0 or abs(float(jnp.sum(w)) - 1.0) < 1e-6
+        assert bool(jnp.all(w >= 0))
+
+    def test_larger_norm_smaller_weight(self):
+        norms = jnp.asarray([0.1, 5.0, 1.0])
+        w = softmax_neg_weights(norms)
+        assert float(w[0]) > float(w[2]) > float(w[1])
+
+    def test_all_anomalous_zero(self):
+        d = _deltas(3, 32, 4)
+        norms = jnp.full((3,), jnp.inf)
+        out, w, _ = penalty_combine(d, norms, phi=10.0, chunk=8)
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+        assert float(jnp.sum(w)) == 0.0
+
+    def test_clip_never_increases_norm(self):
+        d = _deltas(2, 64, 5, scale=100.0)
+        norms = jnp.sqrt(sq_norms_ref(d))
+        out, _, beta = penalty_combine(d, norms, phi=1.0, chunk=16)
+        assert float(jnp.linalg.norm(out)) <= 1.0 + 1e-4
+        assert float(beta) < 1.0
+
+    def test_clip_inactive_below_threshold(self):
+        d = _deltas(2, 64, 6, scale=1e-3)
+        norms = jnp.sqrt(sq_norms_ref(d))
+        _, _, beta = penalty_combine(d, norms, phi=10.0, chunk=16)
+        assert float(beta) == 1.0
+
+    def test_uniform_norms_give_uniform_weights(self):
+        # Equal-norm workers must contribute equally (reduces to DiLoCo
+        # uniform averaging) — the EDiT==DiLoCo limit the Rust tests use.
+        d = jnp.ones((4, 16), jnp.float32)
+        norms = jnp.sqrt(sq_norms_ref(d))
+        _, w, _ = penalty_combine(d, norms, phi=1e9, chunk=16)
+        np.testing.assert_allclose(w, jnp.full((4,), 0.25), rtol=1e-6)
+
+    def test_huge_norms_stable(self):
+        # Softmax(-G) must not underflow to all-zeros for large but finite
+        # norms (the min-shift stabilization).
+        d = _deltas(3, 32, 7)
+        norms = jnp.asarray([1000.0, 1001.0, 1002.0])
+        out, w, _ = penalty_combine(d, norms, phi=10.0, chunk=8)
+        assert abs(float(jnp.sum(w)) - 1.0) < 1e-5
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    w=st.integers(2, 8),
+    chunks=st.integers(1, 6),
+    chunk=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 10_000),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+    n_anom=st.integers(0, 2),
+)
+def test_hypothesis_combine(w, chunks, chunk, seed, scale, n_anom):
+    n = chunks * chunk
+    d = _deltas(w, n, seed, scale=scale)
+    norms = jnp.sqrt(sq_norms_ref(d))
+    for i in range(min(n_anom, w - 1)):
+        norms = norms.at[i].set(jnp.inf)
+    out, wts, beta = penalty_combine(d, norms, phi=10.0, chunk=chunk)
+    ro, rw, rb = penalty_ref(d, norms, 10.0)
+    np.testing.assert_allclose(out, ro, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(wts, rw, rtol=1e-5, atol=1e-7)
+    assert abs(float(beta) - float(rb)) < 1e-4 * max(1.0, float(rb))

@@ -1,0 +1,44 @@
+//! Collective-substrate micro benches: sequential reference vs threaded
+//! rendezvous across sizes (the L3 hot-loop primitives).
+
+use edit_train::bench::Bencher;
+use edit_train::collectives::{group, ThreadComm};
+use edit_train::tensor::ShardSpec;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== collectives ==");
+    for &len in &[1usize << 10, 1 << 14, 1 << 18] {
+        for &n in &[2usize, 4, 8] {
+            let mut bufs: Vec<Vec<f32>> =
+                (0..n).map(|r| vec![r as f32; len]).collect();
+            b.bench(&format!("seq all_reduce_mean n={n} len={len}"), || {
+                let mut refs: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
+                group::all_reduce_mean(&mut refs);
+            });
+            let spec = ShardSpec::new(len, n);
+            let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+            b.bench(&format!("seq reduce_scatter  n={n} len={len}"), || {
+                let mut refs: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
+                group::reduce_scatter_mean(&mut refs, &shards);
+            });
+        }
+    }
+    // Threaded rendezvous round-trip (4 ranks, mid size).
+    let n = 4;
+    let len = 1 << 14;
+    b.bench(&format!("threaded all_reduce  n={n} len={len}"), || {
+        let comms = ThreadComm::group(n);
+        std::thread::scope(|s| {
+            for c in comms {
+                s.spawn(move || {
+                    let mut buf = vec![c.rank() as f32; len];
+                    c.all_reduce_mean(&mut buf);
+                });
+            }
+        });
+    });
+    b.write_csv("results/bench_collectives.csv").unwrap();
+}

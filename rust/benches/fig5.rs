@@ -1,0 +1,22 @@
+//! Fig. 5 / Table 6 regeneration bench: straggler + bandwidth scenario
+//! sweep on the analytic simulator.
+
+use edit_train::bench::Bencher;
+use edit_train::coordinator::Method;
+use edit_train::experiments::{throughput, ExpOpts};
+use edit_train::simulator::{simulate, Scenario, SimConfig};
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== fig5 ==");
+    let opts = ExpOpts::default();
+    b.once("fig5/table6 full sweep", || throughput::fig5(&opts).unwrap());
+    b.bench("one scenario cell", || {
+        let r = simulate(&SimConfig::fig5(
+            Method::AEdit,
+            Scenario::ConsistentStraggler { lag: 3.5 },
+        ));
+        std::hint::black_box(r.tflops_per_gpu);
+    });
+    b.write_csv("results/bench_fig5.csv").unwrap();
+}

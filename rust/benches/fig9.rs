@@ -1,0 +1,18 @@
+//! Fig. 9 regeneration bench: sync-boundary timeline construction and
+//! rendering for every method.
+
+use edit_train::bench::Bencher;
+use edit_train::coordinator::Method;
+use edit_train::experiments::{throughput, ExpOpts};
+use edit_train::simulator::trace::sync_timeline;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== fig9 ==");
+    let opts = ExpOpts::default();
+    b.once("fig9 all timelines", || throughput::fig9(&opts).unwrap());
+    b.bench("build one timeline (EDiT)", || {
+        std::hint::black_box(sync_timeline(Method::Edit).exposed);
+    });
+    b.write_csv("results/bench_fig9.csv").unwrap();
+}

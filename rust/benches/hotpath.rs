@@ -1,0 +1,79 @@
+//! Hot-path micro benches over the REAL runtime: PJRT train/eval step
+//! latency, literal marshalling, the penalty HLO, and one full EDiT
+//! sync — the numbers the §Perf pass in EXPERIMENTS.md tracks.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use edit_train::bench::Bencher;
+use edit_train::collectives::{CostModel, Topology};
+use edit_train::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
+use edit_train::data::{Corpus, Quality, Split};
+use edit_train::runtime::Engine;
+use edit_train::tensor;
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("test/manifest.json").exists() {
+        println!("hotpath: artifacts not built; skipping (run `make artifacts`)");
+        return;
+    }
+    let mut b = Bencher::new();
+    println!("== hotpath (test model) ==");
+
+    let mut engine = Engine::load(artifacts, "test").unwrap();
+    engine.warmup().unwrap();
+    let mut params = engine.init_params().unwrap();
+    let n = params.len();
+    let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let corpus = Corpus::new(engine.manifest.model.vocab_size, 3, Quality::clean());
+    let [bs, s1] = engine.manifest.token_shape;
+    let tokens = corpus.batch_i32(Split::Train, 0, 0, bs, s1);
+
+    let mut step = 0;
+    b.bench("pjrt train_step (fused fwd+bwd+adamw)", || {
+        step += 1;
+        let out = engine
+            .train_step(&mut params, &mut m, &mut v, &tokens, 1e-4, step)
+            .unwrap();
+        std::hint::black_box(out.loss);
+    });
+    b.bench("pjrt eval_step", || {
+        std::hint::black_box(engine.eval_step(&params, &tokens).unwrap());
+    });
+    let mut grads = vec![0.0f32; n];
+    b.bench("pjrt grad_step", || {
+        std::hint::black_box(engine.grad_step(&params, &tokens, &mut grads).unwrap());
+    });
+
+    // Penalty through the AOT Pallas HLO vs pure Rust.
+    let deltas: Vec<Vec<f32>> = (0..2)
+        .map(|j| (0..n).map(|i| ((i + j) % 7) as f32 / 7.0 - 0.5).collect())
+        .collect();
+    let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+    let normsf: Vec<f32> = deltas.iter().map(|d| tensor::norm(d) as f32).collect();
+    let norms64: Vec<f64> = normsf.iter().map(|&x| x as f64).collect();
+    b.bench("penalty combine via HLO (w=2)", || {
+        std::hint::black_box(engine.penalty_combine(&refs, &normsf).unwrap());
+    });
+    let cfg = edit_train::coordinator::PenaltyConfig::default();
+    b.bench("penalty combine pure rust (w=2)", || {
+        std::hint::black_box(edit_train::coordinator::penalty::combine(
+            &refs, &norms64, &cfg,
+        ));
+    });
+
+    // One full outer round (τ inner steps x 2 replicas + EDiT sync).
+    let corpus2 = Corpus::new(engine.manifest.model.vocab_size, 5, Quality::clean());
+    let mut tc = TrainConfig::paper_default(Method::Edit, MeshSpec::new(2, 2), u64::MAX);
+    tc.tau = 4;
+    tc.t_warm = 0;
+    tc.eval_every_syncs = 0;
+    let engine2 = Engine::load(artifacts, "test").unwrap();
+    let mut trainer =
+        Trainer::new(engine2, corpus2, tc, CostModel::new(Topology::a100())).unwrap();
+    b.bench("edit outer round (tau=4, 2 replicas)", || {
+        trainer.run_round().unwrap();
+    });
+
+    b.write_csv("results/bench_hotpath.csv").unwrap();
+}

@@ -1,0 +1,39 @@
+//! Pseudo-gradient-penalty hot path (Alg. 2): screen + combine across
+//! worker counts and parameter sizes — the per-sync cost of the
+//! paper's contribution in pure Rust.
+
+use edit_train::bench::Bencher;
+use edit_train::coordinator::penalty::{combine, AnomalyDetector, PenaltyConfig};
+use edit_train::tensor;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== penalty ==");
+    for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+        for &w in &[2usize, 4, 8] {
+            let deltas: Vec<Vec<f32>> = (0..w)
+                .map(|j| (0..n).map(|i| ((i * (j + 1)) % 101) as f32 / 101.0 - 0.5).collect())
+                .collect();
+            let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+            let norms: Vec<f64> = deltas.iter().map(|d| tensor::norm(d)).collect();
+            let cfg = PenaltyConfig::default();
+            b.bench(&format!("combine w={w} n={n}"), || {
+                let out = combine(&refs, &norms, &cfg);
+                std::hint::black_box(out.beta);
+            });
+            b.bench(&format!("norms   w={w} n={n}"), || {
+                let s: f64 = deltas.iter().map(|d| tensor::sq_norm(d)).sum();
+                std::hint::black_box(s);
+            });
+        }
+    }
+    let mut det = AnomalyDetector::new(8, 5, PenaltyConfig::default());
+    let norms = vec![1.0f64; 8];
+    b.bench("detector screen w=8 modules=5", || {
+        for m in 0..5 {
+            std::hint::black_box(det.screen(m, &norms));
+        }
+        det.advance();
+    });
+    b.write_csv("results/bench_penalty.csv").unwrap();
+}

@@ -1,0 +1,22 @@
+//! Table 2 regeneration bench: the full methods × scales simulation
+//! grid (and its per-cell latency).
+
+use edit_train::bench::Bencher;
+use edit_train::coordinator::Method;
+use edit_train::experiments::{throughput, ExpOpts};
+use edit_train::simulator::{simulate, ScaleSpec, SimConfig};
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== table2 ==");
+    // The table itself (also writes results/table2.csv).
+    let opts = ExpOpts::default();
+    let (_, secs) = b.once("table2 full grid", || throughput::table2(&opts).unwrap());
+    assert!(secs < 30.0);
+    // Per-cell simulation latency.
+    let cfg = SimConfig::table2(Method::Edit, ScaleSpec::by_name("7B").unwrap());
+    b.bench("simulate one cell (EDiT 7B)", || {
+        std::hint::black_box(simulate(&cfg).tokens_per_sec);
+    });
+    b.write_csv("results/bench_table2.csv").unwrap();
+}

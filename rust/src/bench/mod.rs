@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (the vendored set has no `criterion`).
+//!
+//! `cargo bench` targets are plain `harness = false` binaries built on
+//! this module: warmup, calibrated iteration counts, median/mean/p10/p90
+//! over timed batches, and a one-line report comparable across runs.
+//! Used by `rust/benches/*.rs` (one bench per paper table/figure plus
+//! the hot-path micro benches).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    /// Seconds per iteration.
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub iters: u64,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12}/iter  (p10 {:>10}, p90 {:>10}, n={})",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.p10),
+            fmt_duration(self.p90),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_batches: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // EDIT_BENCH_FAST=1 shrinks budgets (CI / smoke runs).
+        let fast = std::env::var("EDIT_BENCH_FAST").is_ok();
+        Self {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            budget: Duration::from_millis(if fast { 100 } else { 1500 }),
+            min_batches: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (called repeatedly); returns and records stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup + calibration: find iters-per-batch ~ 1ms.
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / cal_iters.max(1) as f64;
+        let batch = ((1e-3 / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        let mut total_iters = 0u64;
+        while start.elapsed() < self.budget || samples.len() < self.min_batches {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            mean: samples.iter().sum::<f64>() / samples.len() as f64,
+            median: q(0.5),
+            p10: q(0.1),
+            p90: q(0.9),
+            iters: total_iters,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Run a one-shot measured section (for end-to-end table rows where
+    /// repetition is too expensive); reports seconds.
+    pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = f();
+        let secs = t0.elapsed().as_secs_f64();
+        println!("{:<40} {:>12} (once)", name, fmt_duration(secs));
+        self.results.push(Stats {
+            name: name.to_string(),
+            mean: secs,
+            median: secs,
+            p10: secs,
+            p90: secs,
+            iters: 1,
+        });
+        (out, secs)
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Write results as CSV next to the other experiment outputs.
+    pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
+        let mut w = crate::metrics::CsvWriter::create(
+            path,
+            &["name", "mean_s", "median_s", "p10_s", "p90_s", "iters"],
+        )?;
+        for s in &self.results {
+            w.row(&[
+                s.name.clone(),
+                format!("{:.3e}", s.mean),
+                format!("{:.3e}", s.median),
+                format!("{:.3e}", s.p10),
+                format!("{:.3e}", s.p90),
+                s.iters.to_string(),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("EDIT_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let mut x = 0u64;
+        let s = b.bench("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(s.median > 0.0 && s.median < 1e-3);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+        assert!(fmt_duration(2e-6).ends_with("µs"));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2.0).ends_with("s"));
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let mut b = Bencher::new();
+        let (v, secs) = b.once("compute", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! α-β communication cost model over a hierarchical (node/GPU) topology.
+//!
+//! Shared by BOTH paths (DESIGN.md §5): the numerics trainer accumulates
+//! simulated wall-time per collective through this model, and the
+//! analytic cluster simulator uses the very same formulas for the A100
+//! throughput tables — so the timing assumptions are identical.
+//!
+//! Formulas are the standard ring-algorithm costs (Thakur et al.):
+//!   all-reduce      2 (n-1)/n * B / bw + 2 (n-1) a
+//!   all-gather        (n-1)/n * B / bw +   (n-1) a
+//!   reduce-scatter    (n-1)/n * B / bw +   (n-1) a
+//!   broadcast                   B / bw +         a      (tree depth folded into a)
+//! where B is the FULL vector size in bytes, bw the bottleneck link
+//! bandwidth and a the per-hop latency.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollOp {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Broadcast,
+    /// Scalar control-plane exchange (penalty norms): latency only.
+    ScalarSync,
+}
+
+/// Physical cluster description (calibration defaults: A100 nodes).
+#[derive(Debug, Clone, Copy)]
+pub struct Topology {
+    pub gpus_per_node: usize,
+    /// Intra-node (NVLink) per-GPU bandwidth, bytes/s.
+    pub intra_bw: f64,
+    /// Inter-node (IB) per-GPU bandwidth, bytes/s.
+    pub inter_bw: f64,
+    /// Per-hop latencies, seconds.
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+}
+
+impl Topology {
+    /// 8xA100 nodes: NVLink3 ~300 GB/s effective per-GPU bus bandwidth,
+    /// 4x200 Gb/s HDR IB per node shared by 8 GPUs ~ 12.5 GB/s per GPU.
+    pub fn a100() -> Self {
+        Self {
+            gpus_per_node: 8,
+            intra_bw: 300e9,
+            inter_bw: 12.5e9,
+            intra_lat: 5e-6,
+            inter_lat: 20e-6,
+        }
+    }
+
+    /// Uniform single-level topology (useful in unit tests).
+    pub fn flat(bw: f64, lat: f64) -> Self {
+        Self { gpus_per_node: usize::MAX, intra_bw: bw, inter_bw: bw, intra_lat: lat, inter_lat: lat }
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        if self.gpus_per_node == usize::MAX { 0 } else { rank / self.gpus_per_node }
+    }
+
+    fn spans_nodes(&self, ranks: &[usize]) -> bool {
+        ranks
+            .windows(2)
+            .any(|w| self.node_of(w[0]) != self.node_of(w[1]))
+    }
+
+    /// Bottleneck (bandwidth, latency) for a group of global ranks.
+    pub fn link(&self, ranks: &[usize]) -> (f64, f64) {
+        if self.spans_nodes(ranks) {
+            (self.inter_bw, self.inter_lat)
+        } else {
+            (self.intra_bw, self.intra_lat)
+        }
+    }
+}
+
+/// Cost model with an optional inter-node bandwidth derate (the paper's
+/// "limited bandwidth" scenario repeats inter-node communications
+/// `repeat+1` times — Fig. 5c / Table 6).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub topo: Topology,
+    /// Inter-node communications are repeated this many extra times.
+    pub inter_repeat: u32,
+}
+
+impl CostModel {
+    pub fn new(topo: Topology) -> Self {
+        Self { topo, inter_repeat: 0 }
+    }
+
+    pub fn with_inter_repeat(mut self, repeat: u32) -> Self {
+        self.inter_repeat = repeat;
+        self
+    }
+
+    /// Simulated seconds for `op` over `bytes` (full-vector bytes) within
+    /// the group of `ranks`.
+    pub fn time(&self, op: CollOp, bytes: usize, ranks: &[usize]) -> f64 {
+        let n = ranks.len().max(1) as f64;
+        let (bw, lat) = self.topo.link(ranks);
+        let spans = self.topo.spans_nodes(ranks);
+        let rep = if spans { (self.inter_repeat + 1) as f64 } else { 1.0 };
+        let b = bytes as f64;
+        let t = match op {
+            CollOp::AllReduce => 2.0 * (n - 1.0) / n * b / bw + 2.0 * (n - 1.0) * lat,
+            CollOp::AllGather | CollOp::ReduceScatter => {
+                (n - 1.0) / n * b / bw + (n - 1.0) * lat
+            }
+            CollOp::Broadcast => b / bw + lat,
+            CollOp::ScalarSync => (n - 1.0).max(1.0) * lat,
+        };
+        t * rep
+    }
+}
+
+/// Per-op byte/time accounting, accumulated by the trainer.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub ops: usize,
+    pub bytes: usize,
+    pub seconds: f64,
+}
+
+impl CommStats {
+    pub fn record(&mut self, bytes: usize, seconds: f64) {
+        self.ops += 1;
+        self.bytes += bytes;
+        self.seconds += seconds;
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.ops += other.ops;
+        self.bytes += other.bytes;
+        self.seconds += other.seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_vs_inter_detection() {
+        let t = Topology::a100();
+        assert!(!t.spans_nodes(&[0, 1, 7]));
+        assert!(t.spans_nodes(&[7, 8]));
+        assert_eq!(t.node_of(15), 1);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        let m = CostModel::new(Topology::flat(1e9, 0.0));
+        let ranks = [0, 1, 2, 3];
+        let t1 = m.time(CollOp::AllReduce, 1_000_000, &ranks);
+        let t2 = m.time(CollOp::AllReduce, 2_000_000, &ranks);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_is_two_phases_of_allgather() {
+        let m = CostModel::new(Topology::flat(1e9, 0.0));
+        let ranks = [0, 1, 2, 3];
+        let ar = m.time(CollOp::AllReduce, 1 << 20, &ranks);
+        let ag = m.time(CollOp::AllGather, 1 << 20, &ranks);
+        assert!((ar - 2.0 * ag).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_dominates_scalar_sync() {
+        let m = CostModel::new(Topology::a100());
+        let t = m.time(CollOp::ScalarSync, 4, &[0, 8, 16]);
+        assert!((t - 2.0 * 20e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inter_repeat_multiplies_inter_only() {
+        let m = CostModel::new(Topology::a100()).with_inter_repeat(3);
+        let intra = m.time(CollOp::Broadcast, 1 << 20, &[0, 1]);
+        let base = CostModel::new(Topology::a100());
+        assert_eq!(intra, base.time(CollOp::Broadcast, 1 << 20, &[0, 1]));
+        let inter = m.time(CollOp::Broadcast, 1 << 20, &[0, 8]);
+        assert!((inter / base.time(CollOp::Broadcast, 1 << 20, &[0, 8]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_rank_group_free_bandwidth() {
+        let m = CostModel::new(Topology::a100());
+        assert_eq!(m.time(CollOp::AllReduce, 1 << 20, &[3]), 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = CommStats::default();
+        s.record(10, 0.5);
+        s.record(20, 0.25);
+        assert_eq!(s.ops, 2);
+        assert_eq!(s.bytes, 30);
+        assert!((s.seconds - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,197 @@
+//! Deterministic collective operations over rank-indexed buffers.
+//!
+//! These are the *numerics* of NCCL-style collectives, executed with a
+//! bitwise-deterministic reduction order (rank 0..n-1 fold) so training
+//! runs reproduce exactly.  The trainer calls them sequentially on the
+//! worker states it owns (DESIGN.md §1: workers are simulated in one
+//! process); the threaded rendezvous variant lives in [`super::thread`]
+//! and shares these reference semantics.
+
+/// Sum-reduce all buffers into every buffer (in place).
+pub fn all_reduce_sum(bufs: &mut [&mut [f32]]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    debug_assert!(bufs.iter().all(|b| b.len() == len));
+    // Deterministic fold into rank 0, then broadcast.
+    let (first, rest) = bufs.split_first_mut().unwrap();
+    for b in rest.iter() {
+        for (acc, &x) in first.iter_mut().zip(b.iter()) {
+            *acc += x;
+        }
+    }
+    for b in rest.iter_mut() {
+        b.copy_from_slice(first);
+    }
+}
+
+/// Mean-reduce all buffers into every buffer (in place).
+pub fn all_reduce_mean(bufs: &mut [&mut [f32]]) {
+    let n = bufs.len();
+    all_reduce_sum(bufs);
+    if n > 1 {
+        let inv = 1.0 / n as f32;
+        for b in bufs.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+}
+
+/// All-gather: each rank contributes its shard of `full`; afterwards all
+/// `full` buffers contain the concatenation. `shards[r]` gives rank r's
+/// (offset, len) within the full vector.
+pub fn all_gather(fulls: &mut [&mut [f32]], shards: &[(usize, usize)]) {
+    let n = fulls.len();
+    debug_assert_eq!(n, shards.len());
+    if n <= 1 {
+        return;
+    }
+    // Materialize each rank's owned shard into every other rank.
+    for src in 0..n {
+        let (off, len) = shards[src];
+        // Copy src's shard out first (cannot alias two &mut).
+        let shard: Vec<f32> = fulls[src][off..off + len].to_vec();
+        for (dst, full) in fulls.iter_mut().enumerate() {
+            if dst != src {
+                full[off..off + len].copy_from_slice(&shard);
+            }
+        }
+    }
+}
+
+/// Reduce-scatter (mean): sums all full buffers, then each rank keeps the
+/// mean of its own shard (other regions left untouched).
+pub fn reduce_scatter_mean(fulls: &mut [&mut [f32]], shards: &[(usize, usize)]) {
+    let n = fulls.len();
+    debug_assert_eq!(n, shards.len());
+    if n <= 1 {
+        return;
+    }
+    let inv = 1.0 / n as f32;
+    for (dst, &(off, len)) in shards.iter().enumerate() {
+        // acc = sum over all ranks of their [off..off+len] region.
+        let mut acc = vec![0.0f32; len];
+        for full in fulls.iter() {
+            for (a, &x) in acc.iter_mut().zip(&full[off..off + len]) {
+                *a += x;
+            }
+        }
+        for (x, a) in fulls[dst][off..off + len].iter_mut().zip(&acc) {
+            *x = a * inv;
+        }
+    }
+}
+
+/// Broadcast rank `root`'s buffer to all others.
+pub fn broadcast(bufs: &mut [&mut [f32]], root: usize) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let src: Vec<f32> = bufs[root].to_vec();
+    for (r, b) in bufs.iter_mut().enumerate() {
+        if r != root {
+            b.copy_from_slice(&src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ShardSpec;
+
+    fn make(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|r| (0..len).map(|i| (r * len + i) as f32).collect())
+            .collect()
+    }
+
+    fn as_mut(bufs: &mut [Vec<f32>]) -> Vec<&mut [f32]> {
+        bufs.iter_mut().map(|b| b.as_mut_slice()).collect()
+    }
+
+    #[test]
+    fn all_reduce_mean_correct() {
+        let mut bufs = make(4, 3);
+        let expect: Vec<f32> = (0..3)
+            .map(|i| (0..4).map(|r| (r * 3 + i) as f32).sum::<f32>() / 4.0)
+            .collect();
+        all_reduce_mean(&mut as_mut(&mut bufs));
+        for b in &bufs {
+            assert_eq!(b, &expect);
+        }
+    }
+
+    #[test]
+    fn all_reduce_deterministic_order() {
+        // Values chosen so f32 addition order matters: result must equal
+        // the rank-0..n fold exactly.
+        let mut bufs = vec![vec![1e8f32], vec![1.0], vec![-1e8], vec![1.0]];
+        let expect = (((1e8f32 + 1.0) + -1e8) + 1.0) / 4.0;
+        all_reduce_mean(&mut as_mut(&mut bufs));
+        for b in &bufs {
+            assert_eq!(b[0], expect);
+        }
+    }
+
+    #[test]
+    fn all_gather_assembles_shards() {
+        let spec = ShardSpec::new(10, 3);
+        let shards: Vec<_> = (0..3).map(|r| spec.range(r)).collect();
+        // Each rank has garbage everywhere except its own shard = rank+1.
+        let mut bufs: Vec<Vec<f32>> = (0..3)
+            .map(|r| {
+                let mut v = vec![-1.0f32; 10];
+                let (off, len) = shards[r];
+                v[off..off + len].fill(r as f32 + 1.0);
+                v
+            })
+            .collect();
+        all_gather(&mut as_mut(&mut bufs), &shards);
+        let expect = vec![1., 1., 1., 1., 2., 2., 2., 2., 3., 3.];
+        for b in &bufs {
+            assert_eq!(b, &expect);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_gather_is_allreduce() {
+        let spec = ShardSpec::new(8, 4);
+        let shards: Vec<_> = (0..4).map(|r| spec.range(r)).collect();
+        let mut a = make(4, 8);
+        let mut b = a.clone();
+
+        all_reduce_mean(&mut as_mut(&mut a));
+        reduce_scatter_mean(&mut as_mut(&mut b), &shards);
+        all_gather(&mut as_mut(&mut b), &shards);
+        for (x, y) in a.iter().zip(&b) {
+            for (u, v) in x.iter().zip(y) {
+                assert!((u - v).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let mut bufs = make(3, 4);
+        let root_copy = bufs[1].clone();
+        broadcast(&mut as_mut(&mut bufs), 1);
+        for b in &bufs {
+            assert_eq!(b, &root_copy);
+        }
+    }
+
+    #[test]
+    fn single_rank_noops() {
+        let mut bufs = make(1, 4);
+        let orig = bufs[0].clone();
+        all_reduce_mean(&mut as_mut(&mut bufs));
+        broadcast(&mut as_mut(&mut bufs), 0);
+        assert_eq!(bufs[0], orig);
+    }
+}

@@ -1,0 +1,18 @@
+//! Collective-communication substrate (DESIGN.md §2.2).
+//!
+//! Three pieces:
+//!  * [`group`] — deterministic sequential reference semantics (the
+//!    numerics the trainer actually executes);
+//!  * [`thread`] — rendezvous-based threaded communicator with
+//!    bitwise-identical reduction order;
+//!  * [`cost`] — the α-β timing model shared with the cluster simulator,
+//!    so every collective the trainer performs also advances the
+//!    simulated clock by the time the same op would take on the paper's
+//!    A100 mesh.
+
+pub mod cost;
+pub mod group;
+pub mod thread;
+
+pub use cost::{CollOp, CommStats, CostModel, Topology};
+pub use thread::ThreadComm;

@@ -1,0 +1,241 @@
+//! Rendezvous-based threaded communicator.
+//!
+//! The real-concurrency counterpart of [`super::group`]: N OS threads
+//! (one per simulated worker) meet at a staging area + barrier, exactly
+//! like an NCCL communicator.  Reduction order is the same deterministic
+//! rank-0..n fold as the sequential reference, and the test suite
+//! asserts bitwise equality between both implementations.
+//!
+//! The numerics trainer runs single-threaded (PJRT client is not Send,
+//! and this box has one core), so this module is exercised by tests,
+//! benches, and any future multi-process deployment of the coordinator.
+
+use std::sync::{Arc, Barrier, Mutex};
+
+struct Inner {
+    n: usize,
+    staging: Mutex<Vec<Vec<f32>>>,
+    barrier: Barrier,
+}
+
+/// Per-rank handle; clone-free — create one set via [`ThreadComm::group`].
+pub struct ThreadComm {
+    rank: usize,
+    inner: Arc<Inner>,
+}
+
+impl ThreadComm {
+    /// Create handles for an `n`-rank group.
+    pub fn group(n: usize) -> Vec<ThreadComm> {
+        let inner = Arc::new(Inner {
+            n,
+            staging: Mutex::new(vec![Vec::new(); n]),
+            barrier: Barrier::new(n),
+        });
+        (0..n).map(|rank| ThreadComm { rank, inner: Arc::clone(&inner) }).collect()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.n
+    }
+
+    pub fn barrier(&self) {
+        self.inner.barrier.wait();
+    }
+
+    fn stage(&self, data: &[f32]) {
+        let mut staging = self.inner.staging.lock().unwrap();
+        let slot = &mut staging[self.rank];
+        slot.clear();
+        slot.extend_from_slice(data);
+    }
+
+    /// Mean all-reduce across the group (every rank ends with the mean).
+    pub fn all_reduce_mean(&self, buf: &mut [f32]) {
+        if self.inner.n == 1 {
+            return;
+        }
+        self.stage(buf);
+        self.inner.barrier.wait();
+        {
+            // Every rank folds in the same 0..n order => deterministic and
+            // identical across ranks.
+            let staging = self.inner.staging.lock().unwrap();
+            buf.copy_from_slice(&staging[0]);
+            for r in 1..self.inner.n {
+                for (acc, &x) in buf.iter_mut().zip(&staging[r]) {
+                    *acc += x;
+                }
+            }
+        }
+        let inv = 1.0 / self.inner.n as f32;
+        for x in buf.iter_mut() {
+            *x *= inv;
+        }
+        // Second barrier: nobody restages until all have read.
+        self.inner.barrier.wait();
+    }
+
+    /// All-gather: each rank contributes `full[shards[rank]]`; on return
+    /// `full` holds every shard. `shards[r] = (offset, len)`.
+    pub fn all_gather(&self, full: &mut [f32], shards: &[(usize, usize)]) {
+        if self.inner.n == 1 {
+            return;
+        }
+        let (off, len) = shards[self.rank];
+        self.stage(&full[off..off + len]);
+        self.inner.barrier.wait();
+        {
+            let staging = self.inner.staging.lock().unwrap();
+            for (r, &(o, l)) in shards.iter().enumerate() {
+                if r != self.rank {
+                    full[o..o + l].copy_from_slice(&staging[r]);
+                }
+            }
+        }
+        self.inner.barrier.wait();
+    }
+
+    /// Reduce-scatter (mean): on return this rank's shard region holds the
+    /// group mean of that region; the rest of `full` is untouched.
+    pub fn reduce_scatter_mean(&self, full: &mut [f32], shards: &[(usize, usize)]) {
+        if self.inner.n == 1 {
+            return;
+        }
+        self.stage(full);
+        self.inner.barrier.wait();
+        let (off, len) = shards[self.rank];
+        {
+            let staging = self.inner.staging.lock().unwrap();
+            let inv = 1.0 / self.inner.n as f32;
+            for i in 0..len {
+                let mut acc = 0.0f32;
+                for r in 0..self.inner.n {
+                    acc += staging[r][off + i];
+                }
+                full[off + i] = acc * inv;
+            }
+        }
+        self.inner.barrier.wait();
+    }
+
+    /// Broadcast `root`'s buffer to every rank.
+    pub fn broadcast(&self, buf: &mut [f32], root: usize) {
+        if self.inner.n == 1 {
+            return;
+        }
+        if self.rank == root {
+            self.stage(buf);
+        }
+        self.inner.barrier.wait();
+        if self.rank != root {
+            let staging = self.inner.staging.lock().unwrap();
+            buf.copy_from_slice(&staging[root]);
+        }
+        self.inner.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::group;
+    use crate::tensor::ShardSpec;
+
+    fn run_threads<F>(n: usize, len: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(&ThreadComm, &mut Vec<f32>) + Send + Sync,
+    {
+        let comms = ThreadComm::group(n);
+        let mut out = vec![Vec::new(); n];
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|comm| {
+                    s.spawn(move || {
+                        let mut buf: Vec<f32> =
+                            (0..len).map(|i| (comm.rank() * len + i) as f32).collect();
+                        f(&comm, &mut buf);
+                        buf
+                    })
+                })
+                .collect();
+            for (r, h) in handles.into_iter().enumerate() {
+                out[r] = h.join().unwrap();
+            }
+        });
+        out
+    }
+
+    #[test]
+    fn threaded_allreduce_matches_sequential() {
+        let n = 4;
+        let len = 37;
+        let got = run_threads(n, len, |c, buf| c.all_reduce_mean(buf));
+        let mut refbufs: Vec<Vec<f32>> =
+            (0..n).map(|r| (0..len).map(|i| (r * len + i) as f32).collect()).collect();
+        let mut refs: Vec<&mut [f32]> = refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        group::all_reduce_mean(&mut refs);
+        for r in 0..n {
+            assert_eq!(got[r], refbufs[r], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn threaded_allgather_matches_sequential() {
+        let n = 3;
+        let len = 10;
+        let spec = ShardSpec::new(len, n);
+        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+        let sh = shards.clone();
+        let got = run_threads(n, len, move |c, buf| c.all_gather(buf, &sh));
+        let mut refbufs: Vec<Vec<f32>> =
+            (0..n).map(|r| (0..len).map(|i| (r * len + i) as f32).collect()).collect();
+        let mut refs: Vec<&mut [f32]> = refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        group::all_gather(&mut refs, &shards);
+        assert_eq!(got, refbufs);
+    }
+
+    #[test]
+    fn threaded_reduce_scatter_matches_sequential() {
+        let n = 4;
+        let len = 16;
+        let spec = ShardSpec::new(len, n);
+        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+        let sh = shards.clone();
+        let got = run_threads(n, len, move |c, buf| c.reduce_scatter_mean(buf, &sh));
+        let mut refbufs: Vec<Vec<f32>> =
+            (0..n).map(|r| (0..len).map(|i| (r * len + i) as f32).collect()).collect();
+        let mut refs: Vec<&mut [f32]> = refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        group::reduce_scatter_mean(&mut refs, &shards);
+        assert_eq!(got, refbufs);
+    }
+
+    #[test]
+    fn threaded_broadcast() {
+        let got = run_threads(3, 5, |c, buf| c.broadcast(buf, 2));
+        let expect: Vec<f32> = (0..5).map(|i| (2 * 5 + i) as f32).collect();
+        for b in &got {
+            assert_eq!(b, &expect);
+        }
+    }
+
+    #[test]
+    fn repeated_ops_no_deadlock() {
+        let got = run_threads(4, 8, |c, buf| {
+            for _ in 0..25 {
+                c.all_reduce_mean(buf);
+                c.barrier();
+                c.broadcast(buf, 1);
+            }
+        });
+        for b in &got[1..] {
+            assert_eq!(b, &got[0]);
+        }
+    }
+}

@@ -1,0 +1,684 @@
+//! The local-SGD training engine (Alg. 1) — one engine, seven methods.
+//!
+//! Numerics model (DESIGN.md §4): each *column* of the M×N mesh (a model
+//! shard group) keeps bitwise-identical parameters at every inner step
+//! (per-step gradient averaging inside the column), so the engine
+//! simulates one logical replica per column.  Each replica executes the
+//! fused AOT train step (fwd+bwd+AdamW — Layers 2/1) through PJRT, and
+//! the coordinator (Layer 3) owns everything across replicas: warmup
+//! DDP, periodic synchronization, the pseudo-gradient penalty, outer
+//! optimization, rollbacks, elastic rescaling, and the simulated-clock
+//! accounting that turns collective volumes into throughput numbers via
+//! the shared α-β cost model.
+//!
+//! Virtual time: every replica carries a clock (seconds).  Inner steps
+//! advance it by `StepModel::inner_step` plus injected straggler lag;
+//! synchronization is a barrier at `max(clocks) + sync_exposed`.  A-EDiT
+//! replaces the fixed-τ trigger with a deadline of `τ_time` seconds, so
+//! fast replicas genuinely run more inner steps per round (§3.3).
+
+use anyhow::Result;
+
+use crate::collectives::{CollOp, CommStats};
+use crate::data::{Corpus, Split};
+use crate::metrics::RunTracker;
+use crate::runtime::Engine;
+use crate::simulator::stepmodel::StepModel;
+use crate::tensor::{self, ModuleTable};
+use crate::util::prng::Rng;
+
+use super::mesh::MeshSpec;
+use super::method::Method;
+use super::outer::{OuterOpt, OuterOptKind};
+use super::penalty::{self, AnomalyDetector, PenaltyConfig};
+use super::schedule::LrSchedule;
+
+/// Straggler injection (paper §4.3, Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Straggler {
+    None,
+    /// A uniformly random replica lags by `lag` seconds each inner step.
+    Random { lag: f64 },
+    /// A fixed replica lags by `lag` seconds each inner step.
+    Consistent { lag: f64, replica: usize },
+}
+
+/// Fault injection: a "sick worker" whose state diverges (perturbed by
+/// Gaussian noise each inner step) for a window of sync rounds — the
+/// scenario behind the paper's Fig. 7b/c per-worker loss spikes.
+/// Exercises anomaly elimination / weighted suppression / clipping /
+/// rollback end to end.
+///
+/// Note on the fault model: with AdamW as the inner optimizer,
+/// low-quality *data* barely moves the pseudo-gradient norm at our
+/// compressed scale (Adam normalizes per-coordinate step sizes), so the
+/// harness injects the downstream symptom directly — a worker whose
+/// parameters drift anomalously — which is what the z-test screens for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Poison {
+    /// Poisoned replica, or `usize::MAX` for ALL replicas (rollback path).
+    pub replica: usize,
+    pub from_sync: u64,
+    pub to_sync: u64,
+    /// Std-dev of the per-step parameter perturbation.
+    pub strength: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub mesh: MeshSpec,
+    /// Synchronization interval in inner steps (τ).
+    pub tau: u64,
+    /// Time-based interval for A-EDiT (τ_time, simulated seconds).
+    pub tau_time: f64,
+    /// Warmup (mini-batch DDP) inner steps, Alg. 1's t_warm.
+    pub t_warm: u64,
+    /// Experiment length in global inner steps.
+    pub total_steps: u64,
+    pub inner_lr: LrSchedule,
+    pub outer: OuterOptKind,
+    pub penalty: PenaltyConfig,
+    pub seed: u64,
+    /// Evaluate validation PPL every this many syncs (0 = never).
+    pub eval_every_syncs: u64,
+    pub eval_batches: usize,
+    pub straggler: Straggler,
+    pub poison: Vec<Poison>,
+    /// Pure compute seconds per inner step per worker (virtual clock).
+    pub base_step_time: f64,
+    /// Print a progress line every N syncs (0 = silent).
+    pub log_every: u64,
+}
+
+impl TrainConfig {
+    /// Paper-shaped defaults scaled to the CPU-trainable regime.
+    pub fn paper_default(method: Method, mesh: MeshSpec, total_steps: u64) -> Self {
+        Self {
+            method,
+            mesh,
+            tau: 16,
+            tau_time: 16.0 * 0.5,
+            t_warm: if method.uses_warmup() { 16 } else { 0 },
+            total_steps,
+            inner_lr: LrSchedule::paper_cosine(
+                if method.is_local_sgd() { 1.5e-3 } else { 3e-3 },
+                total_steps,
+            ),
+            outer: method.default_outer(),
+            penalty: method.default_penalty(),
+            seed: 42,
+            eval_every_syncs: 4,
+            eval_batches: 4,
+            straggler: Straggler::None,
+            poison: Vec::new(),
+            base_step_time: 0.5,
+            log_every: 0,
+        }
+    }
+}
+
+/// One logical replica (= one model shard group / mesh column).
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based AdamW step counter (bias correction).
+    pub adam_t: i32,
+    /// Virtual clock, seconds.
+    pub clock: f64,
+    /// Inner steps completed (also the data-stream cursor).
+    pub inner_steps: u64,
+    /// (global_step, loss) trace — Fig. 7b/c per-worker curves.
+    pub losses: Vec<(u64, f32)>,
+}
+
+impl Replica {
+    fn new(params: Vec<f32>) -> Self {
+        let n = params.len();
+        Self {
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            adam_t: 0,
+            clock: 0.0,
+            inner_steps: 0,
+            losses: Vec::new(),
+        }
+    }
+}
+
+/// End-of-run summary (the numbers the experiment tables consume).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub method: Method,
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub sim_seconds: f64,
+    pub tokens: u64,
+    /// tokens / simulated second across the whole cluster.
+    pub throughput: f64,
+    pub syncs: u64,
+    pub anomalies: u64,
+    pub rollbacks: u64,
+    pub comm: CommStats,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    engine: Engine,
+    corpus: Corpus,
+    table: ModuleTable,
+    pub replicas: Vec<Replica>,
+    /// θ_t — last synchronized parameters (identical across replicas).
+    pub anchor: Vec<f32>,
+    outer: OuterOpt,
+    detector: AnomalyDetector,
+    /// CO2 staleness queue of combined-but-unapplied updates.
+    pending: std::collections::VecDeque<Vec<f32>>,
+    step_model: StepModel,
+    rng: Rng,
+    pub tracker: RunTracker,
+    pub comm: CommStats,
+    pub sim_time: f64,
+    pub global_step: u64,
+    pub syncs: u64,
+    pjrt_calls: u64,
+    // reusable scratch
+    grad_buf: Vec<f32>,
+    grad_acc: Vec<f32>,
+    deltas: Vec<Vec<f32>>,
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, corpus: Corpus, cfg: TrainConfig, cost: crate::collectives::CostModel) -> Result<Self> {
+        anyhow::ensure!(
+            corpus.language.vocab() == engine.manifest.model.vocab_size,
+            "corpus vocab {} != model vocab {}",
+            corpus.language.vocab(),
+            engine.manifest.model.vocab_size
+        );
+        let init = engine.init_params()?;
+        let n = init.len();
+        let table = engine.manifest.table.clone();
+        let replicas: Vec<Replica> =
+            (0..cfg.mesh.replicas).map(|_| Replica::new(init.clone())).collect();
+        let detector =
+            AnomalyDetector::new(cfg.mesh.replicas, table.num_modules(), cfg.penalty);
+        let step_model = StepModel {
+            mesh: cfg.mesh,
+            cost,
+            param_bytes: n * 4,
+            compute: cfg.base_step_time,
+            cpu_offload: false,
+        };
+        let rng = Rng::new(cfg.seed ^ 0x7123_55AA);
+        Ok(Self {
+            outer: OuterOpt::new(cfg.outer, n),
+            detector,
+            pending: Default::default(),
+            step_model,
+            rng,
+            tracker: RunTracker::new(),
+            comm: CommStats::default(),
+            sim_time: 0.0,
+            global_step: 0,
+            syncs: 0,
+            pjrt_calls: 0,
+            grad_buf: vec![0.0; n],
+            grad_acc: vec![0.0; n],
+            deltas: Vec::new(),
+            anchor: init,
+            replicas,
+            table,
+            corpus,
+            engine,
+            cfg,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.anchor.len()
+    }
+
+    pub fn pjrt_calls(&self) -> u64 {
+        self.pjrt_calls
+    }
+
+    fn batch_for(&self, replica: usize, step: u64) -> Vec<i32> {
+        let [b, s1] = self.engine.manifest.token_shape;
+        // Batch row r draws from physical worker (row = r mod M, col = j):
+        // the column's M data-parallel workers interleave into the
+        // effective column batch.
+        let m = self.cfg.mesh.shard;
+        let mut out = Vec::with_capacity(b * s1);
+        for r in 0..b {
+            let worker = self.cfg.mesh.rank(r % m, replica);
+            let seq =
+                self.corpus.sequence(Split::Train, worker, step, r / m, s1);
+            out.extend(seq.iter().map(|&t| t as i32));
+        }
+        out
+    }
+
+    fn straggler_lag(&mut self, replica: usize) -> f64 {
+        match self.cfg.straggler {
+            Straggler::None => 0.0,
+            Straggler::Random { lag } => {
+                let victim = self.rng.below(self.cfg.mesh.replicas as u64) as usize;
+                if victim == replica { lag } else { 0.0 }
+            }
+            Straggler::Consistent { lag, replica: r } => {
+                if r == replica { lag } else { 0.0 }
+            }
+        }
+    }
+
+    fn in_warmup(&self) -> bool {
+        self.cfg.method == Method::Baseline
+            || (self.cfg.method.uses_warmup() && self.global_step < self.cfg.t_warm)
+    }
+
+    /// One synchronous mini-batch DDP step (Baseline & warmup phase).
+    /// Replicas stay bitwise identical: gradients are averaged across
+    /// the whole mesh and applied once, then copied.
+    fn ddp_step(&mut self) -> Result<()> {
+        let lr = self.cfg.inner_lr.at(self.global_step) as f32;
+        let n = self.replicas.len();
+        self.grad_acc.fill(0.0);
+        let mut mean_loss = 0.0f64;
+        for j in 0..n {
+            let batch = self.batch_for(j, self.replicas[j].inner_steps);
+            let out = self.engine.grad_step(
+                &self.replicas[j].params,
+                &batch,
+                &mut self.grad_buf,
+            )?;
+            self.pjrt_calls += 1;
+            tensor::axpy(&mut self.grad_acc, 1.0 / n as f32, &self.grad_buf);
+            mean_loss += out.loss as f64 / n as f64;
+            let gs = self.global_step;
+            self.replicas[j].losses.push((gs, out.loss));
+        }
+        // Gradient all-reduce across sync groups: account per-worker cost.
+        let group = self.cfg.mesh.sync_group(0);
+        let shard_bytes = self.num_params() * 4 / self.cfg.mesh.shard;
+        let t = self.step_model.cost.time(CollOp::AllReduce, shard_bytes, &group);
+        self.comm.record(shard_bytes, t);
+
+        // Apply once, copy to all replicas (they are identical under DDP).
+        let adam_t = self.replicas[0].adam_t + 1;
+        {
+            let r0 = &mut self.replicas[0];
+            r0.adam_t = adam_t;
+        }
+        let (first, rest) = self.replicas.split_at_mut(1);
+        let r0 = &mut first[0];
+        self.engine.apply_step(
+            &mut r0.params,
+            &mut r0.m,
+            &mut r0.v,
+            &self.grad_acc,
+            lr,
+            adam_t,
+        )?;
+        self.pjrt_calls += 1;
+        for r in rest.iter_mut() {
+            r.params.copy_from_slice(&r0.params);
+            r.m.copy_from_slice(&r0.m);
+            r.v.copy_from_slice(&r0.v);
+            r.adam_t = adam_t;
+        }
+        // Clocks: everyone waits for the slowest (synchronous step).
+        let step_time = self.step_model.inner_step(true);
+        let mut max_clock: f64 = 0.0;
+        for j in 0..self.replicas.len() {
+            let lag = self.straggler_lag(j);
+            let r = &mut self.replicas[j];
+            r.clock += step_time + lag;
+            r.inner_steps += 1;
+            max_clock = max_clock.max(r.clock);
+        }
+        for r in &mut self.replicas {
+            r.clock = max_clock;
+        }
+        self.sim_time = max_clock;
+        self.global_step += 1;
+        self.tracker.record_loss(self.global_step, mean_loss);
+        // The anchor tracks the (shared) parameters during DDP/warmup.
+        self.anchor.copy_from_slice(&self.replicas[0].params);
+        Ok(())
+    }
+
+    /// One local inner step on replica `j`.
+    fn inner_step(&mut self, j: usize, losses: &mut Vec<f64>) -> Result<()> {
+        let step_for_lr = self.global_step + (self.replicas[j].inner_steps
+            - self.replicas.iter().map(|r| r.inner_steps).min().unwrap_or(0));
+        let lr = self.cfg.inner_lr.at(step_for_lr.min(self.cfg.total_steps)) as f32;
+        let batch = self.batch_for(j, self.replicas[j].inner_steps);
+        let lag = self.straggler_lag(j);
+        let step_time = self.step_model.inner_step(false);
+        let poisons = self.cfg.poison.clone();
+        let syncs_now = self.syncs;
+        let seed = self.cfg.seed;
+        let r = &mut self.replicas[j];
+        r.adam_t += 1;
+        let adam_t = r.adam_t;
+        let out = self
+            .engine
+            .train_step(&mut r.params, &mut r.m, &mut r.v, &batch, lr, adam_t)?;
+        self.pjrt_calls += 1;
+        // Fault injection: corrupt the sick replica's state (see Poison).
+        for p in &poisons {
+            let sick = p.replica == usize::MAX || p.replica == j;
+            if sick && syncs_now >= p.from_sync && syncs_now < p.to_sync {
+                let mut prng = crate::util::prng::Rng::new(crate::util::prng::mix(
+                    seed ^ 0xBAD,
+                    (j as u64) << 32 | r.inner_steps,
+                ));
+                for x in r.params.iter_mut() {
+                    *x += p.strength * prng.normal_f32();
+                }
+            }
+        }
+        r.clock += step_time + lag;
+        r.inner_steps += 1;
+        let gs = self.global_step + 1;
+        r.losses.push((gs, out.loss));
+        losses.push(out.loss as f64);
+        Ok(())
+    }
+
+    /// One local-SGD round: τ inner steps per replica (or τ_time worth
+    /// for A-EDiT), then synchronization.
+    fn local_round(&mut self) -> Result<()> {
+        let n = self.replicas.len();
+        let mut losses = Vec::new();
+        let mut max_steps = 0u64;
+
+        if self.cfg.method.time_based_sync() {
+            let deadline = self.sim_time + self.cfg.tau_time;
+            for j in 0..n {
+                let mut steps = 0u64;
+                while (self.replicas[j].clock < deadline || steps == 0)
+                    && steps < self.cfg.tau * 4
+                {
+                    self.inner_step(j, &mut losses)?;
+                    steps += 1;
+                }
+                max_steps = max_steps.max(steps);
+            }
+        } else {
+            let remaining = self.cfg.total_steps.saturating_sub(self.global_step);
+            let tau = self.cfg.tau.min(remaining.max(1));
+            for j in 0..n {
+                for _ in 0..tau {
+                    self.inner_step(j, &mut losses)?;
+                }
+            }
+            max_steps = tau;
+        }
+
+        self.global_step += max_steps;
+        let mean_loss = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        self.tracker.record_loss(self.global_step, mean_loss);
+        self.synchronize()?;
+        Ok(())
+    }
+
+    /// The outer synchronization (Alg. 1 lines 7-9 / Alg. 2).
+    fn synchronize(&mut self) -> Result<()> {
+        let n = self.replicas.len();
+        let p = self.num_params();
+
+        // Pseudo gradients Δ_j = θ_{t,τ}^{(j)} − θ_t.
+        if self.deltas.len() != n {
+            self.deltas = vec![vec![0.0; p]; n];
+        }
+        for (j, d) in self.deltas.iter_mut().enumerate() {
+            tensor::sub(d, &self.replicas[j].params, &self.anchor);
+        }
+
+        // Communication accounting: each worker all-reduces its parameter
+        // shard across its sync group (size n), inter-node.
+        let group = self.cfg.mesh.sync_group(0);
+        let shard_bytes = p * 4 / self.cfg.mesh.shard;
+        let t_comm = self
+            .step_model
+            .cost
+            .time(CollOp::AllReduce, shard_bytes, &group);
+        self.comm.record(shard_bytes, t_comm);
+
+        let mut rollbacks = 0u64;
+        if self.cfg.method.uses_penalty() {
+            self.detector.set_config(self.cfg.penalty);
+            // Layer-wise EDiT sync: per-module screen → combine → outer.
+            for module in 0..self.table.num_modules() {
+                let ranges = self.table.module_ranges(module);
+                let norms: Vec<f64> = (0..n)
+                    .map(|j| {
+                        self.table.module_sq_norm(&self.deltas[j], module).sqrt()
+                    })
+                    .collect();
+                if std::env::var("EDIT_DEBUG_NORMS").is_ok() {
+                    eprintln!("sync {} module {module}: norms {norms:?}", self.syncs);
+                }
+                let screened = self.detector.screen(module, &norms);
+                // Scalar norm exchange in the shard group (cheap).
+                self.comm.record(
+                    4,
+                    self.step_model.cost.time(
+                        CollOp::ScalarSync,
+                        4,
+                        &self.cfg.mesh.shard_group(0),
+                    ),
+                );
+                // Combine each range with module-level weights/clip: build
+                // the module-contiguous view, combine, then scatter back.
+                let weights =
+                    penalty::softmax_neg_weights(&screened, self.cfg.penalty.weighted_averaging);
+                if weights.iter().all(|&w| w == 0.0) {
+                    rollbacks += 1;
+                    continue; // θ stays at anchor for this module (rollback)
+                }
+                // Weighted sum per range, collecting the module norm.
+                let mut module_sq = 0.0f64;
+                let mut combined: Vec<(usize, Vec<f32>)> = Vec::with_capacity(ranges.len());
+                for r in &ranges {
+                    let mut out = vec![0.0f32; r.len];
+                    let rows: Vec<&[f32]> = self
+                        .deltas
+                        .iter()
+                        .map(|d| &d[r.offset..r.offset + r.len])
+                        .collect();
+                    tensor::weighted_sum_into(&mut out, &rows, &weights);
+                    module_sq += tensor::sq_norm(&out);
+                    combined.push((r.offset, out));
+                }
+                let mut beta = 1.0f64;
+                if self.cfg.penalty.gradient_clip {
+                    let norm = module_sq.sqrt();
+                    beta = (self.cfg.penalty.phi / (norm + self.cfg.penalty.eps)).min(1.0);
+                }
+                for (off, mut delta) in combined {
+                    if beta < 1.0 {
+                        tensor::scale(&mut delta, beta as f32);
+                    }
+                    self.outer.apply_range(&mut self.anchor, &delta, off);
+                }
+            }
+            self.detector.advance();
+        } else {
+            // Uniform averaging (PLS/DiLoCo/CO2): mean pseudo gradient.
+            let rows: Vec<&[f32]> = self.deltas.iter().map(|d| d.as_slice()).collect();
+            let mut mean = vec![0.0f32; p];
+            tensor::mean_into(&mut mean, &rows);
+            let staleness = self.cfg.method.outer_staleness();
+            if staleness == 0 {
+                self.outer.apply(&mut self.anchor, &mean);
+            } else {
+                // CO2: apply the update combined `staleness` rounds ago.
+                self.pending.push_back(mean);
+                if self.pending.len() > staleness {
+                    let stale = self.pending.pop_front().unwrap();
+                    self.outer.apply(&mut self.anchor, &stale);
+                }
+            }
+        }
+
+        // All replicas adopt the synchronized parameters.
+        for r in &mut self.replicas {
+            r.params.copy_from_slice(&self.anchor);
+        }
+
+        // Clock barrier + exposed sync cost.
+        let max_clock = self
+            .replicas
+            .iter()
+            .map(|r| r.clock)
+            .fold(0.0f64, f64::max);
+        let after = max_clock + self.step_model.sync_exposed(self.cfg.method);
+        for r in &mut self.replicas {
+            r.clock = after;
+        }
+        self.sim_time = after;
+        self.syncs += 1;
+
+        if self.cfg.eval_every_syncs > 0 && self.syncs % self.cfg.eval_every_syncs == 0 {
+            let val = self.evaluate()?;
+            self.tracker.record_val(self.global_step, val);
+        }
+        if self.cfg.log_every > 0 && self.syncs % self.cfg.log_every == 0 {
+            eprintln!(
+                "[{}] step {:>6} sync {:>4} loss {:.4} ppl {:.2} simtime {:.1}s",
+                self.cfg.method.name(),
+                self.global_step,
+                self.syncs,
+                self.tracker.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
+                self.tracker.val_ppl.last().map(|x| x.1).unwrap_or(f64::NAN),
+                self.sim_time,
+            );
+        }
+        let _ = rollbacks; // counted in detector.rollbacks below
+        if rollbacks > 0 {
+            self.detector.rollbacks += rollbacks;
+        }
+        Ok(())
+    }
+
+    /// Mean validation loss over `eval_batches` held-out batches.
+    pub fn evaluate(&mut self) -> Result<f64> {
+        let [b, s1] = self.engine.manifest.token_shape;
+        let mut total = 0.0f64;
+        for i in 0..self.cfg.eval_batches {
+            let batch =
+                self.corpus
+                    .batch_i32(Split::Validation(0), 0, i as u64, b, s1);
+            total += self.engine.eval_step(&self.anchor, &batch)? as f64;
+            self.pjrt_calls += 1;
+        }
+        Ok(total / self.cfg.eval_batches as f64)
+    }
+
+    /// PPL on every probe stream (the Table-1 substitute).
+    pub fn probe_ppls(&mut self) -> Result<Vec<(&'static str, f64)>> {
+        let [b, s1] = self.engine.manifest.token_shape;
+        let mut out = Vec::new();
+        for probe in crate::data::probe::Probe::ALL {
+            let mut total = 0.0f64;
+            let reps = self.cfg.eval_batches.max(2);
+            for i in 0..reps {
+                let batch = probe.batch_i32(&self.corpus, b, s1, i as u64);
+                total += self.engine.eval_step(&self.anchor, &batch)? as f64;
+                self.pjrt_calls += 1;
+            }
+            out.push((probe.name(), (total / reps as f64).exp()));
+        }
+        Ok(out)
+    }
+
+    /// Run to `total_steps`, returning the summary.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        while self.global_step < self.cfg.total_steps {
+            if self.in_warmup() {
+                self.ddp_step()?;
+            } else {
+                self.local_round()?;
+            }
+        }
+        // Final eval if none recorded yet.
+        if self.tracker.val_ppl.is_empty() {
+            let val = self.evaluate()?;
+            self.tracker.record_val(self.global_step, val);
+        }
+        Ok(self.summary())
+    }
+
+    /// Run exactly one unit of progress (one DDP step or one round) —
+    /// the elastic driver uses this to interleave rescaling.
+    pub fn run_round(&mut self) -> Result<()> {
+        if self.in_warmup() {
+            self.ddp_step()
+        } else {
+            self.local_round()
+        }
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let tokens_per_call = self.engine.manifest.tokens_per_step() as u64;
+        let train_calls: u64 = self.replicas.iter().map(|r| r.inner_steps).sum();
+        let tokens = train_calls * tokens_per_call;
+        RunSummary {
+            method: self.cfg.method,
+            final_loss: self.tracker.final_loss().unwrap_or(f64::NAN),
+            final_ppl: self.tracker.final_ppl().unwrap_or(f64::NAN),
+            sim_seconds: self.sim_time,
+            tokens,
+            throughput: if self.sim_time > 0.0 {
+                tokens as f64 / self.sim_time
+            } else {
+                0.0
+            },
+            syncs: self.syncs,
+            anomalies: self.detector.anomalies_flagged,
+            rollbacks: self.detector.rollbacks,
+            comm: self.comm.clone(),
+        }
+    }
+
+    /// Elastic rescale to `new_replicas` columns (Fig. 6c): new replicas
+    /// clone the synchronized parameters; leaving replicas are dropped.
+    /// Outer momentum and anomaly statistics persist.
+    pub fn rescale(&mut self, new_replicas: usize) -> Result<()> {
+        anyhow::ensure!(new_replicas > 0);
+        // Synchronize state into the anchor first if mid-round divergence
+        // exists (callers rescale at round boundaries; anchor is current).
+        let template = Replica::new(self.anchor.clone());
+        let adam_t = self.replicas[0].adam_t;
+        let clock = self.sim_time;
+        self.replicas.resize_with(new_replicas, || {
+            let mut r = template.clone();
+            r.adam_t = adam_t;
+            r.clock = clock;
+            r
+        });
+        for r in &mut self.replicas {
+            r.params.copy_from_slice(&self.anchor);
+            r.clock = clock;
+        }
+        self.cfg.mesh = MeshSpec::new(self.cfg.mesh.shard, new_replicas);
+        self.step_model.mesh = self.cfg.mesh;
+        self.detector.resize_replicas(new_replicas);
+        self.deltas.clear();
+        Ok(())
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+}

@@ -1,0 +1,145 @@
+//! The M×N device mesh (paper §3.1, Fig. 1).
+//!
+//! K = M·N workers arranged so that
+//!  * **model shard groups** (columns, M workers) jointly hold one full
+//!    replica of the parameters, ZeRO-3 style — communication-intensive
+//!    all-gather/reduce-scatter stays on the fast intra-node links;
+//!  * **model sync groups** (rows, N workers) hold *identical* shards
+//!    and synchronize only every τ inner steps over the slow links.
+//!
+//! Numerics note (DESIGN.md §4): within a shard group every worker ends
+//! each inner step with identical full parameters (grads are averaged
+//! every step), so the numerics path simulates one *logical replica per
+//! column* with effective batch M·b, while communication volume/time is
+//! accounted per physical worker through this mesh.
+
+use crate::collectives::Topology;
+
+/// Mesh shape: `shard` = M (shard-group size), `replicas` = N
+/// (sync-group size = number of logical replicas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshSpec {
+    pub shard: usize,
+    pub replicas: usize,
+}
+
+impl MeshSpec {
+    pub fn new(shard: usize, replicas: usize) -> Self {
+        assert!(shard > 0 && replicas > 0);
+        Self { shard, replicas }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shard * self.replicas
+    }
+
+    /// Global rank of worker (row=shard index i, col=replica j).
+    /// Column-major so a shard group is contiguous — i.e. lives on one
+    /// node when `shard <= gpus_per_node` (paper's recommended layout).
+    pub fn rank(&self, row: usize, col: usize) -> usize {
+        assert!(row < self.shard && col < self.replicas);
+        col * self.shard + row
+    }
+
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.workers());
+        (rank % self.shard, rank / self.shard)
+    }
+
+    /// Ranks of model shard group `col` (one full replica).
+    pub fn shard_group(&self, col: usize) -> Vec<usize> {
+        (0..self.shard).map(|row| self.rank(row, col)).collect()
+    }
+
+    /// Ranks of model sync group `row` (identical shards across replicas).
+    pub fn sync_group(&self, row: usize) -> Vec<usize> {
+        (0..self.replicas).map(|col| self.rank(row, col)).collect()
+    }
+
+    /// All ranks (DDP world group).
+    pub fn world(&self) -> Vec<usize> {
+        (0..self.workers()).collect()
+    }
+
+    /// Whether shard groups fit within single nodes of `topo`.
+    pub fn shard_groups_intra_node(&self, topo: &Topology) -> bool {
+        self.shard <= topo.gpus_per_node && topo.gpus_per_node % self.shard == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn rank_coord_bijection() {
+        check("mesh-bijection", 30, |g| {
+            let m = MeshSpec::new(g.usize(1, 9), g.usize(1, 9));
+            for rank in 0..m.workers() {
+                let (r, c) = m.coords(rank);
+                assert_eq!(m.rank(r, c), rank);
+            }
+        });
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        let m = MeshSpec::new(4, 3);
+        let mut seen = vec![false; 12];
+        for col in 0..m.replicas {
+            for r in m.shard_group(col) {
+                assert!(!seen[r]);
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+
+        let mut seen = vec![false; 12];
+        for row in 0..m.shard {
+            for r in m.sync_group(row) {
+                assert!(!seen[r]);
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn groups_intersect_in_one_worker() {
+        let m = MeshSpec::new(3, 4);
+        for col in 0..m.replicas {
+            for row in 0..m.shard {
+                let sg = m.shard_group(col);
+                let rg = m.sync_group(row);
+                let inter: Vec<_> =
+                    sg.iter().filter(|r| rg.contains(r)).collect();
+                assert_eq!(inter.len(), 1);
+                assert_eq!(*inter[0], m.rank(row, col));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_group_contiguous_on_node() {
+        let m = MeshSpec::new(8, 8); // the paper's 8x8 mesh
+        let topo = Topology::a100();
+        assert!(m.shard_groups_intra_node(&topo));
+        let sg = m.shard_group(3);
+        let node = topo.node_of(sg[0]);
+        assert!(sg.iter().all(|&r| topo.node_of(r) == node));
+        // sync groups span all 8 nodes
+        let rg = m.sync_group(0);
+        let nodes: std::collections::HashSet<_> =
+            rg.iter().map(|&r| topo.node_of(r)).collect();
+        assert_eq!(nodes.len(), 8);
+    }
+
+    #[test]
+    fn paper_mesh_sizes() {
+        let m = MeshSpec::new(8, 8);
+        assert_eq!(m.workers(), 64);
+        assert_eq!(m.shard_group(0).len(), 8);
+        assert_eq!(m.sync_group(0).len(), 8);
+    }
+}

@@ -1,0 +1,164 @@
+//! The method zoo: EDiT, A-EDiT, and every baseline the paper
+//! evaluates (Table 2 / Fig. 4).  All methods run on the same local-SGD
+//! engine; this enum captures where they differ (DESIGN.md §4).
+
+use super::outer::OuterOptKind;
+use super::penalty::PenaltyConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Standard synchronous mini-batch DDP ("Baseline").
+    Baseline,
+    /// Lin et al. 2019: DDP warmup, then plain parameter averaging.
+    PostLocalSgd,
+    /// Douillard et al. 2023: pseudo-gradient averaging + Nesterov outer.
+    DiLoCo,
+    /// Sun et al. 2023: DiLoCo numerics with staleness-1 outer update
+    /// (communication hidden behind the next round); FULL outer state
+    /// per worker.
+    Co2,
+    /// Memory-efficient CO2: sharded outer state, extra non-overlapped
+    /// communication (identical numerics to CO2).
+    Co2Star,
+    /// This paper: layer-wise sync + pseudo-gradient penalty + sharded
+    /// outer state.
+    Edit,
+    /// Asynchronous EDiT: time-based sync interval (§3.3).
+    AEdit,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Baseline,
+        Method::PostLocalSgd,
+        Method::DiLoCo,
+        Method::Co2,
+        Method::Co2Star,
+        Method::Edit,
+        Method::AEdit,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Baseline => "baseline",
+            Method::PostLocalSgd => "post-local-sgd",
+            Method::DiLoCo => "diloco",
+            Method::Co2 => "co2",
+            Method::Co2Star => "co2*",
+            Method::Edit => "edit",
+            Method::AEdit => "a-edit",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        let s = s.to_ascii_lowercase();
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.name() == s || m.name().replace('-', "_") == s)
+            .or(match s.as_str() {
+                "pls" => Some(Method::PostLocalSgd),
+                "co2star" | "co2s" => Some(Method::Co2Star),
+                "aedit" => Some(Method::AEdit),
+                _ => None,
+            })
+    }
+
+    /// Does this method run periodic (local-SGD) synchronization at all?
+    pub fn is_local_sgd(&self) -> bool {
+        !matches!(self, Method::Baseline)
+    }
+
+    /// Time-based (rather than step-based) sync trigger (§3.3).
+    pub fn time_based_sync(&self) -> bool {
+        matches!(self, Method::AEdit)
+    }
+
+    /// Paper's outer optimizer for this method.
+    pub fn default_outer(&self) -> OuterOptKind {
+        match self {
+            Method::Baseline => OuterOptKind::averaging(), // unused
+            Method::PostLocalSgd => OuterOptKind::averaging(),
+            _ => OuterOptKind::paper_nesterov(),
+        }
+    }
+
+    /// Pseudo-gradient penalty active? (EDiT family only.)
+    pub fn uses_penalty(&self) -> bool {
+        matches!(self, Method::Edit | Method::AEdit)
+    }
+
+    /// Layer-wise (per-module) synchronization during forward pass.
+    pub fn layerwise_sync(&self) -> bool {
+        matches!(self, Method::Edit | Method::AEdit)
+    }
+
+    /// Outer update applied with one round of staleness (CO2 overlap).
+    pub fn outer_staleness(&self) -> usize {
+        match self {
+            Method::Co2 | Method::Co2Star => 1,
+            _ => 0,
+        }
+    }
+
+    /// Outer-optimizer state sharded across the shard group (vs a full
+    /// copy per worker)? Drives the memory model (Table 2 OOM column).
+    pub fn outer_state_sharded(&self) -> bool {
+        matches!(self, Method::Co2Star | Method::Edit | Method::AEdit)
+    }
+
+    /// Extra full parameter copy (θ_t anchor) sharded?
+    pub fn anchor_sharded(&self) -> bool {
+        self.outer_state_sharded() // same storage policy in all methods
+    }
+
+    /// DDP warmup phase length applies (two-phase training, Alg. 1).
+    pub fn uses_warmup(&self) -> bool {
+        matches!(self, Method::PostLocalSgd | Method::Edit | Method::AEdit)
+    }
+
+    /// Penalty config for this method (disabled for non-EDiT methods).
+    pub fn default_penalty(&self) -> PenaltyConfig {
+        if self.uses_penalty() {
+            PenaltyConfig::default()
+        } else {
+            PenaltyConfig::disabled()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("PLS"), Some(Method::PostLocalSgd));
+        assert_eq!(Method::parse("co2star"), Some(Method::Co2Star));
+        assert_eq!(Method::parse("aedit"), Some(Method::AEdit));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn paper_property_matrix() {
+        use Method::*;
+        assert!(!Baseline.is_local_sgd());
+        assert!(Edit.uses_penalty() && AEdit.uses_penalty());
+        assert!(!DiLoCo.uses_penalty());
+        assert_eq!(Co2.outer_staleness(), 1);
+        assert_eq!(DiLoCo.outer_staleness(), 0);
+        assert!(Co2Star.outer_state_sharded() && !Co2.outer_state_sharded());
+        assert!(Edit.outer_state_sharded());
+        assert!(AEdit.time_based_sync() && !Edit.time_based_sync());
+        assert!(PostLocalSgd.uses_warmup() && !DiLoCo.uses_warmup());
+    }
+
+    #[test]
+    fn outer_defaults() {
+        assert_eq!(Method::PostLocalSgd.default_outer(), OuterOptKind::averaging());
+        assert_eq!(Method::Edit.default_outer(), OuterOptKind::paper_nesterov());
+    }
+}

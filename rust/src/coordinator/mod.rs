@@ -1,0 +1,25 @@
+//! Layer 3 — the paper's coordination contribution.
+//!
+//! * [`mesh`]     — the M×N device mesh (shard groups × sync groups);
+//! * [`method`]   — EDiT, A-EDiT and the baseline method zoo;
+//! * [`engine`]   — the local-SGD training engine (Alg. 1) with virtual
+//!                  clocks, straggler injection and elastic rescaling;
+//! * [`penalty`]  — the pseudo-gradient penalty (Alg. 2): EMA z-test
+//!                  anomaly elimination, softmax(-norm) weighted
+//!                  averaging, pseudo-gradient clipping, rollback;
+//! * [`outer`]    — outer optimizers (SGD / Nesterov over pseudo grads);
+//! * [`schedule`] — inner LR schedules.
+
+pub mod engine;
+pub mod mesh;
+pub mod method;
+pub mod outer;
+pub mod penalty;
+pub mod schedule;
+
+pub use engine::{Poison, Replica, RunSummary, Straggler, TrainConfig, Trainer};
+pub use mesh::MeshSpec;
+pub use method::Method;
+pub use outer::{OuterOpt, OuterOptKind};
+pub use penalty::{AnomalyDetector, PenaltyConfig};
+pub use schedule::LrSchedule;

@@ -1,0 +1,169 @@
+//! Outer optimizers (paper: "OuterOpt").
+//!
+//! The pseudo gradient Δ = θ_{t,τ} - θ_t points in the *descent*
+//! direction already (it is the progress the inner optimizer made), so
+//! internally we feed g = -Δ to standard SGD/Nesterov update rules:
+//!
+//!   SGD:       θ ← θ - ν g                       (= θ + ν Δ)
+//!   Nesterov:  m ← μ m + g ; θ ← θ - ν (g + μ m)
+//!
+//! Post Local SGD's plain parameter averaging is exactly SGD with ν = 1.
+//! DiLoCo/EDiT use Nesterov (paper §4.1). The momentum buffer is the
+//! "outer momentum" whose sharding/offload behaviour differentiates
+//! CO2 vs CO2* vs EDiT in the memory model.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OuterOptKind {
+    Sgd { lr: f64 },
+    Nesterov { lr: f64, momentum: f64 },
+}
+
+impl OuterOptKind {
+    /// Paper defaults for the FineWeb-Edu runs (§A.2).
+    pub fn paper_nesterov() -> Self {
+        OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }
+    }
+
+    /// Plain averaging (Post Local SGD).
+    pub fn averaging() -> Self {
+        OuterOptKind::Sgd { lr: 1.0 }
+    }
+
+    pub fn needs_momentum(&self) -> bool {
+        matches!(self, OuterOptKind::Nesterov { .. })
+    }
+}
+
+/// Outer optimizer state over the flat vector.
+#[derive(Debug, Clone)]
+pub struct OuterOpt {
+    pub kind: OuterOptKind,
+    /// Momentum buffer (empty for SGD).
+    pub momentum: Vec<f32>,
+}
+
+impl OuterOpt {
+    pub fn new(kind: OuterOptKind, n: usize) -> Self {
+        let momentum = if kind.needs_momentum() { vec![0.0; n] } else { Vec::new() };
+        Self { kind, momentum }
+    }
+
+    /// Apply the combined pseudo gradient `delta` to `params` in place,
+    /// restricted to `[off, off+len)` (per-module application for the
+    /// layer-wise EDiT sync; pass the full range otherwise).
+    pub fn apply_range(&mut self, params: &mut [f32], delta: &[f32], off: usize) {
+        match self.kind {
+            OuterOptKind::Sgd { lr } => {
+                let lr = lr as f32;
+                for (p, &d) in params[off..off + delta.len()].iter_mut().zip(delta) {
+                    *p += lr * d;
+                }
+            }
+            OuterOptKind::Nesterov { lr, momentum } => {
+                let (lr, mu) = (lr as f32, momentum as f32);
+                for (i, &d) in delta.iter().enumerate() {
+                    let g = -d;
+                    let m = &mut self.momentum[off + i];
+                    *m = mu * *m + g;
+                    params[off + i] -= lr * (g + mu * *m);
+                }
+            }
+        }
+    }
+
+    pub fn apply(&mut self, params: &mut [f32], delta: &[f32]) {
+        debug_assert_eq!(params.len(), delta.len());
+        self.apply_range(params, delta, 0);
+    }
+
+    /// Extra f32 elements of optimizer state per full replica.
+    pub fn state_elems(&self, n: usize) -> usize {
+        if self.kind.needs_momentum() { n } else { 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, check};
+
+    #[test]
+    fn sgd_lr1_is_parameter_adoption() {
+        // With ν=1 the result is θ_t + Δ = the averaged local params —
+        // Post Local SGD's plain averaging.
+        let mut opt = OuterOpt::new(OuterOptKind::averaging(), 3);
+        let anchor = vec![1.0f32, 2.0, 3.0];
+        let mut params = anchor.clone();
+        let delta = vec![0.5f32, -0.5, 0.25]; // mean(θ_local) - anchor
+        opt.apply(&mut params, &delta);
+        assert_close(&params, &[1.5, 1.5, 3.25], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn nesterov_first_step() {
+        // m=0: m' = g; θ' = θ - ν(g + μ g) = θ + ν(1+μ)Δ
+        let mut opt =
+            OuterOpt::new(OuterOptKind::Nesterov { lr: 0.5, momentum: 0.8 }, 2);
+        let mut params = vec![0.0f32, 0.0];
+        opt.apply(&mut params, &[1.0, -2.0]);
+        assert_close(&params, &[0.5 * 1.8, -0.5 * 1.8 * 2.0], 1e-6, 0.0);
+        assert_close(&opt.momentum, &[-1.0, 2.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn nesterov_momentum_accumulates() {
+        let mut opt =
+            OuterOpt::new(OuterOptKind::Nesterov { lr: 1.0, momentum: 0.5 }, 1);
+        let mut params = vec![0.0f32];
+        opt.apply(&mut params, &[1.0]);
+        let after1 = params[0]; // 1.5
+        opt.apply(&mut params, &[1.0]);
+        // m2 = 0.5*(-1) + (-1) = -1.5; step = -( -1 + 0.5*-1.5 ) = 1.75
+        assert!((after1 - 1.5).abs() < 1e-6);
+        assert!((params[0] - (1.5 + 1.75)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_delta_sgd_is_identity_nesterov_coasts() {
+        let mut sgd = OuterOpt::new(OuterOptKind::Sgd { lr: 1.0 }, 2);
+        let p = vec![1.0f32, 2.0];
+        sgd.apply(&mut p.clone(), &[0.0, 0.0]);
+        assert_eq!(p, vec![1.0, 2.0]);
+
+        let mut nes =
+            OuterOpt::new(OuterOptKind::Nesterov { lr: 1.0, momentum: 0.5 }, 2);
+        let mut p = vec![0.0f32, 0.0];
+        nes.apply(&mut p, &[1.0, 1.0]);
+        let v1 = p[0];
+        // zero delta: momentum keeps pushing (coasting), decayed by μ
+        nes.apply(&mut p, &[0.0, 0.0]);
+        assert!(p[0] > v1);
+    }
+
+    #[test]
+    fn per_module_equals_full_apply() {
+        check("outer-per-module", 25, |g| {
+            let n = g.len() * 4;
+            let delta = g.vec_f32(n, 1.0);
+            let start = g.vec_f32(n, 1.0);
+            let kind = if g.bool() {
+                OuterOptKind::Sgd { lr: 0.7 }
+            } else {
+                OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }
+            };
+            let mut full = OuterOpt::new(kind, n);
+            let mut p_full = start.clone();
+            full.apply(&mut p_full, &delta);
+
+            let mut ranged = OuterOpt::new(kind, n);
+            let mut p_ranged = start.clone();
+            let mid = n / 2;
+            ranged.apply_range(&mut p_ranged, &delta[..mid], 0);
+            ranged.apply_range(&mut p_ranged, &delta[mid..], mid);
+            assert_close(&p_ranged, &p_full, 1e-6, 1e-5);
+            if kind.needs_momentum() {
+                assert_close(&ranged.momentum, &full.momentum, 1e-6, 1e-5);
+            }
+        });
+    }
+}

@@ -1,0 +1,453 @@
+//! Pseudo-gradient penalty (paper §3.2, Alg. 2): the stability core of
+//! EDiT.  Three composable stages, each individually ablatable
+//! (Fig. 7a):
+//!
+//!  1. **Anomaly elimination** — per (replica, module) EMA z-test on the
+//!     pseudo-gradient norm G; z = (G-μ)/σ > δ ⇒ norm set to +inf so
+//!     the weighting stage zeroes that replica's contribution.  μ, σ
+//!     update by EMA (Eq. 1, α = 0.02), skipped for anomalous samples;
+//!     a warm-up period never flags.
+//!  2. **Weighted averaging** — w_i = softmax(-G_i) (Eq. 2/3):
+//!     larger-norm replicas are suppressed, inf-norm replicas excluded.
+//!  3. **Gradient clip** — β = min(φ/(‖Δ̄‖+ε), 1) (Eq. 4/5).
+//!
+//! If every replica in the group is anomalous the combined update is
+//! declared a rollback (θ stays at the last synced value).
+//!
+//! The O(W·n) math here is the pure-Rust twin of the L1 Pallas kernel
+//! (`python/compile/kernels/penalty.py`); `rust/tests/golden_penalty.rs`
+//! asserts both agree on the exported golden vectors, and the runtime
+//! can execute the AOT HLO variant instead (`Engine::penalty_combine`).
+
+use crate::tensor;
+
+/// Penalty hyperparameters (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct PenaltyConfig {
+    /// Clip threshold φ (paper: 10).
+    pub phi: f64,
+    /// z-score threshold δ (paper: 3).
+    pub delta: f64,
+    /// EMA coefficient α (paper: 0.02).
+    pub alpha: f64,
+    /// Sync steps before the z-test may flag anomalies.
+    pub warmup_syncs: u64,
+    /// σ is floored at this fraction of |μ| so the z-test stays robust
+    /// while the EMA variance is still accumulating (the paper's
+    /// "warm-up period to establish stable values" plus a guard).
+    pub sigma_floor_frac: f64,
+    /// Ablation toggles (Fig. 7a: w/o AE / WA / GC / ALL).
+    pub anomaly_elimination: bool,
+    pub weighted_averaging: bool,
+    pub gradient_clip: bool,
+    pub eps: f64,
+}
+
+impl Default for PenaltyConfig {
+    fn default() -> Self {
+        Self {
+            phi: 10.0,
+            delta: 3.0,
+            alpha: 0.02,
+            warmup_syncs: 5,
+            sigma_floor_frac: 0.05,
+            anomaly_elimination: true,
+            weighted_averaging: true,
+            gradient_clip: true,
+            eps: 1e-8,
+        }
+    }
+}
+
+impl PenaltyConfig {
+    pub fn disabled() -> Self {
+        Self {
+            anomaly_elimination: false,
+            weighted_averaging: false,
+            gradient_clip: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without(mut self, stage: &str) -> Self {
+        match stage {
+            "ae" => self.anomaly_elimination = false,
+            "wa" => self.weighted_averaging = false,
+            "gc" => self.gradient_clip = false,
+            "all" => return Self::disabled(),
+            other => panic!("unknown penalty stage '{other}'"),
+        }
+        self
+    }
+}
+
+/// EMA z-test state for one (replica, module) norm stream (Eq. 1).
+#[derive(Debug, Clone, Copy)]
+struct EmaStat {
+    mean: f64,
+    var: f64,
+    initialized: bool,
+}
+
+impl EmaStat {
+    fn new() -> Self {
+        Self { mean: 0.0, var: 0.0, initialized: false }
+    }
+
+    fn z(&self, x: f64, sigma_floor_frac: f64) -> f64 {
+        if !self.initialized {
+            return 0.0;
+        }
+        let sigma = self.var.sqrt().max(sigma_floor_frac * self.mean.abs());
+        if sigma <= 1e-12 {
+            // Degenerate spread around zero: any deviation is anomalous.
+            if (x - self.mean).abs() <= 1e-12 { 0.0 } else { f64::INFINITY }
+        } else {
+            (x - self.mean) / sigma
+        }
+    }
+
+    /// Eq. 1: EMA mean then EMA variance against the *new* mean.
+    fn update(&mut self, x: f64, alpha: f64) {
+        if !self.initialized {
+            self.mean = x;
+            self.var = 0.0;
+            self.initialized = true;
+            return;
+        }
+        let mean_new = alpha * x + (1.0 - alpha) * self.mean;
+        self.var = (1.0 - alpha) * self.var + alpha * (x - mean_new) * (x - mean_new);
+        self.mean = mean_new;
+    }
+}
+
+/// Per-(replica, module) anomaly detector.
+#[derive(Debug, Clone)]
+pub struct AnomalyDetector {
+    stats: Vec<EmaStat>, // [replica * modules + module]
+    modules: usize,
+    syncs_seen: u64,
+    cfg: PenaltyConfig,
+    pub anomalies_flagged: u64,
+    pub rollbacks: u64,
+}
+
+impl AnomalyDetector {
+    pub fn new(replicas: usize, modules: usize, cfg: PenaltyConfig) -> Self {
+        Self {
+            stats: vec![EmaStat::new(); replicas * modules],
+            modules,
+            syncs_seen: 0,
+            cfg,
+            anomalies_flagged: 0,
+            rollbacks: 0,
+        }
+    }
+
+    /// Grow state when replicas are added elastically.
+    pub fn resize_replicas(&mut self, replicas: usize) {
+        self.stats.resize(replicas * self.modules, EmaStat::new());
+    }
+
+    /// Adopt a (possibly ablated/re-tuned) config; the trainer calls this
+    /// each sync so `TrainConfig.penalty` edits take effect immediately.
+    pub fn set_config(&mut self, cfg: PenaltyConfig) {
+        self.cfg = cfg;
+    }
+
+    /// Screen per-replica norms for one module; returns norms with
+    /// anomalous entries replaced by +inf, and updates EMA state.
+    /// Call once per sync per module, replicas in fixed order.
+    pub fn screen(&mut self, module: usize, norms: &[f64]) -> Vec<f64> {
+        let in_warmup = self.syncs_seen < self.cfg.warmup_syncs;
+        let mut out = Vec::with_capacity(norms.len());
+        for (replica, &g) in norms.iter().enumerate() {
+            let idx = replica * self.modules + module;
+            let anomalous = self.cfg.anomaly_elimination
+                && !in_warmup
+                && (self.stats[idx].z(g, self.cfg.sigma_floor_frac) > self.cfg.delta
+                    || !g.is_finite());
+            if anomalous {
+                self.anomalies_flagged += 1;
+                out.push(f64::INFINITY);
+                // Eq. 1 update skipped for infinite G.
+            } else {
+                self.stats[idx].update(g, self.cfg.alpha);
+                out.push(g);
+            }
+        }
+        out
+    }
+
+    /// Advance the sync counter (call once per sync round).
+    pub fn advance(&mut self) {
+        self.syncs_seen += 1;
+    }
+
+    pub fn syncs_seen(&self) -> u64 {
+        self.syncs_seen
+    }
+}
+
+/// Result of combining one module's pseudo gradients.
+#[derive(Debug, Clone)]
+pub struct CombineOut {
+    /// Combined clipped pseudo gradient (len = module len); empty on
+    /// rollback.
+    pub delta: Vec<f32>,
+    pub weights: Vec<f32>,
+    pub beta: f64,
+    pub rollback: bool,
+}
+
+/// Weighted-average weights from screened norms (Eq. 2), stabilized by
+/// shifting by the min finite norm. All-anomalous ⇒ all-zero weights.
+pub fn softmax_neg_weights(norms: &[f64], weighted: bool) -> Vec<f32> {
+    let finite: Vec<bool> = norms.iter().map(|g| g.is_finite()).collect();
+    let n_finite = finite.iter().filter(|&&f| f).count();
+    if n_finite == 0 {
+        return vec![0.0; norms.len()];
+    }
+    if !weighted {
+        // Ablation w/o WA: uniform over non-anomalous replicas.
+        let w = 1.0 / n_finite as f32;
+        return finite.iter().map(|&f| if f { w } else { 0.0 }).collect();
+    }
+    let gmin = norms
+        .iter()
+        .zip(&finite)
+        .filter(|(_, &f)| f)
+        .map(|(&g, _)| g)
+        .fold(f64::INFINITY, f64::min);
+    let raw: Vec<f64> = norms
+        .iter()
+        .zip(&finite)
+        .map(|(&g, &f)| if f { (-(g - gmin)).exp() } else { 0.0 })
+        .collect();
+    let total: f64 = raw.iter().sum();
+    raw.iter().map(|&r| (r / total) as f32).collect()
+}
+
+/// Full Alg. 2 combine for one module across replicas.
+///
+/// `deltas[r]` is replica r's pseudo gradient restricted to this module;
+/// `screened_norms` come from [`AnomalyDetector::screen`].
+pub fn combine(
+    deltas: &[&[f32]],
+    screened_norms: &[f64],
+    cfg: &PenaltyConfig,
+) -> CombineOut {
+    debug_assert_eq!(deltas.len(), screened_norms.len());
+    let weights = softmax_neg_weights(screened_norms, cfg.weighted_averaging);
+    if weights.iter().all(|&w| w == 0.0) {
+        return CombineOut { delta: Vec::new(), weights, beta: 0.0, rollback: true };
+    }
+    let len = deltas[0].len();
+    let mut out = vec![0.0f32; len];
+    tensor::weighted_sum_into(&mut out, deltas, &weights);
+    let mut beta = 1.0;
+    if cfg.gradient_clip {
+        let norm = tensor::norm(&out);
+        beta = (cfg.phi / (norm + cfg.eps)).min(1.0);
+        if beta < 1.0 {
+            tensor::scale(&mut out, beta as f32);
+        }
+    }
+    CombineOut { delta: out, weights, beta, rollback: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, check};
+
+    fn norms_of(deltas: &[Vec<f32>]) -> Vec<f64> {
+        deltas.iter().map(|d| tensor::norm(d)).collect()
+    }
+
+    #[test]
+    fn uniform_when_equal_norms() {
+        let deltas = vec![vec![1.0f32; 4], vec![-1.0f32; 4]];
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let out = combine(&refs, &norms_of(&deltas), &PenaltyConfig::default());
+        assert_close(&out.weights, &[0.5, 0.5], 1e-6, 0.0);
+        assert_close(&out.delta, &[0.0; 4], 1e-6, 0.0);
+        assert!(!out.rollback);
+    }
+
+    #[test]
+    fn larger_norm_downweighted() {
+        let deltas = vec![vec![0.1f32; 4], vec![10.0f32; 4]];
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let out = combine(&refs, &norms_of(&deltas), &PenaltyConfig::default());
+        assert!(out.weights[0] > 0.99);
+    }
+
+    #[test]
+    fn clip_engages_above_phi() {
+        let deltas = vec![vec![100.0f32; 100]];
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let cfg = PenaltyConfig { phi: 1.0, ..Default::default() };
+        let out = combine(&refs, &norms_of(&deltas), &cfg);
+        assert!(out.beta < 1.0);
+        assert!((tensor::norm(&out.delta) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clip_disabled_by_ablation() {
+        let deltas = vec![vec![100.0f32; 100]];
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let cfg = PenaltyConfig { phi: 1.0, ..Default::default() }.without("gc");
+        let out = combine(&refs, &norms_of(&deltas), &cfg);
+        assert_eq!(out.beta, 1.0);
+        assert!(tensor::norm(&out.delta) > 100.0);
+    }
+
+    #[test]
+    fn all_anomalous_rolls_back() {
+        let deltas = vec![vec![1.0f32; 4], vec![2.0f32; 4]];
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let out = combine(&refs, &[f64::INFINITY, f64::INFINITY], &PenaltyConfig::default());
+        assert!(out.rollback);
+        assert!(out.delta.is_empty());
+    }
+
+    #[test]
+    fn wa_ablation_uniform_over_survivors() {
+        let w = softmax_neg_weights(&[1.0, f64::INFINITY, 5.0], false);
+        assert_close(&w, &[0.5, 0.0, 0.5], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn weights_form_simplex() {
+        check("penalty-simplex", 30, |g| {
+            let n = g.len().min(8).max(2);
+            let norms: Vec<f64> = (0..n)
+                .map(|i| {
+                    if i == 0 || !g.bool() { g.rng.f64() * 100.0 } else { f64::INFINITY }
+                })
+                .collect();
+            let w = softmax_neg_weights(&norms, true);
+            let sum: f32 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+            assert!(w.iter().all(|&x| x >= 0.0));
+            for (i, &g_i) in norms.iter().enumerate() {
+                if !g_i.is_finite() {
+                    assert_eq!(w[i], 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn clip_never_increases_norm() {
+        check("penalty-clip-bound", 25, |g| {
+            let n = g.len() * 3 + 1;
+            let w = g.usize(1, 5);
+            let deltas: Vec<Vec<f32>> =
+                (0..w).map(|_| g.vec_f32(n, 30.0)).collect();
+            let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+            let cfg = PenaltyConfig { phi: 2.0, ..Default::default() };
+            let out = combine(&refs, &norms_of(&deltas), &cfg);
+            assert!(tensor::norm(&out.delta) <= 2.0 + 1e-3);
+        });
+    }
+
+    // ---- detector ----------------------------------------------------------
+
+    #[test]
+    fn detector_never_flags_in_warmup() {
+        let cfg = PenaltyConfig { warmup_syncs: 3, ..Default::default() };
+        let mut det = AnomalyDetector::new(2, 1, cfg);
+        for _ in 0..3 {
+            let screened = det.screen(0, &[1.0, 1000.0]);
+            assert!(screened.iter().all(|g| g.is_finite()));
+            det.advance();
+        }
+    }
+
+    #[test]
+    fn detector_flags_spike_after_warmup() {
+        let cfg = PenaltyConfig { warmup_syncs: 2, ..Default::default() };
+        let mut det = AnomalyDetector::new(1, 1, cfg);
+        // Establish a stable stream around 1.0 with a little variance.
+        for i in 0..30 {
+            let g = 1.0 + 0.05 * ((i % 3) as f64 - 1.0);
+            det.screen(0, &[g]);
+            det.advance();
+        }
+        let screened = det.screen(0, &[50.0]);
+        assert!(screened[0].is_infinite());
+        assert_eq!(det.anomalies_flagged, 1);
+        // Normal value right after is still accepted (EMA not poisoned).
+        let screened = det.screen(0, &[1.02]);
+        assert!(screened[0].is_finite());
+    }
+
+    #[test]
+    fn detector_ablation_never_flags() {
+        let cfg = PenaltyConfig { warmup_syncs: 0, ..Default::default() }.without("ae");
+        let mut det = AnomalyDetector::new(1, 1, cfg);
+        for _ in 0..10 {
+            det.screen(0, &[1.0]);
+            det.advance();
+        }
+        let screened = det.screen(0, &[1e9]);
+        assert!(screened[0].is_finite());
+    }
+
+    #[test]
+    fn detector_tracks_slow_drift() {
+        // Gradual norm decay (convergence trend) must NOT be flagged.
+        let cfg = PenaltyConfig { warmup_syncs: 2, ..Default::default() };
+        let mut det = AnomalyDetector::new(1, 1, cfg);
+        let mut g = 10.0;
+        for _ in 0..200 {
+            let screened = det.screen(0, &[g]);
+            assert!(screened[0].is_finite(), "flagged at g={g}");
+            det.advance();
+            g *= 0.995;
+        }
+    }
+
+    #[test]
+    fn detector_per_module_independent() {
+        let cfg = PenaltyConfig { warmup_syncs: 1, ..Default::default() };
+        let mut det = AnomalyDetector::new(1, 2, cfg);
+        for i in 0..30 {
+            let jitter = 0.01 * ((i % 5) as f64);
+            det.screen(0, &[1.0 + jitter]);
+            det.screen(1, &[100.0 + jitter]);
+            det.advance();
+        }
+        // 100 is normal for module 1, anomalous for module 0.
+        assert!(det.screen(0, &[100.0])[0].is_infinite());
+        assert!(det.screen(1, &[100.0])[0].is_finite());
+    }
+
+    #[test]
+    fn resize_preserves_existing() {
+        let cfg = PenaltyConfig { warmup_syncs: 0, ..Default::default() };
+        let mut det = AnomalyDetector::new(1, 1, cfg);
+        for i in 0..20 {
+            det.screen(0, &[1.0 + 0.01 * (i % 3) as f64]);
+            det.advance();
+        }
+        det.resize_replicas(3);
+        let screened = det.screen(0, &[30.0, 30.0, 30.0]);
+        // replica 0 has history -> flagged; new replicas unseeded -> pass.
+        assert!(screened[0].is_infinite());
+        assert!(screened[1].is_finite() && screened[2].is_finite());
+    }
+
+    #[test]
+    fn ema_matches_eq1_by_hand() {
+        let mut s = EmaStat::new();
+        s.update(2.0, 0.5);
+        assert_eq!((s.mean, s.var), (2.0, 0.0));
+        s.update(4.0, 0.5);
+        // mean = .5*4 + .5*2 = 3 ; var = .5*0 + .5*(4-3)^2 = 0.5
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.var - 0.5).abs() < 1e-12);
+    }
+}

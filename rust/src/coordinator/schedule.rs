@@ -1,0 +1,98 @@
+//! Inner learning-rate schedules.
+//!
+//! The paper applies a cosine decay across all experiments (§A.2); the
+//! theoretical analysis (Thm. 1) uses η_{t,p} = η/sqrt(tτ+p+1), provided
+//! here as [`LrSchedule::InvSqrt`] for the theorem-validation example.
+//! The schedule runs in Rust (the HLO train step takes lr as a runtime
+//! scalar) so elastic rescaling can re-shape it without re-lowering.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant { lr: f64 },
+    /// Linear warmup to `lr`, then cosine decay to `lr * floor_frac`
+    /// at `total_steps`.
+    Cosine { lr: f64, warmup: u64, total_steps: u64, floor_frac: f64 },
+    /// η / sqrt(step+1) — Theorem 1's inner schedule.
+    InvSqrt { lr: f64 },
+}
+
+impl LrSchedule {
+    /// Paper defaults: cosine with 1% warmup and 10% floor.
+    pub fn paper_cosine(lr: f64, total_steps: u64) -> Self {
+        LrSchedule::Cosine {
+            lr,
+            warmup: (total_steps / 100).max(1),
+            total_steps,
+            floor_frac: 0.1,
+        }
+    }
+
+    /// Learning rate at global inner step `step` (0-based).
+    pub fn at(&self, step: u64) -> f64 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::InvSqrt { lr } => lr / ((step + 1) as f64).sqrt(),
+            LrSchedule::Cosine { lr, warmup, total_steps, floor_frac } => {
+                if step < warmup {
+                    return lr * (step + 1) as f64 / warmup as f64;
+                }
+                let total = total_steps.max(warmup + 1);
+                let t = ((step - warmup) as f64
+                    / (total - warmup) as f64)
+                    .min(1.0);
+                let floor = lr * floor_frac;
+                floor
+                    + 0.5 * (lr - floor) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn cosine_shape() {
+        let s = LrSchedule::Cosine { lr: 1.0, warmup: 10, total_steps: 110, floor_frac: 0.1 };
+        // warmup ramps linearly
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.at(9) - 1.0).abs() < 1e-12);
+        // peak then monotone decay
+        let mut prev = s.at(10);
+        for step in 11..110 {
+            let cur = s.at(step);
+            assert!(cur <= prev + 1e-12, "step {step}");
+            prev = cur;
+        }
+        // floor reached, never undershot
+        assert!((s.at(110) - 0.1).abs() < 1e-9);
+        assert!(s.at(10_000) >= 0.1 - 1e-12);
+    }
+
+    #[test]
+    fn inv_sqrt_matches_theorem() {
+        let s = LrSchedule::InvSqrt { lr: 2.0 };
+        assert_eq!(s.at(0), 2.0);
+        assert!((s.at(3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_cosine_defaults() {
+        let s = LrSchedule::paper_cosine(3e-4, 1000);
+        match s {
+            LrSchedule::Cosine { warmup, floor_frac, .. } => {
+                assert_eq!(warmup, 10);
+                assert!((floor_frac - 0.1).abs() < 1e-12);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

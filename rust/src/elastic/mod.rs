@@ -1,0 +1,69 @@
+//! Elastic-training driver (paper §4.4, Fig. 6c).
+//!
+//! Runs a worker-count schedule (e.g. 1→2→4→8 or 8→4→2→1 replicas),
+//! rescaling the trainer at phase boundaries: new replicas clone the
+//! synchronized parameters; outer momentum and anomaly statistics
+//! survive; per-replica batch size stays fixed (the property EDiT's
+//! LR-transfer depends on — Fig. 6a/b).
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+
+/// One phase of the elastic schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub replicas: usize,
+    pub steps: u64,
+}
+
+/// Scale-up and scale-down schedules from the paper (steps scaled by
+/// the caller to the CPU regime).
+pub fn paper_schedule(up: bool, steps_per_phase: u64) -> Vec<Phase> {
+    let counts: [usize; 4] = if up { [1, 2, 4, 8] } else { [8, 4, 2, 1] };
+    counts.iter().map(|&replicas| Phase { replicas, steps: steps_per_phase }).collect()
+}
+
+/// Validation-PPL sample taken at a phase boundary.
+#[derive(Debug, Clone)]
+pub struct ElasticPoint {
+    pub global_step: u64,
+    pub replicas: usize,
+    pub val_ppl: f64,
+}
+
+/// Drive `trainer` through `phases`, rescaling between them. Returns
+/// PPL checkpoints (one per phase end, plus periodic samples recorded
+/// in the trainer's own tracker).
+pub fn run_schedule(trainer: &mut Trainer, phases: &[Phase]) -> Result<Vec<ElasticPoint>> {
+    let mut points = Vec::new();
+    for phase in phases {
+        trainer.rescale(phase.replicas)?;
+        let target = trainer.global_step + phase.steps;
+        trainer.cfg.total_steps = target;
+        while trainer.global_step < target {
+            trainer.run_round()?;
+        }
+        let val = trainer.evaluate()?;
+        points.push(ElasticPoint {
+            global_step: trainer.global_step,
+            replicas: phase.replicas,
+            val_ppl: val.exp(),
+        });
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_shape() {
+        let up = paper_schedule(true, 100);
+        assert_eq!(up.iter().map(|p| p.replicas).collect::<Vec<_>>(), vec![1, 2, 4, 8]);
+        let down = paper_schedule(false, 50);
+        assert_eq!(down[0].replicas, 8);
+        assert!(down.iter().all(|p| p.steps == 50));
+    }
+}

@@ -1,0 +1,275 @@
+//! Convergence & generalization harnesses: Fig. 4, Table 1, Fig. 7,
+//! Fig. 8 (+ Table 5 probe grid for the scale sweep).
+
+use anyhow::Result;
+
+use crate::coordinator::Method;
+use crate::data::Quality;
+use crate::metrics::{format_g, CsvWriter, Table};
+
+use super::ExpOpts;
+
+/// Fig. 4: loss + validation-PPL curves for every method on a clean
+/// (FineWeb-Edu analog) or noisy (in-house analog) corpus.  Writes
+/// `fig4_<tag>_curves.csv` (method, step, loss, val_ppl) and prints the
+/// final-value table the figure annotates.
+pub fn fig4(opts: &ExpOpts, methods: &[Method], noisy: bool) -> Result<Vec<(Method, f64, f64)>> {
+    let tag = if noisy { "noisy" } else { "clean" };
+    let quality = if noisy { Quality::noisy() } else { Quality::clean() };
+    let mut curves = CsvWriter::create(
+        opts.result_path(&format!("fig4_{tag}_curves.csv")),
+        &["method", "step", "train_loss", "val_ppl"],
+    )?;
+    let mut finals = Vec::new();
+    let mut table = Table::new(&["method", "final loss", "final PPL", "syncs", "anomalies", "rollbacks"]);
+
+    for &method in methods {
+        let mut t = opts.trainer(method, quality, 0)?;
+        let summary = t.run()?;
+        // Merge loss and val curves on step index.
+        let mut val_iter = t.tracker.val_ppl.iter().peekable();
+        for &(step, loss) in &t.tracker.losses {
+            let val = match val_iter.peek() {
+                Some(&&(vs, vp)) if vs <= step => {
+                    val_iter.next();
+                    vp
+                }
+                _ => f64::NAN,
+            };
+            curves.row(&[
+                method.name().into(),
+                step.to_string(),
+                format_g(loss),
+                if val.is_nan() { String::new() } else { format_g(val) },
+            ])?;
+        }
+        table.row(vec![
+            method.name().into(),
+            format_g(summary.final_loss),
+            format_g(summary.final_ppl),
+            summary.syncs.to_string(),
+            summary.anomalies.to_string(),
+            summary.rollbacks.to_string(),
+        ]);
+        finals.push((method, summary.final_loss, summary.final_ppl));
+    }
+    curves.flush()?;
+    println!("\nFig. 4 ({tag} corpus) — final values (mean of last 10):");
+    print!("{}", table.render());
+    Ok(finals)
+}
+
+/// Table 1: probe-stream PPLs per method (the offline substitute for
+/// the public benchmarks). Writes `table1_<tag>.csv`.
+pub fn table1(opts: &ExpOpts, methods: &[Method], noisy: bool) -> Result<()> {
+    let tag = if noisy { "noisy" } else { "clean" };
+    let quality = if noisy { Quality::noisy() } else { Quality::clean() };
+    let probe_names: Vec<&str> =
+        crate::data::probe::Probe::ALL.iter().map(|p| p.name()).collect();
+    let mut header = vec!["probe"];
+    let method_names: Vec<String> = methods.iter().map(|m| m.name().to_string()).collect();
+    header.extend(method_names.iter().map(|s| s.as_str()));
+    let mut csv = CsvWriter::create(
+        opts.result_path(&format!("table1_{tag}.csv")),
+        &header,
+    )?;
+    let mut grid: Vec<Vec<f64>> = vec![Vec::new(); probe_names.len()];
+    for &method in methods {
+        let mut t = opts.trainer(method, quality, 0)?;
+        t.run()?;
+        for (i, (_, ppl)) in t.probe_ppls()?.into_iter().enumerate() {
+            grid[i].push(ppl);
+        }
+    }
+    let mut table = Table::new(&header);
+    for (i, name) in probe_names.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(grid[i].iter().map(|&p| format_g(p)));
+        csv.row(&row)?;
+        table.row(row);
+    }
+    // Average row (paper Table 1 bottom line), PPL: lower is better.
+    let mut avg_row = vec!["average (PPL ↓)".to_string()];
+    for j in 0..methods.len() {
+        let avg: f64 =
+            grid.iter().map(|r| r[j]).sum::<f64>() / probe_names.len() as f64;
+        avg_row.push(format_g(avg));
+    }
+    csv.row(&avg_row)?;
+    table.row(avg_row);
+    csv.flush()?;
+    println!("\nTable 1 ({tag}) — probe PPLs (benchmark substitute):");
+    print!("{}", table.render());
+    Ok(())
+}
+
+/// Fig. 7a: penalty ablation on the noisy corpus; Fig. 7b/c: per-worker
+/// loss traces for DiLoCo vs EDiT. Writes `fig7a_ablation.csv` and
+/// `fig7bc_worker_losses.csv`.
+pub fn fig7(opts: &ExpOpts) -> Result<()> {
+    let variants: [(&str, &str); 5] = [
+        ("edit", ""),
+        ("w/o AE", "ae"),
+        ("w/o WA", "wa"),
+        ("w/o GC", "gc"),
+        ("w/o ALL", "all"),
+    ];
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig7a_ablation.csv"),
+        &["variant", "step", "train_loss", "val_ppl"],
+    )?;
+    let mut table = Table::new(&["variant", "final PPL", "anomalies", "rollbacks", "loss spikes"]);
+    // Noisy corpus + fault injection: replica 1's state drifts for two
+    // sync rounds (Fig. 7b scenario), then EVERY replica drifts for one
+    // round (the all-anomalous rollback path, Fig. 7c). At 96-step
+    // scale this produces the per-worker divergence the paper sees
+    // organically over 150k steps on the in-house corpus, so every
+    // penalty stage has work to do. Fault injection is harness-side
+    // (DESIGN.md §6), not a change to the algorithm. φ is rescaled to
+    // this model's pseudo-gradient-norm magnitude (paper's φ=10 is
+    // calibrated to billion-parameter norms).
+    let ablation_quality = Quality { noise_prob: 0.05 };
+    let poison = vec![
+        crate::coordinator::Poison { replica: 1, from_sync: 5, to_sync: 7, strength: 1e-2 },
+        crate::coordinator::Poison {
+            replica: usize::MAX,
+            from_sync: 9,
+            to_sync: 10,
+            strength: 1e-2,
+        },
+    ];
+    for (name, stage) in variants {
+        let mut t = opts.trainer(Method::Edit, ablation_quality, 1)?;
+        t.cfg.penalty.warmup_syncs = 3;
+        // The paper's α=0.02 tracks norm drift at τ=128 over 100k steps;
+        // our compressed runs see ~25% norm decay PER SYNC, so the EMA
+        // needs a faster time constant to play the same role.
+        t.cfg.penalty.alpha = 0.3;
+        t.cfg.penalty.phi = 0.3;
+        t.cfg.poison = poison.clone();
+        if !stage.is_empty() {
+            t.cfg.penalty = t.cfg.penalty.without(stage);
+        }
+        let summary = t.run()?;
+        let mut val_iter = t.tracker.val_ppl.iter().peekable();
+        for &(step, loss) in &t.tracker.losses {
+            let val = match val_iter.peek() {
+                Some(&&(vs, vp)) if vs <= step => {
+                    val_iter.next();
+                    vp
+                }
+                _ => f64::NAN,
+            };
+            csv.row(&[
+                name.into(),
+                step.to_string(),
+                format_g(loss),
+                if val.is_nan() { String::new() } else { format_g(val) },
+            ])?;
+        }
+        // Spikes counted on per-replica traces (round means smooth them).
+        let spikes: usize = t
+            .replicas
+            .iter()
+            .map(|r| {
+                count_spikes(
+                    &r.losses.iter().map(|&(s, l)| (s, l as f64)).collect::<Vec<_>>(),
+                )
+            })
+            .sum();
+        table.row(vec![
+            name.into(),
+            format_g(summary.final_ppl),
+            summary.anomalies.to_string(),
+            summary.rollbacks.to_string(),
+            spikes.to_string(),
+        ]);
+    }
+    csv.flush()?;
+    println!("\nFig. 7a — pseudo-gradient-penalty ablation (noisy corpus):");
+    print!("{}", table.render());
+
+    // 7b/c: per-replica loss traces.
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig7bc_worker_losses.csv"),
+        &["method", "worker", "step", "loss"],
+    )?;
+    for method in [Method::DiLoCo, Method::Edit] {
+        let mut t = opts.trainer(method, ablation_quality, 1)?;
+        t.cfg.penalty.warmup_syncs = 3;
+        t.cfg.penalty.alpha = 0.3;
+        t.cfg.penalty.phi = 0.3;
+        t.cfg.poison = poison.clone();
+        t.run()?;
+        for (w, r) in t.replicas.iter().enumerate() {
+            for &(step, loss) in &r.losses {
+                csv.row(&[
+                    method.name().into(),
+                    w.to_string(),
+                    step.to_string(),
+                    format_g(loss as f64),
+                ])?;
+            }
+        }
+    }
+    csv.flush()?;
+    println!("per-worker traces -> fig7bc_worker_losses.csv");
+    Ok(())
+}
+
+/// Loss spikes: count steps where loss jumps >10% above the running min.
+pub fn count_spikes(losses: &[(u64, f64)]) -> usize {
+    let mut run_min = f64::INFINITY;
+    let mut spikes = 0;
+    for &(_, l) in losses {
+        if l > run_min * 1.10 {
+            spikes += 1;
+        }
+        run_min = run_min.min(l);
+    }
+    spikes
+}
+
+/// Fig. 8 / Table 5: EDiT across model scales (the CPU-trainable
+/// presets substitute for 350M–7B). Writes `fig8_scales.csv`.
+pub fn fig8(opts: &ExpOpts, models: &[&str]) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig8_scales.csv"),
+        &["model", "params", "step", "train_loss", "val_ppl"],
+    )?;
+    let mut table = Table::new(&["model", "params", "final loss", "final PPL"]);
+    for &model in models {
+        let mut o = opts.clone();
+        o.model = model.to_string();
+        let mut t = o.trainer(Method::Edit, Quality::clean(), 2)?;
+        let params = t.num_params();
+        let summary = t.run()?;
+        let mut val_iter = t.tracker.val_ppl.iter().peekable();
+        for &(step, loss) in &t.tracker.losses {
+            let val = match val_iter.peek() {
+                Some(&&(vs, vp)) if vs <= step => {
+                    val_iter.next();
+                    vp
+                }
+                _ => f64::NAN,
+            };
+            csv.row(&[
+                model.into(),
+                params.to_string(),
+                step.to_string(),
+                format_g(loss),
+                if val.is_nan() { String::new() } else { format_g(val) },
+            ])?;
+        }
+        table.row(vec![
+            model.into(),
+            params.to_string(),
+            format_g(summary.final_loss),
+            format_g(summary.final_ppl),
+        ]);
+    }
+    csv.flush()?;
+    println!("\nFig. 8 — EDiT across model scales:");
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Experiment harnesses — one per table/figure in the paper's
+//! evaluation (DESIGN.md §3 experiment index).  Each harness prints the
+//! paper-shaped table and writes CSVs under `results/`.
+//!
+//! * [`convergence`] — Fig. 4 loss/PPL curves, Table 1 probe evals,
+//!   Fig. 7 penalty ablation + per-worker spike traces, Fig. 8 scales;
+//! * [`throughput`]  — Table 2 tokens/s + TFLOPS + OOM grid, Fig. 5 /
+//!   Table 6 straggler & bandwidth scenarios, Fig. 9 sync timelines;
+//! * [`scaling`]     — Fig. 6a/b LR-transfer sweep, Fig. 6c elastic runs.
+
+pub mod convergence;
+pub mod scaling;
+pub mod throughput;
+
+use crate::collectives::{CostModel, Topology};
+use crate::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
+use crate::data::{Corpus, Quality};
+use crate::runtime::Engine;
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Common options for the training-based experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    /// Model preset (artifact config name: test/petite/tiny/mini).
+    pub model: String,
+    pub steps: u64,
+    pub mesh: MeshSpec,
+    pub tau: u64,
+    pub seed: u64,
+    pub log: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            results: PathBuf::from("results"),
+            model: "test".into(),
+            steps: 96,
+            mesh: MeshSpec::new(2, 4),
+            tau: 8,
+            seed: 42,
+            log: false,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn result_path(&self, name: &str) -> PathBuf {
+        self.results.join(name)
+    }
+
+    /// Build a trainer for `method` on a corpus of the given quality.
+    pub fn trainer(&self, method: Method, quality: Quality, seed_off: u64) -> Result<Trainer> {
+        let engine = Engine::load(&self.artifacts, &self.model)?;
+        let corpus = Corpus::new(
+            engine.manifest.model.vocab_size,
+            self.seed + seed_off,
+            quality,
+        );
+        let mut cfg = TrainConfig::paper_default(method, self.mesh, self.steps);
+        cfg.tau = self.tau;
+        cfg.tau_time = self.tau as f64 * cfg.base_step_time;
+        cfg.t_warm = if method.uses_warmup() {
+            (self.steps / 12).max(self.tau.min(8))
+        } else {
+            0
+        };
+        cfg.seed = self.seed + seed_off;
+        cfg.eval_every_syncs = 2;
+        cfg.log_every = if self.log { 1 } else { 0 };
+        Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100()))
+    }
+}

@@ -1,0 +1,110 @@
+//! Scalability harnesses: Fig. 6a/b (optimal-LR transfer across worker
+//! counts) and Fig. 6c (elastic up/down-scaling).
+
+use anyhow::Result;
+
+use crate::coordinator::{LrSchedule, MeshSpec, Method};
+use crate::data::Quality;
+use crate::elastic;
+use crate::metrics::{format_g, CsvWriter, Table};
+
+use super::ExpOpts;
+
+/// Fig. 6a/b: validation PPL against inner LR for several replica
+/// counts, Baseline vs EDiT, per-replica batch fixed. The paper's
+/// claim: EDiT's optimal LR is invariant in the worker count while the
+/// Baseline's optimum shifts. Writes `fig6ab_lr_sweep.csv`.
+pub fn fig6ab(
+    opts: &ExpOpts,
+    lrs: &[f64],
+    replica_counts: &[usize],
+) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig6ab_lr_sweep.csv"),
+        &["method", "replicas", "lr", "final_ppl", "final_loss"],
+    )?;
+    for method in [Method::Baseline, Method::Edit] {
+        let mut table_header = vec!["lr \\ replicas".to_string()];
+        table_header.extend(replica_counts.iter().map(|r| r.to_string()));
+        let mut table =
+            Table::new(&table_header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let mut best: Vec<(f64, f64)> = vec![(f64::INFINITY, 0.0); replica_counts.len()];
+        for &lr in lrs {
+            let mut row = vec![format!("{lr:.1e}")];
+            for (ci, &replicas) in replica_counts.iter().enumerate() {
+                let mut o = opts.clone();
+                o.mesh = MeshSpec::new(opts.mesh.shard, replicas);
+                let mut t = o.trainer(method, Quality::clean(), 4)?;
+                t.cfg.inner_lr = LrSchedule::Cosine {
+                    lr,
+                    warmup: (o.steps / 20).max(1),
+                    total_steps: o.steps,
+                    floor_frac: 0.1,
+                };
+                let summary = t.run()?;
+                csv.row(&[
+                    method.name().into(),
+                    replicas.to_string(),
+                    format!("{lr:.1e}"),
+                    format_g(summary.final_ppl),
+                    format_g(summary.final_loss),
+                ])?;
+                if summary.final_ppl < best[ci].0 {
+                    best[ci] = (summary.final_ppl, lr);
+                }
+                row.push(format_g(summary.final_ppl));
+            }
+            table.row(row);
+        }
+        let mut best_row = vec!["best lr".to_string()];
+        best_row.extend(best.iter().map(|(_, lr)| format!("{lr:.1e}")));
+        table.row(best_row);
+        println!("\nFig. 6a/b — {} PPL vs LR per replica count:", method.name());
+        print!("{}", table.render());
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Fig. 6c: elastic scaling schedules (up 1→2→4→8, down 8→4→2→1) with a
+/// fixed LR, Baseline vs EDiT. Writes `fig6c_elastic.csv`.
+pub fn fig6c(opts: &ExpOpts, steps_per_phase: u64, lr: f64) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig6c_elastic.csv"),
+        &["method", "direction", "global_step", "replicas", "val_ppl"],
+    )?;
+    let mut table = Table::new(&["method", "direction", "final PPL"]);
+    for method in [Method::Baseline, Method::Edit] {
+        for up in [true, false] {
+            let mut o = opts.clone();
+            o.steps = u64::MAX; // phases drive the length
+            let mut t = o.trainer(method, Quality::clean(), 5)?;
+            t.cfg.inner_lr = LrSchedule::Constant { lr };
+            t.cfg.total_steps = 0;
+            // ExpOpts::trainer derives t_warm from steps (u64::MAX here);
+            // pin it so EDiT actually leaves the DDP warmup phase.
+            t.cfg.t_warm = if method.uses_warmup() { 8 } else { 0 };
+            let phases = elastic::paper_schedule(up, steps_per_phase);
+            let points = elastic::run_schedule(&mut t, &phases)?;
+            let dir = if up { "up" } else { "down" };
+            for p in &points {
+                csv.row(&[
+                    method.name().into(),
+                    dir.into(),
+                    p.global_step.to_string(),
+                    p.replicas.to_string(),
+                    format_g(p.val_ppl),
+                ])?;
+            }
+            table.row(vec![
+                method.name().into(),
+                dir.into(),
+                format_g(points.last().map(|p| p.val_ppl).unwrap_or(f64::NAN)),
+            ]);
+        }
+    }
+    csv.flush()?;
+    println!("\nFig. 6c — elastic schedules (fixed lr {lr:.1e}):");
+    print!("{}", table.render());
+    Ok(())
+}

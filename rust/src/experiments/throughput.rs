@@ -1,0 +1,166 @@
+//! Throughput harnesses over the analytic cluster simulator:
+//! Table 2 (tokens/s + TFLOPS + OOM), Fig. 5 / Table 6 (stragglers,
+//! bandwidth), Fig. 9 (sync timelines).
+
+use anyhow::Result;
+
+use crate::coordinator::Method;
+use crate::metrics::{CsvWriter, Table};
+use crate::simulator::{simulate, Scenario, ScaleSpec, SimConfig};
+
+use super::ExpOpts;
+
+/// Table 2: methods × scales grid on the two-node A100 cluster.
+pub fn table2(opts: &ExpOpts) -> Result<()> {
+    let methods = Method::ALL;
+    let mut header = vec!["scale"];
+    header.extend(methods.iter().map(|m| m.name()));
+    let mut csv = CsvWriter::create(opts.result_path("table2.csv"), &header)?;
+    let mut table = Table::new(&header);
+    for scale in ScaleSpec::PAPER {
+        let mut row = vec![scale.name.to_string()];
+        for &method in &methods {
+            let r = simulate(&SimConfig::table2(method, scale));
+            row.push(r.cell());
+        }
+        csv.row(&row)?;
+        table.row(row);
+    }
+    csv.flush()?;
+    println!("\nTable 2 — simulated tokens/s / TFLOPS (2×8 A100, τ=5):");
+    print!("{}", table.render());
+    println!("(cells are tokens-per-sec / per-GPU TFLOPS; OOM = exceeds 34 GB usable)");
+    Ok(())
+}
+
+/// Fig. 5 + Table 6: TFLOPS under random/consistent stragglers and
+/// limited bandwidth (Llama 7B, 8×8 mesh).
+pub fn fig5(opts: &ExpOpts) -> Result<()> {
+    let methods = [Method::Baseline, Method::Edit, Method::AEdit];
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig5_table6.csv"),
+        &["scenario", "x", "baseline", "edit", "a-edit"],
+    )?;
+
+    let lags = [0.0, 1.5, 2.5, 3.5, 4.5];
+    let repeats = [0u32, 10, 20, 30, 40];
+
+    for (name, xs) in [("random-straggler", &lags[..]), ("consistent-straggler", &lags[..])] {
+        let mut table = Table::new(&["lag (s)", "baseline", "edit", "a-edit"]);
+        for &lag in xs {
+            let mut row = vec![format!("{lag}")];
+            let mut csv_row = vec![name.to_string(), format!("{lag}")];
+            for &m in &methods {
+                let scenario = if lag == 0.0 {
+                    Scenario::Normal
+                } else if name.starts_with("random") {
+                    Scenario::RandomStraggler { lag }
+                } else {
+                    Scenario::ConsistentStraggler { lag }
+                };
+                let tf = simulate(&SimConfig::fig5(m, scenario))
+                    .tflops_per_gpu
+                    .unwrap_or(f64::NAN);
+                row.push(format!("{tf:.2}"));
+                csv_row.push(format!("{tf:.2}"));
+            }
+            csv.row(&csv_row)?;
+            table.row(row);
+        }
+        println!("\nFig. 5 / Table 6 — {name} (TFLOPS, Llama 7B, 8×8):");
+        print!("{}", table.render());
+    }
+
+    let mut table = Table::new(&["repeat", "baseline", "edit", "a-edit"]);
+    for &rep in &repeats {
+        let mut row = vec![format!("{rep}")];
+        let mut csv_row = vec!["limited-bandwidth".to_string(), format!("{rep}")];
+        for &m in &methods {
+            let scenario = if rep == 0 {
+                Scenario::Normal
+            } else {
+                Scenario::LimitedBandwidth { repeat: rep }
+            };
+            let tf = simulate(&SimConfig::fig5(m, scenario))
+                .tflops_per_gpu
+                .unwrap_or(f64::NAN);
+            row.push(format!("{tf:.2}"));
+            csv_row.push(format!("{tf:.2}"));
+        }
+        csv.row(&csv_row)?;
+        table.row(row);
+    }
+    csv.flush()?;
+    println!("\nFig. 5 / Table 6 — limited bandwidth (TFLOPS):");
+    print!("{}", Table::render(&table));
+    Ok(())
+}
+
+/// Fig. 9: synchronization-op timelines per method (Llama 1B, 8×8).
+pub fn fig9(opts: &ExpOpts) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig9_timeline.csv"),
+        &["method", "segment", "kind", "start_ms", "dur_ms", "exposed_ms"],
+    )?;
+    println!("\nFig. 9 — sync-boundary timelines (#=compute ~=overlapped !=exposed $=PCIe):");
+    for method in [
+        Method::Baseline,
+        Method::PostLocalSgd,
+        Method::DiLoCo,
+        Method::Co2,
+        Method::Co2Star,
+        Method::Edit,
+    ] {
+        let tl = crate::simulator::trace::sync_timeline(method);
+        print!("{}", tl.render(64));
+        for seg in &tl.segments {
+            csv.row(&[
+                method.name().into(),
+                seg.name.clone(),
+                format!("{:?}", seg.kind),
+                format!("{:.2}", seg.start * 1e3),
+                format!("{:.2}", seg.dur * 1e3),
+                format!("{:.2}", tl.exposed * 1e3),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Measured (non-simulated) throughput of the real numerics path per
+/// method — complements Table 2 with actual PJRT wall-clock on this
+/// host plus the simulated cluster time. Writes `table2_measured.csv`.
+pub fn measured_throughput(opts: &ExpOpts, methods: &[Method], steps: u64) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.result_path("table2_measured.csv"),
+        &["method", "host_seconds", "sim_seconds", "tokens", "tokens_per_sim_sec", "pjrt_calls"],
+    )?;
+    let mut table = Table::new(&["method", "host s", "sim s", "tokens/sim-s"]);
+    for &method in methods {
+        let mut o = opts.clone();
+        o.steps = steps;
+        let mut t = o.trainer(method, crate::data::Quality::clean(), 3)?;
+        let start = std::time::Instant::now();
+        let summary = t.run()?;
+        let host = start.elapsed().as_secs_f64();
+        csv.row(&[
+            method.name().into(),
+            format!("{host:.2}"),
+            format!("{:.2}", summary.sim_seconds),
+            summary.tokens.to_string(),
+            format!("{:.1}", summary.throughput),
+            t.pjrt_calls().to_string(),
+        ])?;
+        table.row(vec![
+            method.name().into(),
+            format!("{host:.2}"),
+            format!("{:.2}", summary.sim_seconds),
+            format!("{:.1}", summary.throughput),
+        ]);
+    }
+    csv.flush()?;
+    println!("\nMeasured numerics-path throughput ({} model, {} steps):", opts.model, steps);
+    print!("{}", table.render());
+    Ok(())
+}

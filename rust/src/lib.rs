@@ -1,0 +1,39 @@
+//! # edit-train — EDiT reproduction (ICLR 2025, Ant Group)
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *EDiT: A Local-SGD-Based Efficient Distributed Training Method for
+//! Large Language Models*:
+//!
+//!  * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!    the [`coordinator`] implements the EDiT synchronization algorithm
+//!    (Alg. 1), the pseudo-gradient penalty (Alg. 2), the asynchronous
+//!    A-EDiT variant, and all baselines the paper compares against (DDP,
+//!    Post Local SGD, DiLoCo, CO2, CO2*), over an FSDP-style device mesh.
+//!  * **Layer 2** — a Llama-style decoder in JAX
+//!    (`python/compile/model.py`), AOT-lowered to HLO text and executed
+//!    through [`runtime`] on the PJRT CPU client. Python never runs at
+//!    training time.
+//!  * **Layer 1** — Pallas kernels (`python/compile/kernels/`): tiled
+//!    online-softmax flash attention (fwd+bwd) inside the model, and the
+//!    fused penalty combine callable from Rust.
+//!
+//! The [`simulator`] reproduces the paper's A100-cluster throughput
+//! tables analytically (Table 2, Fig. 5, Fig. 9, Table 6); [`data`]
+//! provides the synthetic corpus substrate; [`collectives`] the
+//! deterministic communication substrate with its α-β cost model.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod elastic;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,287 @@
+//! `edit-train` — the launcher / leader entrypoint.
+//!
+//! Subcommands:
+//!   train      one training run (method/model/mesh/steps configurable,
+//!              optionally from a TOML config in configs/)
+//!   sweep      convergence experiments: --exp fig4|table1|fig8
+//!   simulate   cluster simulator: --exp table2|fig5|fig9|measured
+//!   ablation   Fig. 7 pseudo-gradient-penalty ablation
+//!   elastic    Fig. 6c elastic schedules; lr-sweep = Fig. 6a/b
+//!   probe      evaluate a trained run's probe PPLs (Table 1 style)
+//!   info       print artifact manifest / platform info
+//!
+//! `--set section.key=value,...` overrides any config key; every
+//! experiment writes CSVs under --results (default results/).
+
+use anyhow::Result;
+
+use edit_train::collectives::{CostModel, Topology};
+use edit_train::coordinator::{
+    LrSchedule, MeshSpec, Method, Straggler, TrainConfig, Trainer,
+};
+use edit_train::data::{Corpus, Quality};
+use edit_train::experiments::{convergence, scaling, throughput, ExpOpts};
+use edit_train::metrics::format_g;
+use edit_train::runtime::Engine;
+use edit_train::util::cfg::Config;
+use edit_train::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> &'static str {
+    "usage: edit-train <train|sweep|simulate|ablation|elastic|probe|info> [options]
+  common: --artifacts DIR --results DIR --model test|petite|tiny|mini
+          --mesh MxN --steps N --tau N --seed N --config FILE --set k=v,...
+  train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit
+            --lr X --noise P --straggler none|random:LAG|consistent:LAG
+            --out curves.csv --log
+  sweep:    --exp fig4|table1|fig8 [--noisy] [--methods a,b,c]
+  simulate: --exp table2|fig5|fig9|measured
+  ablation: (fig7)
+  elastic:  --exp fig6ab|fig6c --phase-steps N --lr X
+  info:     [--model NAME]"
+}
+
+fn opts_from(args: &Args, cfg: &Config) -> ExpOpts {
+    let mesh = parse_mesh(&args.str("mesh", &cfg.str("mesh.shape", "2x4")));
+    ExpOpts {
+        artifacts: args.str("artifacts", "artifacts").into(),
+        results: args.str("results", "results").into(),
+        model: args.str("model", &cfg.str("model.name", "test")),
+        steps: args.u64("steps", cfg.i64("train.steps", 96) as u64),
+        mesh,
+        tau: args.u64("tau", cfg.i64("train.tau", 8) as u64),
+        seed: args.u64("seed", cfg.i64("train.seed", 42) as u64),
+        log: args.flag("log"),
+    }
+}
+
+fn parse_mesh(s: &str) -> MeshSpec {
+    let (m, n) = s.split_once(['x', 'X']).unwrap_or(("2", "4"));
+    MeshSpec::new(m.trim().parse().unwrap_or(2), n.trim().parse().unwrap_or(4))
+}
+
+fn parse_methods(args: &Args) -> Vec<Method> {
+    match args.opt("methods") {
+        None => Method::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .filter_map(|s| Method::parse(s.trim()))
+            .collect(),
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => {
+            Config::load(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!(e))?
+        }
+        None => Config::parse("").unwrap(),
+    };
+    for (k, v) in args.set_overrides() {
+        // Accept bare strings for convenience: try raw, then quoted.
+        if cfg.set(&k, &v).is_err() {
+            cfg.set(&k, &format!("\"{v}\"")).map_err(|e| anyhow::anyhow!(e))?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let opts = opts_from(args, &cfg);
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args, &cfg, &opts),
+        Some("sweep") => cmd_sweep(args, &opts),
+        Some("simulate") => cmd_simulate(args, &opts),
+        Some("ablation") => convergence::fig7(&opts),
+        Some("elastic") => cmd_elastic(args, &cfg, &opts),
+        Some("probe") => cmd_probe(args, &opts),
+        Some("info") => cmd_info(&opts),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
+    let method = Method::parse(&args.str("method", &cfg.str("train.method", "edit")))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let noise = args.f64("noise", cfg.f64("data.noise", 0.0));
+    let engine = Engine::load(&opts.artifacts, &opts.model)?;
+    let corpus = Corpus::new(
+        engine.manifest.model.vocab_size,
+        opts.seed,
+        Quality { noise_prob: noise },
+    );
+    let mut tc = TrainConfig::paper_default(method, opts.mesh, opts.steps);
+    tc.tau = opts.tau;
+    tc.tau_time = cfg.f64("train.tau_time", opts.tau as f64 * tc.base_step_time);
+    tc.seed = opts.seed;
+    tc.t_warm = args.u64("t-warm", cfg.i64("train.t_warm", tc.t_warm as i64) as u64);
+    tc.log_every = if args.flag("log") { 1 } else { 0 };
+    if let Some(lr) = args.opt("lr") {
+        tc.inner_lr = LrSchedule::paper_cosine(lr.parse()?, opts.steps);
+    }
+    tc.straggler = match args.str("straggler", "none").split_once(':') {
+        Some(("random", lag)) => Straggler::Random { lag: lag.parse()? },
+        Some(("consistent", lag)) => {
+            Straggler::Consistent { lag: lag.parse()?, replica: 0 }
+        }
+        _ => Straggler::None,
+    };
+
+    println!(
+        "training: method={} model={} mesh={}x{} steps={} tau={} params={}",
+        method.name(),
+        opts.model,
+        opts.mesh.shard,
+        opts.mesh.replicas,
+        opts.steps,
+        opts.tau,
+        engine.manifest.total_params,
+    );
+    let mut trainer =
+        Trainer::new(engine, corpus, tc, CostModel::new(Topology::a100()))?;
+    let start = std::time::Instant::now();
+    let summary = trainer.run()?;
+    let host = start.elapsed().as_secs_f64();
+
+    println!(
+        "done: final_loss={} final_ppl={} syncs={} anomalies={} rollbacks={}",
+        format_g(summary.final_loss),
+        format_g(summary.final_ppl),
+        summary.syncs,
+        summary.anomalies,
+        summary.rollbacks,
+    );
+    println!(
+        "time: host={host:.1}s simulated={:.1}s tokens={} throughput={} tok/sim-s comm={} MB",
+        summary.sim_seconds,
+        summary.tokens,
+        format_g(summary.throughput),
+        summary.comm.bytes / (1 << 20),
+    );
+
+    if let Some(out) = args
+        .opt("out")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+    {
+        let mut w = edit_train::metrics::CsvWriter::create(
+            opts.results.join(&out),
+            &["step", "train_loss"],
+        )?;
+        for &(step, loss) in &trainer.tracker.losses {
+            w.row(&[step.to_string(), format_g(loss)])?;
+        }
+        w.flush()?;
+        println!("curves -> {}", opts.results.join(&out).display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, opts: &ExpOpts) -> Result<()> {
+    let methods = parse_methods(args);
+    match args.str("exp", "fig4").as_str() {
+        "fig4" => {
+            convergence::fig4(opts, &methods, args.flag("noisy"))?;
+        }
+        "table1" => convergence::table1(opts, &methods, args.flag("noisy"))?,
+        "fig8" => {
+            let models: Vec<String> = args
+                .str("models", "test,tiny")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .collect();
+            let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+            convergence::fig8(opts, &refs)?;
+        }
+        other => anyhow::bail!("unknown sweep exp '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args, opts: &ExpOpts) -> Result<()> {
+    match args.str("exp", "table2").as_str() {
+        "table2" => throughput::table2(opts),
+        "fig5" => throughput::fig5(opts),
+        "fig9" => throughput::fig9(opts),
+        "measured" => throughput::measured_throughput(
+            opts,
+            &parse_methods(args),
+            args.u64("steps", 16),
+        ),
+        other => anyhow::bail!("unknown simulate exp '{other}'"),
+    }
+}
+
+fn cmd_elastic(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
+    match args.str("exp", "fig6c").as_str() {
+        "fig6ab" => {
+            let lrs: Vec<f64> = args
+                .str("lrs", "1e-3,2e-3,4e-3,8e-3,1.6e-2")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            let counts: Vec<usize> = args
+                .str("replicas", "1,2,4")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            scaling::fig6ab(opts, &lrs, &counts)
+        }
+        "fig6c" => scaling::fig6c(
+            opts,
+            args.u64("phase-steps", cfg.i64("elastic.phase_steps", 24) as u64),
+            args.f64("lr", cfg.f64("elastic.lr", 2e-3)),
+        ),
+        other => anyhow::bail!("unknown elastic exp '{other}'"),
+    }
+}
+
+fn cmd_probe(args: &Args, opts: &ExpOpts) -> Result<()> {
+    let method = Method::parse(&args.str("method", "edit"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let mut t = opts.trainer(method, Quality::clean(), 0)?;
+    t.run()?;
+    println!("probe PPLs for {} after {} steps:", method.name(), opts.steps);
+    for (name, ppl) in t.probe_ppls()? {
+        println!("  {name:<14} {}", format_g(ppl));
+    }
+    Ok(())
+}
+
+fn cmd_info(opts: &ExpOpts) -> Result<()> {
+    let engine = Engine::load(&opts.artifacts, &opts.model)?;
+    let m = &engine.manifest;
+    println!("platform: {}", engine.platform());
+    println!(
+        "model '{}': {} params, {} layers, hidden {}, vocab {}, seq {}, batch {}",
+        m.model.name,
+        m.total_params,
+        m.model.num_layers,
+        m.model.hidden_size,
+        m.model.vocab_size,
+        m.model.seq_len,
+        m.model.batch_size,
+    );
+    println!("programs: {:?}", m.programs.keys().collect::<Vec<_>>());
+    println!(
+        "penalty programs (sync-group sizes): {:?}",
+        m.penalty_programs.keys().collect::<Vec<_>>()
+    );
+    println!("modules (layer-wise sync units): {}", m.table.num_modules());
+    Ok(())
+}

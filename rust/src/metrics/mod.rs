@@ -1,0 +1,284 @@
+//! Metrics substrate: loss/PPL trackers, CSV/JSONL writers, run
+//! summaries — everything the experiment harnesses use to emit the
+//! paper's tables and figures as files under `results/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Exponential moving average (loss smoothing; also the EMA pieces of
+/// the anomaly detector are built on the same update rule).
+#[derive(Debug, Clone, Copy)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Mean of the last `k` values — the paper reports "average of the last
+/// 10 values" for final loss/PPL (Fig. 4 caption).
+#[derive(Debug, Clone)]
+pub struct TailMean {
+    k: usize,
+    buf: std::collections::VecDeque<f64>,
+}
+
+impl TailMean {
+    pub fn new(k: usize) -> Self {
+        Self { k, buf: Default::default() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.k {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(self.buf.iter().sum::<f64>() / self.buf.len() as f64)
+        }
+    }
+}
+
+pub fn ppl(loss: f64) -> f64 {
+    loss.exp()
+}
+
+/// Column-ordered CSV writer.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self { file, columns: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.len() == self.columns, "csv row arity");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        let strs: Vec<String> = values.iter().map(|v| format_g(*v)).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Compact float formatting for CSV/console (6 significant digits).
+pub fn format_g(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let ax = x.abs();
+    if (1e-4..1e7).contains(&ax) {
+        let s = format!("{x:.6}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    } else {
+        format!("{x:.4e}")
+    }
+}
+
+/// Fixed-width console table (the `bench-table` output format).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(out, "{:width$}  ", cell, width = widths[c]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * cols;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Per-run loss/PPL tracker used by the trainer.
+#[derive(Debug, Clone)]
+pub struct RunTracker {
+    pub losses: Vec<(u64, f64)>,
+    pub val_ppl: Vec<(u64, f64)>,
+    pub tail_loss: TailMean,
+    pub tail_ppl: TailMean,
+}
+
+impl Default for RunTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunTracker {
+    pub fn new() -> Self {
+        Self {
+            losses: Vec::new(),
+            val_ppl: Vec::new(),
+            tail_loss: TailMean::new(10),
+            tail_ppl: TailMean::new(10),
+        }
+    }
+
+    pub fn record_loss(&mut self, step: u64, loss: f64) {
+        self.losses.push((step, loss));
+        self.tail_loss.push(loss);
+    }
+
+    pub fn record_val(&mut self, step: u64, val_loss: f64) {
+        let p = ppl(val_loss);
+        self.val_ppl.push((step, p));
+        self.tail_ppl.push(p);
+    }
+
+    /// "Final" values as the paper reports them (mean of last 10).
+    pub fn final_loss(&self) -> Option<f64> {
+        self.tail_loss.mean()
+    }
+
+    pub fn final_ppl(&self) -> Option<f64> {
+        self.tail_ppl.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_behaviour() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.update(4.0), 4.0);
+        assert_eq!(e.update(0.0), 2.0);
+        assert_eq!(e.get(), Some(2.0));
+    }
+
+    #[test]
+    fn tail_mean_window() {
+        let mut t = TailMean::new(3);
+        assert_eq!(t.mean(), None);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            t.push(x);
+        }
+        assert_eq!(t.mean(), Some(3.0)); // last 3: 2,3,4
+    }
+
+    #[test]
+    fn ppl_of_zero_loss() {
+        assert_eq!(ppl(0.0), 1.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("edit_train_test_csv");
+        let path = dir.join("x.csv");
+        let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+        w.row_f64(&[1.0, 2.5]).unwrap();
+        w.row(&["2".into(), "hi".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,2.5\n2,hi\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn csv_arity_checked() {
+        let dir = std::env::temp_dir().join("edit_train_test_csv2");
+        let mut w = CsvWriter::create(dir.join("y.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn format_g_cases() {
+        assert_eq!(format_g(0.0), "0");
+        assert_eq!(format_g(1.5), "1.5");
+        assert_eq!(format_g(3.0), "3");
+        assert!(format_g(1.23e-9).contains('e'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "tput"]);
+        t.row(vec!["EDiT".into(), "4.81e5".into()]);
+        t.row(vec!["Baseline".into(), "4.52e5".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("method"));
+        assert!(lines[2].starts_with("EDiT"));
+    }
+
+    #[test]
+    fn run_tracker_final_values() {
+        let mut r = RunTracker::new();
+        for i in 0..20 {
+            r.record_loss(i, 20.0 - i as f64);
+        }
+        // last 10 losses: 10..1 -> mean 5.5
+        assert_eq!(r.final_loss(), Some(5.5));
+        r.record_val(19, 0.0);
+        assert_eq!(r.final_ppl(), Some(1.0));
+    }
+}

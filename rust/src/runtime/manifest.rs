@@ -1,0 +1,185 @@
+//! Parsed form of `artifacts/<config>/manifest.json` (the export
+//! contract written by `python/compile/aot.py`).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::tensor::ModuleTable;
+use crate::util::json::Json;
+
+/// Model architecture + inner-optimizer constants baked at lowering time.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab_size: usize,
+    pub num_layers: usize,
+    pub hidden_size: usize,
+    pub intermediate_size: usize,
+    pub num_heads: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub total_params: usize,
+    pub penalty_phi: f64,
+    pub table: ModuleTable,
+    /// program name -> HLO filename (train_step, grad_step, ...).
+    pub programs: BTreeMap<String, String>,
+    /// sync-group size -> penalty HLO filename.
+    pub penalty_programs: BTreeMap<usize, String>,
+    pub init_file: String,
+    /// [batch, seq+1]
+    pub token_shape: [usize; 2],
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest json")?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let get_usize = |path: &[&str]| -> Result<usize> {
+            json.at(path)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {}", path.join(".")))
+        };
+
+        let model = ModelInfo {
+            name: json
+                .at(&["config", "name"])
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab_size: get_usize(&["config", "vocab_size"])?,
+            num_layers: get_usize(&["config", "num_layers"])?,
+            hidden_size: get_usize(&["config", "hidden_size"])?,
+            intermediate_size: get_usize(&["config", "intermediate_size"])?,
+            num_heads: get_usize(&["config", "num_heads"])?,
+            seq_len: get_usize(&["config", "seq_len"])?,
+            batch_size: get_usize(&["config", "batch_size"])?,
+        };
+
+        let mut programs = BTreeMap::new();
+        if let Some(obj) = json.at(&["programs"]).and_then(Json::as_obj) {
+            for key in obj.keys() {
+                if let Some(file) = obj.get(key).and_then(Json::as_str) {
+                    programs.insert(key.clone(), file.to_string());
+                }
+            }
+        }
+        anyhow::ensure!(!programs.is_empty(), "manifest has no programs");
+
+        let mut penalty_programs = BTreeMap::new();
+        if let Some(obj) = json.at(&["penalty_programs"]).and_then(Json::as_obj) {
+            for key in obj.keys() {
+                if let (Ok(n), Some(file)) =
+                    (key.parse::<usize>(), obj.get(key).and_then(Json::as_str))
+                {
+                    penalty_programs.insert(n, file.to_string());
+                }
+            }
+        }
+
+        let token_shape = json
+            .at(&["token_shape"])
+            .and_then(Json::as_arr)
+            .and_then(|a| {
+                Some([a.first()?.as_usize()?, a.get(1)?.as_usize()?])
+            })
+            .ok_or_else(|| anyhow::anyhow!("manifest missing token_shape"))?;
+
+        Ok(Self {
+            model,
+            total_params: get_usize(&["total_params"])?,
+            penalty_phi: json
+                .at(&["penalty_phi"])
+                .and_then(Json::as_f64)
+                .unwrap_or(10.0),
+            table: ModuleTable::from_manifest(json)?,
+            programs,
+            penalty_programs,
+            init_file: json
+                .at(&["init_file"])
+                .and_then(Json::as_str)
+                .unwrap_or("init.bin")
+                .to_string(),
+            token_shape,
+        })
+    }
+
+    /// Tokens per inner step per worker (B x S predicted positions).
+    pub fn tokens_per_step(&self) -> usize {
+        self.model.batch_size * self.model.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+ "config": {"name": "test", "vocab_size": 256, "num_layers": 2,
+            "hidden_size": 32, "intermediate_size": 96, "num_heads": 2,
+            "seq_len": 32, "batch_size": 2},
+ "total_params": 10,
+ "penalty_phi": 10.0,
+ "tensors": [
+   {"name": "embed", "shape": [5], "offset": 0, "size": 5, "stacked": false},
+   {"name": "layers.w", "shape": [2, 2], "offset": 5, "size": 4, "stacked": true},
+   {"name": "head", "shape": [1], "offset": 9, "size": 1, "stacked": false}
+ ],
+ "programs": {"train_step": "train_step.hlo.txt", "eval_step": "eval_step.hlo.txt"},
+ "penalty_programs": {"2": "penalty_w2.hlo.txt", "4": "penalty_w4.hlo.txt"},
+ "init_file": "init.bin",
+ "token_shape": [2, 33]
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.model.name, "test");
+        assert_eq!(m.total_params, 10);
+        assert_eq!(m.programs["train_step"], "train_step.hlo.txt");
+        assert_eq!(m.penalty_programs[&4], "penalty_w4.hlo.txt");
+        assert_eq!(m.token_shape, [2, 33]);
+        assert_eq!(m.tokens_per_step(), 64);
+        assert_eq!(m.table.num_modules(), 3);
+    }
+
+    #[test]
+    fn rejects_empty_programs() {
+        let j = Json::parse(
+            r#"{"config": {"name": "x", "vocab_size": 1, "num_layers": 1,
+                "hidden_size": 1, "intermediate_size": 1, "num_heads": 1,
+                "seq_len": 1, "batch_size": 1},
+               "total_params": 0, "tensors": [], "programs": {},
+               "token_shape": [1, 2]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/test/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert_eq!(m.model.name, "test");
+            assert!(m.total_params > 0);
+            assert!(m.programs.contains_key("train_step"));
+        }
+    }
+}

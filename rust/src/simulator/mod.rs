@@ -1,0 +1,19 @@
+//! Analytic cluster performance simulator (DESIGN.md §2.6).
+//!
+//! The paper's throughput evaluation ran on 16–64 A100s; this box has
+//! one CPU core.  Per the substitution rule, the module rebuilds that
+//! evaluation analytically from first principles — a FLOPs/MFU compute
+//! model ([`scales`]), a per-GPU memory model reproducing the OOM
+//! pattern ([`memory`]), the shared α-β communication model
+//! (`collectives::cost`), per-method step/sync timing ([`stepmodel`]),
+//! scenario injection and end-to-end simulation ([`cluster`]), and the
+//! Fig. 9 sync-timeline renderer ([`trace`]).
+
+pub mod cluster;
+pub mod memory;
+pub mod scales;
+pub mod stepmodel;
+pub mod trace;
+
+pub use cluster::{simulate, Scenario, SimConfig, SimResult};
+pub use scales::ScaleSpec;

@@ -1,0 +1,198 @@
+//! Synchronization-operation timeline traces (Fig. 9 reproduction).
+//!
+//! For each method, lay out the segments around one synchronization
+//! boundary while training Llama 1B on the 8×8 mesh — the setting of
+//! the paper's profiler screenshots — and render them as a text
+//! timeline plus CSV rows. The exposed-delay column is the number the
+//! paper quotes (PLS ~160 ms, CO2* ~300 ms, EDiT ~19 ms, CO2 ~0).
+
+use crate::collectives::{CollOp, CostModel, Topology};
+use crate::coordinator::{MeshSpec, Method};
+
+use super::scales::{ScaleSpec, A100_PEAK_FLOPS};
+use super::stepmodel::StepModel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    Compute,
+    OverlappedComm,
+    ExposedComm,
+    CpuTransfer,
+}
+
+impl SegKind {
+    pub fn glyph(&self) -> char {
+        match self {
+            SegKind::Compute => '#',
+            SegKind::OverlappedComm => '~',
+            SegKind::ExposedComm => '!',
+            SegKind::CpuTransfer => '$',
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub name: String,
+    pub kind: SegKind,
+    pub start: f64,
+    pub dur: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub method: Method,
+    pub segments: Vec<Segment>,
+    /// Wall-time the sync adds on top of back-to-back compute steps.
+    pub exposed: f64,
+}
+
+/// Build the sync-boundary timeline for `method` (Llama 1B, 8×8 mesh).
+pub fn sync_timeline(method: Method) -> Timeline {
+    let scale = ScaleSpec::by_name("1B").unwrap();
+    let mesh = MeshSpec::new(8, 8);
+    let cost = CostModel::new(Topology::a100());
+    let tokens = 2.0 * 4096.0;
+    let compute = tokens * scale.flops_per_token() / (A100_PEAK_FLOPS * scale.a100_mfu());
+    let sm = StepModel {
+        mesh,
+        cost,
+        param_bytes: (scale.params() * 4) as usize, // fp32 pseudo-grad state
+        compute,
+        cpu_offload: method == Method::DiLoCo, // paper: DiLoCo@1B offloads
+    };
+    let sync_group = mesh.sync_group(0);
+    let shard_bytes = sm.param_bytes / mesh.shard;
+    let ar = cost.time(CollOp::AllReduce, shard_bytes, &sync_group);
+    let exposed = sm.sync_exposed(method);
+
+    let mut t = 0.0;
+    let mut segments = Vec::new();
+    let mut push = |name: &str, kind: SegKind, t: &mut f64, dur: f64| {
+        if dur > 0.0 {
+            segments.push(Segment { name: name.into(), kind, start: *t, dur });
+            *t += dur;
+        }
+    };
+
+    // Step τ's compute finishes, then the method-specific sync unfolds.
+    push("step τ compute", SegKind::Compute, &mut t, compute);
+    match method {
+        Method::Baseline => {
+            push("grad all-reduce (every step)", SegKind::ExposedComm, &mut t, ar * 0.45);
+        }
+        Method::PostLocalSgd => {
+            push("param all-reduce (exposed)", SegKind::ExposedComm, &mut t, exposed);
+        }
+        Method::DiLoCo => {
+            push("pseudo-grad all-reduce", SegKind::ExposedComm, &mut t, ar);
+            push("CPU⇄GPU outer state", SegKind::CpuTransfer, &mut t, exposed - ar);
+        }
+        Method::Co2 => {
+            // One-step-stale all-reduce rides the next round's compute.
+            let mut t2 = t;
+            push("next-round compute", SegKind::Compute, &mut t, compute);
+            push("async all-reduce (hidden)", SegKind::OverlappedComm, &mut t2, ar);
+        }
+        Method::Co2Star => {
+            let mut t2 = t;
+            push("shard gather (exposed)", SegKind::ExposedComm, &mut t, exposed / 2.0);
+            push("shard scatter (exposed)", SegKind::ExposedComm, &mut t, exposed / 2.0);
+            push("async all-reduce (hidden)", SegKind::OverlappedComm, &mut t2, ar);
+        }
+        Method::Edit | Method::AEdit => {
+            // Layer-wise: module 0's sync is exposed; modules 1..L overlap
+            // with the forward pass of the next round (prefetch).
+            let mut t2 = t;
+            push("module-0 sync + norms", SegKind::ExposedComm, &mut t, exposed);
+            push("next-round fwd compute", SegKind::Compute, &mut t, compute);
+            push("layer-wise sync (prefetch-hidden)", SegKind::OverlappedComm, &mut t2, ar - exposed / 2.0);
+        }
+    }
+    Timeline { method, segments, exposed }
+}
+
+impl Timeline {
+    /// Render as a fixed-width ASCII timeline (`width` chars spanning the
+    /// longest segment end).
+    pub fn render(&self, width: usize) -> String {
+        let end = self
+            .segments
+            .iter()
+            .map(|s| s.start + s.dur)
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        let mut out = format!(
+            "{} (exposed sync delay: {:.1} ms)\n",
+            self.method.name(),
+            self.exposed * 1e3
+        );
+        for seg in &self.segments {
+            let a = (seg.start / end * width as f64) as usize;
+            let b = (((seg.start + seg.dur) / end * width as f64) as usize).max(a + 1);
+            let mut line = vec![' '; width.max(b)];
+            for c in line.iter_mut().take(b).skip(a) {
+                *c = seg.kind.glyph();
+            }
+            out.push_str(&format!(
+                "  |{}| {:<36} {:>9.1} ms\n",
+                line.into_iter().collect::<String>(),
+                seg.name,
+                seg.dur * 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_exposed_delays() {
+        // Paper numbers: PLS ~160 ms, CO2* ~300 ms, EDiT ~19 ms, CO2 ~0.
+        let pls = sync_timeline(Method::PostLocalSgd).exposed * 1e3;
+        let co2 = sync_timeline(Method::Co2).exposed * 1e3;
+        let co2s = sync_timeline(Method::Co2Star).exposed * 1e3;
+        let edit = sync_timeline(Method::Edit).exposed * 1e3;
+        assert!((80.0..320.0).contains(&pls), "PLS {pls} ms");
+        assert!(co2 == 0.0);
+        assert!((150.0..600.0).contains(&co2s), "CO2* {co2s} ms");
+        assert!((5.0..60.0).contains(&edit), "EDiT {edit} ms");
+        assert!(co2s > pls && pls > edit && edit > co2);
+    }
+
+    #[test]
+    fn segments_nonnegative_and_named() {
+        for m in Method::ALL {
+            let tl = sync_timeline(m);
+            assert!(!tl.segments.is_empty());
+            for s in &tl.segments {
+                assert!(s.dur >= 0.0 && s.start >= 0.0, "{m:?} {s:?}");
+                assert!(!s.name.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_all_segments() {
+        let tl = sync_timeline(Method::Edit);
+        let text = tl.render(60);
+        for s in &tl.segments {
+            assert!(text.contains(&s.name));
+        }
+        assert!(text.contains("ms"));
+    }
+
+    #[test]
+    fn overlapped_marked_for_co2_and_edit() {
+        for m in [Method::Co2, Method::Co2Star, Method::Edit] {
+            let tl = sync_timeline(m);
+            assert!(
+                tl.segments.iter().any(|s| s.kind == SegKind::OverlappedComm),
+                "{m:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Flat-tensor substrate: all coordinator-side math runs over flat f32
+//! vectors (the contract with the AOT-exported HLO programs — see
+//! `python/compile/model.py`).
+//!
+//! Submodules:
+//!  * vector ops (this file): axpy/scale/norms/lerp used by the outer
+//!    optimizers and penalty pipeline — the L3 hot path;
+//!  * [`table`]: the per-tensor / per-layer view over the flat vector
+//!    (drives layer-wise synchronization accounting);
+//!  * [`shard`]: ZeRO-3-style shard arithmetic for the model shard groups.
+
+pub mod shard;
+pub mod table;
+
+pub use shard::ShardSpec;
+pub use table::{ModuleTable, TensorEntry};
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = x (memcpy helper with the length check in one place)
+#[inline]
+pub fn copy(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = a - b  (pseudo-gradient: theta_{t,tau} - theta_t)
+#[inline]
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+/// Squared L2 norm, accumulated in f64 for stability at 10^7+ elements.
+#[inline]
+pub fn sq_norm(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &xi in x {
+        acc += (xi as f64) * (xi as f64);
+    }
+    acc
+}
+
+pub fn norm(x: &[f32]) -> f64 {
+    sq_norm(x).sqrt()
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&ai, &bi) in a.iter().zip(b) {
+        acc += ai as f64 * bi as f64;
+    }
+    acc
+}
+
+/// out = sum_i weights[i] * rows[i]; rows must share a common length.
+pub fn weighted_sum_into(out: &mut [f32], rows: &[&[f32]], weights: &[f32]) {
+    debug_assert_eq!(rows.len(), weights.len());
+    out.fill(0.0);
+    for (row, &w) in rows.iter().zip(weights) {
+        if w != 0.0 {
+            axpy(out, w, row);
+        }
+    }
+}
+
+/// Uniform average of rows into `out`.
+pub fn mean_into(out: &mut [f32], rows: &[&[f32]]) {
+    let w = 1.0 / rows.len() as f32;
+    out.fill(0.0);
+    for row in rows {
+        axpy(out, w, row);
+    }
+}
+
+/// Max |a-b| — test helper.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn sub_and_norm() {
+        let mut out = vec![0.0; 3];
+        sub(&mut out, &[4.0, 5.0, 6.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(out, vec![3.0, 3.0, 3.0]);
+        assert!((norm(&out) - 27.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sq_norm_f64_accumulation() {
+        // 1e7 elements of 1e-3: f32 accumulation would drift noticeably.
+        let x = vec![1e-3f32; 10_000_000];
+        let got = sq_norm(&x);
+        assert!((got - 10.0).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let r1 = vec![1.0, 0.0];
+        let r2 = vec![0.0, 2.0];
+        let mut out = vec![9.0; 2];
+        weighted_sum_into(&mut out, &[&r1, &r2], &[0.25, 0.5]);
+        assert_eq!(out, vec![0.25, 1.0]);
+    }
+
+    #[test]
+    fn mean_matches_weighted() {
+        let r1 = vec![2.0, 4.0];
+        let r2 = vec![4.0, 8.0];
+        let mut a = vec![0.0; 2];
+        let mut b = vec![0.0; 2];
+        mean_into(&mut a, &[&r1, &r2]);
+        weighted_sum_into(&mut b, &[&r1, &r2], &[0.5, 0.5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dot_symmetry() {
+        let a = vec![1.0, -2.0, 3.0];
+        let b = vec![0.5, 0.25, -1.0];
+        assert_eq!(dot(&a, &b), dot(&b, &a));
+    }
+}

@@ -1,0 +1,105 @@
+//! ZeRO-3 / FSDP-style shard arithmetic for the model shard groups.
+//!
+//! Parameters are sharded *uniformly* across the N workers of a model
+//! shard group (paper §3.1): worker `r` owns the contiguous range
+//! `[r*ceil(P/N), min((r+1)*ceil(P/N), P))` of the flat vector, with the
+//! last shard possibly short.  The same spec shards the outer-optimizer
+//! state (pseudo-gradient momentum) so EDiT's memory advantage over
+//! CO2 is reproduced faithfully in the memory model.
+
+/// Sharding of a flat vector of `total` elements across `parts` owners.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub total: usize,
+    pub parts: usize,
+}
+
+impl ShardSpec {
+    pub fn new(total: usize, parts: usize) -> Self {
+        assert!(parts > 0);
+        Self { total, parts }
+    }
+
+    /// Elements per full shard (ceil division).
+    pub fn shard_elems(&self) -> usize {
+        self.total.div_ceil(self.parts)
+    }
+
+    /// The (offset, len) of shard `r`; len may be short or 0 at the tail.
+    pub fn range(&self, r: usize) -> (usize, usize) {
+        assert!(r < self.parts);
+        let per = self.shard_elems();
+        let start = (r * per).min(self.total);
+        let end = ((r + 1) * per).min(self.total);
+        (start, end - start)
+    }
+
+    /// Which shard owns flat index `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        assert!(i < self.total);
+        i / self.shard_elems()
+    }
+
+    /// Slice of `flat` owned by shard `r`.
+    pub fn slice<'a>(&self, flat: &'a [f32], r: usize) -> &'a [f32] {
+        let (off, len) = self.range(r);
+        &flat[off..off + len]
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], r: usize) -> &'a mut [f32] {
+        let (off, len) = self.range(r);
+        &mut flat[off..off + len]
+    }
+
+    /// Bytes held per worker for one f32 copy of the sharded vector.
+    pub fn bytes_per_worker(&self) -> usize {
+        self.shard_elems() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition() {
+        for total in [0usize, 1, 7, 16, 100, 101] {
+            for parts in [1usize, 2, 3, 8] {
+                let s = ShardSpec::new(total, parts);
+                let mut pos = 0;
+                for r in 0..parts {
+                    let (off, len) = s.range(r);
+                    assert_eq!(off, pos.min(total));
+                    pos = off + len;
+                }
+                assert_eq!(pos, total, "total={total} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn owner_consistent_with_range() {
+        let s = ShardSpec::new(103, 4);
+        for i in 0..103 {
+            let r = s.owner(i);
+            let (off, len) = s.range(r);
+            assert!(i >= off && i < off + len, "i={i} r={r}");
+        }
+    }
+
+    #[test]
+    fn uneven_tail() {
+        let s = ShardSpec::new(10, 4); // per=3: 3,3,3,1
+        assert_eq!(s.range(0), (0, 3));
+        assert_eq!(s.range(3), (9, 1));
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let s = ShardSpec::new(10, 3);
+        let mut flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        s.slice_mut(&mut flat, 1).iter_mut().for_each(|x| *x = -*x);
+        assert_eq!(s.slice(&flat, 1), &[-4.0, -5.0, -6.0, -7.0]);
+        assert_eq!(s.slice(&flat, 0), &[0.0, 1.0, 2.0, 3.0]);
+    }
+}

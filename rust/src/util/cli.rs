@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser (no clap in the vendored set).
+//!
+//! Grammar: `edit-train <subcommand> [--flag] [--key value]... [positional]`
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// All `--set k=v` style repeated overrides (single key supported by
+    /// writing `--set a=1 --set2 b=2` is NOT needed; we collect from the
+    /// comma-separated value instead: `--set a=1,b=2`).
+    pub fn set_overrides(&self) -> Vec<(String, String)> {
+        self.opt("set")
+            .map(|s| {
+                s.split(',')
+                    .filter_map(|kv| {
+                        kv.split_once('=')
+                            .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE grammar: `--name value` is an option; a bare `--name` at
+        // the end (or before another --option) is a flag. Positionals
+        // therefore come before bare flags: `train out.csv --quiet`.
+        let a = parse("train --config tiny --steps 100 out.csv --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str("config", ""), "tiny");
+        assert_eq!(a.usize("steps", 0), 100);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("simulate --exp=table2 --scale=7b");
+        assert_eq!(a.str("exp", ""), "table2");
+        assert_eq!(a.str("scale", ""), "7b");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("train --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("verbose"), None);
+    }
+
+    #[test]
+    fn set_overrides_parse() {
+        let a = parse("train --set train.steps=5,mesh.rows=2");
+        assert_eq!(
+            a.set_overrides(),
+            vec![
+                ("train.steps".to_string(), "5".to_string()),
+                ("mesh.rows".to_string(), "2".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.f64("phi", 10.0), 10.0);
+        assert_eq!(a.u64("seed", 42), 42);
+    }
+}

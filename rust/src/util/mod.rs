@@ -1,0 +1,8 @@
+//! First-party utility substrates (the vendored dependency set contains
+//! only the `xla` closure, so JSON/config/CLI/PRNG are built here —
+//! Cargo.toml header note).
+
+pub mod cfg;
+pub mod cli;
+pub mod json;
+pub mod prng;

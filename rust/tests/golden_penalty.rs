@@ -1,0 +1,79 @@
+//! Cross-layer golden test: the pure-Rust penalty combine must agree
+//! with the L1 Pallas kernel on the vectors exported by `aot.py`
+//! (`artifacts/golden/penalty.json`).
+
+use edit_train::coordinator::penalty::{combine, PenaltyConfig};
+use edit_train::testing::assert_close;
+use edit_train::util::json::Json;
+
+#[test]
+fn rust_penalty_matches_pallas_golden_vectors() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/golden/penalty.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipping: golden vectors not built (run `make artifacts`)");
+        return;
+    };
+    let cases = Json::parse(&text).unwrap();
+    let cases = cases.as_arr().unwrap();
+    assert!(cases.len() >= 3);
+
+    for (i, case) in cases.iter().enumerate() {
+        let w = case.at(&["num_workers"]).unwrap().as_usize().unwrap();
+        let n = case.at(&["n"]).unwrap().as_usize().unwrap();
+        let phi = case.at(&["phi"]).unwrap().as_f64().unwrap();
+        let flat: Vec<f32> = case
+            .at(&["deltas"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(flat.len(), w * n);
+        let norms: Vec<f64> = case
+            .at(&["norms"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| match x {
+                Json::Str(s) if s == "inf" => f64::INFINITY,
+                other => other.as_f64().unwrap(),
+            })
+            .collect();
+        let expected: Vec<f32> = case
+            .at(&["expected"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        let exp_weights: Vec<f32> = case
+            .at(&["weights"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        let exp_beta = case.at(&["beta"]).unwrap().as_f64().unwrap();
+
+        let rows: Vec<&[f32]> = (0..w).map(|j| &flat[j * n..(j + 1) * n]).collect();
+        let cfg = PenaltyConfig { phi, ..PenaltyConfig::default() };
+        let out = combine(&rows, &norms, &cfg);
+
+        let all_anom = norms.iter().all(|g| !g.is_finite());
+        assert_eq!(out.rollback, all_anom, "case {i}");
+        if out.rollback {
+            // Pallas path emits zeros; Rust signals rollback with an
+            // empty delta — both mean "keep θ_t".
+            assert!(expected.iter().all(|&x| x == 0.0));
+        } else {
+            assert_close(&out.delta, &expected, 1e-5, 1e-4);
+            assert!((out.beta - exp_beta).abs() < 1e-4 * exp_beta.max(1.0), "case {i}");
+        }
+        assert_close(&out.weights, &exp_weights, 1e-5, 1e-4);
+    }
+}

@@ -1,0 +1,250 @@
+//! Cross-module property tests (first-party `testing::check` harness —
+//! the vendored set has no proptest).
+
+use edit_train::collectives::{group, CollOp, CostModel, ThreadComm, Topology};
+use edit_train::coordinator::penalty::{combine, softmax_neg_weights, PenaltyConfig};
+use edit_train::coordinator::{LrSchedule, MeshSpec};
+use edit_train::data::{Corpus, Quality, Split};
+use edit_train::tensor::{self, ShardSpec};
+use edit_train::testing::{assert_close, check, Gen};
+use edit_train::util::json::{Json, Obj};
+
+fn rand_bufs(g: &mut Gen, n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| g.vec_f32(len, 10.0)).collect()
+}
+
+#[test]
+fn prop_allreduce_mean_preserves_mean() {
+    check("allreduce-preserves-mean", 40, |g| {
+        let n = g.usize(1, 6);
+        let len = g.len() * 3;
+        let mut bufs = rand_bufs(g, n, len);
+        let expect: Vec<f64> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum::<f64>() / n as f64)
+            .collect();
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        group::all_reduce_mean(&mut refs);
+        for b in &bufs {
+            for (got, want) in b.iter().zip(&expect) {
+                assert!((*got as f64 - want).abs() < 1e-4, "{got} vs {want}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_plus_gather_equals_allreduce() {
+    check("rs+ag == ar", 30, |g| {
+        let n = g.usize(1, 5);
+        let len = g.len() * n * 2;
+        let spec = ShardSpec::new(len, n);
+        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+        let mut a = rand_bufs(g, n, len);
+        let mut b = a.clone();
+        {
+            let mut refs: Vec<&mut [f32]> = a.iter_mut().map(|x| x.as_mut_slice()).collect();
+            group::all_reduce_mean(&mut refs);
+        }
+        {
+            let mut refs: Vec<&mut [f32]> = b.iter_mut().map(|x| x.as_mut_slice()).collect();
+            group::reduce_scatter_mean(&mut refs, &shards);
+            group::all_gather(&mut refs, &shards);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_close(x, y, 1e-4, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_matches_sequential_allreduce() {
+    check("threaded == sequential", 10, |g| {
+        let n = g.usize(2, 5);
+        let len = g.len() * 4;
+        let bufs = rand_bufs(g, n, len);
+        let mut seq = bufs.clone();
+        {
+            let mut refs: Vec<&mut [f32]> = seq.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::all_reduce_mean(&mut refs);
+        }
+        let comms = ThreadComm::group(n);
+        let mut threaded = vec![Vec::new(); n];
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .zip(bufs)
+                .map(|(c, mut buf)| {
+                    s.spawn(move || {
+                        c.all_reduce_mean(&mut buf);
+                        buf
+                    })
+                })
+                .collect();
+            for (r, h) in handles.into_iter().enumerate() {
+                threaded[r] = h.join().unwrap();
+            }
+        });
+        assert_eq!(seq, threaded, "bitwise equality required");
+    });
+}
+
+#[test]
+fn prop_penalty_combine_bounds() {
+    check("penalty bounds", 40, |g| {
+        let w = g.usize(2, 6);
+        let n = g.len() * 4;
+        let deltas: Vec<Vec<f32>> = (0..w).map(|_| g.vec_f32(n, 5.0)).collect();
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let mut norms: Vec<f64> = deltas.iter().map(|d| tensor::norm(d)).collect();
+        // Random anomalies (never all).
+        for i in 1..w {
+            if g.bool() && g.bool() {
+                norms[i] = f64::INFINITY;
+            }
+        }
+        let phi = 0.5 + g.rng.f64() * 10.0;
+        let cfg = PenaltyConfig { phi, ..PenaltyConfig::default() };
+        let out = combine(&refs, &norms, &cfg);
+        assert!(!out.rollback);
+        // Clip bound
+        assert!(tensor::norm(&out.delta) <= phi + 1e-3);
+        // Convexity: combined delta inside the per-coordinate envelope of
+        // the surviving deltas (pre-clip weighted mean is convex; clip
+        // shrinks towards 0 which stays within [min(0,lo), max(0,hi)]).
+        for i in (0..n).step_by((n / 7).max(1)) {
+            let survivors: Vec<f32> = (0..w)
+                .filter(|&j| norms[j].is_finite())
+                .map(|j| deltas[j][i])
+                .collect();
+            let lo = survivors.iter().cloned().fold(f32::INFINITY, f32::min).min(0.0);
+            let hi = survivors.iter().cloned().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+            assert!(
+                out.delta[i] >= lo - 1e-4 && out.delta[i] <= hi + 1e-4,
+                "coord {i}: {} not in [{lo}, {hi}]",
+                out.delta[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_weights_monotone_in_norm() {
+    check("weights monotone", 30, |g| {
+        let w = g.usize(2, 8);
+        let mut norms: Vec<f64> = (0..w).map(|_| g.rng.f64() * 20.0).collect();
+        let weights = softmax_neg_weights(&norms, true);
+        // Sort both by norm; weights must be non-increasing.
+        let mut idx: Vec<usize> = (0..w).collect();
+        idx.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap());
+        for pair in idx.windows(2) {
+            assert!(
+                weights[pair[0]] >= weights[pair[1]] - 1e-7,
+                "norms {norms:?} weights {weights:?}"
+            );
+        }
+        norms[0] = f64::INFINITY;
+        assert_eq!(softmax_neg_weights(&norms, true)[0], 0.0);
+    });
+}
+
+#[test]
+fn prop_mesh_groups_consistent() {
+    check("mesh groups", 40, |g| {
+        let mesh = MeshSpec::new(g.usize(1, 9), g.usize(1, 9));
+        let topo = Topology::a100();
+        // Every worker appears in exactly one shard group and one sync
+        // group; their intersection is that worker.
+        for rank in 0..mesh.workers() {
+            let (row, col) = mesh.coords(rank);
+            assert!(mesh.shard_group(col).contains(&rank));
+            assert!(mesh.sync_group(row).contains(&rank));
+        }
+        // Cost model symmetry: time depends on the group, not the rank
+        // ordering within it.
+        let cost = CostModel::new(topo);
+        if mesh.replicas >= 2 {
+            let fwd = mesh.sync_group(0);
+            let mut rev = fwd.clone();
+            rev.reverse();
+            assert_eq!(
+                cost.time(CollOp::AllReduce, 1 << 20, &fwd),
+                cost.time(CollOp::AllReduce, 1 << 20, &rev)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_corpus_batches_deterministic_and_in_vocab() {
+    check("corpus determinism", 20, |g| {
+        let vocab = 1 << g.usize(4, 10);
+        let seed = g.rng.next_u64();
+        let noise = if g.bool() { 0.0 } else { 0.2 };
+        let c1 = Corpus::new(vocab, seed, Quality { noise_prob: noise });
+        let c2 = Corpus::new(vocab, seed, Quality { noise_prob: noise });
+        let worker = g.usize(0, 64);
+        let step = g.rng.next_u64() % 1000;
+        let b1 = c1.batch_i32(Split::Train, worker, step, 2, 33);
+        let b2 = c2.batch_i32(Split::Train, worker, step, 2, 33);
+        assert_eq!(b1, b2);
+        assert!(b1.iter().all(|&t| t >= 0 && (t as usize) < vocab));
+    });
+}
+
+#[test]
+fn prop_lr_schedules_positive_and_bounded() {
+    check("lr schedule bounds", 30, |g| {
+        let lr = 10f64.powi(-(g.usize(1, 6) as i32));
+        let total = (g.len() as u64) * 50 + 10;
+        let s = LrSchedule::paper_cosine(lr, total);
+        for step in [0, 1, total / 2, total, total * 2] {
+            let v = s.at(step);
+            assert!(v > 0.0 && v <= lr * (1.0 + 1e-9), "step {step}: {v}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json roundtrip", 30, |g| {
+        // Random JSON tree, bounded depth.
+        fn build(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize(0, 4) } else { g.usize(0, 6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f32(1000.0) as f64 * 8.0).round() / 8.0),
+                3 => Json::Str(format!("s{}\"\\\n{}", g.usize(0, 100), g.usize(0, 10))),
+                4 => Json::Arr((0..g.usize(0, 4)).map(|_| build(g, depth - 1)).collect()),
+                _ => {
+                    let mut o = Obj::new();
+                    for i in 0..g.usize(0, 4) {
+                        o.insert(format!("k{i}"), build(g, depth - 1));
+                    }
+                    Json::Obj(o)
+                }
+            }
+        }
+        let tree = build(g, 3);
+        assert_eq!(Json::parse(&tree.to_string()).unwrap(), tree);
+        assert_eq!(Json::parse(&tree.to_string_pretty()).unwrap(), tree);
+    });
+}
+
+#[test]
+fn prop_shard_spec_partitions() {
+    check("shards partition", 40, |g| {
+        let total = g.len() * 7;
+        let parts = g.usize(1, 12);
+        let spec = ShardSpec::new(total, parts);
+        let mut sum = 0;
+        for r in 0..parts {
+            let (off, len) = spec.range(r);
+            assert_eq!(off, spec.range(r).0);
+            sum += len;
+            for i in off..off + len {
+                assert_eq!(spec.owner(i), r);
+            }
+        }
+        assert_eq!(sum, total);
+    });
+}

@@ -1,0 +1,130 @@
+//! Integration: AOT artifacts → PJRT load → execute → numerics checks.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use edit_train::data::{Corpus, Quality, Split};
+use edit_train::runtime::Engine;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<Engine> {
+    let root = artifacts_root();
+    if !root.join("test/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&root, "test").expect("engine load"))
+}
+
+fn batch(engine: &Engine, step: u64) -> Vec<i32> {
+    let [b, s1] = engine.manifest.token_shape;
+    let corpus = Corpus::new(engine.manifest.model.vocab_size, 7, Quality::clean());
+    corpus.batch_i32(Split::Train, 0, step, b, s1)
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let mut params = engine.init_params().unwrap();
+    let n = params.len();
+    assert_eq!(n, engine.manifest.total_params);
+    let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
+    let tokens = batch(&engine, 0);
+    let mut losses = Vec::new();
+    for step in 1..=10 {
+        let out = engine
+            .train_step(&mut params, &mut m, &mut v, &tokens, 3e-3, step)
+            .unwrap();
+        losses.push(out.loss);
+    }
+    assert!(losses[9] < losses[0] - 0.5, "{losses:?}");
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn grad_apply_equals_fused_train_step() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let params0 = engine.init_params().unwrap();
+    let n = params0.len();
+    let tokens = batch(&engine, 1);
+
+    // Fused path
+    let mut p1 = params0.clone();
+    let (mut m1, mut v1) = (vec![0.0; n], vec![0.0; n]);
+    let out1 = engine.train_step(&mut p1, &mut m1, &mut v1, &tokens, 1e-3, 1).unwrap();
+
+    // Split path
+    let mut grads = vec![0.0; n];
+    let out2 = engine.grad_step(&params0, &tokens, &mut grads).unwrap();
+    let mut p2 = params0.clone();
+    let (mut m2, mut v2) = (vec![0.0; n], vec![0.0; n]);
+    engine.apply_step(&mut p2, &mut m2, &mut v2, &grads, 1e-3, 1).unwrap();
+
+    assert!((out1.loss - out2.loss).abs() < 1e-6);
+    let max_diff = p1
+        .iter()
+        .zip(&p2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-6, "max param diff {max_diff}");
+}
+
+#[test]
+fn eval_step_matches_grad_loss_and_is_pure() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let params = engine.init_params().unwrap();
+    let tokens = batch(&engine, 2);
+    let mut grads = vec![0.0; params.len()];
+    let g = engine.grad_step(&params, &tokens, &mut grads).unwrap();
+    let e1 = engine.eval_step(&params, &tokens).unwrap();
+    let e2 = engine.eval_step(&params, &tokens).unwrap();
+    assert!((g.loss - e1).abs() < 1e-6);
+    assert_eq!(e1, e2, "eval must be deterministic");
+    // Near-uniform init loss ~ ln(V)
+    let lnv = (engine.manifest.model.vocab_size as f32).ln();
+    assert!((e1 - lnv).abs() < 1.0, "init loss {e1} vs ln(V) {lnv}");
+}
+
+#[test]
+fn penalty_hlo_matches_rust_implementation() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let n = engine.manifest.total_params;
+    let w = 2;
+    assert!(engine.has_penalty_program(w));
+    // Deterministic pseudo-grads
+    let deltas: Vec<Vec<f32>> = (0..w)
+        .map(|j| (0..n).map(|i| ((i * (j + 2)) % 17) as f32 / 17.0 - 0.5).collect())
+        .collect();
+    let norms: Vec<f32> = deltas
+        .iter()
+        .map(|d| edit_train::tensor::norm(d) as f32)
+        .collect();
+    let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+    let got = engine.penalty_combine(&refs, &norms).unwrap();
+
+    let cfg = edit_train::coordinator::PenaltyConfig::default();
+    let screened: Vec<f64> = norms.iter().map(|&x| x as f64).collect();
+    let want = edit_train::coordinator::penalty::combine(&refs, &screened, &cfg);
+    assert_eq!(got.len(), n);
+    edit_train::testing::assert_close(&got, &want.delta, 2e-5, 2e-4);
+}
+
+#[test]
+fn deterministic_across_engine_reloads() {
+    let Some(mut e1) = engine_or_skip() else { return };
+    let mut e2 = Engine::load(artifacts_root(), "test").unwrap();
+    let tokens = batch(&e1, 3);
+    let mut p1 = e1.init_params().unwrap();
+    let mut p2 = e2.init_params().unwrap();
+    let n = p1.len();
+    let (mut m1, mut v1) = (vec![0.0; n], vec![0.0; n]);
+    let (mut m2, mut v2) = (vec![0.0; n], vec![0.0; n]);
+    for step in 1..=3 {
+        let o1 = e1.train_step(&mut p1, &mut m1, &mut v1, &tokens, 1e-3, step).unwrap();
+        let o2 = e2.train_step(&mut p2, &mut m2, &mut v2, &tokens, 1e-3, step).unwrap();
+        assert_eq!(o1.loss, o2.loss);
+    }
+    assert_eq!(p1, p2);
+}

@@ -1,0 +1,179 @@
+//! Paper-shape regression suite over the analytic simulator and method
+//! matrix: these tests pin the qualitative claims of the evaluation
+//! section so refactors cannot silently break the reproduction.
+
+use edit_train::coordinator::Method;
+use edit_train::simulator::{simulate, Scenario, ScaleSpec, SimConfig};
+use edit_train::simulator::trace::sync_timeline;
+use edit_train::testing::check;
+
+fn tflops(method: Method, scenario: Scenario) -> f64 {
+    simulate(&SimConfig::fig5(method, scenario)).tflops_per_gpu.unwrap()
+}
+
+#[test]
+fn fig5_random_straggler_monotone_in_lag() {
+    for method in [Method::Baseline, Method::Edit, Method::AEdit] {
+        let mut prev = f64::INFINITY;
+        for lag in [0.0, 1.5, 2.5, 3.5, 4.5] {
+            let t = if lag == 0.0 {
+                tflops(method, Scenario::Normal)
+            } else {
+                tflops(method, Scenario::RandomStraggler { lag })
+            };
+            assert!(t <= prev + 1e-9, "{method:?} lag {lag}: {t} > {prev}");
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn fig5_bandwidth_monotone_and_selective() {
+    let mut prev = f64::INFINITY;
+    for rep in [0u32, 10, 20, 30, 40] {
+        let s = if rep == 0 {
+            Scenario::Normal
+        } else {
+            Scenario::LimitedBandwidth { repeat: rep }
+        };
+        let b = tflops(Method::Baseline, s);
+        assert!(b < prev + 1e-9);
+        prev = b;
+        // EDiT loses <1% even at the harshest derate.
+        let e = tflops(Method::Edit, s);
+        assert!(e > 0.99 * tflops(Method::Edit, Scenario::Normal));
+    }
+}
+
+#[test]
+fn fig5_aedit_dominates_edit_under_any_straggler() {
+    check("aedit >= edit", 20, |g| {
+        let lag = 0.5 + g.rng.f64() * 4.0;
+        let s = if g.bool() {
+            Scenario::RandomStraggler { lag }
+        } else {
+            Scenario::ConsistentStraggler { lag }
+        };
+        let e = tflops(Method::Edit, s);
+        let a = tflops(Method::AEdit, s);
+        assert!(a >= e - 1e-9, "lag {lag}: edit {e} > aedit {a}");
+    });
+}
+
+#[test]
+fn table2_throughput_decreases_with_scale() {
+    let mut prev = f64::INFINITY;
+    for scale in ScaleSpec::PAPER {
+        let t = simulate(&SimConfig::table2(Method::Edit, scale))
+            .tokens_per_sec
+            .unwrap();
+        assert!(t < prev);
+        prev = t;
+    }
+}
+
+#[test]
+fn table2_tflops_increases_with_scale() {
+    let mut prev = 0.0;
+    for scale in ScaleSpec::PAPER {
+        let t = simulate(&SimConfig::table2(Method::Edit, scale))
+            .tflops_per_gpu
+            .unwrap();
+        assert!(t > prev);
+        prev = t;
+    }
+}
+
+#[test]
+fn table2_edit_always_beats_baseline_when_both_fit() {
+    check("edit > baseline", 16, |g| {
+        let scale = ScaleSpec::PAPER[g.usize(0, 4)];
+        let tau = [5u64, 16, 64, 128][g.usize(0, 4)];
+        let mut cb = SimConfig::table2(Method::Baseline, scale);
+        let mut ce = SimConfig::table2(Method::Edit, scale);
+        cb.tau = tau;
+        ce.tau = tau;
+        let b = simulate(&cb);
+        let e = simulate(&ce);
+        assert!(!e.oom, "EDiT never OOMs in Table 2");
+        if !b.oom {
+            assert!(e.tflops_per_gpu.unwrap() > b.tflops_per_gpu.unwrap());
+        }
+    });
+}
+
+#[test]
+fn oom_is_monotone_in_scale_per_method() {
+    // Once a method OOMs at some scale it OOMs at every larger scale.
+    for method in Method::ALL {
+        let mut seen_oom = false;
+        for scale in ScaleSpec::PAPER {
+            let r = simulate(&SimConfig::table2(method, scale));
+            if seen_oom {
+                assert!(r.oom, "{method:?} {}", scale.name);
+            }
+            seen_oom |= r.oom;
+        }
+    }
+}
+
+#[test]
+fn fig9_exposed_matches_stepmodel_ordering() {
+    let exposed: Vec<(Method, f64)> = [
+        Method::Co2,
+        Method::Edit,
+        Method::PostLocalSgd,
+        Method::Co2Star,
+        Method::DiLoCo,
+    ]
+    .iter()
+    .map(|&m| (m, sync_timeline(m).exposed))
+    .collect();
+    // Strictly increasing in the paper's order (CO2 < EDiT < PLS < CO2* < DiLoCo-offloaded).
+    for w in exposed.windows(2) {
+        assert!(
+            w[0].1 < w[1].1,
+            "{:?} ({}) !< {:?} ({})",
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+}
+
+#[test]
+fn larger_tau_never_hurts_throughput() {
+    check("tau monotone", 12, |g| {
+        let scale = ScaleSpec::PAPER[g.usize(0, 4)];
+        let mut c1 = SimConfig::table2(Method::Edit, scale);
+        let mut c2 = c1.clone();
+        let t1 = [2u64, 5, 16][g.usize(0, 3)];
+        c1.tau = t1;
+        c2.tau = t1 * 4;
+        let r1 = simulate(&c1).tokens_per_sec.unwrap();
+        let r2 = simulate(&c2).tokens_per_sec.unwrap();
+        assert!(r2 >= r1 - 1e-9);
+    });
+}
+
+#[test]
+fn method_matrix_consistency() {
+    // Structural invariants tying the method flags to the simulator.
+    for m in Method::ALL {
+        if m.uses_penalty() {
+            assert!(m.outer_state_sharded(), "{m:?}: penalty implies sharded state");
+            assert!(m.layerwise_sync(), "{m:?}");
+        }
+        if m.outer_staleness() > 0 {
+            // CO2 family: overlapped sync -> zero exposed residual when
+            // unsharded, CO2* pays shard handling.
+            let tl = sync_timeline(m);
+            if m == Method::Co2 {
+                assert_eq!(tl.exposed, 0.0);
+            } else {
+                assert!(tl.exposed > 0.0);
+            }
+        }
+    }
+}

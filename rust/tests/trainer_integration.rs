@@ -1,0 +1,233 @@
+//! End-to-end trainer integration over the real AOT artifacts: every
+//! method trains the `test` model; algebraic limits are checked
+//! (EDiT == DiLoCo when the penalty is disabled, τ=1 consistency,
+//! determinism, elastic rescale). Skips without built artifacts.
+
+use edit_train::collectives::{CostModel, Topology};
+use edit_train::coordinator::{
+    LrSchedule, MeshSpec, Method, PenaltyConfig, Straggler, TrainConfig, Trainer,
+};
+use edit_train::data::{Corpus, Quality};
+use edit_train::elastic;
+use edit_train::runtime::Engine;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("test/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn trainer(method: Method, steps: u64, seed: u64) -> Trainer {
+    let engine = Engine::load(artifacts_root(), "test").unwrap();
+    let corpus = Corpus::new(engine.manifest.model.vocab_size, seed, Quality::clean());
+    let mut cfg = TrainConfig::paper_default(method, MeshSpec::new(2, 2), steps);
+    cfg.tau = 4;
+    cfg.tau_time = 4.0 * cfg.base_step_time;
+    cfg.t_warm = if method.uses_warmup() { 4 } else { 0 };
+    cfg.seed = seed;
+    cfg.eval_every_syncs = 0;
+    cfg.inner_lr = LrSchedule::Constant { lr: 2e-3 };
+    Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100())).unwrap()
+}
+
+#[test]
+fn every_method_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    for method in Method::ALL {
+        let mut t = trainer(method, 24, 11);
+        let summary = t.run().unwrap();
+        let first = t.tracker.losses.first().unwrap().1;
+        // Compare the LAST recorded loss to the first: the tail-mean
+        // summary metric mixes warmup and local phases at this tiny
+        // scale (24 steps) and would dilute the signal.
+        let last = t.tracker.losses.last().unwrap().1;
+        // 24 tiny steps: Nesterov-outer methods drop fast; plain
+        // averaging (PLS) and grad-averaged DDP move slower at this
+        // scale (matches the paper's ordering — PLS is its weakest
+        // method too). Thresholds per family:
+        let min_drop = match method {
+            Method::Baseline | Method::PostLocalSgd => 0.05,
+            // CO2's one-round staleness delays its first effective update.
+            Method::Co2 | Method::Co2Star => 0.08,
+            _ => 0.12,
+        };
+        assert!(
+            last < first - min_drop,
+            "{}: first {first:.3} last {last:.3}",
+            method.name(),
+        );
+        assert!(summary.final_loss.is_finite());
+        assert!(summary.throughput > 0.0);
+        if method.is_local_sgd() {
+            assert!(summary.syncs > 0, "{}", method.name());
+        }
+    }
+}
+
+#[test]
+fn deterministic_reruns() {
+    if !have_artifacts() {
+        return;
+    }
+    let s1 = trainer(Method::Edit, 16, 5).run().unwrap();
+    let s2 = trainer(Method::Edit, 16, 5).run().unwrap();
+    assert_eq!(s1.final_loss, s2.final_loss);
+    assert_eq!(s1.tokens, s2.tokens);
+}
+
+#[test]
+fn edit_equals_diloco_when_penalty_disabled() {
+    if !have_artifacts() {
+        return;
+    }
+    // EDiT with penalty fully disabled and no warmup performs uniform
+    // averaging per module == DiLoCo's global uniform averaging, with the
+    // same Nesterov outer state (module-partitioned application of the
+    // same elementwise update).
+    let mut edit = trainer(Method::Edit, 16, 9);
+    edit.cfg.penalty = PenaltyConfig::disabled();
+    edit.cfg.t_warm = 0;
+    let se = edit.run().unwrap();
+    let sd = trainer(Method::DiLoCo, 16, 9).run().unwrap();
+    assert!(
+        (se.final_loss - sd.final_loss).abs() < 1e-5,
+        "edit {} vs diloco {}",
+        se.final_loss,
+        sd.final_loss
+    );
+}
+
+#[test]
+fn diloco_with_tau1_close_to_baseline_losses() {
+    if !have_artifacts() {
+        return;
+    }
+    // τ=1 with SGD-lr-1 outer (PLS) == averaging params every step. With
+    // identical data order this tracks DDP closely (not exactly: grad
+    // averaging vs param averaging after one AdamW step differ at 2nd
+    // order). Check the curves stay close.
+    let mut pls = trainer(Method::PostLocalSgd, 12, 3);
+    pls.cfg.tau = 1;
+    pls.cfg.t_warm = 0;
+    let sp = pls.run().unwrap();
+    let sb = trainer(Method::Baseline, 12, 3).run().unwrap();
+    assert!(
+        (sp.final_loss - sb.final_loss).abs() < 0.35,
+        "pls {} vs ddp {}",
+        sp.final_loss,
+        sb.final_loss
+    );
+}
+
+#[test]
+fn warmup_phase_keeps_replicas_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut t = trainer(Method::Edit, 4, 7); // entirely within t_warm=4
+    t.run().unwrap();
+    let p0 = &t.replicas[0].params;
+    for r in &t.replicas[1..] {
+        assert_eq!(&r.params, p0);
+    }
+}
+
+#[test]
+fn straggler_increases_sim_time_not_loss_path() {
+    if !have_artifacts() {
+        return;
+    }
+    let fast = trainer(Method::Edit, 16, 13).run().unwrap();
+    let mut slow_t = trainer(Method::Edit, 16, 13);
+    slow_t.cfg.straggler = Straggler::Consistent { lag: 1.0, replica: 0 };
+    let slow = slow_t.run().unwrap();
+    // Step-synced EDiT: same numerics, more simulated time.
+    assert_eq!(slow.final_loss, fast.final_loss);
+    assert!(slow.sim_seconds > fast.sim_seconds + 5.0);
+    assert!(slow.throughput < fast.throughput);
+}
+
+#[test]
+fn aedit_fast_workers_do_more_steps_under_straggler() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut t = trainer(Method::AEdit, 20, 17);
+    t.cfg.t_warm = 0;
+    t.cfg.straggler = Straggler::Consistent { lag: 2.0, replica: 0 };
+    t.run().unwrap();
+    let steps0 = t.replicas[0].inner_steps;
+    let steps1 = t.replicas[1].inner_steps;
+    assert!(
+        steps1 > steps0,
+        "fast replica should run more inner steps: {steps0} vs {steps1}"
+    );
+}
+
+#[test]
+fn elastic_rescale_preserves_learning() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut t = trainer(Method::Edit, 8, 19);
+    t.cfg.t_warm = 0;
+    let phases = [
+        elastic::Phase { replicas: 1, steps: 8 },
+        elastic::Phase { replicas: 3, steps: 8 },
+        elastic::Phase { replicas: 2, steps: 8 },
+    ];
+    let points = elastic::run_schedule(&mut t, &phases).unwrap();
+    assert_eq!(points.len(), 3);
+    assert_eq!(t.replicas.len(), 2);
+    assert_eq!(points[1].replicas, 3);
+    // PPL improves over the schedule.
+    assert!(points[2].val_ppl < points[0].val_ppl * 1.05);
+    // All replicas share the synchronized state after the final round.
+    let p0 = &t.anchor;
+    for r in &t.replicas {
+        assert_eq!(&r.params, p0);
+    }
+}
+
+#[test]
+fn probes_report_all_streams() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut t = trainer(Method::Baseline, 4, 23);
+    t.run().unwrap();
+    let probes = t.probe_ppls().unwrap();
+    assert_eq!(probes.len(), 8);
+    for (name, ppl) in probes {
+        assert!(ppl.is_finite() && ppl > 1.0, "{name}: {ppl}");
+    }
+}
+
+#[test]
+fn co2_staleness_delays_outer_update() {
+    if !have_artifacts() {
+        return;
+    }
+    // After the FIRST sync, CO2's anchor must still equal the init params
+    // (its round-1 update is in flight), while DiLoCo's anchor moved.
+    let mut co2 = trainer(Method::Co2, 4, 29); // one round of tau=4
+    let init = {
+        let e = Engine::load(artifacts_root(), "test").unwrap();
+        e.init_params().unwrap()
+    };
+    co2.run().unwrap();
+    assert_eq!(co2.syncs, 1);
+    assert_eq!(co2.anchor, init, "CO2 anchor unchanged after first sync");
+
+    let mut diloco = trainer(Method::DiLoCo, 4, 29);
+    diloco.run().unwrap();
+    assert_ne!(diloco.anchor, init, "DiLoCo applies immediately");
+}
