@@ -1,0 +1,22 @@
+# Repo-level entry points. The Rust workspace lives under rust/.
+
+.PHONY: verify build test bench artifacts
+
+# Tier-1 gate + hygiene (fmt/clippy when installed): one command for CI
+# and for every later PR.
+verify:
+	bash scripts/verify.sh
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+# AOT-lower the JAX model + Pallas kernels to HLO artifacts (build-time
+# only; needs the python toolchain — see python/compile/aot.py).
+artifacts:
+	cd python/compile && python3 aot.py --out ../../rust/artifacts --configs test

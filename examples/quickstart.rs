@@ -43,18 +43,25 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. the L1 penalty kernel through PJRT ------------------------------
     let engine = trainer.engine_mut();
-    let n = engine.manifest.total_params;
-    let deltas: Vec<Vec<f32>> = (0..2)
-        .map(|j| (0..n).map(|i| ((i + j) % 13) as f32 / 13.0 - 0.5).collect())
-        .collect();
-    let norms: Vec<f32> = deltas.iter().map(|d| tensor::norm(d) as f32).collect();
-    let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
-    let combined = engine.penalty_combine(&refs, &norms)?;
-    println!(
-        "penalty combine via Pallas HLO: |out| = {:.4} (phi = {})",
-        tensor::norm(&combined),
-        engine.manifest.penalty_phi
-    );
+    if engine.has_penalty_program(2) {
+        let n = engine.manifest.total_params;
+        let deltas: Vec<Vec<f32>> = (0..2)
+            .map(|j| (0..n).map(|i| ((i + j) % 13) as f32 / 13.0 - 0.5).collect())
+            .collect();
+        let norms: Vec<f32> = deltas.iter().map(|d| tensor::norm(d) as f32).collect();
+        let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let combined = engine.penalty_combine(&refs, &norms)?;
+        println!(
+            "penalty combine via Pallas HLO: |out| = {:.4} (phi = {})",
+            tensor::norm(&combined),
+            engine.manifest.penalty_phi
+        );
+    } else {
+        println!(
+            "penalty HLO not executable on this backend (stub runtime, or artifacts \
+             exported without penalty programs); skipping the L1 kernel demo"
+        );
+    }
     println!("quickstart OK");
     Ok(())
 }

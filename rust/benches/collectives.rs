@@ -1,5 +1,6 @@
-//! Collective-substrate micro benches: sequential reference vs threaded
-//! rendezvous across sizes (the L3 hot-loop primitives).
+//! Collective-substrate micro benches: sequential reference vs the
+//! striped threaded rendezvous across sizes (the L3 hot-loop
+//! primitives). GB/s is the logical payload (n ranks × len × 4 bytes).
 
 use edit_train::bench::Bencher;
 use edit_train::collectives::{group, ThreadComm};
@@ -10,35 +11,53 @@ fn main() {
     println!("== collectives ==");
     for &len in &[1usize << 10, 1 << 14, 1 << 18] {
         for &n in &[2usize, 4, 8] {
+            let bytes = (n * len * 4) as u64;
             let mut bufs: Vec<Vec<f32>> =
                 (0..n).map(|r| vec![r as f32; len]).collect();
-            b.bench(&format!("seq all_reduce_mean n={n} len={len}"), || {
+            b.bench_gbs(&format!("seq all_reduce_mean n={n} len={len}"), bytes, || {
                 let mut refs: Vec<&mut [f32]> =
                     bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
                 group::all_reduce_mean(&mut refs);
             });
             let spec = ShardSpec::new(len, n);
             let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
-            b.bench(&format!("seq reduce_scatter  n={n} len={len}"), || {
+            b.bench_gbs(&format!("seq reduce_scatter  n={n} len={len}"), bytes, || {
                 let mut refs: Vec<&mut [f32]> =
                     bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
                 group::reduce_scatter_mean(&mut refs, &shards);
             });
         }
     }
-    // Threaded rendezvous round-trip (4 ranks, mid size).
-    let n = 4;
-    let len = 1 << 14;
-    b.bench(&format!("threaded all_reduce  n={n} len={len}"), || {
-        let comms = ThreadComm::group(n);
-        std::thread::scope(|s| {
-            for c in comms {
-                s.spawn(move || {
-                    let mut buf = vec![c.rank() as f32; len];
-                    c.all_reduce_mean(&mut buf);
-                });
-            }
+    // Striped threaded rendezvous round-trip (thread spawn included —
+    // the interesting trend is across len at fixed n).
+    for &len in &[1usize << 14, 1 << 18] {
+        let n = 4;
+        let bytes = (n * len * 4) as u64;
+        b.bench_gbs(&format!("striped threaded all_reduce n={n} len={len}"), bytes, || {
+            let comms = ThreadComm::group(n);
+            std::thread::scope(|s| {
+                for c in comms {
+                    s.spawn(move || {
+                        let mut buf = vec![c.rank() as f32; len];
+                        c.all_reduce_mean(&mut buf);
+                    });
+                }
+            });
         });
-    });
+        let spec = ShardSpec::new(len, n);
+        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+        b.bench_gbs(&format!("striped threaded reduce_scatter n={n} len={len}"), bytes, || {
+            let comms = ThreadComm::group(n);
+            let sh = &shards;
+            std::thread::scope(|s| {
+                for c in comms {
+                    s.spawn(move || {
+                        let mut buf = vec![c.rank() as f32; len];
+                        c.reduce_scatter_mean(&mut buf, sh);
+                    });
+                }
+            });
+        });
+    }
     b.write_csv("results/bench_collectives.csv").unwrap();
 }

@@ -1,27 +1,156 @@
-//! Hot-path micro benches over the REAL runtime: PJRT train/eval step
-//! latency, literal marshalling, the penalty HLO, and one full EDiT
-//! sync — the numbers the §Perf pass in EXPERIMENTS.md tracks.
+//! Hot-path micro benches — the numbers the §Perf pass tracks.
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
+//! Four sections, from kernel to full round:
+//!  1. fused kernel GB/s vs the naive reference ops (always runs);
+//!  2. one full EDiT sync round over a synthetic 1M-param module table:
+//!     the fused `SyncScratch` pipeline vs the historical
+//!     collect-then-scatter reference shape (always runs; this is the
+//!     acceptance-criteria "edit outer round" speedup);
+//!  3. the engine step path over built artifacts (PJRT with
+//!     `--features pjrt`, the deterministic stub otherwise; skips
+//!     without `make artifacts`);
+//!  4. full `Trainer::run_round` EDiT rounds on the synthetic stub
+//!     engine (default build only — no artifacts needed).
 
 use edit_train::bench::Bencher;
-use edit_train::collectives::{CostModel, Topology};
-use edit_train::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
-use edit_train::data::{Corpus, Quality, Split};
-use edit_train::runtime::Engine;
-use edit_train::tensor;
+use edit_train::coordinator::penalty::{softmax_neg_weights, PenaltyConfig};
+use edit_train::coordinator::{OuterOpt, OuterOptKind, SyncScratch};
+use edit_train::runtime::Manifest;
+use edit_train::tensor::{self, kernels, ModuleTable};
 
-fn main() {
+fn kernel_benches(b: &mut Bencher) {
+    println!("-- fused kernels (n=2^20) --");
+    let n = 1usize << 20;
+    let x: Vec<f32> = (0..n).map(|i| (i % 97) as f32 / 97.0 - 0.5).collect();
+    let a: Vec<f32> = (0..n).map(|i| (i % 89) as f32 / 89.0 - 0.5).collect();
+    let mut y = vec![0.0f32; n];
+    let rw = (2 * n * 4) as u64; // read + write one vector
+    let rr = (2 * n * 4) as u64; // read two vectors
+    b.bench_gbs("kernel axpy fused", rw + (n * 4) as u64, || {
+        kernels::axpy(&mut y, 1.0001, &x);
+        std::hint::black_box(y[0]);
+    });
+    b.bench_gbs("kernel axpy reference", rw + (n * 4) as u64, || {
+        kernels::reference::axpy(&mut y, 1.0001, &x);
+        std::hint::black_box(y[0]);
+    });
+    b.bench_gbs("kernel sq_norm fused", (n * 4) as u64, || {
+        std::hint::black_box(kernels::sq_norm(&x));
+    });
+    b.bench_gbs("kernel sq_norm reference", (n * 4) as u64, || {
+        std::hint::black_box(kernels::reference::sq_norm(&x));
+    });
+    b.bench_gbs("kernel sub+norm fused (one pass)", rr + (n * 4) as u64, || {
+        std::hint::black_box(kernels::sub_sq_norm_into(&mut y, &a, &x));
+    });
+    b.bench_gbs("kernel sub+norm reference (two pass)", rr + (n * 4) as u64, || {
+        kernels::reference::sub(&mut y, &a, &x);
+        std::hint::black_box(kernels::reference::sq_norm(&y));
+    });
+}
+
+/// Synthetic module table at paper-like shape: 8 stacked layers of 128K
+/// elements + 16K unstacked tail = ~1.06M params (≥ 2^20).
+fn bench_table() -> ModuleTable {
+    Manifest::synthetic("hotpath-bench", 8, 1 << 17, 1 << 14, 256, 2, 16).table
+}
+
+fn sync_round_benches(b: &mut Bencher) {
+    println!("-- edit outer round: fused scratch vs naive reference --");
+    let table = bench_table();
+    let p = table.total;
+    let replicas = 4usize;
+    let cfg = PenaltyConfig::default();
+    let params: Vec<Vec<f32>> = (0..replicas)
+        .map(|j| (0..p).map(|i| ((i * (j + 3)) % 211) as f32 / 211.0 - 0.5).collect())
+        .collect();
+    let anchor0: Vec<f32> = (0..p).map(|i| (i % 7) as f32 / 7.0 - 0.5).collect();
+    // Per-round traffic: read every replica row + anchor, write combine.
+    let bytes = ((replicas + 2) * p * 4) as u64;
+
+    // --- fused scratch pipeline (what Trainer::synchronize runs) -------
+    let mut scratch = SyncScratch::new(&table, replicas, 0);
+    let mut outer_f = OuterOpt::new(OuterOptKind::paper_nesterov(), p);
+    let mut anchor_f = anchor0.clone();
+    let fused = b.bench_gbs(
+        &format!("edit outer round fused ({replicas} replicas, {p} params)"),
+        bytes,
+        || {
+            for m in 0..table.num_modules() {
+                scratch.load_module(m, |j| params[j].as_slice(), &anchor_f);
+                scratch.adopt_norms_unscreened();
+                if !scratch.compute_weights(true) {
+                    continue;
+                }
+                let sq = scratch.combine_module(m);
+                let beta = (cfg.phi / (sq.sqrt() + cfg.eps)).min(1.0);
+                scratch.apply_module(m, &mut outer_f, &mut anchor_f, beta as f32);
+            }
+            std::hint::black_box(anchor_f[0]);
+        },
+    );
+
+    // --- historical reference: multi-pass + collect-then-scatter -------
+    let mut deltas: Vec<Vec<f32>> = vec![vec![0.0; p]; replicas]; // reused, as the old trainer did
+    let mut outer_r = OuterOpt::new(OuterOptKind::paper_nesterov(), p);
+    let mut anchor_r = anchor0.clone();
+    let naive = b.bench_gbs(
+        &format!("edit outer round reference ({replicas} replicas, {p} params)"),
+        bytes,
+        || {
+            for (j, d) in deltas.iter_mut().enumerate() {
+                kernels::reference::sub(d, &params[j], &anchor_r);
+            }
+            for m in 0..table.num_modules() {
+                let ranges = table.module_ranges(m);
+                let norms: Vec<f64> = (0..replicas)
+                    .map(|j| table.module_sq_norm(&deltas[j], m).sqrt())
+                    .collect();
+                let weights = softmax_neg_weights(&norms, true);
+                if weights.iter().all(|&w| w == 0.0) {
+                    continue;
+                }
+                let mut module_sq = 0.0f64;
+                let mut combined: Vec<(usize, Vec<f32>)> = Vec::with_capacity(ranges.len());
+                for r in &ranges {
+                    let mut out = vec![0.0f32; r.len];
+                    let rows: Vec<&[f32]> = deltas
+                        .iter()
+                        .map(|d| &d[r.offset..r.offset + r.len])
+                        .collect();
+                    kernels::reference::weighted_sum_into(&mut out, &rows, &weights);
+                    module_sq += kernels::reference::sq_norm(&out);
+                    combined.push((r.offset, out));
+                }
+                let beta = (cfg.phi / (module_sq.sqrt() + cfg.eps)).min(1.0);
+                for (off, mut delta) in combined {
+                    if beta < 1.0 {
+                        kernels::reference::scale(&mut delta, beta as f32);
+                    }
+                    outer_r.apply_range(&mut anchor_r, &delta, off);
+                }
+            }
+            std::hint::black_box(anchor_r[0]);
+        },
+    );
+    println!(
+        "edit outer round speedup (fused vs naive reference): {:.2}x",
+        naive.median / fused.median
+    );
+}
+
+fn engine_benches(b: &mut Bencher) {
+    use edit_train::data::{Corpus, Quality, Split};
+    use edit_train::runtime::Engine;
+
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("test/manifest.json").exists() {
-        println!("hotpath: artifacts not built; skipping (run `make artifacts`)");
+        println!("engine section: artifacts not built; skipping (run `make artifacts`)");
         return;
     }
-    let mut b = Bencher::new();
-    println!("== hotpath (test model) ==");
-
     let mut engine = Engine::load(artifacts, "test").unwrap();
     engine.warmup().unwrap();
+    println!("-- engine steps on '{}' --", engine.platform());
     let mut params = engine.init_params().unwrap();
     let n = params.len();
     let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
@@ -30,50 +159,75 @@ fn main() {
     let tokens = corpus.batch_i32(Split::Train, 0, 0, bs, s1);
 
     let mut step = 0;
-    b.bench("pjrt train_step (fused fwd+bwd+adamw)", || {
+    b.bench("engine train_step (fused fwd+bwd+adamw)", || {
         step += 1;
         let out = engine
             .train_step(&mut params, &mut m, &mut v, &tokens, 1e-4, step)
             .unwrap();
         std::hint::black_box(out.loss);
     });
-    b.bench("pjrt eval_step", || {
+    b.bench("engine eval_step", || {
         std::hint::black_box(engine.eval_step(&params, &tokens).unwrap());
     });
     let mut grads = vec![0.0f32; n];
-    b.bench("pjrt grad_step", || {
+    b.bench("engine grad_step", || {
         std::hint::black_box(engine.grad_step(&params, &tokens, &mut grads).unwrap());
     });
 
-    // Penalty through the AOT Pallas HLO vs pure Rust.
+    // Penalty through the AOT Pallas HLO vs pure Rust (PJRT builds only).
     let deltas: Vec<Vec<f32>> = (0..2)
         .map(|j| (0..n).map(|i| ((i + j) % 7) as f32 / 7.0 - 0.5).collect())
         .collect();
     let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
     let normsf: Vec<f32> = deltas.iter().map(|d| tensor::norm(d) as f32).collect();
     let norms64: Vec<f64> = normsf.iter().map(|&x| x as f64).collect();
-    b.bench("penalty combine via HLO (w=2)", || {
-        std::hint::black_box(engine.penalty_combine(&refs, &normsf).unwrap());
-    });
-    let cfg = edit_train::coordinator::PenaltyConfig::default();
+    if engine.has_penalty_program(refs.len()) {
+        b.bench("penalty combine via HLO (w=2)", || {
+            std::hint::black_box(engine.penalty_combine(&refs, &normsf).unwrap());
+        });
+    } else {
+        println!("penalty HLO unavailable on this backend; skipping");
+    }
+    let cfg = PenaltyConfig::default();
     b.bench("penalty combine pure rust (w=2)", || {
         std::hint::black_box(edit_train::coordinator::penalty::combine(
             &refs, &norms64, &cfg,
         ));
     });
+}
 
-    // One full outer round (τ inner steps x 2 replicas + EDiT sync).
-    let corpus2 = Corpus::new(engine.manifest.model.vocab_size, 5, Quality::clean());
+/// Full EDiT rounds (τ inner steps × replicas + fused sync) through the
+/// Trainer on the synthetic stub engine — no artifacts required.
+#[cfg(not(feature = "pjrt"))]
+fn trainer_round_benches(b: &mut Bencher) {
+    use edit_train::collectives::{CostModel, Topology};
+    use edit_train::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
+    use edit_train::data::{Corpus, Quality};
+    use edit_train::runtime::Engine;
+
+    println!("-- full trainer rounds (stub engine) --");
+    let manifest = Manifest::synthetic("hotpath-round", 4, 1 << 14, 1 << 13, 256, 2, 16);
+    let vocab = manifest.model.vocab_size;
+    let engine = Engine::synthetic(manifest);
+    let corpus = Corpus::new(vocab, 5, Quality::clean());
     let mut tc = TrainConfig::paper_default(Method::Edit, MeshSpec::new(2, 2), u64::MAX);
     tc.tau = 4;
     tc.t_warm = 0;
     tc.eval_every_syncs = 0;
-    let engine2 = Engine::load(artifacts, "test").unwrap();
     let mut trainer =
-        Trainer::new(engine2, corpus2, tc, CostModel::new(Topology::a100())).unwrap();
-    b.bench("edit outer round (tau=4, 2 replicas)", || {
+        Trainer::new(engine, corpus, tc, CostModel::new(Topology::a100())).unwrap();
+    b.bench("edit outer round e2e (stub, tau=4, 2 replicas)", || {
         trainer.run_round().unwrap();
     });
+}
 
+fn main() {
+    let mut b = Bencher::new();
+    println!("== hotpath ==");
+    kernel_benches(&mut b);
+    sync_round_benches(&mut b);
+    engine_benches(&mut b);
+    #[cfg(not(feature = "pjrt"))]
+    trainer_round_benches(&mut b);
     b.write_csv("results/bench_hotpath.csv").unwrap();
 }

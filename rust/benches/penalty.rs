@@ -1,14 +1,42 @@
 //! Pseudo-gradient-penalty hot path (Alg. 2): screen + combine across
 //! worker counts and parameter sizes — the per-sync cost of the
 //! paper's contribution in pure Rust.
+//!
+//! Each combine size is measured twice: through the fused kernels
+//! (`tensor::kernels::weighted_sum_sq_into`, one sweep) and through the
+//! naive reference ops (`kernels::reference`, the historical multi-pass
+//! shape: weighted sum, then norm, then clip scale). The GB/s column is
+//! the *logical* traffic (w input rows + 1 output row), so the fused
+//! path's higher number is real bandwidth saved, and the final ratio
+//! line records the acceptance-criteria speedup on 2^20-element vectors.
 
 use edit_train::bench::Bencher;
-use edit_train::coordinator::penalty::{combine, AnomalyDetector, PenaltyConfig};
-use edit_train::tensor;
+use edit_train::coordinator::penalty::{
+    combine, softmax_neg_weights, AnomalyDetector, PenaltyConfig,
+};
+use edit_train::tensor::{self, kernels};
+
+/// The historical multi-pass combine, expressed over the reference ops.
+fn combine_reference(deltas: &[&[f32]], norms: &[f64], cfg: &PenaltyConfig) -> f64 {
+    let weights = softmax_neg_weights(norms, cfg.weighted_averaging);
+    let len = deltas[0].len();
+    let mut out = vec![0.0f32; len];
+    kernels::reference::weighted_sum_into(&mut out, deltas, &weights);
+    let mut beta = 1.0;
+    if cfg.gradient_clip {
+        let norm = kernels::reference::sq_norm(&out).sqrt();
+        beta = (cfg.phi / (norm + cfg.eps)).min(1.0);
+        if beta < 1.0 {
+            kernels::reference::scale(&mut out, beta as f32);
+        }
+    }
+    beta
+}
 
 fn main() {
     let mut b = Bencher::new();
     println!("== penalty ==");
+    let mut headline: (f64, f64) = (0.0, 0.0); // (reference, fused) seconds
     for &n in &[1usize << 12, 1 << 16, 1 << 20] {
         for &w in &[2usize, 4, 8] {
             let deltas: Vec<Vec<f32>> = (0..w)
@@ -17,21 +45,40 @@ fn main() {
             let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
             let norms: Vec<f64> = deltas.iter().map(|d| tensor::norm(d)).collect();
             let cfg = PenaltyConfig::default();
-            b.bench(&format!("combine w={w} n={n}"), || {
+            let bytes = ((w + 1) * n * 4) as u64;
+            let fused = b.bench_gbs(&format!("combine pure rust (fused) w={w} n={n}"), bytes, || {
                 let out = combine(&refs, &norms, &cfg);
                 std::hint::black_box(out.beta);
             });
-            b.bench(&format!("norms   w={w} n={n}"), || {
-                let s: f64 = deltas.iter().map(|d| tensor::sq_norm(d)).sum();
+            let naive = b.bench_gbs(&format!("combine reference (naive) w={w} n={n}"), bytes, || {
+                std::hint::black_box(combine_reference(&refs, &norms, &cfg));
+            });
+            if n == 1 << 20 && w == 4 {
+                headline = (naive.median, fused.median);
+            }
+            b.bench_gbs(&format!("norms fused   w={w} n={n}"), (w * n * 4) as u64, || {
+                let s: f64 = deltas.iter().map(|d| kernels::sq_norm(d)).sum();
+                std::hint::black_box(s);
+            });
+            b.bench_gbs(&format!("norms reference w={w} n={n}"), (w * n * 4) as u64, || {
+                let s: f64 = deltas.iter().map(|d| kernels::reference::sq_norm(d)).sum();
                 std::hint::black_box(s);
             });
         }
     }
+    if headline.1 > 0.0 {
+        println!(
+            "penalty combine speedup (fused vs naive, w=4 n=2^20): {:.2}x",
+            headline.0 / headline.1
+        );
+    }
     let mut det = AnomalyDetector::new(8, 5, PenaltyConfig::default());
     let norms = vec![1.0f64; 8];
+    let mut screened = Vec::with_capacity(8);
     b.bench("detector screen w=8 modules=5", || {
         for m in 0..5 {
-            std::hint::black_box(det.screen(m, &norms));
+            det.screen_into(m, &norms, &mut screened);
+            std::hint::black_box(screened.len());
         }
         det.advance();
     });

@@ -17,12 +17,26 @@ pub struct Stats {
     pub p10: f64,
     pub p90: f64,
     pub iters: u64,
+    /// Bytes moved per iteration (set via [`Bencher::bench_gbs`]);
+    /// enables the GB/s column for memory-bound kernels.
+    pub bytes: Option<u64>,
 }
 
 impl Stats {
+    /// Effective memory throughput in GB/s (when `bytes` is known).
+    pub fn gb_per_s(&self) -> Option<f64> {
+        self.bytes
+            .filter(|_| self.median > 0.0)
+            .map(|b| b as f64 / self.median / 1e9)
+    }
+
     pub fn report(&self) -> String {
+        let gbs = self
+            .gb_per_s()
+            .map(|g| format!("  {g:>7.2} GB/s"))
+            .unwrap_or_default();
         format!(
-            "{:<40} {:>12}/iter  (p10 {:>10}, p90 {:>10}, n={})",
+            "{:<44} {:>12}/iter  (p10 {:>10}, p90 {:>10}, n={}){gbs}",
             self.name,
             fmt_duration(self.median),
             fmt_duration(self.p10),
@@ -71,7 +85,18 @@ impl Bencher {
     }
 
     /// Time `f` (called repeatedly); returns and records stats.
-    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> Stats {
+        self.bench_inner(name, None, f)
+    }
+
+    /// Like [`Self::bench`] for memory-bound kernels: `bytes` is the
+    /// traffic per iteration, reported as an effective GB/s so kernel
+    /// speedups land in the bench trajectory as bandwidth numbers.
+    pub fn bench_gbs<F: FnMut()>(&mut self, name: &str, bytes: u64, f: F) -> Stats {
+        self.bench_inner(name, Some(bytes), f)
+    }
+
+    fn bench_inner<F: FnMut()>(&mut self, name: &str, bytes: Option<u64>, mut f: F) -> Stats {
         // Warmup + calibration: find iters-per-batch ~ 1ms.
         let cal_start = Instant::now();
         let mut cal_iters = 0u64;
@@ -105,6 +130,7 @@ impl Bencher {
             p10: q(0.1),
             p90: q(0.9),
             iters: total_iters,
+            bytes,
         };
         println!("{}", stats.report());
         self.results.push(stats.clone());
@@ -125,6 +151,7 @@ impl Bencher {
             p10: secs,
             p90: secs,
             iters: 1,
+            bytes: None,
         });
         (out, secs)
     }
@@ -137,7 +164,7 @@ impl Bencher {
     pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
         let mut w = crate::metrics::CsvWriter::create(
             path,
-            &["name", "mean_s", "median_s", "p10_s", "p90_s", "iters"],
+            &["name", "mean_s", "median_s", "p10_s", "p90_s", "iters", "gb_per_s"],
         )?;
         for s in &self.results {
             w.row(&[
@@ -147,6 +174,7 @@ impl Bencher {
                 format!("{:.3e}", s.p10),
                 format!("{:.3e}", s.p90),
                 s.iters.to_string(),
+                s.gb_per_s().map(|g| format!("{g:.2}")).unwrap_or_default(),
             ])?;
         }
         w.flush()
@@ -176,6 +204,18 @@ mod tests {
         assert!(fmt_duration(2e-6).ends_with("µs"));
         assert!(fmt_duration(2e-3).ends_with("ms"));
         assert!(fmt_duration(2.0).ends_with("s"));
+    }
+
+    #[test]
+    fn gbs_column_reported() {
+        std::env::set_var("EDIT_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let buf = vec![1u8; 1024];
+        let s = b.bench_gbs("touch-1k", 1024, || {
+            std::hint::black_box(buf.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        assert!(s.gb_per_s().unwrap() > 0.0);
+        assert!(s.report().contains("GB/s"));
     }
 
     #[test]

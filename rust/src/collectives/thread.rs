@@ -6,15 +6,34 @@
 //! rank-0..n fold as the sequential reference, and the test suite
 //! asserts bitwise equality between both implementations.
 //!
+//! Concurrency layout (the striped rework): contributions live in
+//! per-rank `RwLock` slots, so staging takes one short uncontended write
+//! lock and the reduce phase reads every slot *in parallel* instead of
+//! serializing all ranks behind a single staging mutex.  For the
+//! all-reduce, each rank folds only its own contiguous stripe
+//! (`ShardSpec` split) into a shared stripe slab and then gathers every
+//! stripe — ring-style bandwidth parallelism with the sequential fold
+//! order preserved per element, so results stay bitwise equal to
+//! [`super::group::all_reduce_mean`].
+//!
+//! Steady-state allocation: every slot (staging and stripe) is a `Vec`
+//! that is `clear()`ed and refilled, so repeated collectives reuse their
+//! capacity and allocate nothing after the first round at a given size.
+//!
 //! The numerics trainer runs single-threaded (PJRT client is not Send,
 //! and this box has one core), so this module is exercised by tests,
 //! benches, and any future multi-process deployment of the coordinator.
 
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Barrier, RwLock};
+
+use crate::tensor::{kernels, ShardSpec};
 
 struct Inner {
     n: usize,
-    staging: Mutex<Vec<Vec<f32>>>,
+    /// Per-rank contribution slots.
+    staging: Vec<RwLock<Vec<f32>>>,
+    /// Per-rank reduced-stripe slots (all-reduce slab).
+    stripes: Vec<RwLock<Vec<f32>>>,
     barrier: Barrier,
 }
 
@@ -29,7 +48,8 @@ impl ThreadComm {
     pub fn group(n: usize) -> Vec<ThreadComm> {
         let inner = Arc::new(Inner {
             n,
-            staging: Mutex::new(vec![Vec::new(); n]),
+            staging: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
+            stripes: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
             barrier: Barrier::new(n),
         });
         (0..n).map(|rank| ThreadComm { rank, inner: Arc::clone(&inner) }).collect()
@@ -48,35 +68,49 @@ impl ThreadComm {
     }
 
     fn stage(&self, data: &[f32]) {
-        let mut staging = self.inner.staging.lock().unwrap();
-        let slot = &mut staging[self.rank];
+        let mut slot = self.inner.staging[self.rank].write().unwrap();
         slot.clear();
         slot.extend_from_slice(data);
     }
 
     /// Mean all-reduce across the group (every rank ends with the mean).
+    ///
+    /// Striped: rank r sums ranks' contributions over stripe r only
+    /// (fold order 0..n, then the 1/n scale — per element exactly the
+    /// sequential reference's operation sequence), publishes the stripe,
+    /// and gathers the other stripes after the barrier.
     pub fn all_reduce_mean(&self, buf: &mut [f32]) {
-        if self.inner.n == 1 {
+        let n = self.inner.n;
+        if n == 1 {
             return;
         }
         self.stage(buf);
         self.inner.barrier.wait();
+
+        let spec = ShardSpec::new(buf.len(), n);
+        let inv = 1.0 / n as f32;
         {
-            // Every rank folds in the same 0..n order => deterministic and
-            // identical across ranks.
-            let staging = self.inner.staging.lock().unwrap();
-            buf.copy_from_slice(&staging[0]);
-            for r in 1..self.inner.n {
-                for (acc, &x) in buf.iter_mut().zip(&staging[r]) {
-                    *acc += x;
-                }
+            let (off, len) = spec.range(self.rank);
+            let mut stripe = self.inner.stripes[self.rank].write().unwrap();
+            stripe.clear();
+            {
+                let s0 = self.inner.staging[0].read().unwrap();
+                stripe.extend_from_slice(&s0[off..off + len]);
             }
+            for r in 1..n {
+                let sr = self.inner.staging[r].read().unwrap();
+                kernels::add(&mut stripe[..], &sr[off..off + len]);
+            }
+            kernels::scale(&mut stripe[..], inv);
         }
-        let inv = 1.0 / self.inner.n as f32;
-        for x in buf.iter_mut() {
-            *x *= inv;
+        // All stripes reduced before anyone gathers.
+        self.inner.barrier.wait();
+        for r in 0..n {
+            let (off, len) = spec.range(r);
+            let sr = self.inner.stripes[r].read().unwrap();
+            buf[off..off + len].copy_from_slice(&sr);
         }
-        // Second barrier: nobody restages until all have read.
+        // Nobody restages (or re-reduces into a stripe) until all have read.
         self.inner.barrier.wait();
     }
 
@@ -89,37 +123,36 @@ impl ThreadComm {
         let (off, len) = shards[self.rank];
         self.stage(&full[off..off + len]);
         self.inner.barrier.wait();
-        {
-            let staging = self.inner.staging.lock().unwrap();
-            for (r, &(o, l)) in shards.iter().enumerate() {
-                if r != self.rank {
-                    full[o..o + l].copy_from_slice(&staging[r]);
-                }
+        for (r, &(o, l)) in shards.iter().enumerate() {
+            if r != self.rank {
+                let sr = self.inner.staging[r].read().unwrap();
+                full[o..o + l].copy_from_slice(&sr);
             }
         }
         self.inner.barrier.wait();
     }
 
     /// Reduce-scatter (mean): on return this rank's shard region holds the
-    /// group mean of that region; the rest of `full` is untouched.
+    /// group mean of that region; the rest of `full` is untouched.  Each
+    /// rank folds only its own shard, reading the per-rank slots in
+    /// parallel (fold order 0..n preserved).
     pub fn reduce_scatter_mean(&self, full: &mut [f32], shards: &[(usize, usize)]) {
-        if self.inner.n == 1 {
+        let n = self.inner.n;
+        if n == 1 {
             return;
         }
         self.stage(full);
         self.inner.barrier.wait();
         let (off, len) = shards[self.rank];
         {
-            let staging = self.inner.staging.lock().unwrap();
-            let inv = 1.0 / self.inner.n as f32;
-            for i in 0..len {
-                let mut acc = 0.0f32;
-                for r in 0..self.inner.n {
-                    acc += staging[r][off + i];
-                }
-                full[off + i] = acc * inv;
-            }
+            let s0 = self.inner.staging[0].read().unwrap();
+            full[off..off + len].copy_from_slice(&s0[off..off + len]);
         }
+        for r in 1..n {
+            let sr = self.inner.staging[r].read().unwrap();
+            kernels::add(&mut full[off..off + len], &sr[off..off + len]);
+        }
+        kernels::scale(&mut full[off..off + len], 1.0 / n as f32);
         self.inner.barrier.wait();
     }
 
@@ -133,8 +166,8 @@ impl ThreadComm {
         }
         self.inner.barrier.wait();
         if self.rank != root {
-            let staging = self.inner.staging.lock().unwrap();
-            buf.copy_from_slice(&staging[root]);
+            let slot = self.inner.staging[root].read().unwrap();
+            buf.copy_from_slice(&slot);
         }
         self.inner.barrier.wait();
     }
@@ -187,6 +220,65 @@ mod tests {
     }
 
     #[test]
+    fn striped_allreduce_bitwise_across_edge_lengths() {
+        // Lengths around the stripe boundaries: shorter than the group
+        // (empty tail stripes), exactly divisible, off-by-one, and a
+        // value-pattern where f32 addition order matters.
+        for n in [2usize, 3, 4, 8] {
+            for len in [0usize, 1, n - 1, n, n + 1, 37, 1 << 10] {
+                let got = run_threads(n, len, |c, buf| c.all_reduce_mean(buf));
+                let mut refbufs: Vec<Vec<f32>> = (0..n)
+                    .map(|r| (0..len).map(|i| (r * len + i) as f32).collect())
+                    .collect();
+                let mut refs: Vec<&mut [f32]> =
+                    refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                group::all_reduce_mean(&mut refs);
+                for r in 0..n {
+                    assert_eq!(got[r], refbufs[r], "n={n} len={len} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_allreduce_order_sensitive_values_bitwise() {
+        // Magnitude-staggered values make f32 addition order observable:
+        // any deviation from the rank-0..n fold changes the result.
+        let n = 4;
+        let len = 23;
+        let comms = ThreadComm::group(n);
+        let make = |r: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| {
+                    let m = [1e8f32, 1.0, -1e8, 3.0][r];
+                    m + (i as f32) * 0.125
+                })
+                .collect()
+        };
+        let mut got = vec![Vec::new(); n];
+        let make = &make;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut buf = make(c.rank());
+                        c.all_reduce_mean(&mut buf);
+                        buf
+                    })
+                })
+                .collect();
+            for (r, h) in handles.into_iter().enumerate() {
+                got[r] = h.join().unwrap();
+            }
+        });
+        let mut refbufs: Vec<Vec<f32>> = (0..n).map(make).collect();
+        let mut refs: Vec<&mut [f32]> = refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        group::all_reduce_mean(&mut refs);
+        assert_eq!(got, refbufs);
+    }
+
+    #[test]
     fn threaded_allgather_matches_sequential() {
         let n = 3;
         let len = 10;
@@ -203,17 +295,18 @@ mod tests {
 
     #[test]
     fn threaded_reduce_scatter_matches_sequential() {
-        let n = 4;
-        let len = 16;
-        let spec = ShardSpec::new(len, n);
-        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
-        let sh = shards.clone();
-        let got = run_threads(n, len, move |c, buf| c.reduce_scatter_mean(buf, &sh));
-        let mut refbufs: Vec<Vec<f32>> =
-            (0..n).map(|r| (0..len).map(|i| (r * len + i) as f32).collect()).collect();
-        let mut refs: Vec<&mut [f32]> = refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
-        group::reduce_scatter_mean(&mut refs, &shards);
-        assert_eq!(got, refbufs);
+        for (n, len) in [(4usize, 16usize), (3, 7), (8, 8), (2, 1)] {
+            let spec = ShardSpec::new(len, n);
+            let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+            let sh = shards.clone();
+            let got = run_threads(n, len, move |c, buf| c.reduce_scatter_mean(buf, &sh));
+            let mut refbufs: Vec<Vec<f32>> =
+                (0..n).map(|r| (0..len).map(|i| (r * len + i) as f32).collect()).collect();
+            let mut refs: Vec<&mut [f32]> =
+                refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_mean(&mut refs, &shards);
+            assert_eq!(got, refbufs, "n={n} len={len}");
+        }
     }
 
     #[test]

@@ -16,6 +16,15 @@
 //! synchronization is a barrier at `max(clocks) + sync_exposed`.  A-EDiT
 //! replaces the fixed-τ trigger with a deadline of `τ_time` seconds, so
 //! fast replicas genuinely run more inner steps per round (§3.3).
+//!
+//! Hot-path discipline: all per-round buffers live in the
+//! [`SyncScratch`] arena and all per-round communication charges and
+//! step timings are precomputed in a [`CommPlan`], so `synchronize()`,
+//! `ddp_step()` and `inner_step()` perform **zero heap allocations** in
+//! steady state (asserted by `tests/sync_steady_state.rs`).  The sync
+//! round itself is a single fused pass per module — pseudo-gradient +
+//! norm, weighted combine + norm, clip-β folded into the outer apply —
+//! instead of the historical collect-then-scatter shape.
 
 use anyhow::Result;
 
@@ -24,14 +33,21 @@ use crate::data::{Corpus, Split};
 use crate::metrics::RunTracker;
 use crate::runtime::Engine;
 use crate::simulator::stepmodel::StepModel;
-use crate::tensor::{self, ModuleTable};
+use crate::tensor::ModuleTable;
 use crate::util::prng::Rng;
 
 use super::mesh::MeshSpec;
 use super::method::Method;
 use super::outer::{OuterOpt, OuterOptKind};
-use super::penalty::{self, AnomalyDetector, PenaltyConfig};
+use super::penalty::{AnomalyDetector, PenaltyConfig};
 use super::schedule::LrSchedule;
+use super::scratch::SyncScratch;
+
+/// Upper bound on the per-replica loss-trace reservation (entries; 16 B
+/// each ⇒ 16 MB per replica). Up to this many inner steps the trace
+/// never reallocates — the boundary of the steady-state zero-allocation
+/// invariant for very long runs.
+pub const LOSS_TRACE_CAP: u64 = 1 << 20;
 
 /// Straggler injection (paper §4.3, Fig. 5).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -165,6 +181,54 @@ pub struct RunSummary {
     pub comm: CommStats,
 }
 
+/// Precomputed per-round communication charges and step timings.
+///
+/// `MeshSpec::sync_group`/`shard_group` allocate rank vectors and the
+/// α-β formulas are pure functions of (mesh, cost, param bytes), so the
+/// trainer resolves them once at construction (and again after an
+/// elastic rescale) instead of per step / per module. This is also the
+/// fix for the historical accounting bug: *every* sync group row and
+/// *every* shard group column is charged, not just group 0.
+#[derive(Debug, Clone, Default)]
+struct CommPlan {
+    /// (bytes, seconds) of one shard all-reduce per mesh row (sync group).
+    sync_allreduce: Vec<(usize, f64)>,
+    /// (bytes, seconds) of one scalar-norm exchange per mesh column
+    /// (shard group) — charged once per module during EDiT sync.
+    scalar_sync: Vec<(usize, f64)>,
+    /// Simulated duration of one local / one DDP inner step.
+    step_time_local: f64,
+    step_time_ddp: f64,
+    /// Exposed sync barrier cost for the configured method.
+    sync_exposed: f64,
+}
+
+impl CommPlan {
+    fn build(step_model: &StepModel, method: Method, param_count: usize) -> Self {
+        let mesh = step_model.mesh;
+        let shard_bytes = param_count * 4 / mesh.shard;
+        let mut plan = CommPlan {
+            step_time_local: step_model.inner_step(false),
+            step_time_ddp: step_model.inner_step(true),
+            sync_exposed: step_model.sync_exposed(method),
+            ..Default::default()
+        };
+        for row in 0..mesh.shard {
+            let group = mesh.sync_group(row);
+            plan.sync_allreduce.push((
+                shard_bytes,
+                step_model.cost.time(CollOp::AllReduce, shard_bytes, &group),
+            ));
+        }
+        for col in 0..mesh.replicas {
+            let group = mesh.shard_group(col);
+            plan.scalar_sync
+                .push((4, step_model.cost.time(CollOp::ScalarSync, 4, &group)));
+        }
+        plan
+    }
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     engine: Engine,
@@ -185,10 +249,17 @@ pub struct Trainer {
     pub global_step: u64,
     pub syncs: u64,
     pjrt_calls: u64,
+    /// `EDIT_DEBUG_NORMS` read once at construction (the per-module
+    /// env lookup used to sit inside the sync hot loop).
+    debug_norms: bool,
+    /// Per-replica loss-trace capacity reserved up front so steady-state
+    /// recording never reallocates.
+    loss_capacity: usize,
+    plan: CommPlan,
     // reusable scratch
     grad_buf: Vec<f32>,
     grad_acc: Vec<f32>,
-    deltas: Vec<Vec<f32>>,
+    scratch: SyncScratch,
 }
 
 impl Trainer {
@@ -202,8 +273,23 @@ impl Trainer {
         let init = engine.init_params()?;
         let n = init.len();
         let table = engine.manifest.table.clone();
-        let replicas: Vec<Replica> =
-            (0..cfg.mesh.replicas).map(|_| Replica::new(init.clone())).collect();
+        // Loss-trace reservation: total_steps plus one round of A-EDiT
+        // slack (fast replicas run up to 4τ extra steps). The cap bounds
+        // memory for open-ended runs (total_steps = u64::MAX) at 16 MB
+        // per replica; it is also the stated bound of the zero-allocation
+        // invariant — runs past LOSS_TRACE_CAP inner steps reallocate the
+        // trace amortized (see `coordinator::scratch` docs).
+        let loss_capacity = cfg
+            .total_steps
+            .saturating_add(cfg.tau.saturating_mul(4))
+            .min(LOSS_TRACE_CAP) as usize;
+        let replicas: Vec<Replica> = (0..cfg.mesh.replicas)
+            .map(|_| {
+                let mut r = Replica::new(init.clone());
+                r.losses.reserve(loss_capacity);
+                r
+            })
+            .collect();
         let detector =
             AnomalyDetector::new(cfg.mesh.replicas, table.num_modules(), cfg.penalty);
         let step_model = StepModel {
@@ -214,21 +300,44 @@ impl Trainer {
             cpu_offload: false,
         };
         let rng = Rng::new(cfg.seed ^ 0x7123_55AA);
+        let [b, s1] = engine.manifest.token_shape;
+        let scratch = SyncScratch::new(&table, cfg.mesh.replicas, b * s1);
+        let plan = CommPlan::build(&step_model, cfg.method, n);
+        let mut tracker = RunTracker::new();
+        // The tracker records once per round for step-synced local-SGD
+        // methods (plus once per warmup DDP step), so reserving per-step
+        // capacity would overshoot by ~τ. Baseline records every step and
+        // A-EDiT's steps-per-round varies (1..4τ), so both keep the
+        // conservative per-step bound.
+        let tracker_capacity = if cfg.method.is_local_sgd() && !cfg.method.time_based_sync() {
+            cfg.t_warm
+                .saturating_add(
+                    cfg.total_steps.saturating_sub(cfg.t_warm) / cfg.tau.max(1),
+                )
+                .saturating_add(2)
+                .min(LOSS_TRACE_CAP) as usize
+        } else {
+            loss_capacity
+        };
+        tracker.reserve(tracker_capacity);
         Ok(Self {
             outer: OuterOpt::new(cfg.outer, n),
             detector,
             pending: Default::default(),
             step_model,
             rng,
-            tracker: RunTracker::new(),
+            tracker,
             comm: CommStats::default(),
             sim_time: 0.0,
             global_step: 0,
             syncs: 0,
             pjrt_calls: 0,
+            debug_norms: std::env::var("EDIT_DEBUG_NORMS").is_ok(),
+            loss_capacity,
+            plan,
             grad_buf: vec![0.0; n],
             grad_acc: vec![0.0; n],
-            deltas: Vec::new(),
+            scratch,
             anchor: init,
             replicas,
             table,
@@ -246,20 +355,25 @@ impl Trainer {
         self.pjrt_calls
     }
 
-    fn batch_for(&self, replica: usize, step: u64) -> Vec<i32> {
+    /// Fill the scratch token buffer with the batch for (replica, step).
+    /// Batch row r draws from physical worker (row = r mod M, col = j):
+    /// the column's M data-parallel workers interleave into the
+    /// effective column batch.
+    fn fill_batch(&mut self, replica: usize, step: u64) {
         let [b, s1] = self.engine.manifest.token_shape;
-        // Batch row r draws from physical worker (row = r mod M, col = j):
-        // the column's M data-parallel workers interleave into the
-        // effective column batch.
         let m = self.cfg.mesh.shard;
-        let mut out = Vec::with_capacity(b * s1);
+        self.scratch.tokens.clear();
         for r in 0..b {
             let worker = self.cfg.mesh.rank(r % m, replica);
-            let seq =
-                self.corpus.sequence(Split::Train, worker, step, r / m, s1);
-            out.extend(seq.iter().map(|&t| t as i32));
+            self.corpus.sequence_into(
+                Split::Train,
+                worker,
+                step,
+                r / m,
+                s1,
+                &mut self.scratch.tokens,
+            );
         }
-        out
     }
 
     fn straggler_lag(&mut self, replica: usize) -> f64 {
@@ -289,23 +403,23 @@ impl Trainer {
         self.grad_acc.fill(0.0);
         let mut mean_loss = 0.0f64;
         for j in 0..n {
-            let batch = self.batch_for(j, self.replicas[j].inner_steps);
+            self.fill_batch(j, self.replicas[j].inner_steps);
             let out = self.engine.grad_step(
                 &self.replicas[j].params,
-                &batch,
+                &self.scratch.tokens,
                 &mut self.grad_buf,
             )?;
             self.pjrt_calls += 1;
-            tensor::axpy(&mut self.grad_acc, 1.0 / n as f32, &self.grad_buf);
+            crate::tensor::axpy(&mut self.grad_acc, 1.0 / n as f32, &self.grad_buf);
             mean_loss += out.loss as f64 / n as f64;
             let gs = self.global_step;
             self.replicas[j].losses.push((gs, out.loss));
         }
-        // Gradient all-reduce across sync groups: account per-worker cost.
-        let group = self.cfg.mesh.sync_group(0);
-        let shard_bytes = self.num_params() * 4 / self.cfg.mesh.shard;
-        let t = self.step_model.cost.time(CollOp::AllReduce, shard_bytes, &group);
-        self.comm.record(shard_bytes, t);
+        // Gradient all-reduce: each worker all-reduces its grad shard
+        // across its sync group — one charge per mesh row.
+        for &(bytes, secs) in &self.plan.sync_allreduce {
+            self.comm.record(bytes, secs);
+        }
 
         // Apply once, copy to all replicas (they are identical under DDP).
         let adam_t = self.replicas[0].adam_t + 1;
@@ -331,7 +445,7 @@ impl Trainer {
             r.adam_t = adam_t;
         }
         // Clocks: everyone waits for the slowest (synchronous step).
-        let step_time = self.step_model.inner_step(true);
+        let step_time = self.plan.step_time_ddp;
         let mut max_clock: f64 = 0.0;
         for j in 0..self.replicas.len() {
             let lag = self.straggler_lag(j);
@@ -351,30 +465,32 @@ impl Trainer {
         Ok(())
     }
 
-    /// One local inner step on replica `j`.
-    fn inner_step(&mut self, j: usize, losses: &mut Vec<f64>) -> Result<()> {
-        let step_for_lr = self.global_step + (self.replicas[j].inner_steps
-            - self.replicas.iter().map(|r| r.inner_steps).min().unwrap_or(0));
+    /// One local inner step on replica `j`; returns its loss.
+    fn inner_step(&mut self, j: usize) -> Result<f32> {
+        let min_steps = self.replicas.iter().map(|r| r.inner_steps).min().unwrap_or(0);
+        let step_for_lr = self.global_step + (self.replicas[j].inner_steps - min_steps);
         let lr = self.cfg.inner_lr.at(step_for_lr.min(self.cfg.total_steps)) as f32;
-        let batch = self.batch_for(j, self.replicas[j].inner_steps);
+        self.fill_batch(j, self.replicas[j].inner_steps);
         let lag = self.straggler_lag(j);
-        let step_time = self.step_model.inner_step(false);
-        let poisons = self.cfg.poison.clone();
-        let syncs_now = self.syncs;
-        let seed = self.cfg.seed;
+        let step_time = self.plan.step_time_local;
         let r = &mut self.replicas[j];
         r.adam_t += 1;
         let adam_t = r.adam_t;
-        let out = self
-            .engine
-            .train_step(&mut r.params, &mut r.m, &mut r.v, &batch, lr, adam_t)?;
+        let out = self.engine.train_step(
+            &mut r.params,
+            &mut r.m,
+            &mut r.v,
+            &self.scratch.tokens,
+            lr,
+            adam_t,
+        )?;
         self.pjrt_calls += 1;
         // Fault injection: corrupt the sick replica's state (see Poison).
-        for p in &poisons {
+        for p in &self.cfg.poison {
             let sick = p.replica == usize::MAX || p.replica == j;
-            if sick && syncs_now >= p.from_sync && syncs_now < p.to_sync {
-                let mut prng = crate::util::prng::Rng::new(crate::util::prng::mix(
-                    seed ^ 0xBAD,
+            if sick && self.syncs >= p.from_sync && self.syncs < p.to_sync {
+                let mut prng = Rng::new(crate::util::prng::mix(
+                    self.cfg.seed ^ 0xBAD,
                     (j as u64) << 32 | r.inner_steps,
                 ));
                 for x in r.params.iter_mut() {
@@ -386,15 +502,15 @@ impl Trainer {
         r.inner_steps += 1;
         let gs = self.global_step + 1;
         r.losses.push((gs, out.loss));
-        losses.push(out.loss as f64);
-        Ok(())
+        Ok(out.loss)
     }
 
     /// One local-SGD round: τ inner steps per replica (or τ_time worth
     /// for A-EDiT), then synchronization.
     fn local_round(&mut self) -> Result<()> {
         let n = self.replicas.len();
-        let mut losses = Vec::new();
+        let mut loss_sum = 0.0f64;
+        let mut loss_count = 0u64;
         let mut max_steps = 0u64;
 
         if self.cfg.method.time_based_sync() {
@@ -404,7 +520,8 @@ impl Trainer {
                 while (self.replicas[j].clock < deadline || steps == 0)
                     && steps < self.cfg.tau * 4
                 {
-                    self.inner_step(j, &mut losses)?;
+                    loss_sum += self.inner_step(j)? as f64;
+                    loss_count += 1;
                     steps += 1;
                 }
                 max_steps = max_steps.max(steps);
@@ -414,115 +531,101 @@ impl Trainer {
             let tau = self.cfg.tau.min(remaining.max(1));
             for j in 0..n {
                 for _ in 0..tau {
-                    self.inner_step(j, &mut losses)?;
+                    loss_sum += self.inner_step(j)? as f64;
+                    loss_count += 1;
                 }
             }
             max_steps = tau;
         }
 
         self.global_step += max_steps;
-        let mean_loss = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        let mean_loss = loss_sum / loss_count.max(1) as f64;
         self.tracker.record_loss(self.global_step, mean_loss);
         self.synchronize()?;
         Ok(())
     }
 
-    /// The outer synchronization (Alg. 1 lines 7-9 / Alg. 2).
+    /// The outer synchronization (Alg. 1 lines 7-9 / Alg. 2): one fused
+    /// pass per module over the scratch arena — no allocations, no
+    /// collect-then-scatter staging.
     fn synchronize(&mut self) -> Result<()> {
         let n = self.replicas.len();
-        let p = self.num_params();
-
-        // Pseudo gradients Δ_j = θ_{t,τ}^{(j)} − θ_t.
-        if self.deltas.len() != n {
-            self.deltas = vec![vec![0.0; p]; n];
-        }
-        for (j, d) in self.deltas.iter_mut().enumerate() {
-            tensor::sub(d, &self.replicas[j].params, &self.anchor);
-        }
+        self.scratch.ensure_replicas(n);
 
         // Communication accounting: each worker all-reduces its parameter
-        // shard across its sync group (size n), inter-node.
-        let group = self.cfg.mesh.sync_group(0);
-        let shard_bytes = p * 4 / self.cfg.mesh.shard;
-        let t_comm = self
-            .step_model
-            .cost
-            .time(CollOp::AllReduce, shard_bytes, &group);
-        self.comm.record(shard_bytes, t_comm);
+        // shard across its sync group — one charge per mesh row.
+        for &(bytes, secs) in &self.plan.sync_allreduce {
+            self.comm.record(bytes, secs);
+        }
 
         let mut rollbacks = 0u64;
         if self.cfg.method.uses_penalty() {
             self.detector.set_config(self.cfg.penalty);
             // Layer-wise EDiT sync: per-module screen → combine → outer.
+            // Module ranges partition the flat vector and each apply only
+            // touches its own module, so computing Δ lazily per module
+            // from the in-place-updated anchor is exact.
             for module in 0..self.table.num_modules() {
-                let ranges = self.table.module_ranges(module);
-                let norms: Vec<f64> = (0..n)
-                    .map(|j| {
-                        self.table.module_sq_norm(&self.deltas[j], module).sqrt()
-                    })
-                    .collect();
-                if std::env::var("EDIT_DEBUG_NORMS").is_ok() {
-                    eprintln!("sync {} module {module}: norms {norms:?}", self.syncs);
+                {
+                    let replicas = &self.replicas;
+                    self.scratch.load_module(
+                        module,
+                        |j| replicas[j].params.as_slice(),
+                        &self.anchor,
+                    );
                 }
-                let screened = self.detector.screen(module, &norms);
-                // Scalar norm exchange in the shard group (cheap).
-                self.comm.record(
-                    4,
-                    self.step_model.cost.time(
-                        CollOp::ScalarSync,
-                        4,
-                        &self.cfg.mesh.shard_group(0),
-                    ),
-                );
-                // Combine each range with module-level weights/clip: build
-                // the module-contiguous view, combine, then scatter back.
-                let weights =
-                    penalty::softmax_neg_weights(&screened, self.cfg.penalty.weighted_averaging);
-                if weights.iter().all(|&w| w == 0.0) {
+                if self.debug_norms {
+                    eprintln!(
+                        "sync {} module {module}: norms {:?}",
+                        self.syncs,
+                        self.scratch.norms()
+                    );
+                }
+                {
+                    let (norms, screened) = self.scratch.screen_buffers();
+                    self.detector.screen_into(module, norms, screened);
+                }
+                // Scalar norm exchange in every shard group (cheap).
+                for &(bytes, secs) in &self.plan.scalar_sync {
+                    self.comm.record(bytes, secs);
+                }
+                if !self.scratch.compute_weights(self.cfg.penalty.weighted_averaging) {
                     rollbacks += 1;
                     continue; // θ stays at anchor for this module (rollback)
                 }
-                // Weighted sum per range, collecting the module norm.
-                let mut module_sq = 0.0f64;
-                let mut combined: Vec<(usize, Vec<f32>)> = Vec::with_capacity(ranges.len());
-                for r in &ranges {
-                    let mut out = vec![0.0f32; r.len];
-                    let rows: Vec<&[f32]> = self
-                        .deltas
-                        .iter()
-                        .map(|d| &d[r.offset..r.offset + r.len])
-                        .collect();
-                    tensor::weighted_sum_into(&mut out, &rows, &weights);
-                    module_sq += tensor::sq_norm(&out);
-                    combined.push((r.offset, out));
-                }
+                // Fused weighted combine + module norm, then the outer
+                // apply with clip-β folded in.
+                let module_sq = self.scratch.combine_module(module);
                 let mut beta = 1.0f64;
                 if self.cfg.penalty.gradient_clip {
                     let norm = module_sq.sqrt();
                     beta = (self.cfg.penalty.phi / (norm + self.cfg.penalty.eps)).min(1.0);
                 }
-                for (off, mut delta) in combined {
-                    if beta < 1.0 {
-                        tensor::scale(&mut delta, beta as f32);
-                    }
-                    self.outer.apply_range(&mut self.anchor, &delta, off);
-                }
+                self.scratch
+                    .apply_module(module, &mut self.outer, &mut self.anchor, beta as f32);
             }
             self.detector.advance();
         } else {
             // Uniform averaging (PLS/DiLoCo/CO2): mean pseudo gradient.
-            let rows: Vec<&[f32]> = self.deltas.iter().map(|d| d.as_slice()).collect();
-            let mut mean = vec![0.0f32; p];
-            tensor::mean_into(&mut mean, &rows);
+            {
+                let replicas = &self.replicas;
+                self.scratch
+                    .load_full(|j| replicas[j].params.as_slice(), &self.anchor);
+            }
             let staleness = self.cfg.method.outer_staleness();
             if staleness == 0 {
-                self.outer.apply(&mut self.anchor, &mean);
+                let mean = self.scratch.mean_deltas();
+                self.outer.apply(&mut self.anchor, mean);
             } else {
                 // CO2: apply the update combined `staleness` rounds ago.
-                self.pending.push_back(mean);
+                // Queue buffers are recycled through the scratch free list.
+                let mut buf = self.scratch.take_spare();
+                self.scratch.mean_deltas_into(&mut buf);
+                self.pending.push_back(buf);
                 if self.pending.len() > staleness {
                     let stale = self.pending.pop_front().unwrap();
                     self.outer.apply(&mut self.anchor, &stale);
+                    self.scratch.put_spare(stale);
                 }
             }
         }
@@ -538,7 +641,7 @@ impl Trainer {
             .iter()
             .map(|r| r.clock)
             .fold(0.0f64, f64::max);
-        let after = max_clock + self.step_model.sync_exposed(self.cfg.method);
+        let after = max_clock + self.plan.sync_exposed;
         for r in &mut self.replicas {
             r.clock = after;
         }
@@ -560,7 +663,6 @@ impl Trainer {
                 self.sim_time,
             );
         }
-        let _ = rollbacks; // counted in detector.rollbacks below
         if rollbacks > 0 {
             self.detector.rollbacks += rollbacks;
         }
@@ -657,8 +759,10 @@ impl Trainer {
         let template = Replica::new(self.anchor.clone());
         let adam_t = self.replicas[0].adam_t;
         let clock = self.sim_time;
+        let loss_capacity = self.loss_capacity;
         self.replicas.resize_with(new_replicas, || {
             let mut r = template.clone();
+            r.losses.reserve(loss_capacity);
             r.adam_t = adam_t;
             r.clock = clock;
             r
@@ -670,7 +774,8 @@ impl Trainer {
         self.cfg.mesh = MeshSpec::new(self.cfg.mesh.shard, new_replicas);
         self.step_model.mesh = self.cfg.mesh;
         self.detector.resize_replicas(new_replicas);
-        self.deltas.clear();
+        self.scratch.ensure_replicas(new_replicas);
+        self.plan = CommPlan::build(&self.step_model, self.cfg.method, self.num_params());
         Ok(())
     }
 

@@ -8,7 +8,9 @@
 //!                  anomaly elimination, softmax(-norm) weighted
 //!                  averaging, pseudo-gradient clipping, rollback;
 //! * [`outer`]    — outer optimizers (SGD / Nesterov over pseudo grads);
-//! * [`schedule`] — inner LR schedules.
+//! * [`schedule`] — inner LR schedules;
+//! * [`scratch`]  — the preallocated `SyncScratch` arena behind the
+//!                  zero-allocation synchronization pipeline.
 
 pub mod engine;
 pub mod mesh;
@@ -16,6 +18,7 @@ pub mod method;
 pub mod outer;
 pub mod penalty;
 pub mod schedule;
+pub mod scratch;
 
 pub use engine::{Poison, Replica, RunSummary, Straggler, TrainConfig, Trainer};
 pub use mesh::MeshSpec;
@@ -23,3 +26,4 @@ pub use method::Method;
 pub use outer::{OuterOpt, OuterOptKind};
 pub use penalty::{AnomalyDetector, PenaltyConfig};
 pub use schedule::LrSchedule;
+pub use scratch::SyncScratch;

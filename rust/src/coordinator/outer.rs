@@ -52,20 +52,38 @@ impl OuterOpt {
     /// restricted to `[off, off+len)` (per-module application for the
     /// layer-wise EDiT sync; pass the full range otherwise).
     pub fn apply_range(&mut self, params: &mut [f32], delta: &[f32], off: usize) {
+        self.apply_range_scaled(params, delta, off, 1.0);
+    }
+
+    /// [`Self::apply_range`] with the clip factor β fused in: each
+    /// element applies β·delta[i] (one rounding for the scale, then the
+    /// update — bitwise identical to scaling the delta first). The sync
+    /// pipeline uses this so gradient clipping costs no extra pass over
+    /// the combined pseudo gradient.
+    pub fn apply_range_scaled(
+        &mut self,
+        params: &mut [f32],
+        delta: &[f32],
+        off: usize,
+        beta: f32,
+    ) {
         match self.kind {
             OuterOptKind::Sgd { lr } => {
-                let lr = lr as f32;
-                for (p, &d) in params[off..off + delta.len()].iter_mut().zip(delta) {
-                    *p += lr * d;
-                }
+                crate::tensor::kernels::scale_axpy(
+                    &mut params[off..off + delta.len()],
+                    lr as f32,
+                    beta,
+                    delta,
+                );
             }
             OuterOptKind::Nesterov { lr, momentum } => {
                 let (lr, mu) = (lr as f32, momentum as f32);
-                for (i, &d) in delta.iter().enumerate() {
-                    let g = -d;
-                    let m = &mut self.momentum[off + i];
+                let params = &mut params[off..off + delta.len()];
+                let moment = &mut self.momentum[off..off + delta.len()];
+                for ((p, m), &d) in params.iter_mut().zip(moment.iter_mut()).zip(delta) {
+                    let g = -(beta * d);
                     *m = mu * *m + g;
-                    params[off + i] -= lr * (g + mu * *m);
+                    *p -= lr * (g + mu * *m);
                 }
             }
         }
@@ -138,6 +156,32 @@ mod tests {
         // zero delta: momentum keeps pushing (coasting), decayed by μ
         nes.apply(&mut p, &[0.0, 0.0]);
         assert!(p[0] > v1);
+    }
+
+    #[test]
+    fn scaled_apply_equals_scale_then_apply() {
+        check("outer-scaled-apply", 25, |g| {
+            let n = g.len() * 4;
+            let delta = g.vec_f32(n, 1.0);
+            let start = g.vec_f32(n, 1.0);
+            let beta = 0.25 + g.rng.f32() * 0.75;
+            for kind in [
+                OuterOptKind::Sgd { lr: 0.7 },
+                OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 },
+            ] {
+                let mut fused = OuterOpt::new(kind, n);
+                let mut p_fused = start.clone();
+                fused.apply_range_scaled(&mut p_fused, &delta, 0, beta);
+
+                let mut two_pass = OuterOpt::new(kind, n);
+                let mut p_two = start.clone();
+                let scaled: Vec<f32> = delta.iter().map(|&d| beta * d).collect();
+                two_pass.apply(&mut p_two, &scaled);
+
+                assert_eq!(p_fused, p_two, "{kind:?}");
+                assert_eq!(fused.momentum, two_pass.momentum, "{kind:?}");
+            }
+        });
     }
 
     #[test]

@@ -155,12 +155,14 @@ impl AnomalyDetector {
         self.cfg = cfg;
     }
 
-    /// Screen per-replica norms for one module; returns norms with
-    /// anomalous entries replaced by +inf, and updates EMA state.
-    /// Call once per sync per module, replicas in fixed order.
-    pub fn screen(&mut self, module: usize, norms: &[f64]) -> Vec<f64> {
+    /// Screen per-replica norms for one module into `out` (cleared
+    /// first): anomalous entries are replaced by +inf and EMA state is
+    /// updated. Call once per sync per module, replicas in fixed order.
+    /// Allocation-free when `out` already has capacity for the replicas
+    /// (the `SyncScratch` arena guarantees this in steady state).
+    pub fn screen_into(&mut self, module: usize, norms: &[f64], out: &mut Vec<f64>) {
         let in_warmup = self.syncs_seen < self.cfg.warmup_syncs;
-        let mut out = Vec::with_capacity(norms.len());
+        out.clear();
         for (replica, &g) in norms.iter().enumerate() {
             let idx = replica * self.modules + module;
             let anomalous = self.cfg.anomaly_elimination
@@ -176,6 +178,12 @@ impl AnomalyDetector {
                 out.push(g);
             }
         }
+    }
+
+    /// Allocating convenience wrapper around [`Self::screen_into`].
+    pub fn screen(&mut self, module: usize, norms: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(norms.len());
+        self.screen_into(module, norms, &mut out);
         out
     }
 
@@ -200,32 +208,53 @@ pub struct CombineOut {
     pub rollback: bool,
 }
 
-/// Weighted-average weights from screened norms (Eq. 2), stabilized by
-/// shifting by the min finite norm. All-anomalous ⇒ all-zero weights.
-pub fn softmax_neg_weights(norms: &[f64], weighted: bool) -> Vec<f32> {
-    let finite: Vec<bool> = norms.iter().map(|g| g.is_finite()).collect();
-    let n_finite = finite.iter().filter(|&&f| f).count();
+/// Weighted-average weights from screened norms (Eq. 2) into `out`
+/// (cleared first), stabilized by shifting by the min finite norm.
+/// Returns `false` when every replica is anomalous (all-zero weights ⇒
+/// rollback). Allocation-free when `out` has capacity for the replicas.
+pub fn softmax_neg_weights_into(out: &mut Vec<f32>, norms: &[f64], weighted: bool) -> bool {
+    out.clear();
+    let mut n_finite = 0usize;
+    let mut gmin = f64::INFINITY;
+    for &g in norms {
+        if g.is_finite() {
+            n_finite += 1;
+            gmin = gmin.min(g);
+        }
+    }
     if n_finite == 0 {
-        return vec![0.0; norms.len()];
+        out.extend(norms.iter().map(|_| 0.0f32));
+        return false;
     }
     if !weighted {
         // Ablation w/o WA: uniform over non-anomalous replicas.
         let w = 1.0 / n_finite as f32;
-        return finite.iter().map(|&f| if f { w } else { 0.0 }).collect();
+        out.extend(norms.iter().map(|&g| if g.is_finite() { w } else { 0.0 }));
+        return true;
     }
-    let gmin = norms
+    // exp is evaluated twice per norm instead of staging raws in a heap
+    // buffer: the group size is the replica count (~8), so recomputation
+    // is cheaper than an allocation in the per-module hot loop.
+    let total: f64 = norms
         .iter()
-        .zip(&finite)
-        .filter(|(_, &f)| f)
-        .map(|(&g, _)| g)
-        .fold(f64::INFINITY, f64::min);
-    let raw: Vec<f64> = norms
-        .iter()
-        .zip(&finite)
-        .map(|(&g, &f)| if f { (-(g - gmin)).exp() } else { 0.0 })
-        .collect();
-    let total: f64 = raw.iter().sum();
-    raw.iter().map(|&r| (r / total) as f32).collect()
+        .filter(|g| g.is_finite())
+        .map(|&g| (-(g - gmin)).exp())
+        .sum();
+    out.extend(norms.iter().map(|&g| {
+        if g.is_finite() {
+            ((-(g - gmin)).exp() / total) as f32
+        } else {
+            0.0
+        }
+    }));
+    true
+}
+
+/// Allocating convenience wrapper around [`softmax_neg_weights_into`].
+pub fn softmax_neg_weights(norms: &[f64], weighted: bool) -> Vec<f32> {
+    let mut out = Vec::with_capacity(norms.len());
+    softmax_neg_weights_into(&mut out, norms, weighted);
+    out
 }
 
 /// Full Alg. 2 combine for one module across replicas.
@@ -244,10 +273,11 @@ pub fn combine(
     }
     let len = deltas[0].len();
     let mut out = vec![0.0f32; len];
-    tensor::weighted_sum_into(&mut out, deltas, &weights);
+    // Fused: weighted combine + its squared norm in one sweep.
+    let sq = tensor::kernels::weighted_sum_sq_into(&mut out, deltas, &weights);
     let mut beta = 1.0;
     if cfg.gradient_clip {
-        let norm = tensor::norm(&out);
+        let norm = sq.sqrt();
         beta = (cfg.phi / (norm + cfg.eps)).min(1.0);
         if beta < 1.0 {
             tensor::scale(&mut out, beta as f32);

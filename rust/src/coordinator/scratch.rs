@@ -1,0 +1,416 @@
+//! `SyncScratch` — the preallocated arena behind the zero-allocation
+//! synchronization pipeline.
+//!
+//! # Ownership rules
+//!
+//! One `SyncScratch` is owned by each [`super::engine::Trainer`] and
+//! lives as long as the trainer. Every buffer inside it is sized once
+//! (at construction, or at [`Self::ensure_replicas`] after an elastic
+//! rescale) and then only `clear()`ed / overwritten, so after the first
+//! full round at a given mesh size — "warm-up" — the trainer's
+//! `synchronize()`, `ddp_step()` and `inner_step()` perform **zero heap
+//! allocations**. `tests/sync_steady_state.rs` asserts this with a
+//! counting global allocator.
+//!
+//! One stated bound: the per-replica loss traces are reserved up front
+//! for `min(total_steps + 4τ, LOSS_TRACE_CAP = 2^20)` entries. Runs
+//! whose replicas exceed 2^20 inner steps reallocate the trace
+//! (amortized doubling) — a deliberate memory/garbage trade-off for
+//! open-ended runs, outside the invariant.
+//!
+//! Contents:
+//!  * the pseudo-gradient matrix Δ (row j = replica j, one flat
+//!    row-major `Vec<f32>` so per-module combines read strided rows
+//!    without materializing `Vec<&[f32]>` views);
+//!  * the module-contiguous combine buffer (max module length) that the
+//!    per-range weighted sums land in before the outer apply;
+//!  * per-replica norm / screened-norm / weight vectors;
+//!  * the cached per-module range lists (`ModuleTable::module_ranges`
+//!    allocates; the sync loop must not);
+//!  * the token batch buffer filled by `Corpus::sequence_into`;
+//!  * the full-vector mean buffer for the uniform-averaging methods and
+//!    a spare-buffer free list that recycles the CO2 staleness queue's
+//!    entries.
+//!
+//! The combine methods use the fused kernels (`tensor::kernels`): the
+//! pseudo-gradient subtraction and per-module norms are one sweep
+//! ([`kernels::sub_sq_norm_into`]), the weighted combine and its norm
+//! are one sweep ([`kernels::weighted_sum_sq_strided`]), and the clip-β
+//! scale rides inside the outer-optimizer apply
+//! ([`super::outer::OuterOpt::apply_range_scaled`]).
+
+use crate::tensor::kernels;
+use crate::tensor::table::{ModuleTable, Range};
+
+use super::outer::OuterOpt;
+use super::penalty;
+
+#[derive(Debug)]
+pub struct SyncScratch {
+    /// Row-major pseudo-gradient matrix: row j at `[j*params, (j+1)*params)`.
+    deltas: Vec<f32>,
+    /// Flat-vector length (row stride of `deltas`).
+    params: usize,
+    /// Current replica count (number of rows).
+    replicas: usize,
+    /// Module-contiguous combine buffer (len = max module length).
+    combined: Vec<f32>,
+    /// Per-replica per-module pseudo-gradient norms (‖Δ_j^(m)‖).
+    norms: Vec<f64>,
+    /// Norms after anomaly screening (+inf = eliminated).
+    screened: Vec<f64>,
+    /// softmax(-norm) combine weights.
+    weights: Vec<f32>,
+    /// Cached `table.module_ranges(m)` for every module.
+    module_ranges: Vec<Vec<Range>>,
+    /// Token batch buffer for `Corpus::sequence_into`.
+    pub tokens: Vec<i32>,
+    /// Full-vector mean pseudo gradient (uniform-averaging methods).
+    mean: Vec<f32>,
+    /// Recycled full-vector buffers for the CO2 staleness queue.
+    spare: Vec<Vec<f32>>,
+}
+
+impl SyncScratch {
+    pub fn new(table: &ModuleTable, replicas: usize, token_capacity: usize) -> Self {
+        let params = table.total;
+        let module_ranges: Vec<Vec<Range>> =
+            (0..table.num_modules()).map(|m| table.module_ranges(m)).collect();
+        let max_module_len = module_ranges
+            .iter()
+            .map(|rs| rs.iter().map(|r| r.len).sum::<usize>())
+            .max()
+            .unwrap_or(0);
+        Self {
+            deltas: vec![0.0; replicas * params],
+            params,
+            replicas,
+            combined: vec![0.0; max_module_len],
+            norms: Vec::with_capacity(replicas),
+            screened: Vec::with_capacity(replicas),
+            weights: Vec::with_capacity(replicas),
+            module_ranges,
+            tokens: Vec::with_capacity(token_capacity),
+            mean: vec![0.0; params],
+            spare: Vec::new(),
+        }
+    }
+
+    /// Resize the per-replica buffers after an elastic rescale. No-op
+    /// (and allocation-free) when the replica count is unchanged.
+    pub fn ensure_replicas(&mut self, replicas: usize) {
+        if replicas == self.replicas {
+            return;
+        }
+        self.replicas = replicas;
+        self.deltas.resize(replicas * self.params, 0.0);
+        self.norms.reserve(replicas);
+        self.screened.reserve(replicas);
+        self.weights.reserve(replicas);
+    }
+
+    pub fn num_modules(&self) -> usize {
+        self.module_ranges.len()
+    }
+
+    /// Per-replica norms computed by the last [`Self::load_module`].
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    /// Split view for `AnomalyDetector::screen_into` (reads the norms,
+    /// writes the screened vector).
+    pub fn screen_buffers(&mut self) -> (&[f64], &mut Vec<f64>) {
+        (&self.norms, &mut self.screened)
+    }
+
+    /// The screened norms written by the detector (or by
+    /// [`Self::adopt_norms_unscreened`]).
+    pub fn screened(&self) -> &[f64] {
+        &self.screened
+    }
+
+    /// Copy the raw norms into the screened slot (benches / penalty-off
+    /// paths that skip the anomaly detector).
+    pub fn adopt_norms_unscreened(&mut self) {
+        self.screened.clear();
+        let (norms, screened) = (&self.norms, &mut self.screened);
+        screened.extend_from_slice(norms);
+    }
+
+    /// Fill one module of the Δ matrix: for every replica j,
+    /// Δ_j = params_j − anchor over the module's ranges (fused with the
+    /// per-module squared norm), leaving ‖Δ_j^(m)‖ in [`Self::norms`].
+    ///
+    /// `row_params(j)` returns replica j's parameter vector; the closure
+    /// indirection lets the trainer hand in `&self.replicas[j].params`
+    /// while this arena is mutably borrowed.
+    pub fn load_module<'a, F>(&mut self, m: usize, row_params: F, anchor: &[f32])
+    where
+        F: Fn(usize) -> &'a [f32],
+    {
+        self.norms.clear();
+        for j in 0..self.replicas {
+            let row = row_params(j);
+            debug_assert_eq!(row.len(), self.params);
+            let base = j * self.params;
+            let mut sq = 0.0f64;
+            for r in &self.module_ranges[m] {
+                sq += kernels::sub_sq_norm_into(
+                    &mut self.deltas[base + r.offset..base + r.offset + r.len],
+                    &row[r.offset..r.offset + r.len],
+                    &anchor[r.offset..r.offset + r.len],
+                );
+            }
+            self.norms.push(sq.sqrt());
+        }
+    }
+
+    /// Fill the whole Δ matrix (uniform-averaging path; no norms).
+    pub fn load_full<'a, F>(&mut self, row_params: F, anchor: &[f32])
+    where
+        F: Fn(usize) -> &'a [f32],
+    {
+        for j in 0..self.replicas {
+            let base = j * self.params;
+            kernels::sub(&mut self.deltas[base..base + self.params], row_params(j), anchor);
+        }
+    }
+
+    /// softmax(-screened) into the weight buffer; `false` ⇒ all replicas
+    /// anomalous (module rollback).
+    pub fn compute_weights(&mut self, weighted_averaging: bool) -> bool {
+        let (screened, weights) = (&self.screened, &mut self.weights);
+        penalty::softmax_neg_weights_into(weights, screened, weighted_averaging)
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// Weighted-combine module `m` into the module-contiguous buffer,
+    /// returning the combined squared norm (fused, one sweep per range).
+    pub fn combine_module(&mut self, m: usize) -> f64 {
+        let mut cursor = 0usize;
+        let mut sq = 0.0f64;
+        for r in &self.module_ranges[m] {
+            sq += kernels::weighted_sum_sq_strided(
+                &mut self.combined[cursor..cursor + r.len],
+                &self.deltas,
+                self.params,
+                r.offset,
+                &self.weights,
+            );
+            cursor += r.len;
+        }
+        sq
+    }
+
+    /// Apply the combined module through the outer optimizer with the
+    /// clip factor β fused in (no separate scale pass over the update).
+    pub fn apply_module(&self, m: usize, outer: &mut OuterOpt, anchor: &mut [f32], beta: f32) {
+        let mut cursor = 0usize;
+        for r in &self.module_ranges[m] {
+            outer.apply_range_scaled(
+                anchor,
+                &self.combined[cursor..cursor + r.len],
+                r.offset,
+                beta,
+            );
+            cursor += r.len;
+        }
+    }
+
+    /// Uniform mean of the Δ rows into the internal mean buffer.
+    pub fn mean_deltas(&mut self) -> &[f32] {
+        let w = 1.0 / self.replicas as f32;
+        self.mean.fill(0.0);
+        for j in 0..self.replicas {
+            let base = j * self.params;
+            kernels::axpy(&mut self.mean, w, &self.deltas[base..base + self.params]);
+        }
+        &self.mean
+    }
+
+    /// Like [`Self::mean_deltas`] but into a caller-owned buffer (the
+    /// CO2 staleness queue needs an owned copy).
+    pub fn mean_deltas_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.params, 0.0);
+        let w = 1.0 / self.replicas as f32;
+        for j in 0..self.replicas {
+            let base = j * self.params;
+            kernels::axpy(out, w, &self.deltas[base..base + self.params]);
+        }
+    }
+
+    /// Grab a recycled full-vector buffer (or allocate the first time).
+    pub fn take_spare(&mut self) -> Vec<f32> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the free list for reuse.
+    pub fn put_spare(&mut self, buf: Vec<f32>) {
+        self.spare.push(buf);
+    }
+
+    /// Row j of the Δ matrix (tests / benches).
+    pub fn delta_row(&self, j: usize) -> &[f32] {
+        &self.deltas[j * self.params..(j + 1) * self.params]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::outer::OuterOptKind;
+    use crate::tensor::{self, table::TensorEntry};
+
+    fn toy_table() -> ModuleTable {
+        ModuleTable::new(
+            vec![
+                TensorEntry { name: "embed".into(), shape: vec![4, 2], offset: 0, size: 8, stacked: false },
+                TensorEntry { name: "layers.b".into(), shape: vec![2, 2], offset: 8, size: 4, stacked: true },
+                TensorEntry { name: "layers.w".into(), shape: vec![2, 3, 2], offset: 12, size: 12, stacked: true },
+                TensorEntry { name: "head".into(), shape: vec![2, 2], offset: 24, size: 4, stacked: false },
+            ],
+            2,
+        )
+    }
+
+    fn rows(n: usize, p: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|j| (0..p).map(|i| ((i * (j + 2)) % 13) as f32 / 13.0 - 0.4).collect())
+            .collect()
+    }
+
+    #[test]
+    fn load_module_matches_naive_norms() {
+        let table = toy_table();
+        let p = table.total;
+        let anchor: Vec<f32> = (0..p).map(|i| (i % 7) as f32 / 7.0).collect();
+        let params = rows(3, p);
+        let mut s = SyncScratch::new(&table, 3, 0);
+        for m in 0..table.num_modules() {
+            s.load_module(m, |j| params[j].as_slice(), &anchor);
+            for j in 0..3 {
+                let mut d = vec![0.0f32; p];
+                tensor::sub(&mut d, &params[j], &anchor);
+                let want = table.module_sq_norm(&d, m).sqrt();
+                let got = s.norms()[j];
+                assert!((got - want).abs() <= 1e-9 * want.max(1.0), "m={m} j={j}");
+                // Delta rows written over the module's ranges.
+                for r in table.module_ranges(m) {
+                    assert_eq!(
+                        &s.delta_row(j)[r.offset..r.offset + r.len],
+                        &d[r.offset..r.offset + r.len]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combine_apply_matches_collect_then_scatter() {
+        // The fused per-module pipeline must reproduce the historical
+        // collect-then-scatter synchronize shape exactly (same per-element
+        // operations): weighted sum per range, module-level clip, outer
+        // apply.
+        let table = toy_table();
+        let p = table.total;
+        let anchor: Vec<f32> = (0..p).map(|i| (i % 5) as f32 / 5.0).collect();
+        let params = rows(2, p);
+        let phi = 0.8f64; // small phi so clipping engages
+        let eps = 1e-8f64;
+
+        // --- fused path -----------------------------------------------------
+        let mut s = SyncScratch::new(&table, 2, 0);
+        let mut outer_f = OuterOpt::new(OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }, p);
+        let mut anchor_f = anchor.clone();
+        for m in 0..table.num_modules() {
+            s.load_module(m, |j| params[j].as_slice(), &anchor_f);
+            s.adopt_norms_unscreened();
+            assert!(s.compute_weights(true));
+            let sq = s.combine_module(m);
+            let beta = (phi / (sq.sqrt() + eps)).min(1.0);
+            s.apply_module(m, &mut outer_f, &mut anchor_f, beta as f32);
+        }
+
+        // --- historical reference path -------------------------------------
+        let mut outer_r = OuterOpt::new(OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }, p);
+        let mut anchor_r = anchor.clone();
+        for m in 0..table.num_modules() {
+            let deltas: Vec<Vec<f32>> = (0..2)
+                .map(|j| {
+                    let mut d = vec![0.0f32; p];
+                    tensor::sub(&mut d, &params[j], &anchor_r);
+                    d
+                })
+                .collect();
+            let norms: Vec<f64> =
+                (0..2).map(|j| table.module_sq_norm(&deltas[j], m).sqrt()).collect();
+            let weights = penalty::softmax_neg_weights(&norms, true);
+            let ranges = table.module_ranges(m);
+            let mut module_sq = 0.0f64;
+            let mut combined: Vec<(usize, Vec<f32>)> = Vec::new();
+            for r in &ranges {
+                let mut out = vec![0.0f32; r.len];
+                let views: Vec<&[f32]> = deltas
+                    .iter()
+                    .map(|d| &d[r.offset..r.offset + r.len])
+                    .collect();
+                tensor::weighted_sum_into(&mut out, &views, &weights);
+                module_sq += tensor::sq_norm(&out);
+                combined.push((r.offset, out));
+            }
+            let beta = (phi / (module_sq.sqrt() + eps)).min(1.0);
+            for (off, mut delta) in combined {
+                if beta < 1.0 {
+                    tensor::scale(&mut delta, beta as f32);
+                }
+                outer_r.apply_range(&mut anchor_r, &delta, off);
+            }
+        }
+
+        crate::testing::assert_close(&anchor_f, &anchor_r, 1e-6, 1e-5);
+        crate::testing::assert_close(&outer_f.momentum, &outer_r.momentum, 1e-6, 1e-5);
+    }
+
+    #[test]
+    fn mean_deltas_matches_mean_into() {
+        let table = toy_table();
+        let p = table.total;
+        let anchor = vec![0.25f32; p];
+        let params = rows(4, p);
+        let mut s = SyncScratch::new(&table, 4, 0);
+        s.load_full(|j| params[j].as_slice(), &anchor);
+        let mut owned = Vec::new();
+        s.mean_deltas_into(&mut owned);
+        let got = s.mean_deltas().to_vec();
+
+        let deltas: Vec<Vec<f32>> = (0..4)
+            .map(|j| {
+                let mut d = vec![0.0f32; p];
+                tensor::sub(&mut d, &params[j], &anchor);
+                d
+            })
+            .collect();
+        let views: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+        let mut want = vec![0.0f32; p];
+        tensor::mean_into(&mut want, &views);
+        assert_eq!(got, want);
+        assert_eq!(owned, want);
+    }
+
+    #[test]
+    fn spare_buffers_recycle() {
+        let table = toy_table();
+        let mut s = SyncScratch::new(&table, 2, 0);
+        let mut b = s.take_spare();
+        b.resize(table.total, 0.0);
+        let ptr = b.as_ptr();
+        s.put_spare(b);
+        let b2 = s.take_spare();
+        assert_eq!(b2.as_ptr(), ptr, "free list must hand back the same buffer");
+    }
+}

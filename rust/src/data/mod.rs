@@ -157,37 +157,63 @@ impl Corpus {
     /// One token sequence of length `len` for (split, worker, step, idx).
     /// Pure function of the corpus seed — identical across methods/runs.
     pub fn sequence(&self, split: Split, worker: usize, step: u64, idx: usize, len: usize) -> Vec<u32> {
+        let mut buf = Vec::with_capacity(len);
+        self.sequence_into(split, worker, step, idx, len, &mut buf);
+        buf.iter().map(|&t| t as u32).collect()
+    }
+
+    /// Append the sequence for (split, worker, step, idx) to `out` as
+    /// i32 tokens (the shape the runtime consumes). Allocation-free when
+    /// `out` has capacity — the trainer's `SyncScratch` token buffer
+    /// relies on this to keep the inner-step loop heap-quiet.
+    ///
+    /// RNG consumption order matches the historical `sequence` exactly
+    /// (document sampling, then the quality coin, then corruption), so
+    /// data streams are unchanged.
+    pub fn sequence_into(
+        &self,
+        split: Split,
+        worker: usize,
+        step: u64,
+        idx: usize,
+        len: usize,
+        out: &mut Vec<i32>,
+    ) {
         let stream = mix(
             self.seed ^ split.tag(),
             (worker as u64) << 40 ^ step << 8 ^ idx as u64,
         );
         let mut rng = Rng::new(stream);
-        let clean = self.language.document(len, &mut rng);
+        let start = out.len();
+        if len > 0 {
+            let mut prev = rng.below(self.language.vocab as u64) as u32;
+            out.push(prev as i32);
+            for _ in 1..len {
+                prev = self.language.next_token(prev, &mut rng);
+                out.push(prev as i32);
+            }
+        }
         if !rng.chance(self.quality.noise_prob) {
-            return clean;
+            return;
         }
         let kind = match rng.below(3) {
             0 => NoiseKind::Uniform,
             1 => NoiseKind::Repeat,
             _ => NoiseKind::Shuffle,
         };
-        self.corrupt(clean, kind, &mut rng)
-    }
-
-    fn corrupt(&self, mut doc: Vec<u32>, kind: NoiseKind, rng: &mut Rng) -> Vec<u32> {
+        let doc = &mut out[start..];
         match kind {
             NoiseKind::Uniform => {
                 for t in doc.iter_mut() {
-                    *t = rng.below(self.language.vocab as u64) as u32;
+                    *t = rng.below(self.language.vocab as u64) as i32;
                 }
             }
             NoiseKind::Repeat => {
-                let t = rng.below(self.language.vocab as u64) as u32;
+                let t = rng.below(self.language.vocab as u64) as i32;
                 doc.fill(t);
             }
-            NoiseKind::Shuffle => rng.shuffle(&mut doc),
+            NoiseKind::Shuffle => rng.shuffle(doc),
         }
-        doc
     }
 
     /// A flattened i32 batch `[batch, seq+1]` ready for the tokens literal.
@@ -201,8 +227,7 @@ impl Corpus {
     ) -> Vec<i32> {
         let mut out = Vec::with_capacity(batch * seq_plus_1);
         for idx in 0..batch {
-            let doc = self.sequence(split, worker, step, idx, seq_plus_1);
-            out.extend(doc.iter().map(|&t| t as i32));
+            self.sequence_into(split, worker, step, idx, seq_plus_1, &mut out);
         }
         out
     }

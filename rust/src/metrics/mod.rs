@@ -43,7 +43,9 @@ pub struct TailMean {
 
 impl TailMean {
     pub fn new(k: usize) -> Self {
-        Self { k, buf: Default::default() }
+        // Full window preallocated: pushing never reallocates, which the
+        // trainer's steady-state zero-allocation invariant relies on.
+        Self { k, buf: std::collections::VecDeque::with_capacity(k) }
     }
 
     pub fn push(&mut self, x: f64) {
@@ -179,6 +181,15 @@ impl RunTracker {
             tail_loss: TailMean::new(10),
             tail_ppl: TailMean::new(10),
         }
+    }
+
+    /// Pre-size the train-loss trace so steady-state recording never
+    /// reallocates (part of the trainer's zero-allocation invariant —
+    /// see `coordinator::scratch`). The validation trace is left to grow
+    /// on demand: it only fills when periodic eval runs, and evaluation
+    /// itself allocates batches, so pre-reserving it would buy nothing.
+    pub fn reserve(&mut self, expected_records: usize) {
+        self.losses.reserve(expected_records);
     }
 
     pub fn record_loss(&mut self, step: u64, loss: f64) {

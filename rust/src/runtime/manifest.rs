@@ -118,6 +118,75 @@ impl Manifest {
     pub fn tokens_per_step(&self) -> usize {
         self.model.batch_size * self.model.seq_len
     }
+
+    /// Build an in-memory manifest with the canonical tensor layout
+    /// (embed + stacked per-layer block + head) — no artifacts on disk.
+    ///
+    /// Used by the stub runtime (`runtime::stub::Engine::synthetic`),
+    /// benches and tests to drive full coordinator rounds at arbitrary
+    /// parameter counts on a clean box. `layer_params` is the per-layer
+    /// element count of the stacked block; `tail_params` is split
+    /// between the unstacked embed/head tensors.
+    pub fn synthetic(
+        name: &str,
+        num_layers: usize,
+        layer_params: usize,
+        tail_params: usize,
+        vocab: usize,
+        batch: usize,
+        seq_len: usize,
+    ) -> Manifest {
+        let embed = tail_params / 2;
+        let head = tail_params - embed;
+        let stacked = num_layers * layer_params;
+        let tensors = vec![
+            crate::tensor::TensorEntry {
+                name: "embed".into(),
+                shape: vec![embed],
+                offset: 0,
+                size: embed,
+                stacked: false,
+            },
+            crate::tensor::TensorEntry {
+                name: "layers.block".into(),
+                shape: vec![num_layers, layer_params],
+                offset: embed,
+                size: stacked,
+                stacked: true,
+            },
+            crate::tensor::TensorEntry {
+                name: "head".into(),
+                shape: vec![head],
+                offset: embed + stacked,
+                size: head,
+                stacked: false,
+            },
+        ];
+        let mut programs = BTreeMap::new();
+        programs.insert("train_step".to_string(), "<synthetic>".to_string());
+        programs.insert("grad_step".to_string(), "<synthetic>".to_string());
+        programs.insert("apply_step".to_string(), "<synthetic>".to_string());
+        programs.insert("eval_step".to_string(), "<synthetic>".to_string());
+        Manifest {
+            model: ModelInfo {
+                name: name.to_string(),
+                vocab_size: vocab,
+                num_layers,
+                hidden_size: layer_params.max(1),
+                intermediate_size: layer_params.max(1),
+                num_heads: 1,
+                seq_len,
+                batch_size: batch,
+            },
+            total_params: embed + stacked + head,
+            penalty_phi: 10.0,
+            table: ModuleTable::new(tensors, num_layers),
+            programs,
+            penalty_programs: BTreeMap::new(),
+            init_file: "init.bin".to_string(),
+            token_shape: [batch, seq_len + 1],
+        }
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +238,26 @@ mod tests {
         )
         .unwrap();
         assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_is_consistent() {
+        let m = Manifest::synthetic("syn", 3, 100, 31, 64, 2, 16);
+        assert_eq!(m.total_params, 3 * 100 + 31);
+        assert_eq!(m.table.total, m.total_params);
+        assert_eq!(m.table.num_modules(), 4);
+        assert_eq!(m.token_shape, [2, 17]);
+        // Modules partition the flat vector exactly.
+        let mut covered = vec![false; m.total_params];
+        for module in 0..m.table.num_modules() {
+            for r in m.table.module_ranges(module) {
+                for i in r.offset..r.offset + r.len {
+                    assert!(!covered[i], "overlap at {i}");
+                    covered[i] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
     }
 
     #[test]

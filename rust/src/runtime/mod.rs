@@ -1,29 +1,39 @@
-//! Layer-3 ⇄ Layer-2 runtime: load AOT artifacts and execute them on the
-//! PJRT CPU client (DESIGN.md §2.3).
+//! Layer-3 ⇄ Layer-2 runtime: load AOT artifacts and execute them
+//! (DESIGN.md §2.3).
 //!
 //! `make artifacts` (python, build-time only) writes
 //! `artifacts/<config>/{*.hlo.txt, manifest.json, init.bin}`; this module
 //! is everything the Rust hot loop needs to run them:
 //!
 //!  * [`manifest::Manifest`] — the parsed export contract;
-//!  * [`Engine`]             — compiled-executable cache + typed wrappers
-//!                             around `train/grad/apply/eval/penalty`.
+//!  * [`Engine`]             — the execution backend.
 //!
-//! Marshalling notes: parameters travel as rank-1 f32 literals (the flat
-//! vector contract), tokens as an i32 `[batch, seq+1]` literal. Literals
-//! are rebuilt per call from reusable host buffers; PJRT copies
-//! host→device on execute, so the worker state of record stays in plain
-//! `Vec<f32>` where the coordinator's outer algebra operates.
+//! Two backends share the exact same `Engine` API, selected at compile
+//! time by the `pjrt` cargo feature:
+//!
+//!  * **`pjrt` enabled** ([`pjrt`] module): the real thing — compiled
+//!    HLO executables on the PJRT CPU client via the vendored `xla`
+//!    crate. Requires that crate (see `Cargo.toml`).
+//!  * **default** ([`stub`] module): a deterministic pure-Rust stand-in
+//!    (quadratic pseudo-model + real AdamW) with zero external
+//!    dependencies, so `cargo build && cargo test` work on a clean box
+//!    and the coordinator / bench layers can exercise full training
+//!    rounds — including via [`stub::Engine::synthetic`] manifests —
+//!    without any artifacts.
 
 pub mod manifest;
 
 pub use manifest::Manifest;
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
 
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
 
 /// Output of one fused inner training step.
 #[derive(Debug, Clone, Copy)]
@@ -31,237 +41,23 @@ pub struct StepOut {
     pub loss: f32,
 }
 
-/// Compiled-program cache over one PJRT CPU client.
-pub struct Engine {
-    client: PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    executables: HashMap<String, PjRtLoadedExecutable>,
-}
-
-impl Engine {
-    /// Load the manifest for `config` under `artifacts_root` and set up the
-    /// PJRT CPU client. Executables compile lazily on first use.
-    pub fn load(artifacts_root: impl AsRef<Path>, config: &str) -> Result<Self> {
-        let dir = artifacts_root.as_ref().join(config);
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest for config '{config}'"))?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, dir, manifest, executables: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Initial flat parameters exported by aot.py (`init.bin`).
-    pub fn init_params(&self) -> Result<Vec<f32>> {
-        let path = self.dir.join(&self.manifest.init_file);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        anyhow::ensure!(
-            bytes.len() == self.manifest.total_params * 4,
-            "init.bin size {} != 4 * total_params {}",
-            bytes.len(),
-            self.manifest.total_params
-        );
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-
-    fn executable(&mut self, file: &str) -> Result<&PjRtLoadedExecutable> {
-        if !self.executables.contains_key(file) {
-            let path = self.dir.join(file);
-            let proto = HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            self.executables.insert(file.to_string(), exe);
-        }
-        Ok(&self.executables[file])
-    }
-
-    fn program_file(&self, name: &str) -> Result<String> {
-        self.manifest
-            .programs
-            .get(name)
-            .cloned()
-            .ok_or_else(|| anyhow::anyhow!("program '{name}' not in manifest"))
-    }
-
-    /// Eagerly compile every model program (excludes penalty variants).
-    pub fn warmup(&mut self) -> Result<()> {
-        for name in ["train_step", "grad_step", "apply_step", "eval_step"] {
-            let file = self.program_file(name)?;
-            self.executable(&file)?;
-        }
-        Ok(())
-    }
-
-    fn tokens_literal(&self, tokens: &[i32]) -> Result<Literal> {
-        let [b, s1] = self.manifest.token_shape;
-        anyhow::ensure!(
-            tokens.len() == b * s1,
-            "tokens len {} != {}x{}",
-            tokens.len(),
-            b,
-            s1
-        );
-        Ok(Literal::vec1(tokens).reshape(&[b as i64, s1 as i64])?)
-    }
-
-    fn run(&mut self, file: &str, args: &[Literal]) -> Result<Vec<Literal>> {
-        let exe = self.executable(file)?;
-        let result = exe.execute::<Literal>(args)?;
-        let out = result
-            .into_iter()
-            .next()
-            .and_then(|d| d.into_iter().next())
-            .ok_or_else(|| anyhow::anyhow!("executable returned no buffers"))?
-            .to_literal_sync()?;
-        Ok(out.to_tuple()?)
-    }
-
-    /// Fused inner step: params/m/v updated in place, returns the loss.
-    pub fn train_step(
-        &mut self,
-        params: &mut Vec<f32>,
-        m: &mut Vec<f32>,
-        v: &mut Vec<f32>,
-        tokens: &[i32],
-        lr: f32,
-        step: i32,
-    ) -> Result<StepOut> {
-        let file = self.program_file("train_step")?;
-        let args = [
-            Literal::vec1(params),
-            Literal::vec1(m),
-            Literal::vec1(v),
-            self.tokens_literal(tokens)?,
-            Literal::scalar(lr),
-            Literal::scalar(step),
-        ];
-        let outs = self.run(&file, &args)?;
-        anyhow::ensure!(outs.len() == 4, "train_step returned {}", outs.len());
-        copy_into(&outs[0], params)?;
-        copy_into(&outs[1], m)?;
-        copy_into(&outs[2], v)?;
-        Ok(StepOut { loss: outs[3].to_vec::<f32>()?[0] })
-    }
-
-    /// Grads + loss without applying (DDP / warmup path).
-    pub fn grad_step(
-        &mut self,
-        params: &[f32],
-        tokens: &[i32],
-        grads: &mut Vec<f32>,
-    ) -> Result<StepOut> {
-        let file = self.program_file("grad_step")?;
-        let args = [Literal::vec1(params), self.tokens_literal(tokens)?];
-        let outs = self.run(&file, &args)?;
-        anyhow::ensure!(outs.len() == 2, "grad_step returned {}", outs.len());
-        copy_into(&outs[0], grads)?;
-        Ok(StepOut { loss: outs[1].to_vec::<f32>()?[0] })
-    }
-
-    /// AdamW apply of externally averaged grads.
-    pub fn apply_step(
-        &mut self,
-        params: &mut Vec<f32>,
-        m: &mut Vec<f32>,
-        v: &mut Vec<f32>,
-        grads: &[f32],
-        lr: f32,
-        step: i32,
-    ) -> Result<()> {
-        let file = self.program_file("apply_step")?;
-        let args = [
-            Literal::vec1(params),
-            Literal::vec1(m),
-            Literal::vec1(v),
-            Literal::vec1(grads),
-            Literal::scalar(lr),
-            Literal::scalar(step),
-        ];
-        let outs = self.run(&file, &args)?;
-        anyhow::ensure!(outs.len() == 3, "apply_step returned {}", outs.len());
-        copy_into(&outs[0], params)?;
-        copy_into(&outs[1], m)?;
-        copy_into(&outs[2], v)?;
-        Ok(())
-    }
-
-    /// Validation loss on one batch.
-    pub fn eval_step(&mut self, params: &[f32], tokens: &[i32]) -> Result<f32> {
-        let file = self.program_file("eval_step")?;
-        let args = [Literal::vec1(params), self.tokens_literal(tokens)?];
-        let outs = self.run(&file, &args)?;
-        Ok(outs[0].to_vec::<f32>()?[0])
-    }
-
-    /// Whether a penalty HLO exists for sync groups of `n` workers.
-    pub fn has_penalty_program(&self, n: usize) -> bool {
-        self.manifest.penalty_programs.contains_key(&n)
-    }
-
-    /// Execute the AOT penalty combine (Alg. 2, L1 Pallas kernel) for a
-    /// group of `deltas.len()` workers. `norms` may contain +inf for
-    /// anomaly-eliminated workers. Returns the combined clipped pseudo
-    /// gradient (shared by all workers in the group).
-    pub fn penalty_combine(
-        &mut self,
-        deltas: &[&[f32]],
-        norms: &[f32],
-    ) -> Result<Vec<f32>> {
-        let n = deltas.len();
-        anyhow::ensure!(n == norms.len());
-        let file = self
-            .manifest
-            .penalty_programs
-            .get(&n)
-            .cloned()
-            .ok_or_else(|| anyhow::anyhow!("no penalty program for n={n}"))?;
-        let p = self.manifest.total_params;
-        let mut stacked = Vec::with_capacity(n * p);
-        for d in deltas {
-            anyhow::ensure!(d.len() == p, "delta len {} != {}", d.len(), p);
-            stacked.extend_from_slice(d);
-        }
-        let args = [
-            Literal::vec1(&stacked).reshape(&[n as i64, p as i64])?,
-            Literal::vec1(norms),
-        ];
-        let outs = self.run(&file, &args)?;
-        anyhow::ensure!(outs.len() == 3, "penalty returned {}", outs.len());
-        Ok(outs[0].to_vec::<f32>()?)
-    }
-}
-
-/// Copy a rank-1 f32 literal into an existing Vec without reallocating.
-fn copy_into(lit: &Literal, dst: &mut Vec<f32>) -> Result<()> {
-    let n = lit.element_count();
-    dst.resize(n, 0.0);
-    lit.copy_raw_to(dst.as_mut_slice())?;
-    Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    // Engine integration tests live in rust/tests/runtime_integration.rs
-    // (they need built artifacts). Here: pure helpers only.
-
-    #[test]
-    fn copy_into_resizes() {
-        let lit = xla::Literal::vec1(&[1.0f32, 2.0, 3.0]);
-        let mut v = Vec::new();
-        super::copy_into(&lit, &mut v).unwrap();
-        assert_eq!(v, vec![1.0, 2.0, 3.0]);
-    }
+/// Read an `init.bin` flat-f32 export, validating its size — shared by
+/// both backends so the format can only evolve in one place.
+pub(crate) fn read_init_bin(
+    path: &std::path::Path,
+    total_params: usize,
+) -> anyhow::Result<Vec<f32>> {
+    use anyhow::Context;
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == total_params * 4,
+        "init.bin size {} != 4 * total_params {}",
+        bytes.len(),
+        total_params
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }

@@ -1,0 +1,338 @@
+//! Deterministic pure-Rust execution backend (the default build,
+//! `pjrt` feature off).
+//!
+//! The stub realizes the same `Engine` API as the PJRT backend over a
+//! synthetic differentiable objective instead of the compiled HLO
+//! model: a quadratic pull toward a seed-derived target vector plus a
+//! per-batch pseudo-noise term, optimized by a faithful AdamW. That is
+//! enough for everything above Layer 2 to run for real — losses start
+//! near ln(V) and decrease, replicas on different data streams diverge
+//! (so pseudo-gradients, the penalty pipeline and sync rounds are all
+//! non-trivial) — while keeping the default build free of external
+//! native dependencies.
+//!
+//! Determinism: every number is a pure function of (manifest name,
+//! params, tokens), so reruns are bit-identical, matching the
+//! coordinator's reproducibility contract.
+//!
+//! Hot-path discipline: `train_step`/`grad_step`/`apply_step`/`eval_step`
+//! allocate nothing — single fused sweeps over the flat vectors — which
+//! is what lets `tests/sync_steady_state.rs` assert the trainer-level
+//! zero-allocation invariant over full rounds.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::prng::{mix, Rng};
+
+use super::{Manifest, StepOut};
+
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+/// Relative amplitude of the per-batch pseudo-noise on the gradient.
+const NOISE: f32 = 0.2;
+/// Parameter init / target scale.
+const SCALE: f32 = 0.05;
+
+/// Deterministic stand-in for the PJRT engine (same API surface).
+pub struct Engine {
+    pub manifest: Manifest,
+    dir: Option<PathBuf>,
+    seed: u64,
+    /// The objective's optimum: loss ∝ mean((params - target)²).
+    target: Vec<f32>,
+    /// ln(vocab) / mean((init - target)²): scales the quadratic so the
+    /// initial loss sits at ln(V) like a real LM at init.
+    loss_scale: f64,
+}
+
+fn hash_str(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Engine {
+    /// Load the manifest for `config` under `artifacts_root`. Uses
+    /// `init.bin` when present; otherwise parameters are generated
+    /// deterministically from the config name.
+    pub fn load(artifacts_root: impl AsRef<Path>, config: &str) -> Result<Self> {
+        let dir = artifacts_root.as_ref().join(config);
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest for config '{config}'"))?;
+        Ok(Self::from_manifest(manifest, Some(dir)))
+    }
+
+    /// Build an engine over an in-memory manifest — no artifacts needed.
+    /// This is how benches and tests drive full coordinator rounds on a
+    /// clean box (see [`Manifest::synthetic`]).
+    pub fn synthetic(manifest: Manifest) -> Self {
+        Self::from_manifest(manifest, None)
+    }
+
+    fn from_manifest(manifest: Manifest, dir: Option<PathBuf>) -> Self {
+        let seed = hash_str(&manifest.model.name);
+        let p = manifest.total_params;
+        let mut rng = Rng::new(mix(seed, 0x7A46_E7));
+        let target: Vec<f32> = (0..p).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * SCALE).collect();
+        let mut engine =
+            Self { manifest, dir, seed, target, loss_scale: 1.0 };
+        // Calibrate so loss(init) == ln(vocab).
+        let init = engine.generated_init();
+        let d2 = engine.mean_sq_dist(&init);
+        let lnv = (engine.manifest.model.vocab_size.max(2) as f64).ln();
+        engine.loss_scale = lnv / d2.max(1e-12);
+        engine
+    }
+
+    fn generated_init(&self) -> Vec<f32> {
+        let mut rng = Rng::new(mix(self.seed, 0x1817_11));
+        (0..self.manifest.total_params)
+            .map(|_| (rng.f64() as f32 * 2.0 - 1.0) * SCALE)
+            .collect()
+    }
+
+    fn mean_sq_dist(&self, params: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for (&p, &t) in params.iter().zip(&self.target) {
+            let e = (p - t) as f64;
+            acc += e * e;
+        }
+        acc / params.len().max(1) as f64
+    }
+
+    pub fn platform(&self) -> String {
+        "stub-cpu (pjrt feature disabled)".to_string()
+    }
+
+    /// Initial flat parameters: `init.bin` when artifacts exist, else
+    /// the deterministic generated init.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        if let Some(dir) = &self.dir {
+            let path = dir.join(&self.manifest.init_file);
+            if path.exists() {
+                return super::read_init_bin(&path, self.manifest.total_params);
+            }
+        }
+        Ok(self.generated_init())
+    }
+
+    /// No executables to compile — a no-op kept for API parity.
+    pub fn warmup(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        let [b, s1] = self.manifest.token_shape;
+        anyhow::ensure!(
+            tokens.len() == b * s1,
+            "tokens len {} != {}x{}",
+            tokens.len(),
+            b,
+            s1
+        );
+        Ok(())
+    }
+
+    /// Per-batch pseudo-noise stream: the gradient is
+    /// g_i = (θ_i − t_i)·(1 + ε_i) with ε drawn from this rng, so the
+    /// step functions stream g_i without materializing a buffer.
+    fn batch_rng(&self, tokens: &[i32]) -> Rng {
+        Rng::new(mix(self.seed ^ 0x6E01_5E, hash_tokens(tokens)))
+    }
+
+    fn loss_of(&self, params: &[f32]) -> f32 {
+        (self.mean_sq_dist(params) * self.loss_scale) as f32
+    }
+
+    /// Fused inner step: params/m/v updated in place, returns the loss.
+    /// Exactly equivalent to `grad_step` followed by `apply_step`.
+    pub fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        tokens: &[i32],
+        lr: f32,
+        step: i32,
+    ) -> Result<StepOut> {
+        self.check_tokens(tokens)?;
+        let loss = self.loss_of(params);
+        let mut rng = self.batch_rng(tokens);
+        let bc1 = 1.0 - BETA1.powi(step);
+        let bc2 = 1.0 - BETA2.powi(step);
+        for ((p, mi), (vi, &t)) in params
+            .iter_mut()
+            .zip(m.iter_mut())
+            .zip(v.iter_mut().zip(&self.target))
+        {
+            let g = (*p - t) * (1.0 + NOISE * rng.normal_f32());
+            *mi = BETA1 * *mi + (1.0 - BETA1) * g;
+            *vi = BETA2 * *vi + (1.0 - BETA2) * g * g;
+            let mhat = *mi / bc1;
+            let vhat = *vi / bc2;
+            *p -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+        Ok(StepOut { loss })
+    }
+
+    /// Grads + loss without applying (DDP / warmup path).
+    pub fn grad_step(
+        &mut self,
+        params: &[f32],
+        tokens: &[i32],
+        grads: &mut Vec<f32>,
+    ) -> Result<StepOut> {
+        self.check_tokens(tokens)?;
+        let loss = self.loss_of(params);
+        let mut rng = self.batch_rng(tokens);
+        grads.resize(params.len(), 0.0);
+        for ((g, &p), &t) in grads.iter_mut().zip(params).zip(&self.target) {
+            *g = (p - t) * (1.0 + NOISE * rng.normal_f32());
+        }
+        Ok(StepOut { loss })
+    }
+
+    /// AdamW apply of externally averaged grads.
+    pub fn apply_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        grads: &[f32],
+        lr: f32,
+        step: i32,
+    ) -> Result<()> {
+        anyhow::ensure!(grads.len() == params.len(), "grads len mismatch");
+        let bc1 = 1.0 - BETA1.powi(step);
+        let bc2 = 1.0 - BETA2.powi(step);
+        for ((p, mi), (vi, &g)) in params
+            .iter_mut()
+            .zip(m.iter_mut())
+            .zip(v.iter_mut().zip(grads))
+        {
+            *mi = BETA1 * *mi + (1.0 - BETA1) * g;
+            *vi = BETA2 * *vi + (1.0 - BETA2) * g * g;
+            let mhat = *mi / bc1;
+            let vhat = *vi / bc2;
+            *p -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+        Ok(())
+    }
+
+    /// Validation loss on one batch (pure function of params).
+    pub fn eval_step(&mut self, params: &[f32], tokens: &[i32]) -> Result<f32> {
+        self.check_tokens(tokens)?;
+        Ok(self.loss_of(params))
+    }
+
+    /// The stub cannot execute penalty HLO variants, even when the
+    /// manifest lists them.
+    pub fn has_penalty_program(&self, _n: usize) -> bool {
+        false
+    }
+
+    /// The AOT Pallas penalty combine needs the PJRT backend.
+    pub fn penalty_combine(&mut self, _deltas: &[&[f32]], _norms: &[f32]) -> Result<Vec<f32>> {
+        anyhow::bail!(
+            "penalty_combine requires the AOT penalty HLO (build with --features pjrt)"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::synthetic(Manifest::synthetic("stub-test", 2, 64, 32, 128, 2, 8))
+    }
+
+    fn batch(e: &Engine, salt: i32) -> Vec<i32> {
+        let [b, s1] = e.manifest.token_shape;
+        (0..b * s1).map(|i| (i as i32 * 7 + salt) % 128).collect()
+    }
+
+    #[test]
+    fn deterministic_and_learns() {
+        let mut e1 = engine();
+        let mut e2 = engine();
+        let mut p1 = e1.init_params().unwrap();
+        let mut p2 = e2.init_params().unwrap();
+        assert_eq!(p1, p2);
+        let n = p1.len();
+        let (mut m1, mut v1) = (vec![0.0; n], vec![0.0; n]);
+        let (mut m2, mut v2) = (vec![0.0; n], vec![0.0; n]);
+        let tokens = batch(&e1, 0);
+        let first = e1.eval_step(&p1, &tokens).unwrap();
+        let lnv = (e1.manifest.model.vocab_size as f32).ln();
+        assert!((first - lnv).abs() < 1e-3, "init loss {first} vs ln(V) {lnv}");
+        let mut last = first;
+        for step in 1..=50 {
+            let o1 = e1.train_step(&mut p1, &mut m1, &mut v1, &tokens, 5e-3, step).unwrap();
+            let o2 = e2.train_step(&mut p2, &mut m2, &mut v2, &tokens, 5e-3, step).unwrap();
+            assert_eq!(o1.loss, o2.loss, "determinism at step {step}");
+            last = o1.loss;
+        }
+        assert_eq!(p1, p2);
+        assert!(last < first * 0.5, "loss should halve: {first} -> {last}");
+    }
+
+    #[test]
+    fn fused_equals_split_path() {
+        let mut e = engine();
+        let p0 = e.init_params().unwrap();
+        let n = p0.len();
+        let tokens = batch(&e, 3);
+
+        let mut p1 = p0.clone();
+        let (mut m1, mut v1) = (vec![0.0; n], vec![0.0; n]);
+        let o1 = e.train_step(&mut p1, &mut m1, &mut v1, &tokens, 1e-3, 1).unwrap();
+
+        let mut grads = vec![0.0; n];
+        let o2 = e.grad_step(&p0, &tokens, &mut grads).unwrap();
+        let mut p2 = p0.clone();
+        let (mut m2, mut v2) = (vec![0.0; n], vec![0.0; n]);
+        e.apply_step(&mut p2, &mut m2, &mut v2, &grads, 1e-3, 1).unwrap();
+
+        assert_eq!(o1.loss, o2.loss);
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn different_batches_diverge() {
+        let mut e = engine();
+        let p0 = e.init_params().unwrap();
+        let n = p0.len();
+        let (mut pa, mut pb) = (p0.clone(), p0);
+        let (mut ma, mut va) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mb, mut vb) = (vec![0.0; n], vec![0.0; n]);
+        let ta = batch(&e, 1);
+        let tb = batch(&e, 2);
+        e.train_step(&mut pa, &mut ma, &mut va, &ta, 1e-3, 1).unwrap();
+        e.train_step(&mut pb, &mut mb, &mut vb, &tb, 1e-3, 1).unwrap();
+        assert_ne!(pa, pb, "distinct data streams must diverge");
+    }
+
+    #[test]
+    fn rejects_bad_token_shape() {
+        let mut e = engine();
+        let p = e.init_params().unwrap();
+        assert!(e.eval_step(&p, &[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Fused, SIMD-friendly vector kernels — the L3 sync hot path.
+//!
+//! Every op is written in a chunked, multi-accumulator style the
+//! auto-vectorizer reliably turns into packed SIMD: elementwise ops run
+//! over `chunks_exact` blocks (no bounds checks inside the block), and
+//! reductions carry [`LANES`] independent f64 accumulators so the
+//! f32→f64 convert-and-accumulate chain has no loop-carried dependency
+//! on a single register.
+//!
+//! Numerics contract (asserted by `tests/kernels_fused.rs`):
+//!  * elementwise kernels (`axpy`, `sub`, `scale`, `add`, `scale_axpy`,
+//!    the weighted-sum output) are **bitwise identical** to the naive
+//!    [`reference`] ops — they perform the same f32 operations per
+//!    element in the same order;
+//!  * reductions (`dot`, `sq_norm`, and the fused `*_sq` variants)
+//!    reassociate the f64 accumulation across [`LANES`] lanes, so they
+//!    agree with [`reference`] to relative 1e-6 rather than bitwise.
+//!    All fused reductions share one lane schedule, so e.g.
+//!    `weighted_sum_sq_into`'s norm is bitwise equal to calling
+//!    [`sq_norm`] on its output.
+//!
+//! The fused ops exist because the synchronization pipeline
+//! (`coordinator::engine::Trainer::synchronize`) was multi-pass: the
+//! pseudo-gradient subtraction, its per-module norm, the weighted
+//! combine, the combined norm, and the clip-β scaling each re-walked
+//! the same cache-cold megabyte-scale vectors. Each fused op does one
+//! sweep:
+//!  * [`sub_sq_norm_into`]  — Δ = a − b and ‖Δ‖² in one pass;
+//!  * [`weighted_sum_sq_into`] / [`weighted_sum_sq_strided`] — the
+//!    softmax-weighted combine and its squared norm in one pass;
+//!  * [`scale_axpy`]        — clip-β folded into the outer-optimizer
+//!    apply (y += α·(β·x), two roundings, matching the reference
+//!    scale-then-axpy exactly).
+
+/// Accumulator lanes for f64 reductions (maps to one AVX2 f64x4 /
+/// two NEON f64x2 registers).
+pub const LANES: usize = 4;
+
+/// Fold the lane accumulators in a fixed tree order. Every reduction in
+/// this module uses this exact order, which is what makes the fused
+/// `*_sq` results bitwise equal to their two-pass kernel counterparts.
+#[inline]
+fn fold_lanes(acc: [f64; LANES]) -> f64 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for i in 0..LANES {
+            yb[i] += alpha * xb[i];
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y += x (the alpha = 1 fold used by the striped collectives).
+#[inline]
+pub fn add(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for i in 0..LANES {
+            yb[i] += xb[i];
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += xi;
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    let mut c = x.chunks_exact_mut(LANES);
+    for b in &mut c {
+        for i in 0..LANES {
+            b[i] *= alpha;
+        }
+    }
+    for xi in c.into_remainder() {
+        *xi *= alpha;
+    }
+}
+
+/// y += alpha * (beta * x) — the clip-β fused outer-optimizer apply.
+///
+/// Two roundings per element (β·x first, then the axpy), bitwise equal
+/// to `reference::scale` followed by `reference::axpy`.
+#[inline]
+pub fn scale_axpy(y: &mut [f32], alpha: f32, beta: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for i in 0..LANES {
+            yb[i] += alpha * (beta * xb[i]);
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += alpha * (beta * xi);
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((ob, ab), bb) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..LANES {
+            ob[i] = ab[i] - bb[i];
+        }
+    }
+    for ((o, &ai), &bi) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = ai - bi;
+    }
+}
+
+/// Squared L2 norm, f64 lane accumulation.
+#[inline]
+pub fn sq_norm(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut c = x.chunks_exact(LANES);
+    for b in &mut c {
+        for i in 0..LANES {
+            let v = b[i] as f64;
+            acc[i] += v * v;
+        }
+    }
+    for (i, &xi) in c.remainder().iter().enumerate() {
+        let v = xi as f64;
+        acc[i] += v * v;
+    }
+    fold_lanes(acc)
+}
+
+/// Dot product, f64 lane accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (ab, bb) in (&mut ac).zip(&mut bc) {
+        for i in 0..LANES {
+            acc[i] += ab[i] as f64 * bb[i] as f64;
+        }
+    }
+    for (i, (&ai, &bi)) in ac.remainder().iter().zip(bc.remainder()).enumerate() {
+        acc[i] += ai as f64 * bi as f64;
+    }
+    fold_lanes(acc)
+}
+
+/// Fused pseudo-gradient: out = a - b, returning ‖out‖² from the same
+/// sweep. The subtraction is bitwise `reference::sub`; the norm uses the
+/// shared lane schedule (bitwise equal to `sq_norm(out)`).
+#[inline]
+pub fn sub_sq_norm_into(out: &mut [f32], a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((ob, ab), bb) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..LANES {
+            let d = ab[i] - bb[i];
+            ob[i] = d;
+            let v = d as f64;
+            acc[i] += v * v;
+        }
+    }
+    for (i, ((o, &ai), &bi)) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+        .enumerate()
+    {
+        let d = ai - bi;
+        *o = d;
+        let v = d as f64;
+        acc[i] += v * v;
+    }
+    fold_lanes(acc)
+}
+
+/// Fused weighted combine: out = Σ_j weights[j]·rows[j], returning
+/// ‖out‖² from the same sweep. Zero-weight rows are skipped, and the
+/// per-element accumulation runs in ascending row order — bitwise equal
+/// to `reference::weighted_sum_into` (and the norm to `sq_norm(out)`).
+pub fn weighted_sum_sq_into(out: &mut [f32], rows: &[&[f32]], weights: &[f32]) -> f64 {
+    assert_eq!(rows.len(), weights.len());
+    for row in rows {
+        assert_eq!(row.len(), out.len());
+    }
+    let len = out.len();
+    let mut acc = [0.0f64; LANES];
+    let blocks = len / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        let mut s = [0.0f32; LANES];
+        for (row, &w) in rows.iter().zip(weights) {
+            if w != 0.0 {
+                let rb = &row[base..base + LANES];
+                for i in 0..LANES {
+                    s[i] += w * rb[i];
+                }
+            }
+        }
+        out[base..base + LANES].copy_from_slice(&s);
+        for i in 0..LANES {
+            let v = s[i] as f64;
+            acc[i] += v * v;
+        }
+    }
+    for (i, idx) in (blocks * LANES..len).enumerate() {
+        let mut s = 0.0f32;
+        for (row, &w) in rows.iter().zip(weights) {
+            if w != 0.0 {
+                s += w * row[idx];
+            }
+        }
+        out[idx] = s;
+        let v = s as f64;
+        acc[i] += v * v;
+    }
+    fold_lanes(acc)
+}
+
+/// [`weighted_sum_sq_into`] over rows stored as one flat row-major
+/// matrix (`flat[j*stride + off ..]` is row j's slice) — the shape the
+/// `SyncScratch` delta arena keeps, so the sync pipeline never has to
+/// materialize a `Vec<&[f32]>` of row views per module.
+pub fn weighted_sum_sq_strided(
+    out: &mut [f32],
+    flat: &[f32],
+    stride: usize,
+    off: usize,
+    weights: &[f32],
+) -> f64 {
+    let len = out.len();
+    assert!(off + len <= stride);
+    assert!(weights.len() * stride <= flat.len() + (stride - off - len));
+    let mut acc = [0.0f64; LANES];
+    let blocks = len / LANES;
+    for blk in 0..blocks {
+        let base = off + blk * LANES;
+        let mut s = [0.0f32; LANES];
+        for (j, &w) in weights.iter().enumerate() {
+            if w != 0.0 {
+                let rb = &flat[j * stride + base..j * stride + base + LANES];
+                for i in 0..LANES {
+                    s[i] += w * rb[i];
+                }
+            }
+        }
+        out[blk * LANES..blk * LANES + LANES].copy_from_slice(&s);
+        for i in 0..LANES {
+            let v = s[i] as f64;
+            acc[i] += v * v;
+        }
+    }
+    for (i, idx) in (blocks * LANES..len).enumerate() {
+        let mut s = 0.0f32;
+        for (j, &w) in weights.iter().enumerate() {
+            if w != 0.0 {
+                s += w * flat[j * stride + off + idx];
+            }
+        }
+        out[idx] = s;
+        let v = s as f64;
+        acc[i] += v * v;
+    }
+    fold_lanes(acc)
+}
+
+/// The original single-pass scalar implementations, kept verbatim as the
+/// testing oracle: `tests/kernels_fused.rs` asserts every fused kernel
+/// against these across remainder-lane-exercising lengths.
+pub mod reference {
+    /// y += alpha * x
+    pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// x *= alpha
+    pub fn scale(x: &mut [f32], alpha: f32) {
+        for xi in x.iter_mut() {
+            *xi *= alpha;
+        }
+    }
+
+    /// out = a - b
+    pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert_eq!(out.len(), a.len());
+        debug_assert_eq!(out.len(), b.len());
+        for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
+            *o = ai - bi;
+        }
+    }
+
+    /// Squared L2 norm, sequential f64 accumulation.
+    pub fn sq_norm(x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for &xi in x {
+            acc += (xi as f64) * (xi as f64);
+        }
+        acc
+    }
+
+    /// Dot product, sequential f64 accumulation.
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f64;
+        for (&ai, &bi) in a.iter().zip(b) {
+            acc += ai as f64 * bi as f64;
+        }
+        acc
+    }
+
+    /// out = Σ_j weights[j]·rows[j], skipping zero weights.
+    pub fn weighted_sum_into(out: &mut [f32], rows: &[&[f32]], weights: &[f32]) {
+        debug_assert_eq!(rows.len(), weights.len());
+        out.fill(0.0);
+        for (row, &w) in rows.iter().zip(weights) {
+            if w != 0.0 {
+                axpy(out, w, row);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vec_pattern(n: usize, salt: u32) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(salt) % 1000) as f32 / 250.0 - 2.0)
+            .collect()
+    }
+
+    /// Lengths that exercise empty, single, chunk-boundary and bulk paths.
+    fn lens() -> Vec<usize> {
+        vec![0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3, 1023, 1024, 4097]
+    }
+
+    #[test]
+    fn axpy_bitwise_matches_reference() {
+        for n in lens() {
+            let x = vec_pattern(n, 1);
+            let mut y = vec_pattern(n, 2);
+            let mut yr = y.clone();
+            axpy(&mut y, 1.7, &x);
+            reference::axpy(&mut yr, 1.7, &x);
+            assert_eq!(y, yr, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sub_bitwise_matches_reference() {
+        for n in lens() {
+            let a = vec_pattern(n, 3);
+            let b = vec_pattern(n, 4);
+            let mut out = vec![0.0; n];
+            let mut outr = vec![0.0; n];
+            sub(&mut out, &a, &b);
+            reference::sub(&mut outr, &a, &b);
+            assert_eq!(out, outr, "n={n}");
+        }
+    }
+
+    #[test]
+    fn add_equals_axpy_one() {
+        for n in lens() {
+            let x = vec_pattern(n, 5);
+            let mut y = vec_pattern(n, 6);
+            let mut y2 = y.clone();
+            add(&mut y, &x);
+            reference::axpy(&mut y2, 1.0, &x);
+            assert_eq!(y, y2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn reductions_close_to_reference() {
+        for n in lens() {
+            let a = vec_pattern(n, 7);
+            let b = vec_pattern(n, 8);
+            let tol = 1e-6 * (n.max(1) as f64);
+            assert!((sq_norm(&a) - reference::sq_norm(&a)).abs() <= tol * 4.0, "n={n}");
+            assert!((dot(&a, &b) - reference::dot(&a, &b)).abs() <= tol * 4.0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_sub_norm_consistent() {
+        for n in lens() {
+            let a = vec_pattern(n, 9);
+            let b = vec_pattern(n, 10);
+            let mut out = vec![0.0; n];
+            let sq = sub_sq_norm_into(&mut out, &a, &b);
+            let mut outr = vec![0.0; n];
+            reference::sub(&mut outr, &a, &b);
+            assert_eq!(out, outr, "n={n}");
+            // Same lane schedule => bitwise equal to the two-pass kernel.
+            assert_eq!(sq.to_bits(), sq_norm(&out).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_weighted_sum_consistent() {
+        for n in lens() {
+            let rows_owned: Vec<Vec<f32>> =
+                (0..4).map(|j| vec_pattern(n, 11 + j)).collect();
+            let rows: Vec<&[f32]> = rows_owned.iter().map(|r| r.as_slice()).collect();
+            let w = [0.5f32, 0.0, 0.3, 0.2];
+            let mut out = vec![0.0; n];
+            let sq = weighted_sum_sq_into(&mut out, &rows, &w);
+            let mut outr = vec![0.0; n];
+            reference::weighted_sum_into(&mut outr, &rows, &w);
+            assert_eq!(out, outr, "n={n}");
+            assert_eq!(sq.to_bits(), sq_norm(&out).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn strided_matches_rows_variant() {
+        let n = 2 * LANES + 3;
+        let stride = n + 5;
+        let off = 5;
+        let rows_owned: Vec<Vec<f32>> = (0..3).map(|j| vec_pattern(stride, 20 + j)).collect();
+        let flat: Vec<f32> = rows_owned.concat();
+        let rows: Vec<&[f32]> =
+            rows_owned.iter().map(|r| &r[off..off + n]).collect();
+        let w = [0.25f32, 0.5, 0.25];
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        let sq_a = weighted_sum_sq_into(&mut a, &rows, &w);
+        let sq_b = weighted_sum_sq_strided(&mut b, &flat, stride, off, &w);
+        assert_eq!(a, b);
+        assert_eq!(sq_a.to_bits(), sq_b.to_bits());
+    }
+
+    #[test]
+    fn scale_axpy_matches_two_pass() {
+        for n in lens() {
+            let x = vec_pattern(n, 30);
+            let mut y = vec_pattern(n, 31);
+            let mut y2 = y.clone();
+            scale_axpy(&mut y, 0.8, 0.37, &x);
+            let mut xs = x.clone();
+            reference::scale(&mut xs, 0.37);
+            reference::axpy(&mut y2, 0.8, &xs);
+            assert_eq!(y, y2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_axpy_beta_one_is_axpy() {
+        let x = vec_pattern(77, 40);
+        let mut y = vec_pattern(77, 41);
+        let mut y2 = y.clone();
+        scale_axpy(&mut y, 0.9, 1.0, &x);
+        axpy(&mut y2, 0.9, &x);
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn sq_norm_f64_stable_at_scale() {
+        let x = vec![1e-3f32; 10_000_000];
+        let got = sq_norm(&x);
+        assert!((got - 10.0).abs() < 1e-6, "{got}");
+    }
+}

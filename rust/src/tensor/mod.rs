@@ -3,12 +3,15 @@
 //! `python/compile/model.py`).
 //!
 //! Submodules:
-//!  * vector ops (this file): axpy/scale/norms/lerp used by the outer
-//!    optimizers and penalty pipeline — the L3 hot path;
+//!  * [`kernels`]: chunked / fused SIMD-friendly vector ops — the L3
+//!    hot path. The top-level functions here are thin delegates kept
+//!    for API stability; `kernels::reference` holds the naive scalar
+//!    oracles the fused ops are tested against;
 //!  * [`table`]: the per-tensor / per-layer view over the flat vector
 //!    (drives layer-wise synchronization accounting);
 //!  * [`shard`]: ZeRO-3-style shard arithmetic for the model shard groups.
 
+pub mod kernels;
 pub mod shard;
 pub mod table;
 
@@ -18,10 +21,7 @@ pub use table::{ModuleTable, TensorEntry};
 /// y += alpha * x
 #[inline]
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    kernels::axpy(y, alpha, x);
 }
 
 /// y = x (memcpy helper with the length check in one place)
@@ -34,29 +34,19 @@ pub fn copy(y: &mut [f32], x: &[f32]) {
 /// x *= alpha
 #[inline]
 pub fn scale(x: &mut [f32], alpha: f32) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
-    }
+    kernels::scale(x, alpha);
 }
 
 /// out = a - b  (pseudo-gradient: theta_{t,tau} - theta_t)
 #[inline]
 pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
-    debug_assert_eq!(out.len(), a.len());
-    debug_assert_eq!(out.len(), b.len());
-    for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
-        *o = ai - bi;
-    }
+    kernels::sub(out, a, b);
 }
 
 /// Squared L2 norm, accumulated in f64 for stability at 10^7+ elements.
 #[inline]
 pub fn sq_norm(x: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for &xi in x {
-        acc += (xi as f64) * (xi as f64);
-    }
-    acc
+    kernels::sq_norm(x)
 }
 
 pub fn norm(x: &[f32]) -> f64 {
@@ -64,21 +54,18 @@ pub fn norm(x: &[f32]) -> f64 {
 }
 
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (&ai, &bi) in a.iter().zip(b) {
-        acc += ai as f64 * bi as f64;
-    }
-    acc
+    kernels::dot(a, b)
 }
 
 /// out = sum_i weights[i] * rows[i]; rows must share a common length.
+/// Norm-free variant — callers that also need ‖out‖² should use the
+/// fused [`kernels::weighted_sum_sq_into`] instead of re-reducing.
 pub fn weighted_sum_into(out: &mut [f32], rows: &[&[f32]], weights: &[f32]) {
     debug_assert_eq!(rows.len(), weights.len());
     out.fill(0.0);
     for (row, &w) in rows.iter().zip(weights) {
         if w != 0.0 {
-            axpy(out, w, row);
+            kernels::axpy(out, w, row);
         }
     }
 }
@@ -88,7 +75,7 @@ pub fn mean_into(out: &mut [f32], rows: &[&[f32]]) {
     let w = 1.0 / rows.len() as f32;
     out.fill(0.0);
     for row in rows {
-        axpy(out, w, row);
+        kernels::axpy(out, w, row);
     }
 }
 

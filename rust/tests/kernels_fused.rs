@@ -1,0 +1,181 @@
+//! Fused-kernel correctness: every fused op must match the naive
+//! `kernels::reference` oracle across lengths that exercise the
+//! remainder lanes (0, 1, LANES−1, LANES, LANES+1, large), and the
+//! striped `ThreadComm` reductions must stay bitwise equal to the
+//! sequential `group` reference.
+
+use edit_train::collectives::{group, ThreadComm};
+use edit_train::tensor::kernels::{self, reference, LANES};
+use edit_train::tensor::ShardSpec;
+use edit_train::testing::{check, Gen};
+
+/// Remainder-lane-exercising lengths plus a random bulk size.
+fn edge_len(g: &mut Gen) -> usize {
+    let fixed = [0, 1, LANES - 1, LANES, LANES + 1, 16 * LANES + 3];
+    let pick = g.usize(0, fixed.len() + 1);
+    if pick < fixed.len() {
+        fixed[pick]
+    } else {
+        g.usize(1, 5000)
+    }
+}
+
+#[test]
+fn prop_elementwise_kernels_bitwise_match_reference() {
+    check("fused-elementwise", 60, |g| {
+        let n = edge_len(g);
+        let x = g.vec_f32(n, 10.0);
+        let a = g.vec_f32(n, 10.0);
+        let alpha = g.f32(3.0);
+        let beta = g.f32(2.0);
+
+        let mut y1 = a.clone();
+        let mut y2 = a.clone();
+        kernels::axpy(&mut y1, alpha, &x);
+        reference::axpy(&mut y2, alpha, &x);
+        assert_eq!(y1, y2, "axpy n={n}");
+
+        let mut s1 = vec![0.0f32; n];
+        let mut s2 = vec![0.0f32; n];
+        kernels::sub(&mut s1, &a, &x);
+        reference::sub(&mut s2, &a, &x);
+        assert_eq!(s1, s2, "sub n={n}");
+
+        let mut z1 = a.clone();
+        let mut z2 = a.clone();
+        kernels::scale_axpy(&mut z1, alpha, beta, &x);
+        let mut xs = x.clone();
+        reference::scale(&mut xs, beta);
+        reference::axpy(&mut z2, alpha, &xs);
+        assert_eq!(z1, z2, "scale_axpy n={n}");
+    });
+}
+
+#[test]
+fn prop_reductions_match_reference_within_1e6_relative() {
+    check("fused-reductions", 60, |g| {
+        let n = edge_len(g);
+        let a = g.vec_f32(n, 10.0);
+        let b = g.vec_f32(n, 10.0);
+
+        let want_sq = reference::sq_norm(&a);
+        let got_sq = kernels::sq_norm(&a);
+        assert!(
+            (got_sq - want_sq).abs() <= 1e-6 * want_sq.max(1e-12),
+            "sq_norm n={n}: {got_sq} vs {want_sq}"
+        );
+
+        // Dot can cancel; bound the tolerance by the magnitude sum.
+        let mag: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        let want = reference::dot(&a, &b);
+        let got = kernels::dot(&a, &b);
+        assert!(
+            (got - want).abs() <= 1e-9 * mag.max(1.0),
+            "dot n={n}: {got} vs {want}"
+        );
+    });
+}
+
+#[test]
+fn prop_fused_sub_norm_matches_reference() {
+    check("fused-sub-norm", 60, |g| {
+        let n = edge_len(g);
+        let a = g.vec_f32(n, 10.0);
+        let b = g.vec_f32(n, 10.0);
+        let mut out = vec![0.0f32; n];
+        let sq = kernels::sub_sq_norm_into(&mut out, &a, &b);
+        let mut want_out = vec![0.0f32; n];
+        reference::sub(&mut want_out, &a, &b);
+        assert_eq!(out, want_out, "n={n}");
+        let want_sq = reference::sq_norm(&want_out);
+        assert!(
+            (sq - want_sq).abs() <= 1e-6 * want_sq.max(1e-12),
+            "n={n}: {sq} vs {want_sq}"
+        );
+        // And bitwise against the fused two-pass norm (same lane fold).
+        assert_eq!(sq.to_bits(), kernels::sq_norm(&out).to_bits(), "n={n}");
+    });
+}
+
+#[test]
+fn prop_fused_weighted_sum_matches_reference() {
+    check("fused-weighted-sum", 60, |g| {
+        let n = edge_len(g);
+        let w_count = g.usize(1, 7);
+        let rows_owned: Vec<Vec<f32>> = (0..w_count).map(|_| g.vec_f32(n, 5.0)).collect();
+        let rows: Vec<&[f32]> = rows_owned.iter().map(|r| r.as_slice()).collect();
+        let weights: Vec<f32> =
+            (0..w_count).map(|_| if g.bool() { g.f32(1.0) } else { 0.0 }).collect();
+
+        let mut out = vec![0.0f32; n];
+        let sq = kernels::weighted_sum_sq_into(&mut out, &rows, &weights);
+        let mut want = vec![0.0f32; n];
+        reference::weighted_sum_into(&mut want, &rows, &weights);
+        assert_eq!(out, want, "rows output must be bitwise (n={n} w={w_count})");
+        let want_sq = reference::sq_norm(&want);
+        assert!(
+            (sq - want_sq).abs() <= 1e-6 * want_sq.max(1e-12),
+            "n={n}: {sq} vs {want_sq}"
+        );
+
+        // Strided variant over a flat row-major matrix with padding.
+        let pad = g.usize(0, 4);
+        let stride = n + pad;
+        let mut flat = vec![0.0f32; w_count * stride];
+        for (j, row) in rows_owned.iter().enumerate() {
+            flat[j * stride..j * stride + n].copy_from_slice(row);
+        }
+        let mut out_s = vec![0.0f32; n];
+        let sq_s = kernels::weighted_sum_sq_strided(&mut out_s, &flat, stride, 0, &weights);
+        assert_eq!(out_s, out, "strided output (n={n})");
+        assert_eq!(sq_s.to_bits(), sq.to_bits(), "strided norm (n={n})");
+    });
+}
+
+#[test]
+fn prop_striped_threaded_reductions_bitwise_match_sequential() {
+    check("striped-threaded-bitwise", 12, |g| {
+        let n = g.usize(2, 6);
+        // Include lengths below the rank count (empty tail stripes).
+        let len = if g.bool() { g.usize(0, n) } else { g.len() * 5 };
+        let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, 1e4)).collect();
+        let spec = ShardSpec::new(len, n);
+        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+
+        for op in 0..2 {
+            let mut seq = bufs.clone();
+            {
+                let mut refs: Vec<&mut [f32]> =
+                    seq.iter_mut().map(|b| b.as_mut_slice()).collect();
+                if op == 0 {
+                    group::all_reduce_mean(&mut refs);
+                } else {
+                    group::reduce_scatter_mean(&mut refs, &shards);
+                }
+            }
+            let comms = ThreadComm::group(n);
+            let mut threaded = vec![Vec::new(); n];
+            let shards_ref = &shards;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .zip(bufs.clone())
+                    .map(|(c, mut buf)| {
+                        s.spawn(move || {
+                            if op == 0 {
+                                c.all_reduce_mean(&mut buf);
+                            } else {
+                                c.reduce_scatter_mean(&mut buf, shards_ref);
+                            }
+                            buf
+                        })
+                    })
+                    .collect();
+                for (r, h) in handles.into_iter().enumerate() {
+                    threaded[r] = h.join().unwrap();
+                }
+            });
+            assert_eq!(seq, threaded, "op={op} n={n} len={len}");
+        }
+    });
+}

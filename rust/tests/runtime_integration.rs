@@ -92,7 +92,16 @@ fn penalty_hlo_matches_rust_implementation() {
     let Some(mut engine) = engine_or_skip() else { return };
     let n = engine.manifest.total_params;
     let w = 2;
-    assert!(engine.has_penalty_program(w));
+    if !engine.has_penalty_program(w) {
+        // Only the stub backend may lack it; a PJRT build with artifacts
+        // regressed its export pipeline if this trips.
+        assert!(
+            cfg!(not(feature = "pjrt")),
+            "PJRT build with artifacts must expose a penalty HLO for w={w}"
+        );
+        eprintln!("skipping: penalty HLO not executable on the stub backend (needs --features pjrt)");
+        return;
+    }
     // Deterministic pseudo-grads
     let deltas: Vec<Vec<f32>> = (0..w)
         .map(|j| (0..n).map(|i| ((i * (j + 2)) % 17) as f32 / 17.0 - 0.5).collect())

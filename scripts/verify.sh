@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# One-command verification gate (also `make verify`):
+#   tier-1:  cargo build --release && cargo test -q
+#   hygiene: cargo fmt --check, cargo clippy -D warnings (skipped with a
+#            notice when the components are not installed)
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt not installed; skipping format check =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== cargo clippy not installed; skipping lint =="
+fi
+
+echo "verify: OK"
