@@ -1,5 +1,18 @@
 //! The local-SGD training engine (Alg. 1) — one engine, seven methods.
 //!
+//! This file is the thin facade over the event-driven execution core:
+//!
+//!  * [`clock`]  — the deterministic discrete-event scheduler (min-heap
+//!                 on per-replica simulated clocks, stable tie-break by
+//!                 replica index, bitwise-equal clocks coalesce);
+//!  * [`worker`] — the per-replica lane state machine (fill batch →
+//!                 inner step → straggler lag → sync eligibility), with
+//!                 optional parallel worker threads;
+//!  * [`sync`]   — the two synchronization paths: barrier sync for the
+//!                 step-synced methods and per-replica **anchor sync**
+//!                 for A-EDiT (no global barrier), plus the precomputed
+//!                 `CommPlan` with layer-wise overlap accounting.
+//!
 //! Numerics model (DESIGN.md §4): each *column* of the M×N mesh (a model
 //! shard group) keeps bitwise-identical parameters at every inner step
 //! (per-step gradient averaging inside the column), so the engine
@@ -12,29 +25,36 @@
 //! the shared α-β cost model.
 //!
 //! Virtual time: every replica carries a clock (seconds).  Inner steps
-//! advance it by `StepModel::inner_step` plus injected straggler lag;
-//! synchronization is a barrier at `max(clocks) + sync_exposed`.  A-EDiT
-//! replaces the fixed-τ trigger with a deadline of `τ_time` seconds, so
-//! fast replicas genuinely run more inner steps per round (§3.3).
+//! advance it by `StepModel::inner_step` plus injected straggler lag.
+//! Step-synced methods barrier at `max(clocks) + sync_exposed`.  A-EDiT
+//! replaces the fixed-τ trigger with a deadline of `τ_time` seconds and
+//! **per-replica** anchor syncs ordered by the event scheduler: a worker
+//! whose clock passes its deadline synchronizes against the shared
+//! anchor without waiting for peers, so fast replicas genuinely run
+//! more inner steps per round and never inherit a straggler's clock
+//! (§3.3).  On a perfectly homogeneous cluster all sync events coalesce
+//! and A-EDiT reduces exactly to EDiT.
+//!
+//! Determinism: every stochastic input is a stateless function of
+//! `(seed, replica, inner_step)` and all cross-replica effects are
+//! ordered by the scheduler's total event order, so runs are bitwise
+//! reproducible — including across `worker_threads` counts
+//! (`tests/scheduler_determinism.rs`).
 //!
 //! Hot-path discipline: all per-round buffers live in the
-//! [`SyncScratch`] arena and all per-round communication charges and
-//! step timings are precomputed in a [`CommPlan`], so `synchronize()`,
-//! `ddp_step()` and `inner_step()` perform **zero heap allocations** in
-//! steady state (asserted by `tests/sync_steady_state.rs`).  The sync
-//! round itself is a single fused pass per module — pseudo-gradient +
-//! norm, weighted combine + norm, clip-β folded into the outer apply —
-//! instead of the historical collect-then-scatter shape.
+//! [`SyncScratch`] arena / per-replica lanes and all per-round
+//! communication charges and step timings are precomputed in the
+//! `CommPlan`, so full rounds perform **zero heap allocations** in
+//! steady state (asserted by `tests/sync_steady_state.rs`).
 
 use anyhow::Result;
 
-use crate::collectives::{CollOp, CommStats};
+use crate::collectives::CommStats;
 use crate::data::{Corpus, Split};
-use crate::metrics::RunTracker;
+use crate::metrics::{RunTracker, Timeline};
 use crate::runtime::Engine;
 use crate::simulator::stepmodel::StepModel;
 use crate::tensor::ModuleTable;
-use crate::util::prng::Rng;
 
 use super::mesh::MeshSpec;
 use super::method::Method;
@@ -42,6 +62,10 @@ use super::outer::{OuterOpt, OuterOptKind};
 use super::penalty::{AnomalyDetector, PenaltyConfig};
 use super::schedule::LrSchedule;
 use super::scratch::SyncScratch;
+
+pub mod clock;
+mod sync;
+mod worker;
 
 /// Upper bound on the per-replica loss-trace reservation (entries; 16 B
 /// each ⇒ 16 MB per replica). Up to this many inner steps the trace
@@ -53,7 +77,8 @@ pub const LOSS_TRACE_CAP: u64 = 1 << 20;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Straggler {
     None,
-    /// A uniformly random replica lags by `lag` seconds each inner step.
+    /// Each replica independently lags by `lag` seconds with probability
+    /// 1/N per inner step (stateless draw — see `worker::straggler_lag`).
     Random { lag: f64 },
     /// A fixed replica lags by `lag` seconds each inner step.
     Consistent { lag: f64, replica: usize },
@@ -105,6 +130,11 @@ pub struct TrainConfig {
     pub base_step_time: f64,
     /// Print a progress line every N syncs (0 = silent).
     pub log_every: u64,
+    /// OS threads running replica inner loops concurrently (1 =
+    /// sequential; results are bitwise identical either way).
+    pub worker_threads: usize,
+    /// Record per-replica sync events into [`Trainer::timeline`].
+    pub trace_timeline: bool,
 }
 
 impl TrainConfig {
@@ -130,6 +160,8 @@ impl TrainConfig {
             poison: Vec::new(),
             base_step_time: 0.5,
             log_every: 0,
+            worker_threads: 1,
+            trace_timeline: false,
         }
     }
 }
@@ -178,55 +210,12 @@ pub struct RunSummary {
     pub syncs: u64,
     pub anomalies: u64,
     pub rollbacks: u64,
+    /// Largest number of anchor versions any replica missed between two
+    /// of its consecutive syncs (0 for fully step-synced runs).
+    pub max_staleness: u64,
+    /// CO2 staleness-queue updates applied by the end-of-run flush.
+    pub flushed_updates: u64,
     pub comm: CommStats,
-}
-
-/// Precomputed per-round communication charges and step timings.
-///
-/// `MeshSpec::sync_group`/`shard_group` allocate rank vectors and the
-/// α-β formulas are pure functions of (mesh, cost, param bytes), so the
-/// trainer resolves them once at construction (and again after an
-/// elastic rescale) instead of per step / per module. This is also the
-/// fix for the historical accounting bug: *every* sync group row and
-/// *every* shard group column is charged, not just group 0.
-#[derive(Debug, Clone, Default)]
-struct CommPlan {
-    /// (bytes, seconds) of one shard all-reduce per mesh row (sync group).
-    sync_allreduce: Vec<(usize, f64)>,
-    /// (bytes, seconds) of one scalar-norm exchange per mesh column
-    /// (shard group) — charged once per module during EDiT sync.
-    scalar_sync: Vec<(usize, f64)>,
-    /// Simulated duration of one local / one DDP inner step.
-    step_time_local: f64,
-    step_time_ddp: f64,
-    /// Exposed sync barrier cost for the configured method.
-    sync_exposed: f64,
-}
-
-impl CommPlan {
-    fn build(step_model: &StepModel, method: Method, param_count: usize) -> Self {
-        let mesh = step_model.mesh;
-        let shard_bytes = param_count * 4 / mesh.shard;
-        let mut plan = CommPlan {
-            step_time_local: step_model.inner_step(false),
-            step_time_ddp: step_model.inner_step(true),
-            sync_exposed: step_model.sync_exposed(method),
-            ..Default::default()
-        };
-        for row in 0..mesh.shard {
-            let group = mesh.sync_group(row);
-            plan.sync_allreduce.push((
-                shard_bytes,
-                step_model.cost.time(CollOp::AllReduce, shard_bytes, &group),
-            ));
-        }
-        for col in 0..mesh.replicas {
-            let group = mesh.shard_group(col);
-            plan.scalar_sync
-                .push((4, step_model.cost.time(CollOp::ScalarSync, 4, &group)));
-        }
-        plan
-    }
 }
 
 pub struct Trainer {
@@ -242,7 +231,6 @@ pub struct Trainer {
     /// CO2 staleness queue of combined-but-unapplied updates.
     pending: std::collections::VecDeque<Vec<f32>>,
     step_model: StepModel,
-    rng: Rng,
     pub tracker: RunTracker,
     pub comm: CommStats,
     pub sim_time: f64,
@@ -255,7 +243,22 @@ pub struct Trainer {
     /// Per-replica loss-trace capacity reserved up front so steady-state
     /// recording never reallocates.
     loss_capacity: usize,
-    plan: CommPlan,
+    plan: sync::CommPlan,
+    // --- event core state (reused across rounds; see `clock`/`worker`) --
+    lanes: Vec<worker::Lane>,
+    events: clock::EventQueue,
+    /// Scratch member list for coalesced event groups.
+    group_buf: Vec<usize>,
+    /// Cached `[0, 1, .., N-1]` member list for barrier syncs.
+    all_members: Vec<usize>,
+    /// Monotonic anchor-update counter (staleness bookkeeping).
+    anchor_version: u64,
+    /// Per replica: anchor version after its last sync.
+    last_sync_version: Vec<u64>,
+    max_staleness: u64,
+    flushed_updates: u64,
+    /// Per-replica sync-event trace (filled when `cfg.trace_timeline`).
+    pub timeline: Timeline,
     // reusable scratch
     grad_buf: Vec<f32>,
     grad_acc: Vec<f32>,
@@ -299,10 +302,13 @@ impl Trainer {
             compute: cfg.base_step_time,
             cpu_offload: false,
         };
-        let rng = Rng::new(cfg.seed ^ 0x7123_55AA);
         let [b, s1] = engine.manifest.token_shape;
-        let scratch = SyncScratch::new(&table, cfg.mesh.replicas, b * s1);
-        let plan = CommPlan::build(&step_model, cfg.method, n);
+        let token_cap = b * s1;
+        let scratch = SyncScratch::new(&table, cfg.mesh.replicas, token_cap);
+        let lanes: Vec<worker::Lane> = (0..cfg.mesh.replicas)
+            .map(|_| worker::Lane::with_token_capacity(token_cap))
+            .collect();
+        let plan = sync::CommPlan::build(&step_model, cfg.method, &table);
         let mut tracker = RunTracker::new();
         // The tracker records once per round for step-synced local-SGD
         // methods (plus once per warmup DDP step), so reserving per-step
@@ -320,12 +326,20 @@ impl Trainer {
             loss_capacity
         };
         tracker.reserve(tracker_capacity);
+        let mut timeline = Timeline::default();
+        if cfg.trace_timeline {
+            // One event per replica per sync; ~2 syncs/round worst case
+            // under heterogeneity.
+            let est = (tracker_capacity as u64)
+                .saturating_mul(2 * cfg.mesh.replicas as u64)
+                .min(LOSS_TRACE_CAP) as usize;
+            timeline.reserve(est);
+        }
         Ok(Self {
             outer: OuterOpt::new(cfg.outer, n),
             detector,
             pending: Default::default(),
             step_model,
-            rng,
             tracker,
             comm: CommStats::default(),
             sim_time: 0.0,
@@ -335,6 +349,15 @@ impl Trainer {
             debug_norms: std::env::var("EDIT_DEBUG_NORMS").is_ok(),
             loss_capacity,
             plan,
+            lanes,
+            events: clock::EventQueue::with_capacity(cfg.mesh.replicas),
+            group_buf: Vec::with_capacity(cfg.mesh.replicas),
+            all_members: (0..cfg.mesh.replicas).collect(),
+            anchor_version: 0,
+            last_sync_version: vec![0; cfg.mesh.replicas],
+            max_staleness: 0,
+            flushed_updates: 0,
+            timeline,
             grad_buf: vec![0.0; n],
             grad_acc: vec![0.0; n],
             scratch,
@@ -355,10 +378,15 @@ impl Trainer {
         self.pjrt_calls
     }
 
+    /// Simulated duration of one local inner step — lets callers express
+    /// τ_time and straggler lags in step-time units.
+    pub fn inner_step_seconds(&self) -> f64 {
+        self.plan.step_time_local
+    }
+
     /// Fill the scratch token buffer with the batch for (replica, step).
-    /// Batch row r draws from physical worker (row = r mod M, col = j):
-    /// the column's M data-parallel workers interleave into the
-    /// effective column batch.
+    /// Used by the lock-step DDP path; local rounds use the per-lane
+    /// buffers (`worker::Lane::fill_batch`) so lanes can run in parallel.
     fn fill_batch(&mut self, replica: usize, step: u64) {
         let [b, s1] = self.engine.manifest.token_shape;
         let m = self.cfg.mesh.shard;
@@ -373,19 +401,6 @@ impl Trainer {
                 s1,
                 &mut self.scratch.tokens,
             );
-        }
-    }
-
-    fn straggler_lag(&mut self, replica: usize) -> f64 {
-        match self.cfg.straggler {
-            Straggler::None => 0.0,
-            Straggler::Random { lag } => {
-                let victim = self.rng.below(self.cfg.mesh.replicas as u64) as usize;
-                if victim == replica { lag } else { 0.0 }
-            }
-            Straggler::Consistent { lag, replica: r } => {
-                if r == replica { lag } else { 0.0 }
-            }
         }
     }
 
@@ -448,7 +463,13 @@ impl Trainer {
         let step_time = self.plan.step_time_ddp;
         let mut max_clock: f64 = 0.0;
         for j in 0..self.replicas.len() {
-            let lag = self.straggler_lag(j);
+            let lag = worker::straggler_lag(
+                &self.cfg.straggler,
+                self.cfg.seed,
+                j,
+                self.replicas[j].inner_steps,
+                self.cfg.mesh.replicas,
+            );
             let r = &mut self.replicas[j];
             r.clock += step_time + lag;
             r.inner_steps += 1;
@@ -465,206 +486,119 @@ impl Trainer {
         Ok(())
     }
 
-    /// One local inner step on replica `j`; returns its loss.
-    fn inner_step(&mut self, j: usize) -> Result<f32> {
-        let min_steps = self.replicas.iter().map(|r| r.inner_steps).min().unwrap_or(0);
-        let step_for_lr = self.global_step + (self.replicas[j].inner_steps - min_steps);
-        let lr = self.cfg.inner_lr.at(step_for_lr.min(self.cfg.total_steps)) as f32;
-        self.fill_batch(j, self.replicas[j].inner_steps);
-        let lag = self.straggler_lag(j);
-        let step_time = self.plan.step_time_local;
-        let r = &mut self.replicas[j];
-        r.adam_t += 1;
-        let adam_t = r.adam_t;
-        let out = self.engine.train_step(
-            &mut r.params,
-            &mut r.m,
-            &mut r.v,
-            &self.scratch.tokens,
-            lr,
-            adam_t,
-        )?;
-        self.pjrt_calls += 1;
-        // Fault injection: corrupt the sick replica's state (see Poison).
-        for p in &self.cfg.poison {
-            let sick = p.replica == usize::MAX || p.replica == j;
-            if sick && self.syncs >= p.from_sync && self.syncs < p.to_sync {
-                let mut prng = Rng::new(crate::util::prng::mix(
-                    self.cfg.seed ^ 0xBAD,
-                    (j as u64) << 32 | r.inner_steps,
-                ));
-                for x in r.params.iter_mut() {
-                    *x += p.strength * prng.normal_f32();
-                }
+    /// Run every replica's inner loop for one round — sequentially or on
+    /// parallel worker threads (`cfg.worker_threads`), bitwise
+    /// identically either way (see `worker` module docs). Returns
+    /// `(loss_sum, loss_count, max_steps)` folded in replica order.
+    fn run_lanes(&mut self, deadline: Option<f64>, step_cap: u64) -> Result<(f64, u64, u64)> {
+        let Trainer {
+            engine,
+            corpus,
+            cfg,
+            replicas,
+            lanes,
+            plan,
+            global_step,
+            syncs,
+            pjrt_calls,
+            ..
+        } = self;
+        debug_assert_eq!(replicas.len(), lanes.len());
+        let ctx = worker::RoundCtx {
+            engine: &*engine,
+            corpus: &*corpus,
+            cfg: &*cfg,
+            step_time: plan.step_time_local,
+            base_step: *global_step,
+            deadline,
+            step_cap,
+            syncs: *syncs,
+        };
+        let threads = ctx.cfg.worker_threads.max(1).min(replicas.len().max(1));
+        if threads <= 1 {
+            for (j, (r, lane)) in replicas.iter_mut().zip(lanes.iter_mut()).enumerate() {
+                lane.begin_round();
+                lane.run_round(j, r, &ctx)?;
             }
+        } else {
+            let mut work: Vec<(usize, &mut Replica, &mut worker::Lane)> = replicas
+                .iter_mut()
+                .zip(lanes.iter_mut())
+                .enumerate()
+                .map(|(j, (r, l))| (j, r, l))
+                .collect();
+            let chunk = work.len().div_ceil(threads);
+            std::thread::scope(|s| -> Result<()> {
+                let ctx = &ctx;
+                let mut handles = Vec::with_capacity(threads);
+                for batch in work.chunks_mut(chunk) {
+                    handles.push(s.spawn(move || -> Result<()> {
+                        for (j, r, lane) in batch.iter_mut() {
+                            lane.begin_round();
+                            lane.run_round(*j, &mut **r, ctx)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("worker lane thread panicked")?;
+                }
+                Ok(())
+            })?;
         }
-        r.clock += step_time + lag;
-        r.inner_steps += 1;
-        let gs = self.global_step + 1;
-        r.losses.push((gs, out.loss));
-        Ok(out.loss)
-    }
-
-    /// One local-SGD round: τ inner steps per replica (or τ_time worth
-    /// for A-EDiT), then synchronization.
-    fn local_round(&mut self) -> Result<()> {
-        let n = self.replicas.len();
+        // Fold in replica order: reproduces the sequential f64 sums.
         let mut loss_sum = 0.0f64;
         let mut loss_count = 0u64;
         let mut max_steps = 0u64;
+        for lane in lanes.iter() {
+            loss_sum += lane.loss_sum;
+            loss_count += lane.loss_count;
+            max_steps = max_steps.max(lane.steps);
+            *pjrt_calls += lane.calls;
+        }
+        Ok((loss_sum, loss_count, max_steps))
+    }
 
+    /// One local-SGD round. Step-synced methods: τ inner steps per
+    /// replica, then barrier synchronization. A-EDiT: every lane runs to
+    /// the τ_time deadline, then the event scheduler orders the sync
+    /// events by simulated clock (coalescing bitwise ties) and each
+    /// group anchor-syncs without waiting for the rest of the cluster.
+    fn local_round(&mut self) -> Result<()> {
         if self.cfg.method.time_based_sync() {
             let deadline = self.sim_time + self.cfg.tau_time;
-            for j in 0..n {
-                let mut steps = 0u64;
-                while (self.replicas[j].clock < deadline || steps == 0)
-                    && steps < self.cfg.tau * 4
-                {
-                    loss_sum += self.inner_step(j)? as f64;
-                    loss_count += 1;
-                    steps += 1;
-                }
-                max_steps = max_steps.max(steps);
+            let cap = self.cfg.tau.saturating_mul(4).max(1);
+            let (loss_sum, loss_count, max_steps) = self.run_lanes(Some(deadline), cap)?;
+            self.global_step += max_steps;
+            self.tracker
+                .record_loss(self.global_step, loss_sum / loss_count.max(1) as f64);
+            self.events.clear();
+            for (j, r) in self.replicas.iter().enumerate() {
+                self.events.push(clock::Event { clock: r.clock, replica: j });
             }
+            loop {
+                let mut members = std::mem::take(&mut self.group_buf);
+                if self.events.pop_group(&mut members).is_none() {
+                    self.group_buf = members;
+                    break;
+                }
+                let res = sync::anchor_sync(self, &members);
+                members.clear();
+                self.group_buf = members;
+                res?;
+            }
+            // One z-test round for the whole deadline window, however
+            // many event groups it fragmented into (the warmup gate must
+            // count rounds, not groups).
+            self.detector.advance();
         } else {
             let remaining = self.cfg.total_steps.saturating_sub(self.global_step);
             let tau = self.cfg.tau.min(remaining.max(1));
-            for j in 0..n {
-                for _ in 0..tau {
-                    loss_sum += self.inner_step(j)? as f64;
-                    loss_count += 1;
-                }
-            }
-            max_steps = tau;
-        }
-
-        self.global_step += max_steps;
-        let mean_loss = loss_sum / loss_count.max(1) as f64;
-        self.tracker.record_loss(self.global_step, mean_loss);
-        self.synchronize()?;
-        Ok(())
-    }
-
-    /// The outer synchronization (Alg. 1 lines 7-9 / Alg. 2): one fused
-    /// pass per module over the scratch arena — no allocations, no
-    /// collect-then-scatter staging.
-    fn synchronize(&mut self) -> Result<()> {
-        let n = self.replicas.len();
-        self.scratch.ensure_replicas(n);
-
-        // Communication accounting: each worker all-reduces its parameter
-        // shard across its sync group — one charge per mesh row.
-        for &(bytes, secs) in &self.plan.sync_allreduce {
-            self.comm.record(bytes, secs);
-        }
-
-        let mut rollbacks = 0u64;
-        if self.cfg.method.uses_penalty() {
-            self.detector.set_config(self.cfg.penalty);
-            // Layer-wise EDiT sync: per-module screen → combine → outer.
-            // Module ranges partition the flat vector and each apply only
-            // touches its own module, so computing Δ lazily per module
-            // from the in-place-updated anchor is exact.
-            for module in 0..self.table.num_modules() {
-                {
-                    let replicas = &self.replicas;
-                    self.scratch.load_module(
-                        module,
-                        |j| replicas[j].params.as_slice(),
-                        &self.anchor,
-                    );
-                }
-                if self.debug_norms {
-                    eprintln!(
-                        "sync {} module {module}: norms {:?}",
-                        self.syncs,
-                        self.scratch.norms()
-                    );
-                }
-                {
-                    let (norms, screened) = self.scratch.screen_buffers();
-                    self.detector.screen_into(module, norms, screened);
-                }
-                // Scalar norm exchange in every shard group (cheap).
-                for &(bytes, secs) in &self.plan.scalar_sync {
-                    self.comm.record(bytes, secs);
-                }
-                if !self.scratch.compute_weights(self.cfg.penalty.weighted_averaging) {
-                    rollbacks += 1;
-                    continue; // θ stays at anchor for this module (rollback)
-                }
-                // Fused weighted combine + module norm, then the outer
-                // apply with clip-β folded in.
-                let module_sq = self.scratch.combine_module(module);
-                let mut beta = 1.0f64;
-                if self.cfg.penalty.gradient_clip {
-                    let norm = module_sq.sqrt();
-                    beta = (self.cfg.penalty.phi / (norm + self.cfg.penalty.eps)).min(1.0);
-                }
-                self.scratch
-                    .apply_module(module, &mut self.outer, &mut self.anchor, beta as f32);
-            }
-            self.detector.advance();
-        } else {
-            // Uniform averaging (PLS/DiLoCo/CO2): mean pseudo gradient.
-            {
-                let replicas = &self.replicas;
-                self.scratch
-                    .load_full(|j| replicas[j].params.as_slice(), &self.anchor);
-            }
-            let staleness = self.cfg.method.outer_staleness();
-            if staleness == 0 {
-                let mean = self.scratch.mean_deltas();
-                self.outer.apply(&mut self.anchor, mean);
-            } else {
-                // CO2: apply the update combined `staleness` rounds ago.
-                // Queue buffers are recycled through the scratch free list.
-                let mut buf = self.scratch.take_spare();
-                self.scratch.mean_deltas_into(&mut buf);
-                self.pending.push_back(buf);
-                if self.pending.len() > staleness {
-                    let stale = self.pending.pop_front().unwrap();
-                    self.outer.apply(&mut self.anchor, &stale);
-                    self.scratch.put_spare(stale);
-                }
-            }
-        }
-
-        // All replicas adopt the synchronized parameters.
-        for r in &mut self.replicas {
-            r.params.copy_from_slice(&self.anchor);
-        }
-
-        // Clock barrier + exposed sync cost.
-        let max_clock = self
-            .replicas
-            .iter()
-            .map(|r| r.clock)
-            .fold(0.0f64, f64::max);
-        let after = max_clock + self.plan.sync_exposed;
-        for r in &mut self.replicas {
-            r.clock = after;
-        }
-        self.sim_time = after;
-        self.syncs += 1;
-
-        if self.cfg.eval_every_syncs > 0 && self.syncs % self.cfg.eval_every_syncs == 0 {
-            let val = self.evaluate()?;
-            self.tracker.record_val(self.global_step, val);
-        }
-        if self.cfg.log_every > 0 && self.syncs % self.cfg.log_every == 0 {
-            eprintln!(
-                "[{}] step {:>6} sync {:>4} loss {:.4} ppl {:.2} simtime {:.1}s",
-                self.cfg.method.name(),
-                self.global_step,
-                self.syncs,
-                self.tracker.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
-                self.tracker.val_ppl.last().map(|x| x.1).unwrap_or(f64::NAN),
-                self.sim_time,
-            );
-        }
-        if rollbacks > 0 {
-            self.detector.rollbacks += rollbacks;
+            let (loss_sum, loss_count, max_steps) = self.run_lanes(None, tau)?;
+            self.global_step += max_steps;
+            self.tracker
+                .record_loss(self.global_step, loss_sum / loss_count.max(1) as f64);
+            sync::barrier_sync(self)?;
         }
         Ok(())
     }
@@ -700,7 +634,10 @@ impl Trainer {
         Ok(out)
     }
 
-    /// Run to `total_steps`, returning the summary.
+    /// Run to `total_steps`, returning the summary. On exit, any CO2
+    /// staleness-queue updates still in flight are flushed into the
+    /// anchor (they were combined and their communication charged — the
+    /// historical behavior silently dropped them).
     pub fn run(&mut self) -> Result<RunSummary> {
         while self.global_step < self.cfg.total_steps {
             if self.in_warmup() {
@@ -709,6 +646,7 @@ impl Trainer {
                 self.local_round()?;
             }
         }
+        sync::flush_pending(self)?;
         // Final eval if none recorded yet.
         if self.tracker.val_ppl.is_empty() {
             let val = self.evaluate()?;
@@ -718,7 +656,8 @@ impl Trainer {
     }
 
     /// Run exactly one unit of progress (one DDP step or one round) —
-    /// the elastic driver uses this to interleave rescaling.
+    /// the elastic driver uses this to interleave rescaling. Does NOT
+    /// flush the CO2 staleness queue (see [`Trainer::run`]).
     pub fn run_round(&mut self) -> Result<()> {
         if self.in_warmup() {
             self.ddp_step()
@@ -745,15 +684,26 @@ impl Trainer {
             syncs: self.syncs,
             anomalies: self.detector.anomalies_flagged,
             rollbacks: self.detector.rollbacks,
+            max_staleness: self.max_staleness,
+            flushed_updates: self.flushed_updates,
             comm: self.comm.clone(),
         }
     }
 
     /// Elastic rescale to `new_replicas` columns (Fig. 6c): new replicas
     /// clone the synchronized parameters; leaving replicas are dropped.
-    /// Outer momentum and anomaly statistics persist.
+    /// Outer momentum and anomaly statistics persist. The event queue is
+    /// drained (rescaling is a rendezvous: callers rescale at round
+    /// boundaries, where every sync event has already been processed,
+    /// and all clocks re-align to the current simulated time).
     pub fn rescale(&mut self, new_replicas: usize) -> Result<()> {
         anyhow::ensure!(new_replicas > 0);
+        debug_assert!(
+            self.events.is_empty(),
+            "rescale with undrained sync events (mid-round rescale?)"
+        );
+        self.events.clear();
+        self.group_buf.clear();
         // Synchronize state into the anchor first if mid-round divergence
         // exists (callers rescale at round boundaries; anchor is current).
         let template = Replica::new(self.anchor.clone());
@@ -771,11 +721,19 @@ impl Trainer {
             r.params.copy_from_slice(&self.anchor);
             r.clock = clock;
         }
+        let [b, s1] = self.engine.manifest.token_shape;
+        let token_cap = b * s1;
+        self.lanes
+            .resize_with(new_replicas, || worker::Lane::with_token_capacity(token_cap));
+        // Joining replicas start "fresh" at the current anchor version.
+        self.last_sync_version.resize(new_replicas, self.anchor_version);
+        self.all_members.clear();
+        self.all_members.extend(0..new_replicas);
         self.cfg.mesh = MeshSpec::new(self.cfg.mesh.shard, new_replicas);
         self.step_model.mesh = self.cfg.mesh;
         self.detector.resize_replicas(new_replicas);
         self.scratch.ensure_replicas(new_replicas);
-        self.plan = CommPlan::build(&self.step_model, self.cfg.method, self.num_params());
+        self.plan = sync::CommPlan::build(&self.step_model, self.cfg.method, &self.table);
         Ok(())
     }
 

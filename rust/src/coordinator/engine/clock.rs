@@ -1,0 +1,219 @@
+//! Deterministic discrete-event scheduler for the per-replica execution
+//! core.
+//!
+//! The trainer's asynchronous path (A-EDiT, §3.3) orders replica sync
+//! events by *simulated* time, not by arrival order: events live in a
+//! binary min-heap keyed on `(clock, replica)` with `f64::total_cmp`
+//! for the clock and the replica index as a stable tie-break. The pop
+//! sequence is therefore a **total order** that depends only on the
+//! event set — never on thread scheduling, insertion order, or host
+//! timing — which is what makes the event core bitwise reproducible
+//! across runs and across worker-thread counts
+//! (`tests/scheduler_determinism.rs`).
+//!
+//! Coalescing: events whose clocks are **bitwise equal** are popped as
+//! one group ([`EventQueue::pop_group`], replicas in ascending index
+//! order). On a perfectly homogeneous cluster every replica accumulates
+//! the identical f64 step-time sequence, so all sync events coalesce
+//! into a single full-group event and the asynchronous path reduces
+//! exactly to EDiT's barriered synchronization — the equivalence the
+//! determinism suite asserts.
+//!
+//! Allocation discipline: the heap is a plain `Vec` sized once
+//! ([`EventQueue::with_capacity`]) and reused via [`EventQueue::clear`],
+//! so steady-state rounds push/pop without touching the allocator
+//! (`tests/sync_steady_state.rs` counts on this).
+
+/// One pending per-replica event (a worker becoming sync-eligible).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Simulated time (seconds) at which the event fires.
+    pub clock: f64,
+    /// Replica index — the stable tie-break for simultaneous events.
+    pub replica: usize,
+}
+
+impl Event {
+    /// Strict "fires earlier" order: clock first (`total_cmp`, so NaN
+    /// and signed zero still order deterministically), replica index as
+    /// the tie-break.
+    #[inline]
+    fn before(&self, other: &Event) -> bool {
+        match self.clock.total_cmp(&other.clock) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => self.replica < other.replica,
+        }
+    }
+}
+
+/// Binary min-heap of [`Event`]s over a reusable `Vec` (no allocation
+/// after `with_capacity` as long as occupancy stays within capacity).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: Vec<Event>,
+}
+
+impl EventQueue {
+    pub fn with_capacity(n: usize) -> Self {
+        Self { heap: Vec::with_capacity(n) }
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Earliest pending event, if any.
+    pub fn peek(&self) -> Option<Event> {
+        self.heap.first().copied()
+    }
+
+    pub fn push(&mut self, e: Event) {
+        self.heap.push(e);
+        let mut i = self.heap.len() - 1;
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].before(&self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let out = self.heap.pop();
+        let n = self.heap.len();
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut min = i;
+            if l < n && self.heap[l].before(&self.heap[min]) {
+                min = l;
+            }
+            if r < n && self.heap[r].before(&self.heap[min]) {
+                min = r;
+            }
+            if min == i {
+                break;
+            }
+            self.heap.swap(i, min);
+            i = min;
+        }
+        out
+    }
+
+    /// Pop the earliest event plus every further event whose clock is
+    /// **bitwise equal** to it, appending the replica indices (in
+    /// ascending order, by the tie-break) to `out`. Returns the group's
+    /// shared clock, or `None` when the queue is empty.
+    pub fn pop_group(&mut self, out: &mut Vec<usize>) -> Option<f64> {
+        let first = self.pop()?;
+        out.push(first.replica);
+        while let Some(next) = self.peek() {
+            if next.clock.total_cmp(&first.clock) == std::cmp::Ordering::Equal {
+                self.pop();
+                out.push(next.replica);
+            } else {
+                break;
+            }
+        }
+        Some(first.clock)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_clock_order() {
+        let mut q = EventQueue::with_capacity(8);
+        for (clock, replica) in [(3.0, 0), (1.0, 1), (2.0, 2), (0.5, 3)] {
+            q.push(Event { clock, replica });
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.replica).collect();
+        assert_eq!(order, vec![3, 1, 2, 0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_replica_index() {
+        let mut q = EventQueue::with_capacity(8);
+        // Inserted in scrambled order; equal clocks must pop 0,1,2.
+        for replica in [2usize, 0, 1] {
+            q.push(Event { clock: 4.25, replica });
+        }
+        q.push(Event { clock: 1.0, replica: 5 });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.replica).collect();
+        assert_eq!(order, vec![5, 0, 1, 2]);
+    }
+
+    #[test]
+    fn pop_group_coalesces_bitwise_equal_clocks() {
+        let mut q = EventQueue::with_capacity(8);
+        for replica in [3usize, 1, 2] {
+            q.push(Event { clock: 2.5, replica });
+        }
+        q.push(Event { clock: 2.5000001, replica: 0 });
+        let mut group = Vec::new();
+        let clock = q.pop_group(&mut group).unwrap();
+        assert_eq!(clock, 2.5);
+        assert_eq!(group, vec![1, 2, 3]);
+        group.clear();
+        assert_eq!(q.pop_group(&mut group), Some(2.5000001));
+        assert_eq!(group, vec![0]);
+        assert_eq!(q.pop_group(&mut group), None);
+    }
+
+    #[test]
+    fn reuse_after_clear() {
+        let mut q = EventQueue::with_capacity(4);
+        q.push(Event { clock: 1.0, replica: 0 });
+        q.clear();
+        assert!(q.is_empty());
+        q.push(Event { clock: 2.0, replica: 1 });
+        assert_eq!(q.pop().unwrap().replica, 1);
+    }
+
+    #[test]
+    fn total_order_is_permutation_invariant() {
+        // Same event set in two insertion orders -> same pop sequence.
+        let events = [
+            Event { clock: 0.5, replica: 4 },
+            Event { clock: 0.5, replica: 1 },
+            Event { clock: 1.5, replica: 0 },
+            Event { clock: 0.25, replica: 3 },
+            Event { clock: 1.5, replica: 2 },
+        ];
+        let mut a = EventQueue::with_capacity(8);
+        let mut b = EventQueue::with_capacity(8);
+        for e in events {
+            a.push(e);
+        }
+        for e in events.iter().rev() {
+            b.push(*e);
+        }
+        loop {
+            let (x, y) = (a.pop(), b.pop());
+            assert_eq!(x, y);
+            if x.is_none() {
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! The two synchronization paths of the event-driven execution core,
+//! plus the precomputed [`CommPlan`] that prices them.
+//!
+//! **Barrier sync** ([`barrier_sync`]) — the step-synced methods
+//! (Baseline warmup, PLS, DiLoCo, CO2/CO2*, EDiT): every replica
+//! participates, the pseudo-gradient combine runs per module (penalty
+//! methods) or over the full vector (uniform averaging), and all clocks
+//! rendezvous at `max(clocks) + sync_exposed`.
+//!
+//! **Anchor sync** ([`anchor_sync`]) — the A-EDiT path: a *group* of
+//! replicas whose τ_time deadlines fired at the same simulated instant
+//! synchronizes against the shared anchor **without waiting for the
+//! other replicas**. Group membership comes from the event scheduler
+//! ([`super::clock`]): bitwise-equal clocks coalesce, so a homogeneous
+//! cluster forms one full group per round (A-EDiT ≡ EDiT there), while
+//! a straggler's sync fires later as its own group and never stretches
+//! its peers' clocks — the no-global-barrier property the paper's
+//! Fig. 5 heterogeneity results rely on. Per-replica staleness (anchor
+//! versions missed between consecutive syncs) is tracked on every path.
+//!
+//! Both paths share one numerics core, [`layerwise_sync`]: per module —
+//! load pseudo-gradients (compact subset rows in the scratch arena) →
+//! anomaly screen → softmax weights → fused combine + clip-β →
+//! outer-optimizer apply → **per-module anchor adoption** (synchronized
+//! parameters are copied back to the participants module by module,
+//! cache-warm, instead of the historical separate full-vector pass).
+//!
+//! Determinism invariants: group processing follows the scheduler's
+//! total event order; within a group, members are visited in ascending
+//! replica index; all comm charges come from the precomputed plan. No
+//! step in either path allocates in steady state.
+//!
+//! Overlap accounting: the plan prices EDiT/A-EDiT's exposed sync cost
+//! with the layer-wise pipeline model
+//! ([`StepModel::layerwise_exposed`]): module k's all-reduce hides
+//! behind the forward compute of the modules pipelined after it, so the
+//! exposed residual is the pipeline stall (first module fully exposed),
+//! not the full serial communication time.
+
+use anyhow::Result;
+
+use crate::collectives::CollOp;
+use crate::coordinator::method::Method;
+use crate::metrics::TimelineEvent;
+use crate::simulator::stepmodel::StepModel;
+use crate::tensor::ModuleTable;
+
+use super::Trainer;
+
+/// Precomputed per-round communication charges and step timings.
+///
+/// `MeshSpec::sync_group`/`shard_group` allocate rank vectors and the
+/// α-β formulas are pure functions of (mesh, cost, module table), so the
+/// trainer resolves them once at construction (and again after an
+/// elastic rescale) instead of per step / per module / per sync event.
+#[derive(Debug, Clone, Default)]
+pub(super) struct CommPlan {
+    /// (bytes, seconds) of one full-shard all-reduce per mesh row (sync
+    /// group) — warmup/DDP gradient exchange and uniform-averaging sync.
+    pub sync_allreduce: Vec<(usize, f64)>,
+    /// (bytes, seconds) of one scalar-norm exchange per mesh column
+    /// (shard group) — charged per participating member per module.
+    pub scalar_sync: Vec<(usize, f64)>,
+    /// (bytes, seconds) of one per-module shard all-reduce (layer-wise
+    /// barrier sync; indexed by module, charged once per mesh row).
+    pub module_allreduce: Vec<(usize, f64)>,
+    /// (bytes, seconds) of one per-module anchor push/pull (A-EDiT
+    /// anchor sync; indexed by module, charged per member per mesh row).
+    pub anchor_exchange: Vec<(usize, f64)>,
+    /// Simulated duration of one local / one DDP inner step.
+    pub step_time_local: f64,
+    pub step_time_ddp: f64,
+    /// Exposed sync cost at an outer boundary for the configured method
+    /// (layer-wise pipeline residual for EDiT/A-EDiT).
+    pub sync_exposed: f64,
+}
+
+impl CommPlan {
+    pub(super) fn build(step_model: &StepModel, method: Method, table: &ModuleTable) -> Self {
+        let mesh = step_model.mesh;
+        let param_count = table.total;
+        let shard_bytes = param_count * 4 / mesh.shard;
+        let mut plan = CommPlan {
+            step_time_local: step_model.inner_step(false),
+            step_time_ddp: step_model.inner_step(true),
+            sync_exposed: step_model.sync_exposed(method),
+            ..Default::default()
+        };
+        for row in 0..mesh.shard {
+            let group = mesh.sync_group(row);
+            plan.sync_allreduce.push((
+                shard_bytes,
+                step_model.cost.time(CollOp::AllReduce, shard_bytes, &group),
+            ));
+        }
+        for col in 0..mesh.replicas {
+            let group = mesh.shard_group(col);
+            plan.scalar_sync
+                .push((4, step_model.cost.time(CollOp::ScalarSync, 4, &group)));
+        }
+        if method.layerwise_sync() {
+            let group = mesh.sync_group(0);
+            let mut module_bytes = Vec::with_capacity(table.num_modules());
+            for m in 0..table.num_modules() {
+                let full = table.module_len(m) * 4;
+                module_bytes.push(full);
+                let mb = (full / mesh.shard).max(1);
+                plan.module_allreduce
+                    .push((mb, step_model.cost.time(CollOp::AllReduce, mb, &group)));
+                // Anchor push + pull of the module shard over the slow
+                // links (no peer involvement).
+                plan.anchor_exchange.push((
+                    2 * mb,
+                    2.0 * step_model.cost.time(CollOp::Broadcast, mb, &group),
+                ));
+            }
+            // Layer-wise overlap: exposed = pipeline stall, not the full
+            // serial comm (single source of truth in the step model).
+            plan.sync_exposed = step_model.layerwise_exposed(&module_bytes);
+        }
+        plan
+    }
+}
+
+/// Barrier synchronization at a step-synced outer boundary (Alg. 1
+/// lines 7-9 / Alg. 2): every replica participates; clocks rendezvous.
+pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
+    let n = t.replicas.len();
+    t.scratch.ensure_replicas(n);
+
+    let mut rollbacks = 0u64;
+    if t.cfg.method.uses_penalty() {
+        // Layer-wise sync: one shard all-reduce per module per mesh row.
+        let rows = t.cfg.mesh.shard;
+        for &(bytes, secs) in &t.plan.module_allreduce {
+            for _row in 0..rows {
+                t.comm.record(bytes, secs);
+            }
+        }
+        let members = std::mem::take(&mut t.all_members);
+        let res = layerwise_sync(t, &members);
+        t.all_members = members;
+        rollbacks = res?;
+    } else {
+        // Full-shard all-reduce per mesh row (uniform-averaging methods).
+        for &(bytes, secs) in &t.plan.sync_allreduce {
+            t.comm.record(bytes, secs);
+        }
+        {
+            let replicas = &t.replicas;
+            t.scratch
+                .load_full(|j| replicas[j].params.as_slice(), &t.anchor);
+        }
+        let staleness = t.cfg.method.outer_staleness();
+        if staleness == 0 {
+            let mean = t.scratch.mean_deltas();
+            t.outer.apply(&mut t.anchor, mean);
+        } else {
+            // CO2: apply the update combined `staleness` rounds ago.
+            // Queue buffers are recycled through the scratch free list;
+            // updates still in flight when `run()` ends are landed by
+            // [`flush_pending`] so no combined work is silently dropped.
+            let mut buf = t.scratch.take_spare();
+            t.scratch.mean_deltas_into(&mut buf);
+            t.pending.push_back(buf);
+            if t.pending.len() > staleness {
+                let stale = t.pending.pop_front().unwrap();
+                t.outer.apply(&mut t.anchor, &stale);
+                t.scratch.put_spare(stale);
+            }
+        }
+        // All replicas adopt the synchronized parameters (full-vector
+        // copy; the layer-wise path folds adoption into its sweep).
+        for r in &mut t.replicas {
+            r.params.copy_from_slice(&t.anchor);
+        }
+    }
+
+    // Clock barrier + exposed sync cost.
+    let max_clock = t
+        .replicas
+        .iter()
+        .map(|r| r.clock)
+        .fold(0.0f64, f64::max);
+    let after = max_clock + t.plan.sync_exposed;
+    for r in &mut t.replicas {
+        r.clock = after;
+    }
+    t.sim_time = after;
+
+    note_sync_all(t, after);
+    if t.cfg.method.uses_penalty() {
+        t.detector.advance();
+    }
+    if rollbacks > 0 {
+        t.detector.rollbacks += rollbacks;
+    }
+    post_sync(t)
+}
+
+/// Anchor synchronization for one event group (A-EDiT): the members
+/// combine against the shared anchor and adopt it; non-members are
+/// untouched — no global barrier, no shared post-sync clock.
+pub(super) fn anchor_sync(t: &mut Trainer, members: &[usize]) -> Result<()> {
+    debug_assert!(!members.is_empty());
+    t.scratch.ensure_replicas(t.replicas.len());
+
+    // Per-member anchor push/pull of every module shard.
+    let charges = members.len() * t.cfg.mesh.shard;
+    for &(bytes, secs) in &t.plan.anchor_exchange {
+        for _ in 0..charges {
+            t.comm.record(bytes, secs);
+        }
+    }
+
+    let rollbacks = layerwise_sync(t, members)?;
+
+    // Members advance to the group's completion time plus the exposed
+    // residual; everyone else keeps their own clock.
+    let max_clock = members
+        .iter()
+        .map(|&j| t.replicas[j].clock)
+        .fold(0.0f64, f64::max);
+    let after = max_clock + t.plan.sync_exposed;
+    for &j in members {
+        t.replicas[j].clock = after;
+    }
+    if after > t.sim_time {
+        t.sim_time = after;
+    }
+
+    note_sync_members(t, members, after);
+    // Note: the anomaly detector's per-round counter (`advance`) is NOT
+    // bumped here — a heterogeneous round produces several event groups
+    // and the z-test warmup must count *rounds*, not groups; the round
+    // driver advances it once after the event queue drains. The `syncs`
+    // counter (below, via `post_sync`) intentionally does count groups:
+    // each group is a real synchronization operation, so eval/log
+    // cadences and the summary reflect actual sync activity.
+    if rollbacks > 0 {
+        t.detector.rollbacks += rollbacks;
+    }
+    post_sync(t)
+}
+
+/// Shared numerics core: layer-wise screen → combine → outer apply →
+/// adopt, over the `members` subset (compact scratch rows). Returns the
+/// number of rolled-back modules.
+fn layerwise_sync(t: &mut Trainer, members: &[usize]) -> Result<u64> {
+    t.detector.set_config(t.cfg.penalty);
+    let mut rollbacks = 0u64;
+    // Module ranges partition the flat vector and each apply only
+    // touches its own module, so computing Δ lazily per module from the
+    // in-place-updated anchor is exact — and so is adopting the anchor
+    // back into member parameters module by module.
+    for module in 0..t.table.num_modules() {
+        {
+            let replicas = &t.replicas;
+            t.scratch.load_module_subset(
+                module,
+                members,
+                |j| replicas[j].params.as_slice(),
+                &t.anchor,
+            );
+        }
+        if t.debug_norms {
+            eprintln!(
+                "sync {} module {module} members {members:?}: norms {:?}",
+                t.syncs,
+                t.scratch.norms()
+            );
+        }
+        {
+            let (norms, screened) = t.scratch.screen_buffers();
+            t.detector
+                .screen_subset_into(module, members, norms, screened);
+        }
+        // Scalar norm exchange in every member's shard group (cheap).
+        for &j in members {
+            let (bytes, secs) = t.plan.scalar_sync[j];
+            t.comm.record(bytes, secs);
+        }
+        if !t.scratch.compute_weights(t.cfg.penalty.weighted_averaging) {
+            rollbacks += 1;
+            // θ stays at the anchor for this module (rollback); members
+            // still re-adopt it, discarding their local divergence.
+            adopt_module(t, module, members);
+            continue;
+        }
+        // Fused weighted combine + module norm, then the outer apply
+        // with clip-β folded in.
+        let module_sq = t.scratch.combine_module(module);
+        let mut beta = 1.0f64;
+        if t.cfg.penalty.gradient_clip {
+            let norm = module_sq.sqrt();
+            beta = (t.cfg.penalty.phi / (norm + t.cfg.penalty.eps)).min(1.0);
+        }
+        t.scratch
+            .apply_module(module, &mut t.outer, &mut t.anchor, beta as f32);
+        adopt_module(t, module, members);
+    }
+    Ok(rollbacks)
+}
+
+/// Copy the anchor's module slices into each member's parameters — the
+/// per-module adoption sweep that replaces the historical full-vector
+/// `params ← anchor` pass (one cache-warm write per module instead of a
+/// second full traversal).
+fn adopt_module(t: &mut Trainer, module: usize, members: &[usize]) {
+    let Trainer { scratch, replicas, anchor, .. } = t;
+    for r in scratch.module_ranges_of(module) {
+        let src = &anchor[r.offset..r.offset + r.len];
+        for &j in members {
+            replicas[j].params[r.offset..r.offset + r.len].copy_from_slice(src);
+        }
+    }
+}
+
+/// Apply any CO2 staleness-queue updates still in flight when the run
+/// ends. Without this, the last `staleness` combined outer updates were
+/// silently dropped at `run()` exit (their communication had already
+/// been charged and their compute spent). Applied in FIFO order — the
+/// order they would have landed in had the run continued.
+pub(super) fn flush_pending(t: &mut Trainer) -> Result<()> {
+    if t.pending.is_empty() {
+        return Ok(());
+    }
+    while let Some(stale) = t.pending.pop_front() {
+        t.outer.apply(&mut t.anchor, &stale);
+        t.flushed_updates += 1;
+        t.scratch.put_spare(stale);
+    }
+    for r in &mut t.replicas {
+        r.params.copy_from_slice(&t.anchor);
+    }
+    Ok(())
+}
+
+/// Staleness + timeline bookkeeping for a full-cluster sync.
+fn note_sync_all(t: &mut Trainer, clock: f64) {
+    let v = t.anchor_version;
+    for j in 0..t.replicas.len() {
+        note_one(t, j, v, clock);
+    }
+    t.anchor_version = v + 1;
+}
+
+/// Staleness + timeline bookkeeping for one anchor-sync group.
+fn note_sync_members(t: &mut Trainer, members: &[usize], clock: f64) {
+    let v = t.anchor_version;
+    for &j in members {
+        note_one(t, j, v, clock);
+    }
+    t.anchor_version = v + 1;
+}
+
+fn note_one(t: &mut Trainer, j: usize, version: u64, clock: f64) {
+    let stale = version - t.last_sync_version[j];
+    if stale > t.max_staleness {
+        t.max_staleness = stale;
+    }
+    t.last_sync_version[j] = version + 1;
+    if t.cfg.trace_timeline {
+        t.timeline.push(TimelineEvent {
+            replica: j,
+            clock,
+            global_step: t.global_step,
+            staleness: stale,
+        });
+    }
+}
+
+/// Post-sync bookkeeping shared by both paths: sync counter, periodic
+/// validation, progress log.
+fn post_sync(t: &mut Trainer) -> Result<()> {
+    t.syncs += 1;
+    if t.cfg.eval_every_syncs > 0 && t.syncs % t.cfg.eval_every_syncs == 0 {
+        let val = t.evaluate()?;
+        t.tracker.record_val(t.global_step, val);
+    }
+    if t.cfg.log_every > 0 && t.syncs % t.cfg.log_every == 0 {
+        eprintln!(
+            "[{}] step {:>6} sync {:>4} loss {:.4} ppl {:.2} simtime {:.1}s",
+            t.cfg.method.name(),
+            t.global_step,
+            t.syncs,
+            t.tracker.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
+            t.tracker.val_ppl.last().map(|x| x.1).unwrap_or(f64::NAN),
+            t.sim_time,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,253 @@
+//! Per-replica worker state machine: the inner-loop "lane" of the
+//! event-driven execution core.
+//!
+//! One [`Lane`] per logical replica owns everything a replica's inner
+//! loop touches — its token batch buffer, its round counters, its
+//! partial loss sums — so the inner loops of independent replicas are
+//! **data-disjoint** and can run on parallel OS worker threads
+//! (`TrainConfig::worker_threads > 1`) with results bitwise identical
+//! to the sequential schedule. Three properties make that true:
+//!
+//!  1. every stochastic input is a *stateless* function of
+//!     `(seed, replica, inner_step)` — data streams
+//!     (`Corpus::sequence_into`), straggler lag ([`straggler_lag`]) and
+//!     poison noise all derive from pure hashes, never from a shared
+//!     mutable RNG;
+//!  2. the inner learning-rate is anchored to the round's base step
+//!     (`base_step + steps_this_round`), not to cross-replica progress,
+//!     so no lane reads another lane's counters;
+//!  3. partial loss sums are folded in replica-index order after the
+//!     lanes join, reproducing the sequential f64 association exactly.
+//!
+//! Between two synchronizations no lane reads or writes another
+//! replica's state, so per-step interleavings commute; the scheduler's
+//! total order (see [`super::clock`]) only needs to order the *sync*
+//! events. The round driver (`Trainer::run_lanes`) enforces the rest.
+//!
+//! Steady-state allocation: a lane's buffers are sized at construction
+//! and reused; `run_round` performs zero heap allocations
+//! (`tests/sync_steady_state.rs`).
+//!
+//! Note on backends: lanes call the execution engine through `&Engine`,
+//! which requires the backend's step methods to take `&self` (true of
+//! the deterministic stub; the feature-gated PJRT backend is
+//! single-threaded and incompatible with parallel lanes — see
+//! `runtime/mod.rs`).
+
+use anyhow::Result;
+
+use crate::data::{Corpus, Split};
+use crate::runtime::Engine;
+use crate::util::prng::{mix, Rng};
+
+use super::{Replica, Straggler, TrainConfig};
+
+/// Immutable per-round context shared by every lane (must stay `Sync`).
+pub(super) struct RoundCtx<'a> {
+    pub engine: &'a Engine,
+    pub corpus: &'a Corpus,
+    pub cfg: &'a TrainConfig,
+    /// Simulated duration of one local inner step (`CommPlan`).
+    pub step_time: f64,
+    /// `global_step` at round start — the LR-schedule anchor.
+    pub base_step: u64,
+    /// A-EDiT τ_time deadline (simulated seconds); `None` = fixed-step.
+    pub deadline: Option<f64>,
+    /// Steps per lane: the exact count in fixed-step mode, the safety
+    /// cap (4τ) in deadline mode.
+    pub step_cap: u64,
+    /// Completed sync rounds at round start (poison windows key on it).
+    pub syncs: u64,
+}
+
+/// Per-replica round state (the worker's private scratch).
+#[derive(Debug)]
+pub(super) struct Lane {
+    /// Token batch buffer (replaces the shared scratch buffer so lanes
+    /// can fill batches concurrently).
+    pub tokens: Vec<i32>,
+    /// Partial f64 loss sum over this lane's steps this round.
+    pub loss_sum: f64,
+    pub loss_count: u64,
+    /// Inner steps taken this round.
+    pub steps: u64,
+    /// Engine step invocations this round (folded into `pjrt_calls`).
+    pub calls: u64,
+}
+
+impl Lane {
+    pub fn with_token_capacity(cap: usize) -> Self {
+        Self {
+            tokens: Vec::with_capacity(cap),
+            loss_sum: 0.0,
+            loss_count: 0,
+            steps: 0,
+            calls: 0,
+        }
+    }
+
+    /// Reset the round counters (token capacity is retained).
+    pub fn begin_round(&mut self) {
+        self.loss_sum = 0.0;
+        self.loss_count = 0;
+        self.steps = 0;
+        self.calls = 0;
+    }
+
+    /// Run replica `j`'s inner loop for one round: fixed `step_cap`
+    /// steps, or — in deadline mode — until the replica's clock passes
+    /// the τ_time deadline (at least one step, at most the cap).
+    pub fn run_round(&mut self, j: usize, r: &mut Replica, ctx: &RoundCtx) -> Result<()> {
+        match ctx.deadline {
+            Some(deadline) => {
+                while (r.clock < deadline || self.steps == 0) && self.steps < ctx.step_cap {
+                    self.inner_step(j, r, ctx)?;
+                }
+            }
+            None => {
+                for _ in 0..ctx.step_cap {
+                    self.inner_step(j, r, ctx)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fill the lane's token buffer with the batch for (replica, step).
+    /// Batch row b draws from physical worker (row = b mod M, col = j):
+    /// the column's M data-parallel workers interleave into the
+    /// effective column batch (same layout as the warmup DDP path).
+    fn fill_batch(&mut self, j: usize, step: u64, ctx: &RoundCtx) {
+        let [b, s1] = ctx.engine.manifest.token_shape;
+        let m = ctx.cfg.mesh.shard;
+        self.tokens.clear();
+        for row in 0..b {
+            let worker = ctx.cfg.mesh.rank(row % m, j);
+            ctx.corpus
+                .sequence_into(Split::Train, worker, step, row / m, s1, &mut self.tokens);
+        }
+    }
+
+    /// One local inner step on replica `j`: fill batch → fused
+    /// fwd+bwd+AdamW → poison injection → clock advance (+ straggler
+    /// lag) → loss bookkeeping.
+    ///
+    /// LR anchoring: `lr(base_step + k)` for the lane's k-th step this
+    /// round — every replica walks the same schedule segment. (The
+    /// historical sequential loop derived the step from a cross-replica
+    /// `min(inner_steps)` snapshot, which pinned the *last* replica of
+    /// each round to `lr(base_step)` for all τ steps — an
+    /// execution-order artifact, not a design choice. The uniform
+    /// anchoring removes that asymmetry and the cross-lane read.)
+    fn inner_step(&mut self, j: usize, r: &mut Replica, ctx: &RoundCtx) -> Result<()> {
+        let lr_step = (ctx.base_step + self.steps).min(ctx.cfg.total_steps);
+        let lr = ctx.cfg.inner_lr.at(lr_step) as f32;
+        self.fill_batch(j, r.inner_steps, ctx);
+        let lag = straggler_lag(
+            &ctx.cfg.straggler,
+            ctx.cfg.seed,
+            j,
+            r.inner_steps,
+            ctx.cfg.mesh.replicas,
+        );
+        r.adam_t += 1;
+        let adam_t = r.adam_t;
+        let out =
+            ctx.engine
+                .train_step(&mut r.params, &mut r.m, &mut r.v, &self.tokens, lr, adam_t)?;
+        self.calls += 1;
+        // Fault injection: corrupt the sick replica's state (see Poison).
+        for p in &ctx.cfg.poison {
+            let sick = p.replica == usize::MAX || p.replica == j;
+            if sick && ctx.syncs >= p.from_sync && ctx.syncs < p.to_sync {
+                let mut prng = Rng::new(mix(
+                    ctx.cfg.seed ^ 0xBAD,
+                    (j as u64) << 32 | r.inner_steps,
+                ));
+                for x in r.params.iter_mut() {
+                    *x += p.strength * prng.normal_f32();
+                }
+            }
+        }
+        r.clock += ctx.step_time + lag;
+        r.inner_steps += 1;
+        r.losses.push((ctx.base_step + self.steps + 1, out.loss));
+        self.loss_sum += out.loss as f64;
+        self.loss_count += 1;
+        self.steps += 1;
+        Ok(())
+    }
+}
+
+/// Stateless straggler lag for (replica, inner_step) — a pure function
+/// of the seed so lanes can draw it concurrently in any order without a
+/// shared RNG. `Random` keeps the historical per-step-per-replica
+/// Bernoulli(1/N) marginal (each sequential draw only ever affected the
+/// replica that made it).
+pub(super) fn straggler_lag(
+    straggler: &Straggler,
+    seed: u64,
+    replica: usize,
+    inner_step: u64,
+    replicas: usize,
+) -> f64 {
+    match *straggler {
+        Straggler::None => 0.0,
+        Straggler::Random { lag } => {
+            let key = (replica as u64) << 40 ^ inner_step;
+            let mut rng = Rng::new(mix(seed ^ 0x0057_12A6, key));
+            if rng.below(replicas.max(1) as u64) as usize == replica {
+                lag
+            } else {
+                0.0
+            }
+        }
+        Straggler::Consistent { lag, replica: victim } => {
+            if victim == replica {
+                lag
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consistent_lag_hits_only_victim() {
+        let s = Straggler::Consistent { lag: 2.0, replica: 1 };
+        assert_eq!(straggler_lag(&s, 7, 0, 5, 4), 0.0);
+        assert_eq!(straggler_lag(&s, 7, 1, 5, 4), 2.0);
+    }
+
+    #[test]
+    fn random_lag_is_pure_and_roughly_uniform() {
+        let s = Straggler::Random { lag: 1.0 };
+        let mut hits = 0usize;
+        for step in 0..4000u64 {
+            let a = straggler_lag(&s, 42, 2, step, 4);
+            let b = straggler_lag(&s, 42, 2, step, 4);
+            assert_eq!(a, b, "stateless draws must be reproducible");
+            if a > 0.0 {
+                hits += 1;
+            }
+        }
+        // Bernoulli(1/4) over 4000 draws.
+        assert!((700..1300).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn random_lag_independent_across_replicas_and_steps() {
+        let s = Straggler::Random { lag: 1.0 };
+        let a = straggler_lag(&s, 42, 0, 17, 8);
+        let b = straggler_lag(&s, 42, 1, 17, 8);
+        let c = straggler_lag(&s, 42, 0, 18, 8);
+        // Not asserting specific values — just that the keys differ and
+        // nothing panics; reproducibility is covered above.
+        let _ = (a, b, c);
+        assert_eq!(straggler_lag(&Straggler::None, 42, 0, 17, 8), 0.0);
+    }
+}

@@ -2,8 +2,12 @@
 //!
 //! * [`mesh`]     — the M×N device mesh (shard groups × sync groups);
 //! * [`method`]   — EDiT, A-EDiT and the baseline method zoo;
-//! * [`engine`]   — the local-SGD training engine (Alg. 1) with virtual
-//!                  clocks, straggler injection and elastic rescaling;
+//! * [`engine`]   — the local-SGD training engine (Alg. 1): a thin
+//!                  facade over the event-driven per-replica execution
+//!                  core (`engine/clock.rs` scheduler, `engine/worker.rs`
+//!                  lanes, `engine/sync.rs` barrier + anchor sync paths)
+//!                  with virtual clocks, straggler injection, parallel
+//!                  worker threads and elastic rescaling;
 //! * [`penalty`]  — the pseudo-gradient penalty (Alg. 2): EMA z-test
 //!                  anomaly elimination, softmax(-norm) weighted
 //!                  averaging, pseudo-gradient clipping, rollback;

@@ -164,19 +164,45 @@ impl AnomalyDetector {
         let in_warmup = self.syncs_seen < self.cfg.warmup_syncs;
         out.clear();
         for (replica, &g) in norms.iter().enumerate() {
-            let idx = replica * self.modules + module;
-            let anomalous = self.cfg.anomaly_elimination
-                && !in_warmup
-                && (self.stats[idx].z(g, self.cfg.sigma_floor_frac) > self.cfg.delta
-                    || !g.is_finite());
-            if anomalous {
-                self.anomalies_flagged += 1;
-                out.push(f64::INFINITY);
-                // Eq. 1 update skipped for infinite G.
-            } else {
-                self.stats[idx].update(g, self.cfg.alpha);
-                out.push(g);
-            }
+            let screened = self.screen_one(replica * self.modules + module, g, in_warmup);
+            out.push(screened);
+        }
+    }
+
+    /// Subset variant of [`Self::screen_into`] for the per-replica
+    /// anchor syncs (A-EDiT event groups): `norms[i]` belongs to replica
+    /// `members[i]`; only those replicas' EMA states read/update, in
+    /// slice order. With `members = [0, 1, .., n-1]` this is exactly
+    /// [`Self::screen_into`].
+    pub fn screen_subset_into(
+        &mut self,
+        module: usize,
+        members: &[usize],
+        norms: &[f64],
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(members.len(), norms.len());
+        let in_warmup = self.syncs_seen < self.cfg.warmup_syncs;
+        out.clear();
+        for (&replica, &g) in members.iter().zip(norms) {
+            let screened = self.screen_one(replica * self.modules + module, g, in_warmup);
+            out.push(screened);
+        }
+    }
+
+    /// z-test one (replica, module) norm: returns +inf (flagged, EMA
+    /// untouched) or the norm itself (EMA updated — Eq. 1).
+    fn screen_one(&mut self, idx: usize, g: f64, in_warmup: bool) -> f64 {
+        let anomalous = self.cfg.anomaly_elimination
+            && !in_warmup
+            && (self.stats[idx].z(g, self.cfg.sigma_floor_frac) > self.cfg.delta
+                || !g.is_finite());
+        if anomalous {
+            self.anomalies_flagged += 1;
+            f64::INFINITY
+        } else {
+            self.stats[idx].update(g, self.cfg.alpha);
+            g
         }
     }
 
@@ -453,6 +479,47 @@ mod tests {
         // 100 is normal for module 1, anomalous for module 0.
         assert!(det.screen(0, &[100.0])[0].is_infinite());
         assert!(det.screen(1, &[100.0])[0].is_finite());
+    }
+
+    #[test]
+    fn subset_screen_touches_only_members() {
+        let cfg = PenaltyConfig { warmup_syncs: 0, ..Default::default() };
+        let mut det = AnomalyDetector::new(3, 1, cfg);
+        // Seed replicas 0 and 2 with a stable stream via subset screens.
+        let mut out = Vec::new();
+        for i in 0..25 {
+            let jitter = 0.01 * ((i % 4) as f64);
+            det.screen_subset_into(0, &[0, 2], &[1.0 + jitter, 1.0 + jitter], &mut out);
+            assert!(out.iter().all(|g| g.is_finite()));
+            det.advance();
+        }
+        // A spike is anomalous for the seeded members...
+        det.screen_subset_into(0, &[0, 2], &[40.0, 40.0], &mut out);
+        assert!(out[0].is_infinite() && out[1].is_infinite());
+        // ...but replica 1 was never updated, so its first sample passes.
+        det.screen_subset_into(0, &[1], &[40.0], &mut out);
+        assert!(out[0].is_finite());
+    }
+
+    #[test]
+    fn subset_screen_identity_matches_full() {
+        let cfg = PenaltyConfig { warmup_syncs: 1, ..Default::default() };
+        let mut a = AnomalyDetector::new(2, 2, cfg);
+        let mut b = AnomalyDetector::new(2, 2, cfg);
+        let members = [0usize, 1];
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        for i in 0..30 {
+            let norms = [1.0 + 0.02 * (i % 5) as f64, 2.0 + 0.01 * (i % 3) as f64];
+            for module in 0..2 {
+                a.screen_into(module, &norms, &mut out_a);
+                b.screen_subset_into(module, &members, &norms, &mut out_b);
+                assert_eq!(out_a, out_b, "i={i} module={module}");
+            }
+            a.advance();
+            b.advance();
+        }
+        assert_eq!(a.anomalies_flagged, b.anomalies_flagged);
     }
 
     #[test]

@@ -138,6 +138,12 @@ impl SyncScratch {
         screened.extend_from_slice(norms);
     }
 
+    /// Cached ranges of module `m` — the sync sweep's per-module anchor
+    /// adoption copies through this without re-deriving the table.
+    pub fn module_ranges_of(&self, m: usize) -> &[Range] {
+        &self.module_ranges[m]
+    }
+
     /// Fill one module of the Δ matrix: for every replica j,
     /// Δ_j = params_j − anchor over the module's ranges (fused with the
     /// per-module squared norm), leaving ‖Δ_j^(m)‖ in [`Self::norms`].
@@ -151,19 +157,49 @@ impl SyncScratch {
     {
         self.norms.clear();
         for j in 0..self.replicas {
-            let row = row_params(j);
-            debug_assert_eq!(row.len(), self.params);
-            let base = j * self.params;
-            let mut sq = 0.0f64;
-            for r in &self.module_ranges[m] {
-                sq += kernels::sub_sq_norm_into(
-                    &mut self.deltas[base + r.offset..base + r.offset + r.len],
-                    &row[r.offset..r.offset + r.len],
-                    &anchor[r.offset..r.offset + r.len],
-                );
-            }
+            let sq = self.load_one_row(m, j, row_params(j), anchor);
             self.norms.push(sq.sqrt());
         }
+    }
+
+    /// Subset variant of [`Self::load_module`] for the per-replica
+    /// anchor syncs (A-EDiT event groups): Δ-matrix row `i` holds member
+    /// `members[i]`'s pseudo gradient (rows are *compacted* so the
+    /// strided combine kernels and the weight vector line up with the
+    /// member list), and `norms()[i]` is that member's module norm.
+    /// With `members = [0, 1, .., replicas-1]` this is exactly
+    /// [`Self::load_module`].
+    pub fn load_module_subset<'a, F>(
+        &mut self,
+        m: usize,
+        members: &[usize],
+        row_params: F,
+        anchor: &[f32],
+    ) where
+        F: Fn(usize) -> &'a [f32],
+    {
+        debug_assert!(members.len() <= self.replicas);
+        self.norms.clear();
+        for (i, &j) in members.iter().enumerate() {
+            let sq = self.load_one_row(m, i, row_params(j), anchor);
+            self.norms.push(sq.sqrt());
+        }
+    }
+
+    /// Δ-matrix row fill for one (row slot, module): fused subtraction +
+    /// squared norm over the module's ranges.
+    fn load_one_row(&mut self, m: usize, slot: usize, row: &[f32], anchor: &[f32]) -> f64 {
+        debug_assert_eq!(row.len(), self.params);
+        let base = slot * self.params;
+        let mut sq = 0.0f64;
+        for r in &self.module_ranges[m] {
+            sq += kernels::sub_sq_norm_into(
+                &mut self.deltas[base + r.offset..base + r.offset + r.len],
+                &row[r.offset..r.offset + r.len],
+                &anchor[r.offset..r.offset + r.len],
+            );
+        }
+        sq
     }
 
     /// Fill the whole Δ matrix (uniform-averaging path; no norms).
@@ -307,6 +343,39 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn load_module_subset_compacts_rows() {
+        let table = toy_table();
+        let p = table.total;
+        let anchor: Vec<f32> = (0..p).map(|i| (i % 7) as f32 / 7.0).collect();
+        let params = rows(4, p);
+        let mut full = SyncScratch::new(&table, 4, 0);
+        let mut sub = SyncScratch::new(&table, 4, 0);
+        let members = [1usize, 3];
+        for m in 0..table.num_modules() {
+            full.load_module(m, |j| params[j].as_slice(), &anchor);
+            sub.load_module_subset(m, &members, |j| params[j].as_slice(), &anchor);
+            assert_eq!(sub.norms().len(), 2);
+            for (i, &j) in members.iter().enumerate() {
+                assert_eq!(sub.norms()[i], full.norms()[j], "m={m} member {j}");
+                for r in table.module_ranges(m) {
+                    assert_eq!(
+                        &sub.delta_row(i)[r.offset..r.offset + r.len],
+                        &full.delta_row(j)[r.offset..r.offset + r.len],
+                        "m={m} member {j}"
+                    );
+                }
+            }
+        }
+        // Identity member list == load_module.
+        let all = [0usize, 1, 2, 3];
+        for m in 0..table.num_modules() {
+            full.load_module(m, |j| params[j].as_slice(), &anchor);
+            sub.load_module_subset(m, &all, |j| params[j].as_slice(), &anchor);
+            assert_eq!(sub.norms(), full.norms());
         }
     }
 

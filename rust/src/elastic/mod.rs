@@ -5,6 +5,13 @@
 //! synchronized parameters; outer momentum and anomaly statistics
 //! survive; per-replica batch size stays fixed (the property EDiT's
 //! LR-transfer depends on — Fig. 6a/b).
+//!
+//! Event-core contract: rescaling is a cluster rendezvous. This driver
+//! only rescales at round boundaries — by then every pending sync event
+//! of the event-driven A-EDiT path has been processed (the per-round
+//! event queue drains before `run_round` returns) and `rescale()`
+//! re-aligns all replica clocks to the current simulated time (it also
+//! defensively clears the queue and debug-asserts it was empty).
 
 use anyhow::Result;
 

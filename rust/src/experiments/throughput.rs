@@ -1,10 +1,16 @@
 //! Throughput harnesses over the analytic cluster simulator:
 //! Table 2 (tokens/s + TFLOPS + OOM), Fig. 5 / Table 6 (stragglers,
-//! bandwidth), Fig. 9 (sync timelines).
+//! bandwidth), Fig. 9 (sync timelines) — plus the Fig. 5
+//! **cross-validation** harness ([`fig5_trainer`]) that re-runs the
+//! straggler scenarios through the REAL event-driven trainer and
+//! compares the resulting A-EDiT : EDiT speedups against the analytic
+//! predictions.
 
 use anyhow::Result;
 
-use crate::coordinator::Method;
+use crate::collectives::{CostModel, Topology};
+use crate::coordinator::{MeshSpec, Method, Straggler, TrainConfig, Trainer};
+use crate::data::{Corpus, Quality};
 use crate::metrics::{CsvWriter, Table};
 use crate::simulator::{simulate, Scenario, ScaleSpec, SimConfig};
 
@@ -125,6 +131,137 @@ pub fn fig9(opts: &ExpOpts) -> Result<()> {
         }
     }
     csv.flush()?;
+    Ok(())
+}
+
+/// Fig. 5 cross-validation: drive the REAL trainer (the event-driven
+/// per-replica execution core) through the straggler scenarios at CPU
+/// scale and compare the A-EDiT : EDiT throughput ratios with the
+/// analytic cluster simulator's paper-scale predictions for the same
+/// relative slowdown (the straggler lag equals one inner-step time, so
+/// the victim runs at half speed in both worlds).
+///
+/// Seconds-scale by construction (a few dozen steps on a tiny model),
+/// so `scripts/verify.sh` runs it as the async-path smoke gate. Falls
+/// back to a synthetic stub model when AOT artifacts are absent.
+/// Writes `fig5_trainer.csv`.
+pub fn fig5_trainer(opts: &ExpOpts) -> Result<()> {
+    use crate::runtime::{Engine, Manifest};
+
+    let mesh = MeshSpec::new(1, 4);
+    let tau = opts.tau.max(2);
+    let build = |method: Method, straggler: Straggler| -> Result<Trainer> {
+        // Real artifacts when built; otherwise the deterministic stub
+        // model (same trick as the steady-state and determinism tests).
+        let engine = Engine::load(&opts.artifacts, &opts.model)
+            .unwrap_or_else(|_| Engine::synthetic(Manifest::synthetic("fig5-xval", 4, 256, 128, 64, 2, 8)));
+        let corpus =
+            Corpus::new(engine.manifest.model.vocab_size, opts.seed, Quality::clean());
+        let mut cfg = TrainConfig::paper_default(method, mesh, opts.steps);
+        cfg.tau = tau;
+        cfg.t_warm = 0;
+        cfg.eval_every_syncs = 0;
+        cfg.seed = opts.seed;
+        cfg.straggler = straggler;
+        let mut t = Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100()))?;
+        // τ_time worth exactly τ steps for an unlagged worker.
+        t.cfg.tau_time = tau as f64 * t.inner_step_seconds();
+        Ok(t)
+    };
+    // Lag ≈ one step time => the victim replica runs at ~half speed.
+    // The 1.1 factor keeps the victim's clock incommensurate with the
+    // fast group's, so its sync events never land bitwise-equal and
+    // accidentally coalesce into a barrier (coalescing is exact-tie
+    // only — see `coordinator::engine::clock`). The probe trainer is
+    // reused as the "normal"-scenario EDiT run below.
+    let mut edit_normal = Some(build(Method::Edit, Straggler::None)?);
+    let step_s = edit_normal.as_ref().unwrap().inner_step_seconds();
+    let lag = 1.1 * step_s;
+
+    // Analytic predictions at the matched relative slowdown (paper
+    // scale: 7B, 8×8; lag = one baseline step).
+    let sim_step = simulate(&SimConfig::fig5(Method::Edit, Scenario::Normal))
+        .step_seconds
+        .unwrap();
+    let sim_ratio = |scenario: fn(f64) -> Scenario| -> f64 {
+        let sim_lag = 1.1 * sim_step; // same relative slowdown as the trainer
+        let e = simulate(&SimConfig::fig5(Method::Edit, scenario(sim_lag)))
+            .tokens_per_sec
+            .unwrap();
+        let a = simulate(&SimConfig::fig5(Method::AEdit, scenario(sim_lag)))
+            .tokens_per_sec
+            .unwrap();
+        a / e
+    };
+
+    let mut csv = CsvWriter::create(
+        opts.result_path("fig5_trainer.csv"),
+        &["scenario", "edit_tput", "aedit_tput", "trainer_ratio", "sim_ratio", "delta_pct"],
+    )?;
+    let mut table = Table::new(&[
+        "scenario",
+        "edit tok/s",
+        "a-edit tok/s",
+        "trainer a/e",
+        "sim a/e",
+        "delta",
+    ]);
+    let scenarios: [(&str, Straggler, Option<f64>); 3] = [
+        ("normal", Straggler::None, None),
+        (
+            "consistent-2x",
+            Straggler::Consistent { lag, replica: 0 },
+            Some(sim_ratio(|l| Scenario::ConsistentStraggler { lag: l })),
+        ),
+        (
+            "random-2x",
+            Straggler::Random { lag },
+            Some(sim_ratio(|l| Scenario::RandomStraggler { lag: l })),
+        ),
+    ];
+    for (name, straggler, sim_pred) in scenarios {
+        let se = match (straggler, edit_normal.take()) {
+            (Straggler::None, Some(mut t)) => t.run()?,
+            _ => build(Method::Edit, straggler)?.run()?,
+        };
+        let sa = build(Method::AEdit, straggler)?.run()?;
+        let trainer_ratio = sa.throughput / se.throughput;
+        let sim_r = sim_pred.unwrap_or(f64::NAN);
+        let delta = if sim_r.is_finite() {
+            (trainer_ratio / sim_r - 1.0) * 100.0
+        } else {
+            f64::NAN
+        };
+        csv.row(&[
+            name.to_string(),
+            format!("{:.1}", se.throughput),
+            format!("{:.1}", sa.throughput),
+            format!("{trainer_ratio:.3}"),
+            format!("{sim_r:.3}"),
+            format!("{delta:.1}"),
+        ])?;
+        table.row(vec![
+            name.into(),
+            format!("{:.1}", se.throughput),
+            format!("{:.1}", sa.throughput),
+            format!("{trainer_ratio:.3}"),
+            if sim_r.is_finite() { format!("{sim_r:.3}") } else { "-".into() },
+            if delta.is_finite() { format!("{delta:+.1}%") } else { "-".into() },
+        ]);
+        if name == "consistent-2x" {
+            // The paper's headline heterogeneity claim, now exercised by
+            // the real trainer rather than only the analytic model.
+            anyhow::ensure!(
+                trainer_ratio >= 1.5,
+                "A-EDiT should be >=1.5x EDiT under a consistent 2x straggler \
+                 (got {trainer_ratio:.3})"
+            );
+        }
+    }
+    csv.flush()?;
+    println!("\nFig. 5 cross-validation — real trainer vs analytic simulator (lag = 1 step):");
+    print!("{}", table.render());
+    println!("(ratios are A-EDiT/EDiT throughput; delta = trainer vs simulator)");
     Ok(())
 }
 

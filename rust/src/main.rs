@@ -43,10 +43,10 @@ fn usage() -> &'static str {
   common: --artifacts DIR --results DIR --model test|petite|tiny|mini
           --mesh MxN --steps N --tau N --seed N --config FILE --set k=v,...
   train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit
-            --lr X --noise P --straggler none|random:LAG|consistent:LAG
-            --out curves.csv --log
+            --lr X --noise P --straggler none|random:LAG|consistent:LAG[:REPLICA]
+            --threads N --timeline FILE.csv --out curves.csv --log
   sweep:    --exp fig4|table1|fig8 [--noisy] [--methods a,b,c]
-  simulate: --exp table2|fig5|fig9|measured
+  simulate: --exp table2|fig5|fig5-trainer|fig9|measured
   ablation: (fig7)
   elastic:  --exp fig6ab|fig6c --phase-steps N --lr X
   info:     [--model NAME]"
@@ -134,10 +134,17 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
     if let Some(lr) = args.opt("lr") {
         tc.inner_lr = LrSchedule::paper_cosine(lr.parse()?, opts.steps);
     }
+    tc.worker_threads = args.usize("threads", 1).max(1);
+    tc.trace_timeline = args.opt("timeline").is_some();
     tc.straggler = match args.str("straggler", "none").split_once(':') {
         Some(("random", lag)) => Straggler::Random { lag: lag.parse()? },
-        Some(("consistent", lag)) => {
-            Straggler::Consistent { lag: lag.parse()?, replica: 0 }
+        Some(("consistent", rest)) => {
+            // consistent:LAG or consistent:LAG:REPLICA
+            let (lag, replica) = match rest.split_once(':') {
+                Some((l, r)) => (l.parse()?, r.parse()?),
+                None => (rest.parse()?, 0),
+            };
+            Straggler::Consistent { lag, replica }
         }
         _ => Straggler::None,
     };
@@ -159,12 +166,13 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
     let host = start.elapsed().as_secs_f64();
 
     println!(
-        "done: final_loss={} final_ppl={} syncs={} anomalies={} rollbacks={}",
+        "done: final_loss={} final_ppl={} syncs={} anomalies={} rollbacks={} max_staleness={}",
         format_g(summary.final_loss),
         format_g(summary.final_ppl),
         summary.syncs,
         summary.anomalies,
         summary.rollbacks,
+        summary.max_staleness,
     );
     println!(
         "time: host={host:.1}s simulated={:.1}s tokens={} throughput={} tok/sim-s comm={} MB",
@@ -188,6 +196,15 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
         }
         w.flush()?;
         println!("curves -> {}", opts.results.join(&out).display());
+    }
+    if let Some(path) = args.opt("timeline") {
+        let dest = opts.results.join(path);
+        trainer.timeline.write_csv(&dest)?;
+        println!(
+            "timeline -> {} ({} sync events)",
+            dest.display(),
+            trainer.timeline.events.len()
+        );
     }
     Ok(())
 }
@@ -217,6 +234,7 @@ fn cmd_simulate(args: &Args, opts: &ExpOpts) -> Result<()> {
     match args.str("exp", "table2").as_str() {
         "table2" => throughput::table2(opts),
         "fig5" => throughput::fig5(opts),
+        "fig5-trainer" => throughput::fig5_trainer(opts),
         "fig9" => throughput::fig9(opts),
         "measured" => throughput::measured_throughput(
             opts,

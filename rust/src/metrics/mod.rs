@@ -158,6 +158,57 @@ impl Table {
     }
 }
 
+/// One per-replica synchronization event (the trainer records these
+/// when `TrainConfig::trace_timeline` is on — the observability feed
+/// for the event-driven A-EDiT path, where replicas sync at different
+/// simulated times with per-worker staleness).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelineEvent {
+    pub replica: usize,
+    /// Post-sync simulated clock of the replica (seconds).
+    pub clock: f64,
+    /// Global step counter at the time of the sync.
+    pub global_step: u64,
+    /// Anchor versions the replica missed since its previous sync.
+    pub staleness: u64,
+}
+
+/// Per-replica sync-event timeline. Capacity is reserved up front when
+/// tracing is enabled so steady-state recording never reallocates.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub events: Vec<TimelineEvent>,
+}
+
+impl Timeline {
+    pub fn reserve(&mut self, n: usize) {
+        self.events.reserve(n);
+    }
+
+    pub fn push(&mut self, e: TimelineEvent) {
+        self.events.push(e);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Write the trace as CSV (replica, clock, global_step, staleness).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w =
+            CsvWriter::create(path, &["replica", "clock", "global_step", "staleness"])?;
+        for e in &self.events {
+            w.row(&[
+                e.replica.to_string(),
+                format_g(e.clock),
+                e.global_step.to_string(),
+                e.staleness.to_string(),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
 /// Per-run loss/PPL tracker used by the trainer.
 #[derive(Debug, Clone)]
 pub struct RunTracker {
@@ -279,6 +330,23 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("method"));
         assert!(lines[2].starts_with("EDiT"));
+    }
+
+    #[test]
+    fn timeline_csv_roundtrip() {
+        let mut t = Timeline::default();
+        t.reserve(2);
+        t.push(TimelineEvent { replica: 1, clock: 2.5, global_step: 8, staleness: 0 });
+        t.push(TimelineEvent { replica: 0, clock: 3.25, global_step: 8, staleness: 2 });
+        let dir = std::env::temp_dir().join("edit_train_test_timeline");
+        let path = dir.join("t.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "replica,clock,global_step,staleness\n1,2.5,8,0\n0,3.25,8,2\n"
+        );
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //!  * [`manifest::Manifest`] — the parsed export contract;
 //!  * [`Engine`]             — the execution backend.
 //!
-//! Two backends share the exact same `Engine` API, selected at compile
-//! time by the `pjrt` cargo feature:
+//! Two backends share the same `Engine` API surface, selected at
+//! compile time by the `pjrt` cargo feature:
 //!
 //!  * **`pjrt` enabled** ([`pjrt`] module): the real thing — compiled
 //!    HLO executables on the PJRT CPU client via the vendored `xla`
@@ -20,6 +20,20 @@
 //!    and the coordinator / bench layers can exercise full training
 //!    rounds — including via [`stub::Engine::synthetic`] manifests —
 //!    without any artifacts.
+//!
+//! Receiver divergence (since the event-driven trainer): the stub's
+//! step methods (`train_step`/`grad_step`/`apply_step`/`eval_step`)
+//! take `&self` so the trainer's parallel worker lanes and the
+//! synthetic experiment harnesses can share one engine across threads.
+//! The PJRT backend keeps `&mut self` (its executable cache mutates on
+//! first use) and is single-threaded, so the lane path and the
+//! synthetic-fallback harnesses do not compile under `--features pjrt`
+//! as-is. Whoever wires the vendored `xla` crate in (the feature
+//! already requires that manual step — see `Cargo.toml`) should either
+//! pre-compile the executables and move the cache behind interior
+//! mutability to adopt `&self`, or pin `worker_threads = 1` and gate
+//! the lane path. Until then the divergence is latent: the `pjrt`
+//! feature cannot build without the vendored crate anyway.
 
 pub mod manifest;
 

@@ -160,8 +160,13 @@ impl Engine {
 
     /// Fused inner step: params/m/v updated in place, returns the loss.
     /// Exactly equivalent to `grad_step` followed by `apply_step`.
+    ///
+    /// `&self` receiver on purpose: the stub holds no mutable state, so
+    /// the trainer's parallel worker lanes can share one engine across
+    /// threads (see `coordinator::engine::worker`). The PJRT backend
+    /// keeps `&mut self` (executable cache) and is single-threaded.
     pub fn train_step(
-        &mut self,
+        &self,
         params: &mut Vec<f32>,
         m: &mut Vec<f32>,
         v: &mut Vec<f32>,
@@ -191,7 +196,7 @@ impl Engine {
 
     /// Grads + loss without applying (DDP / warmup path).
     pub fn grad_step(
-        &mut self,
+        &self,
         params: &[f32],
         tokens: &[i32],
         grads: &mut Vec<f32>,
@@ -208,7 +213,7 @@ impl Engine {
 
     /// AdamW apply of externally averaged grads.
     pub fn apply_step(
-        &mut self,
+        &self,
         params: &mut Vec<f32>,
         m: &mut Vec<f32>,
         v: &mut Vec<f32>,
@@ -234,7 +239,7 @@ impl Engine {
     }
 
     /// Validation loss on one batch (pure function of params).
-    pub fn eval_step(&mut self, params: &[f32], tokens: &[i32]) -> Result<f32> {
+    pub fn eval_step(&self, params: &[f32], tokens: &[i32]) -> Result<f32> {
         self.check_tokens(tokens)?;
         Ok(self.loss_of(params))
     }
@@ -246,7 +251,7 @@ impl Engine {
     }
 
     /// The AOT Pallas penalty combine needs the PJRT backend.
-    pub fn penalty_combine(&mut self, _deltas: &[&[f32]], _norms: &[f32]) -> Result<Vec<f32>> {
+    pub fn penalty_combine(&self, _deltas: &[&[f32]], _norms: &[f32]) -> Result<Vec<f32>> {
         anyhow::bail!(
             "penalty_combine requires the AOT penalty HLO (build with --features pjrt)"
         )
@@ -268,8 +273,8 @@ mod tests {
 
     #[test]
     fn deterministic_and_learns() {
-        let mut e1 = engine();
-        let mut e2 = engine();
+        let e1 = engine();
+        let e2 = engine();
         let mut p1 = e1.init_params().unwrap();
         let mut p2 = e2.init_params().unwrap();
         assert_eq!(p1, p2);
@@ -293,7 +298,7 @@ mod tests {
 
     #[test]
     fn fused_equals_split_path() {
-        let mut e = engine();
+        let e = engine();
         let p0 = e.init_params().unwrap();
         let n = p0.len();
         let tokens = batch(&e, 3);
@@ -316,7 +321,7 @@ mod tests {
 
     #[test]
     fn different_batches_diverge() {
-        let mut e = engine();
+        let e = engine();
         let p0 = e.init_params().unwrap();
         let n = p0.len();
         let (mut pa, mut pb) = (p0.clone(), p0);
@@ -331,7 +336,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_token_shape() {
-        let mut e = engine();
+        let e = engine();
         let p = e.init_params().unwrap();
         assert!(e.eval_step(&p, &[1, 2, 3]).is_err());
     }

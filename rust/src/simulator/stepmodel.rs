@@ -108,6 +108,47 @@ impl StepModel {
         }
     }
 
+    /// Exposed residual of the layer-wise sync pipeline, given the
+    /// per-module full-vector byte counts (the trainer passes the real
+    /// `ModuleTable` layout; the analytic simulator can pass uniform
+    /// layers).
+    ///
+    /// Model (paper §3.1): at a sync boundary the per-module shard
+    /// all-reduces are issued in module order while the next round's
+    /// forward pass consumes modules in the same order — module k's
+    /// all-reduce hides behind the forward compute of the modules
+    /// pipelined before it, so the exposed cost per module is the
+    /// pipeline *stall* `max(0, comm_done_k − compute_done_{k-1})`
+    /// rather than the full communication time. The first module can
+    /// never hide (nothing computes before it); with zero compute the
+    /// whole serial communication is exposed. One scalar-norm latency
+    /// (shard group) rides on top: the per-module scalar exchanges are
+    /// all charged to communication accounting, but they pipeline
+    /// behind the module all-reduces, so only a single latency is
+    /// modeled as exposed.
+    pub fn layerwise_exposed(&self, module_bytes: &[usize]) -> f64 {
+        let scalar = self
+            .cost
+            .time(CollOp::ScalarSync, 4, &self.mesh.shard_group(0));
+        let total: usize = module_bytes.iter().sum();
+        if module_bytes.is_empty() || total == 0 {
+            return scalar;
+        }
+        let group = self.mesh.sync_group(0);
+        let mut comm_end = 0.0f64; // completion time of module k's all-reduce
+        let mut fwd_end = 0.0f64; // completion time of module k's forward
+        let mut compute_total = 0.0f64;
+        for &mb in module_bytes {
+            let shard_b = (mb / self.mesh.shard).max(1);
+            comm_end += self.cost.time(CollOp::AllReduce, shard_b, &group);
+            let c = self.compute * mb as f64 / total as f64;
+            let start = comm_end.max(fwd_end);
+            fwd_end = start + c;
+            compute_total += c;
+        }
+        (fwd_end - compute_total) + scalar
+    }
+
     /// Average simulated seconds per inner step including the amortized
     /// sync cost at interval `tau`.
     pub fn amortized_step(&self, method: Method, tau: u64, warmup_or_ddp: bool) -> f64 {
@@ -168,6 +209,48 @@ mod tests {
         assert!((0.05..0.5).contains(&pls), "PLS {pls}");
         assert!((0.1..0.9).contains(&co2s), "CO2* {co2s}");
         assert!((0.004..0.08).contains(&edit), "EDiT {edit}");
+    }
+
+    #[test]
+    fn layerwise_overlap_hides_mid_modules() {
+        // 26 uniform modules (Llama-1B-ish): per-module comm is far
+        // smaller than per-module compute, so everything after module 0
+        // hides — exposed ≈ first module's all-reduce + scalar sync.
+        let m = model();
+        let modules = vec![m.param_bytes / 26; 26];
+        let exposed = m.layerwise_exposed(&modules);
+        let group = m.mesh.sync_group(0);
+        let per_module: f64 =
+            m.cost.time(CollOp::AllReduce, (m.param_bytes / 26) / m.mesh.shard, &group);
+        let serial = 26.0 * per_module;
+        assert!(exposed < 0.5 * serial, "exposed {exposed} vs serial {serial}");
+        assert!(exposed >= per_module, "first module can never hide");
+        // And it stays in the same regime as the legacy fraction model.
+        let legacy = m.sync_exposed(Method::Edit);
+        assert!(exposed < 10.0 * legacy && exposed * 10.0 > legacy,
+            "pipeline {exposed} vs legacy {legacy}");
+    }
+
+    #[test]
+    fn layerwise_zero_compute_fully_exposed() {
+        let mut m = model();
+        m.compute = 0.0;
+        let modules = vec![m.param_bytes / 8; 8];
+        let group = m.mesh.sync_group(0);
+        let serial: f64 = modules
+            .iter()
+            .map(|&mb| m.cost.time(CollOp::AllReduce, mb / m.mesh.shard, &group))
+            .sum();
+        let scalar = m.cost.time(CollOp::ScalarSync, 4, &m.mesh.shard_group(0));
+        let exposed = m.layerwise_exposed(&modules);
+        assert!((exposed - (serial + scalar)).abs() < 1e-12, "{exposed} vs {serial}");
+    }
+
+    #[test]
+    fn layerwise_empty_modules_is_scalar_only() {
+        let m = model();
+        let scalar = m.cost.time(CollOp::ScalarSync, 4, &m.mesh.shard_group(0));
+        assert_eq!(m.layerwise_exposed(&[]), scalar);
     }
 
     #[test]

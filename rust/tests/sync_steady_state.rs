@@ -61,9 +61,17 @@ fn trainer(method: Method) -> Trainer {
 
 #[test]
 fn trainer_rounds_allocation_free_in_steady_state() {
-    // Edit: fused per-module penalty sync. DiLoCo: uniform averaging.
-    // Co2: staleness queue (recycled buffers). Baseline: pure DDP steps.
-    for method in [Method::Edit, Method::DiLoCo, Method::Co2, Method::Baseline] {
+    // Edit: fused per-module penalty sync. AEdit: the event-driven
+    // anchor-sync path (scheduler queue + group buffers are reused).
+    // DiLoCo: uniform averaging. Co2: staleness queue (recycled
+    // buffers). Baseline: pure DDP steps.
+    for method in [
+        Method::Edit,
+        Method::AEdit,
+        Method::DiLoCo,
+        Method::Co2,
+        Method::Baseline,
+    ] {
         let mut t = trainer(method);
         // Warm-up: fills scratch capacities, the CO2 queue and the
         // tail-mean windows.

@@ -163,13 +163,21 @@ fn aedit_fast_workers_do_more_steps_under_straggler() {
     let mut t = trainer(Method::AEdit, 20, 17);
     t.cfg.t_warm = 0;
     t.cfg.straggler = Straggler::Consistent { lag: 2.0, replica: 0 };
-    t.run().unwrap();
+    let summary = t.run().unwrap();
     let steps0 = t.replicas[0].inner_steps;
     let steps1 = t.replicas[1].inner_steps;
     assert!(
         steps1 > steps0,
         "fast replica should run more inner steps: {steps0} vs {steps1}"
     );
+    // Event-driven anchor sync: the straggler keeps its own clock (no
+    // global barrier) and somebody observed anchor staleness.
+    assert_ne!(
+        t.replicas[0].clock.to_bits(),
+        t.replicas[1].clock.to_bits(),
+        "A-EDiT workers must not share a post-sync clock"
+    );
+    assert!(summary.max_staleness >= 1);
 }
 
 #[test]
@@ -212,7 +220,7 @@ fn probes_report_all_streams() {
 }
 
 #[test]
-fn co2_staleness_delays_outer_update() {
+fn co2_staleness_delays_outer_update_and_flushes_at_end() {
     if !have_artifacts() {
         return;
     }
@@ -223,11 +231,22 @@ fn co2_staleness_delays_outer_update() {
         let e = Engine::load(artifacts_root(), "test").unwrap();
         e.init_params().unwrap()
     };
-    co2.run().unwrap();
+    co2.run_round().unwrap();
     assert_eq!(co2.syncs, 1);
     assert_eq!(co2.anchor, init, "CO2 anchor unchanged after first sync");
 
+    // run() from here is a no-op for steps (global_step == total_steps)
+    // but must flush the in-flight combined update instead of silently
+    // dropping it.
+    let summary = co2.run().unwrap();
+    assert_eq!(summary.flushed_updates, 1);
+    assert_ne!(co2.anchor, init, "flush lands the in-flight update");
+    for r in &co2.replicas {
+        assert_eq!(&r.params, &co2.anchor);
+    }
+
     let mut diloco = trainer(Method::DiLoCo, 4, 29);
-    diloco.run().unwrap();
+    let sd = diloco.run().unwrap();
     assert_ne!(diloco.anchor, init, "DiLoCo applies immediately");
+    assert_eq!(sd.flushed_updates, 0);
 }

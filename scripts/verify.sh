@@ -12,6 +12,15 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Straggler smoke: drive the REAL trainer (event-driven per-replica
+# core) through the consistent + random straggler scenarios and
+# cross-validate the A-EDiT : EDiT speedup against the analytic
+# simulator. Seconds-scale; falls back to the synthetic stub model when
+# AOT artifacts are absent, so it runs on a clean box. The harness
+# itself enforces the >=1.5x consistent-straggler acceptance bound.
+echo "== straggler smoke (real trainer, async A-EDiT path) =="
+./target/release/edit-train simulate --exp fig5-trainer --steps 32 --tau 4
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
