@@ -1,11 +1,16 @@
 # Repo-level entry points. The Rust workspace lives under rust/.
 
-.PHONY: verify build test bench artifacts
+.PHONY: verify verify-quick build test bench artifacts
 
 # Tier-1 gate + hygiene (fmt/clippy when installed): one command for CI
 # and for every later PR.
 verify:
 	bash scripts/verify.sh
+
+# Build + test only (no straggler smoke, no fmt/clippy) — the fast CI
+# leg and the pre-push sanity loop.
+verify-quick:
+	bash scripts/verify.sh --quick
 
 build:
 	cd rust && cargo build --release

@@ -206,19 +206,38 @@ fn trainer_round_benches(b: &mut Bencher) {
     use edit_train::runtime::Engine;
 
     println!("-- full trainer rounds (stub engine) --");
-    let manifest = Manifest::synthetic("hotpath-round", 4, 1 << 14, 1 << 13, 256, 2, 16);
-    let vocab = manifest.model.vocab_size;
-    let engine = Engine::synthetic(manifest);
-    let corpus = Corpus::new(vocab, 5, Quality::clean());
-    let mut tc = TrainConfig::paper_default(Method::Edit, MeshSpec::new(2, 2), u64::MAX);
-    tc.tau = 4;
-    tc.t_warm = 0;
-    tc.eval_every_syncs = 0;
-    let mut trainer =
-        Trainer::new(engine, corpus, tc, CostModel::new(Topology::a100())).unwrap();
-    b.bench("edit outer round e2e (stub, tau=4, 2 replicas)", || {
-        trainer.run_round().unwrap();
-    });
+    let vocab = 256usize;
+    // Three configurations of the same round: the sharded outer path
+    // (default; ZeRO-1 lanes), the sharded path with the lane fan-out on
+    // 2 worker threads, and the full-matrix reference — all bitwise
+    // identical in results, compared here on wall-clock.
+    for (label, shard, threads) in [
+        ("edit round e2e sharded (tau=4, 2 replicas)", true, 1usize),
+        ("edit round e2e sharded, 2 threads", true, 2),
+        ("edit round e2e unsharded reference", false, 1),
+    ] {
+        let engine = Engine::synthetic(Manifest::synthetic(
+            "hotpath-round",
+            4,
+            1 << 14,
+            1 << 13,
+            256,
+            2,
+            16,
+        ));
+        let corpus = Corpus::new(vocab, 5, Quality::clean());
+        let mut tc = TrainConfig::paper_default(Method::Edit, MeshSpec::new(2, 2), u64::MAX);
+        tc.tau = 4;
+        tc.t_warm = 0;
+        tc.eval_every_syncs = 0;
+        tc.shard_outer = shard;
+        tc.worker_threads = threads;
+        let mut trainer =
+            Trainer::new(engine, corpus, tc, CostModel::new(Topology::a100())).unwrap();
+        b.bench(label, || {
+            trainer.run_round().unwrap();
+        });
+    }
 }
 
 fn main() {

@@ -51,7 +51,13 @@ impl Topology {
 
     /// Uniform single-level topology (useful in unit tests).
     pub fn flat(bw: f64, lat: f64) -> Self {
-        Self { gpus_per_node: usize::MAX, intra_bw: bw, inter_bw: bw, intra_lat: lat, inter_lat: lat }
+        Self {
+            gpus_per_node: usize::MAX,
+            intra_bw: bw,
+            inter_bw: bw,
+            intra_lat: lat,
+            inter_lat: lat,
+        }
     }
 
     pub fn node_of(&self, rank: usize) -> usize {
@@ -164,6 +170,35 @@ mod tests {
         let ar = m.time(CollOp::AllReduce, 1 << 20, &ranks);
         let ag = m.time(CollOp::AllGather, 1 << 20, &ranks);
         assert!((ar - 2.0 * ag).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_equals_allreduce_bitwise() {
+        // The identity the sharded outer sync path's pricing relies on:
+        // ring reduce-scatter + ring all-gather decompose a ring
+        // all-reduce exactly, and because scaling by 2 commutes with
+        // IEEE rounding the α-β formulas agree BITWISE, not just
+        // approximately. `CommPlan` prices the sharded per-module
+        // exchange as RS+AG and stays bitwise comparable to the
+        // unsharded all-reduce plan (tests/scheduler_determinism.rs).
+        for topo in [Topology::a100(), Topology::flat(7.3e9, 1.9e-6)] {
+            for reps in [0u32, 3] {
+                let m = CostModel::new(topo).with_inter_repeat(reps);
+                for bytes in [1usize, 4, 1337, 1 << 20, 123_456_789] {
+                    for ranks in [vec![0, 1], vec![0, 1, 2], (0..16).collect::<Vec<_>>()] {
+                        let ar = m.time(CollOp::AllReduce, bytes, &ranks);
+                        let rs = m.time(CollOp::ReduceScatter, bytes, &ranks);
+                        let ag = m.time(CollOp::AllGather, bytes, &ranks);
+                        assert_eq!(
+                            (rs + ag).to_bits(),
+                            ar.to_bits(),
+                            "bytes={bytes} n={} reps={reps}",
+                            ranks.len()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -86,6 +86,58 @@ pub fn reduce_scatter_mean(fulls: &mut [&mut [f32]], shards: &[(usize, usize)]) 
     }
 }
 
+/// Reduce-scatter (sum): like [`reduce_scatter_mean`] without the 1/n
+/// scale — rank `dst`'s shard ends with the raw rank-0..n fold of that
+/// region across all ranks.
+pub fn reduce_scatter_sum(fulls: &mut [&mut [f32]], shards: &[(usize, usize)]) {
+    let n = fulls.len();
+    debug_assert_eq!(n, shards.len());
+    if n <= 1 {
+        return;
+    }
+    for (dst, &(off, len)) in shards.iter().enumerate() {
+        let mut acc = vec![0.0f32; len];
+        for full in fulls.iter() {
+            for (a, &x) in acc.iter_mut().zip(&full[off..off + len]) {
+                *a += x;
+            }
+        }
+        fulls[dst][off..off + len].copy_from_slice(&acc);
+    }
+}
+
+/// Weighted reduce-scatter: rank `dst`'s shard ends with
+/// `Σ_j weights[j] · fulls[j]` over its region — the EDiT softmax-
+/// weighted pseudo-gradient combine expressed as a collective. The fold
+/// runs in ascending rank order with zero-weight ranks skipped, exactly
+/// the accumulation the fused combine kernel
+/// (`tensor::kernels::weighted_sum_sq_strided`) performs per element,
+/// so the sharded sync path's shard-local combine is bitwise equal to
+/// this reference.
+pub fn reduce_scatter_weighted(
+    fulls: &mut [&mut [f32]],
+    shards: &[(usize, usize)],
+    weights: &[f32],
+) {
+    let n = fulls.len();
+    debug_assert_eq!(n, shards.len());
+    debug_assert_eq!(n, weights.len());
+    if n == 0 {
+        return;
+    }
+    for (dst, &(off, len)) in shards.iter().enumerate() {
+        let mut acc = vec![0.0f32; len];
+        for (full, &w) in fulls.iter().zip(weights) {
+            if w != 0.0 {
+                for (a, &x) in acc.iter_mut().zip(&full[off..off + len]) {
+                    *a += w * x;
+                }
+            }
+        }
+        fulls[dst][off..off + len].copy_from_slice(&acc);
+    }
+}
+
 /// Broadcast rank `root`'s buffer to all others.
 pub fn broadcast(bufs: &mut [&mut [f32]], root: usize) {
     let n = bufs.len();
@@ -172,6 +224,42 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             for (u, v) in x.iter().zip(y) {
                 assert!((u - v).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sum_folds_all_ranks() {
+        let spec = ShardSpec::new(9, 3);
+        let shards: Vec<_> = (0..3).map(|r| spec.range(r)).collect();
+        let mut sum = make(3, 9);
+        reduce_scatter_sum(&mut as_mut(&mut sum), &shards);
+        for (r, &(off, len)) in shards.iter().enumerate() {
+            for i in off..off + len {
+                // make(): buf[r][i] = r*9 + i, so the fold is 27 + 3i.
+                assert_eq!(sum[r][i], (27 + 3 * i) as f32, "r={r} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_weighted_matches_manual() {
+        let spec = ShardSpec::new(10, 4); // uneven tail: 3,3,3,1
+        let shards: Vec<_> = (0..4).map(|r| spec.range(r)).collect();
+        let bufs = make(4, 10);
+        let weights = [0.5f32, 0.0, 0.25, 0.25];
+        let mut got = bufs.clone();
+        reduce_scatter_weighted(&mut as_mut(&mut got), &shards, &weights);
+        for (dst, &(off, len)) in shards.iter().enumerate() {
+            for i in off..off + len {
+                // Ascending-rank fold, zero weights skipped.
+                let mut want = 0.0f32;
+                for (b, &w) in bufs.iter().zip(&weights) {
+                    if w != 0.0 {
+                        want += w * b[i];
+                    }
+                }
+                assert_eq!(got[dst][i], want, "dst={dst} i={i}");
             }
         }
     }

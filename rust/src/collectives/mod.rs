@@ -9,6 +9,32 @@
 //!    so every collective the trainer performs also advances the
 //!    simulated clock by the time the same op would take on the paper's
 //!    A100 mesh.
+//!
+//! # Reduce-scatter / all-gather semantics and the fold-order contract
+//!
+//! The sharded outer synchronization path (ZeRO-1-style: each rank owns
+//! a contiguous, range-aligned shard of the flat parameter space — see
+//! `tensor::TableShards`) decomposes what the unsharded path expresses
+//! as per-module all-reduces into a **reduce-scatter** of the member
+//! pseudo-gradients into the owned shard followed by an **all-gather**
+//! of the updated anchor shards:
+//!
+//!  * `reduce_scatter_{sum,mean,weighted}` — rank r's shard region ends
+//!    with the rank-0..n fold of every rank's contribution over that
+//!    region (`weighted` folds `Σ_j w_j·x_j`, skipping zero weights:
+//!    the EDiT softmax-weighted combine as a collective). The fold
+//!    order is **always ascending rank**, whatever the executing
+//!    topology — this is the contract that makes the threaded
+//!    implementations, the sequential references and the trainer's
+//!    shard-local fused kernels bitwise interchangeable.
+//!  * `all_gather` — each rank contributes its owned shard; afterwards
+//!    every rank holds the concatenation.
+//!
+//! Pricing: the ring α-β formulas decompose exactly — `time(RS) +
+//! time(AG) == time(AllReduce)` **bitwise** (scaling by two commutes
+//! with IEEE rounding; asserted in `cost`), so replacing a module's
+//! all-reduce by RS+AG changes neither the simulated clock nor any
+//! comparison against the unsharded plan.
 
 pub mod cost;
 pub mod group;

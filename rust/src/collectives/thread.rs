@@ -156,6 +156,67 @@ impl ThreadComm {
         self.inner.barrier.wait();
     }
 
+    /// Reduce-scatter (sum): like [`Self::reduce_scatter_mean`] without
+    /// the 1/n scale — rank-0..n fold order, bitwise equal to
+    /// [`super::group::reduce_scatter_sum`]. The fold starts from a
+    /// zero-initialized accumulator and adds every rank including rank
+    /// 0, exactly like the reference (seeding by copying rank 0's shard
+    /// would diverge bitwise on -0.0 inputs).
+    pub fn reduce_scatter_sum(&self, full: &mut [f32], shards: &[(usize, usize)]) {
+        let n = self.inner.n;
+        if n == 1 {
+            return;
+        }
+        self.stage(full);
+        self.inner.barrier.wait();
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for r in 0..n {
+            let sr = self.inner.staging[r].read().unwrap();
+            kernels::add(&mut full[off..off + len], &sr[off..off + len]);
+        }
+        self.inner.barrier.wait();
+    }
+
+    /// Weighted reduce-scatter: this rank's shard ends with
+    /// `Σ_j weights[j]·x_j` over its region (ascending-rank fold,
+    /// zero-weight ranks skipped — bitwise equal to
+    /// [`super::group::reduce_scatter_weighted`]).
+    pub fn reduce_scatter_weighted(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        weights: &[f32],
+    ) {
+        let n = self.inner.n;
+        debug_assert_eq!(n, weights.len());
+        if n == 1 {
+            // Degenerate group: reproduce the reference's zero-init +
+            // single-fold accumulation exactly (incl. the -0.0 edge).
+            let (off, len) = shards[self.rank];
+            let w = weights[0];
+            for x in full[off..off + len].iter_mut() {
+                let mut acc = 0.0f32;
+                if w != 0.0 {
+                    acc += w * *x;
+                }
+                *x = acc;
+            }
+            return;
+        }
+        self.stage(full);
+        self.inner.barrier.wait();
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for (r, &w) in weights.iter().enumerate() {
+            if w != 0.0 {
+                let sr = self.inner.staging[r].read().unwrap();
+                kernels::axpy(&mut full[off..off + len], w, &sr[off..off + len]);
+            }
+        }
+        self.inner.barrier.wait();
+    }
+
     /// Broadcast `root`'s buffer to every rank.
     pub fn broadcast(&self, buf: &mut [f32], root: usize) {
         if self.inner.n == 1 {
@@ -305,6 +366,62 @@ mod tests {
             let mut refs: Vec<&mut [f32]> =
                 refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
             group::reduce_scatter_mean(&mut refs, &shards);
+            assert_eq!(got, refbufs, "n={n} len={len}");
+        }
+    }
+
+    #[test]
+    fn threaded_reduce_scatter_sum_matches_sequential() {
+        for (n, len) in [(4usize, 16usize), (3, 7), (2, 1)] {
+            let spec = ShardSpec::new(len, n);
+            let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+            let sh = shards.clone();
+            let got = run_threads(n, len, move |c, buf| c.reduce_scatter_sum(buf, &sh));
+            let mut refbufs: Vec<Vec<f32>> =
+                (0..n).map(|r| (0..len).map(|i| (r * len + i) as f32).collect()).collect();
+            let mut refs: Vec<&mut [f32]> =
+                refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_sum(&mut refs, &shards);
+            assert_eq!(got, refbufs, "n={n} len={len}");
+        }
+    }
+
+    #[test]
+    fn threaded_reduce_scatter_weighted_matches_sequential() {
+        // Magnitude-staggered values + a zero weight: any deviation from
+        // the ascending-rank skip-zero fold changes the f32 result.
+        for (n, len) in [(4usize, 23usize), (3, 5), (1, 4)] {
+            let weights: Vec<f32> =
+                (0..n).map(|r| if r == 1 { 0.0 } else { 0.3 + r as f32 * 0.21 }).collect();
+            let spec = ShardSpec::new(len, n);
+            let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+            let make = |r: usize| -> Vec<f32> {
+                (0..len)
+                    .map(|i| [1e7f32, 3.0, -1e7, 5.0][r % 4] + (i as f32) * 0.125)
+                    .collect()
+            };
+            let comms = ThreadComm::group(n);
+            let mut got = vec![Vec::new(); n];
+            let (sh, ws, mk) = (&shards, &weights, &make);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let mut buf = mk(c.rank());
+                            c.reduce_scatter_weighted(&mut buf, sh, ws);
+                            buf
+                        })
+                    })
+                    .collect();
+                for (r, h) in handles.into_iter().enumerate() {
+                    got[r] = h.join().unwrap();
+                }
+            });
+            let mut refbufs: Vec<Vec<f32>> = (0..n).map(mk).collect();
+            let mut refs: Vec<&mut [f32]> =
+                refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_weighted(&mut refs, &shards, &weights);
             assert_eq!(got, refbufs, "n={n} len={len}");
         }
     }

@@ -131,10 +131,23 @@ pub struct TrainConfig {
     /// Print a progress line every N syncs (0 = silent).
     pub log_every: u64,
     /// OS threads running replica inner loops concurrently (1 =
-    /// sequential; results are bitwise identical either way).
+    /// sequential; results are bitwise identical either way). Also fans
+    /// the sharded sync's load/combine phases out over the shard lanes.
     pub worker_threads: usize,
     /// Record per-replica sync events into [`Trainer::timeline`].
     pub trace_timeline: bool,
+    /// ZeRO-1-style sharded outer state for the layer-wise methods
+    /// (EDiT/A-EDiT): each of the N sync-group ranks owns a contiguous
+    /// range-aligned shard of the flat space; pseudo-gradients are
+    /// reduce-scattered into it, the penalty statistics and outer
+    /// update run shard-locally, and the updated anchor shards are
+    /// all-gathered back. Bitwise identical to the full-matrix
+    /// reference path; per-rank sync memory ≈ full ÷ N for near-uniform
+    /// module tables (ranges are never split, so the largest shard is
+    /// floored at the largest single module range). Default on; engages
+    /// only for N > 1 (a single replica keeps the full-matrix path —
+    /// there is nothing to shard across).
+    pub shard_outer: bool,
 }
 
 impl TrainConfig {
@@ -162,6 +175,7 @@ impl TrainConfig {
             log_every: 0,
             worker_threads: 1,
             trace_timeline: false,
+            shard_outer: true,
         }
     }
 }
@@ -266,7 +280,12 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(engine: Engine, corpus: Corpus, cfg: TrainConfig, cost: crate::collectives::CostModel) -> Result<Self> {
+    pub fn new(
+        engine: Engine,
+        corpus: Corpus,
+        cfg: TrainConfig,
+        cost: crate::collectives::CostModel,
+    ) -> Result<Self> {
         anyhow::ensure!(
             corpus.language.vocab() == engine.manifest.model.vocab_size,
             "corpus vocab {} != model vocab {}",
@@ -304,11 +323,17 @@ impl Trainer {
         };
         let [b, s1] = engine.manifest.token_shape;
         let token_cap = b * s1;
-        let scratch = SyncScratch::new(&table, cfg.mesh.replicas, token_cap);
+        let mut scratch = SyncScratch::new(&table, cfg.mesh.replicas, token_cap);
+        if cfg.shard_outer && cfg.method.layerwise_sync() && cfg.mesh.replicas > 1 {
+            // ZeRO-1-style outer sharding across the N sync-group ranks
+            // (a single replica keeps the full-matrix path — there is
+            // nothing to shard across).
+            scratch.enable_sharding(&table, cfg.mesh.replicas);
+        }
         let lanes: Vec<worker::Lane> = (0..cfg.mesh.replicas)
             .map(|_| worker::Lane::with_token_capacity(token_cap))
             .collect();
-        let plan = sync::CommPlan::build(&step_model, cfg.method, &table);
+        let plan = sync::CommPlan::build(&step_model, cfg.method, &table, cfg.shard_outer);
         let mut tracker = RunTracker::new();
         // The tracker records once per round for step-synced local-SGD
         // methods (plus once per warmup DDP step), so reserving per-step
@@ -733,7 +758,20 @@ impl Trainer {
         self.step_model.mesh = self.cfg.mesh;
         self.detector.resize_replicas(new_replicas);
         self.scratch.ensure_replicas(new_replicas);
-        self.plan = sync::CommPlan::build(&self.step_model, self.cfg.method, &self.table);
+        if self.cfg.shard_outer && self.cfg.method.layerwise_sync() && new_replicas > 1 {
+            // Re-partition the outer shards for the new sync-group size.
+            self.scratch.enable_sharding(&self.table, new_replicas);
+        } else {
+            // Down to one replica (or sharding off): the full-matrix
+            // path resumes; restore its buffers if lanes were active.
+            self.scratch.disable_sharding();
+        }
+        self.plan = sync::CommPlan::build(
+            &self.step_model,
+            self.cfg.method,
+            &self.table,
+            self.cfg.shard_outer,
+        );
         Ok(())
     }
 
@@ -743,5 +781,36 @@ impl Trainer {
 
     pub fn corpus(&self) -> &Corpus {
         &self.corpus
+    }
+
+    /// The sync scratch arena (memory accounting / tests).
+    pub fn scratch(&self) -> &SyncScratch {
+        &self.scratch
+    }
+
+    /// Per-rank high-water of the sharded sync state: the rank's shard
+    /// lane (Δ rows, combine buffer, scalar partials) plus its anchor
+    /// and outer-momentum shards. Max over ranks; 0 when `shard_outer`
+    /// is off. Asserted ≈ [`Self::unsharded_sync_footprint`] ÷ N by
+    /// `tests/sharded_sync.rs`.
+    pub fn shard_sync_high_water(&self) -> usize {
+        let parts = self.scratch.shard_parts();
+        (0..parts)
+            .map(|s| {
+                let (_, len) = self.scratch.shard_range(s);
+                let anchor = len * 4;
+                let momentum = self.outer.state_elems(len) * 4;
+                self.scratch.shard_rank_bytes(s) + anchor + momentum
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The full-matrix sync footprint the sharded path divides across
+    /// ranks: the Δ matrix (replicas × P), the anchor and the outer
+    /// state, in bytes.
+    pub fn unsharded_sync_footprint(&self) -> usize {
+        let n = self.num_params();
+        (self.cfg.mesh.replicas * n + n + self.outer.state_elems(n)) * 4
     }
 }

@@ -18,12 +18,24 @@
 //! Fig. 5 heterogeneity results rely on. Per-replica staleness (anchor
 //! versions missed between consecutive syncs) is tracked on every path.
 //!
-//! Both paths share one numerics core, [`layerwise_sync`]: per module —
-//! load pseudo-gradients (compact subset rows in the scratch arena) →
-//! anomaly screen → softmax weights → fused combine + clip-β →
-//! outer-optimizer apply → **per-module anchor adoption** (synchronized
-//! parameters are copied back to the participants module by module,
-//! cache-warm, instead of the historical separate full-vector pass).
+//! Both paths share one numerics core, [`layerwise_sync`], with two
+//! bitwise-identical implementations selected by
+//! `TrainConfig::shard_outer`:
+//!
+//!  * the **full-matrix reference** ([`layerwise_sync_reference`]): per
+//!    module — load pseudo-gradients (compact subset rows in the
+//!    scratch arena) → anomaly screen → softmax weights → fused combine
+//!    + clip-β → outer-optimizer apply → per-module anchor adoption;
+//!  * the **sharded path** ([`layerwise_sync_sharded`], default for
+//!    N > 1): ZeRO-1-style — each rank owns a contiguous range-aligned
+//!    shard of the flat space (`tensor::TableShards`), pseudo-gradients
+//!    are reduce-scattered into the owned shard lanes, penalty norms
+//!    are folded from shard-local partials in flat range order, the
+//!    weighted combine and the outer update run shard-locally (fanned
+//!    out across `worker_threads`), and the updated anchor shards are
+//!    all-gathered back into the members. Per-rank sync memory drops to
+//!    ≈ 1/N of the full-matrix arena; results stay bitwise equal to the
+//!    reference (tests/scheduler_determinism.rs, tests/sharded_sync.rs).
 //!
 //! Determinism invariants: group processing follows the scheduler's
 //! total event order; within a group, members are visited in ascending
@@ -61,9 +73,14 @@ pub(super) struct CommPlan {
     /// (bytes, seconds) of one scalar-norm exchange per mesh column
     /// (shard group) — charged per participating member per module.
     pub scalar_sync: Vec<(usize, f64)>,
-    /// (bytes, seconds) of one per-module shard all-reduce (layer-wise
-    /// barrier sync; indexed by module, charged once per mesh row).
-    pub module_allreduce: Vec<(usize, f64)>,
+    /// (bytes, seconds) of one per-module shard exchange (layer-wise
+    /// barrier sync; indexed by module, charged once per mesh row). An
+    /// all-reduce on the unsharded path; reduce-scatter + all-gather
+    /// with `shard_outer` — the ring α-β model prices both identically
+    /// bitwise (see `collectives::cost`), and the bytes record the
+    /// synchronized module-shard payload either way, so plans stay
+    /// comparable across the two paths.
+    pub module_sync: Vec<(usize, f64)>,
     /// (bytes, seconds) of one per-module anchor push/pull (A-EDiT
     /// anchor sync; indexed by module, charged per member per mesh row).
     pub anchor_exchange: Vec<(usize, f64)>,
@@ -76,7 +93,12 @@ pub(super) struct CommPlan {
 }
 
 impl CommPlan {
-    pub(super) fn build(step_model: &StepModel, method: Method, table: &ModuleTable) -> Self {
+    pub(super) fn build(
+        step_model: &StepModel,
+        method: Method,
+        table: &ModuleTable,
+        shard_outer: bool,
+    ) -> Self {
         let mesh = step_model.mesh;
         let param_count = table.total;
         let shard_bytes = param_count * 4 / mesh.shard;
@@ -105,8 +127,17 @@ impl CommPlan {
                 let full = table.module_len(m) * 4;
                 module_bytes.push(full);
                 let mb = (full / mesh.shard).max(1);
-                plan.module_allreduce
-                    .push((mb, step_model.cost.time(CollOp::AllReduce, mb, &group)));
+                let secs = if shard_outer {
+                    // Sharded outer state: reduce-scatter of the
+                    // pseudo-gradients into the owned shards, all-gather
+                    // of the updated anchor shards — the ring model
+                    // prices the pair bitwise equal to one all-reduce.
+                    step_model.cost.time(CollOp::ReduceScatter, mb, &group)
+                        + step_model.cost.time(CollOp::AllGather, mb, &group)
+                } else {
+                    step_model.cost.time(CollOp::AllReduce, mb, &group)
+                };
+                plan.module_sync.push((mb, secs));
                 // Anchor push + pull of the module shard over the slow
                 // links (no peer involvement).
                 plan.anchor_exchange.push((
@@ -116,7 +147,7 @@ impl CommPlan {
             }
             // Layer-wise overlap: exposed = pipeline stall, not the full
             // serial comm (single source of truth in the step model).
-            plan.sync_exposed = step_model.layerwise_exposed(&module_bytes);
+            plan.sync_exposed = step_model.layerwise_exposed_ops(&module_bytes, shard_outer);
         }
         plan
     }
@@ -130,9 +161,11 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
 
     let mut rollbacks = 0u64;
     if t.cfg.method.uses_penalty() {
-        // Layer-wise sync: one shard all-reduce per module per mesh row.
+        // Layer-wise sync: one shard exchange (all-reduce, or
+        // reduce-scatter + all-gather under `shard_outer`) per module
+        // per mesh row.
         let rows = t.cfg.mesh.shard;
-        for &(bytes, secs) in &t.plan.module_allreduce {
+        for &(bytes, secs) in &t.plan.module_sync {
             for _row in 0..rows {
                 t.comm.record(bytes, secs);
             }
@@ -244,9 +277,92 @@ pub(super) fn anchor_sync(t: &mut Trainer, members: &[usize]) -> Result<()> {
 }
 
 /// Shared numerics core: layer-wise screen → combine → outer apply →
-/// adopt, over the `members` subset (compact scratch rows). Returns the
+/// adopt, over the `members` subset. Dispatches to the sharded (ZeRO-1)
+/// implementation when the scratch arena runs in sharded mode; both
+/// implementations produce bitwise-identical trainer state. Returns the
 /// number of rolled-back modules.
 fn layerwise_sync(t: &mut Trainer, members: &[usize]) -> Result<u64> {
+    if t.scratch.sharded() {
+        layerwise_sync_sharded(t, members)
+    } else {
+        layerwise_sync_reference(t, members)
+    }
+}
+
+/// Sharded outer sync (`TrainConfig::shard_outer`): the five-phase
+/// ZeRO-1 pipeline over the scratch arena's shard lanes (see
+/// `coordinator::scratch` for the phase walkthrough). The scalar
+/// control plane (phases 2/4) runs in module order with the exact f64
+/// folds of the reference sweep; the data-parallel phases (1/3) fan out
+/// across `worker_threads` over the data-disjoint lanes.
+fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
+    t.detector.set_config(t.cfg.penalty);
+    let threads = t.cfg.worker_threads;
+    // Phase 1: reduce-scatter the members' pseudo-gradients into the
+    // owned shard lanes (per-range norm partials recorded).
+    {
+        let replicas = &t.replicas;
+        t.scratch
+            .shard_load(members, |j| replicas[j].params.as_slice(), &t.anchor, threads);
+    }
+    // Phase 2 (scalar control plane, module order): range-order norm
+    // fold → anomaly screen → scalar-norm exchange → softmax weights.
+    let mut rollbacks = 0u64;
+    for module in 0..t.table.num_modules() {
+        t.scratch.shard_fold_norms(module);
+        if t.debug_norms {
+            eprintln!(
+                "sync {} module {module} members {members:?}: norms {:?}",
+                t.syncs,
+                t.scratch.norms()
+            );
+        }
+        {
+            let (norms, screened) = t.scratch.screen_buffers();
+            t.detector
+                .screen_subset_into(module, members, norms, screened);
+        }
+        for &j in members {
+            let (bytes, secs) = t.plan.scalar_sync[j];
+            t.comm.record(bytes, secs);
+        }
+        let ok = t.scratch.compute_weights(t.cfg.penalty.weighted_averaging);
+        t.scratch.shard_commit_weights(module, ok);
+        if !ok {
+            rollbacks += 1;
+        }
+    }
+    // Phase 3: shard-local weighted combine.
+    t.scratch.shard_combine(threads);
+    // Phase 4: clip-β per module from the range-order partial fold.
+    for module in 0..t.table.num_modules() {
+        if t.scratch.shard_rollback(module) {
+            continue;
+        }
+        let module_sq = t.scratch.shard_module_sq(module);
+        let mut beta = 1.0f64;
+        if t.cfg.penalty.gradient_clip {
+            let norm = module_sq.sqrt();
+            beta = (t.cfg.penalty.phi / (norm + t.cfg.penalty.eps)).min(1.0);
+        }
+        t.scratch.shard_set_beta(module, beta as f32);
+    }
+    // Phase 5: shard-local outer apply over disjoint anchor/momentum
+    // slices, then the all-gather adoption — each member adopts the
+    // union of the updated anchor shards (rolled-back modules keep the
+    // old anchor, which the copy re-imposes exactly like the reference
+    // sweep's per-module adoption).
+    t.scratch.shard_apply(&mut t.outer, &mut t.anchor);
+    let Trainer { replicas, anchor, .. } = t;
+    for &j in members {
+        replicas[j].params.copy_from_slice(anchor);
+    }
+    Ok(rollbacks)
+}
+
+/// Full-matrix reference implementation of the layer-wise sync (the
+/// historical sequential per-module sweep; `shard_outer = false`).
+fn layerwise_sync_reference(t: &mut Trainer, members: &[usize]) -> Result<u64> {
     t.detector.set_config(t.cfg.penalty);
     let mut rollbacks = 0u64;
     // Module ranges partition the flat vector and each apply only

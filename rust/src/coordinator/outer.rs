@@ -94,7 +94,13 @@ impl OuterOpt {
         self.apply_range(params, delta, 0);
     }
 
-    /// Extra f32 elements of optimizer state per full replica.
+    /// Extra f32 elements of optimizer state per full replica. Under
+    /// ZeRO-1 outer sharding (`TrainConfig::shard_outer`) each rank
+    /// holds only its shard's slice of the momentum, so per-rank
+    /// accounting passes the actual shard length (`TableShards::range`)
+    /// as `n` — the range-aligned partition is uneven, so there is no
+    /// closed-form `full/parts` shortcut (see
+    /// `Trainer::shard_sync_high_water`).
     pub fn state_elems(&self, n: usize) -> usize {
         if self.kind.needs_momentum() { n } else { 0 }
     }

@@ -38,12 +38,119 @@
 //! are one sweep ([`kernels::weighted_sum_sq_strided`]), and the clip-β
 //! scale rides inside the outer-optimizer apply
 //! ([`super::outer::OuterOpt::apply_range_scaled`]).
+//!
+//! # Sharded mode (`TrainConfig::shard_outer`)
+//!
+//! [`Self::enable_sharding`] switches the arena to the ZeRO-1-style
+//! layout: the flat space is partitioned into `parts` contiguous,
+//! range-aligned shards (`tensor::TableShards`) and the full Δ matrix
+//! is replaced by per-rank **shard lanes** — each lane holds only its
+//! shard's Δ rows, combine buffer and scalar partials, so the per-rank
+//! sync high-water drops to ≈ 1/parts of the unsharded arena (asserted
+//! by `tests/sharded_sync.rs`). The sync then runs in phases:
+//!
+//!  1. [`Self::shard_load`] — "reduce-scatter": every lane materializes
+//!     the members' pseudo-gradients over its owned ranges and records
+//!     per-range ‖Δ‖² partials (lane-parallel when `threads > 1`);
+//!  2. [`Self::shard_fold_norms`] — per-module norms folded from the
+//!     partials **in flat range order**, the exact f64 association of
+//!     the unsharded sweep (the deterministic-combine contract);
+//!  3. [`Self::shard_combine`] — shard-local softmax-weighted combine
+//!     (the `collectives::group::reduce_scatter_weighted` fold), with
+//!     per-range combined-norm partials (lane-parallel);
+//!  4. [`Self::shard_module_sq`] / [`Self::shard_set_beta`] — clip-β
+//!     from the range-order fold;
+//!  5. [`Self::shard_apply`] — shard-local outer update over disjoint
+//!     anchor/momentum slices ("all-gather" adoption is a plain anchor
+//!     copy, priced in the `CommPlan`).
+//!
+//! Every lane buffer is sized at [`Self::enable_sharding`] /
+//! [`Self::ensure_replicas`]; the phases allocate nothing, so the
+//! zero-allocation steady-state invariant holds with sharding on.
 
-use crate::tensor::kernels;
 use crate::tensor::table::{ModuleTable, Range};
+use crate::tensor::{kernels, TableShards};
 
 use super::outer::OuterOpt;
 use super::penalty;
+
+/// One owned range in a shard lane, in lane-local coordinates.
+#[derive(Debug, Clone, Copy)]
+struct LanePart {
+    /// Module the range belongs to.
+    module: usize,
+    /// Global flat offset.
+    offset: usize,
+    /// Offset within the shard (`offset - lane.offset`).
+    local: usize,
+    len: usize,
+}
+
+/// Per-rank shard lane: everything rank `s` owns in the sharded sync.
+/// Lanes are data-disjoint, so the load/combine phases can fan out
+/// across worker threads with bitwise-identical results.
+#[derive(Debug)]
+struct ShardLane {
+    /// Flat-space offset of the owned shard.
+    offset: usize,
+    /// Shard length (row stride of `deltas`).
+    len: usize,
+    /// Owned module ranges, in flat order.
+    parts: Vec<LanePart>,
+    /// Member-compacted Δ shard (row i = i-th sync member).
+    deltas: Vec<f32>,
+    /// Weighted-combine output over the shard.
+    combined: Vec<f32>,
+    /// Per (part, member-slot) squared pseudo-gradient partials.
+    load_sq: Vec<f64>,
+    /// Per-part combined squared-norm partials.
+    combine_sq: Vec<f64>,
+}
+
+/// Sharded-sync state: the lanes, the range-order fold metadata and the
+/// per-module control-plane results shared between phases.
+#[derive(Debug)]
+struct ShardState {
+    lanes: Vec<ShardLane>,
+    /// Per module: (lane, part slot) of every range, in flat range
+    /// order — the deterministic fold order of the scalar combines.
+    module_slots: Vec<Vec<(u32, u32)>>,
+    /// Per-module softmax weights (row stride = replica capacity).
+    weights_mat: Vec<f32>,
+    rollback: Vec<bool>,
+    betas: Vec<f32>,
+    /// Member count of the in-flight sync (set by `shard_load`).
+    members: usize,
+}
+
+/// Run `f` over every lane — sequentially (allocation-free), or fanned
+/// out across up to `threads` scoped OS threads in contiguous chunks
+/// (the same chunking as the replica lanes in `Trainer::run_lanes`).
+/// Lanes are data-disjoint, so results are bitwise identical either
+/// way.
+fn for_each_lane<F>(lanes: &mut [ShardLane], threads: usize, f: F)
+where
+    F: Fn(&mut ShardLane) + Sync,
+{
+    let threads = threads.max(1).min(lanes.len().max(1));
+    if threads <= 1 {
+        for lane in lanes.iter_mut() {
+            f(lane);
+        }
+    } else {
+        let chunk = lanes.len().div_ceil(threads);
+        std::thread::scope(|s| {
+            for batch in lanes.chunks_mut(chunk) {
+                let f = &f;
+                s.spawn(move || {
+                    for lane in batch.iter_mut() {
+                        f(lane);
+                    }
+                });
+            }
+        });
+    }
+}
 
 #[derive(Debug)]
 pub struct SyncScratch {
@@ -69,6 +176,9 @@ pub struct SyncScratch {
     mean: Vec<f32>,
     /// Recycled full-vector buffers for the CO2 staleness queue.
     spare: Vec<Vec<f32>>,
+    /// ZeRO-1-style shard lanes (`TrainConfig::shard_outer`); `None`
+    /// runs the historical full-matrix path.
+    shards: Option<ShardState>,
 }
 
 impl SyncScratch {
@@ -93,17 +203,111 @@ impl SyncScratch {
             tokens: Vec::with_capacity(token_capacity),
             mean: vec![0.0; params],
             spare: Vec::new(),
+            shards: None,
         }
+    }
+
+    /// Switch the arena to the sharded (ZeRO-1-style) layout: partition
+    /// the flat space into `parts` range-aligned shards and replace the
+    /// full Δ matrix by per-rank shard lanes. Idempotent per (table,
+    /// parts); called at trainer construction and after an elastic
+    /// rescale (where `parts` follows the new replica count).
+    pub fn enable_sharding(&mut self, table: &ModuleTable, parts: usize) {
+        let spec = TableShards::from_table(table, parts);
+        let replicas = self.replicas;
+        let mut lanes: Vec<ShardLane> = (0..parts)
+            .map(|s| {
+                let (offset, len) = spec.range(s);
+                ShardLane {
+                    offset,
+                    len,
+                    parts: Vec::new(),
+                    deltas: vec![0.0; replicas * len],
+                    combined: vec![0.0; len],
+                    load_sq: Vec::new(),
+                    combine_sq: Vec::new(),
+                }
+            })
+            .collect();
+        let modules = self.module_ranges.len();
+        let mut module_slots: Vec<Vec<(u32, u32)>> = vec![Vec::new(); modules];
+        for (m, ranges) in self.module_ranges.iter().enumerate() {
+            for r in ranges {
+                if r.len == 0 {
+                    continue;
+                }
+                let s = spec.owner_of(r.offset);
+                let lane = &mut lanes[s];
+                module_slots[m].push((s as u32, lane.parts.len() as u32));
+                lane.parts.push(LanePart {
+                    module: m,
+                    offset: r.offset,
+                    local: r.offset - lane.offset,
+                    len: r.len,
+                });
+            }
+        }
+        for lane in &mut lanes {
+            lane.load_sq = vec![0.0; lane.parts.len() * replicas];
+            lane.combine_sq = vec![0.0; lane.parts.len()];
+        }
+        // The full-matrix buffers of the unsharded path (Δ matrix, mean,
+        // module-contiguous combine buffer) are unused in sharded mode;
+        // free them so the per-rank accounting is honest.
+        self.deltas = Vec::new();
+        self.mean = Vec::new();
+        self.combined = Vec::new();
+        self.shards = Some(ShardState {
+            lanes,
+            module_slots,
+            weights_mat: vec![0.0; modules * replicas],
+            rollback: vec![false; modules],
+            betas: vec![1.0; modules],
+            members: 0,
+        });
+    }
+
+    /// Restore the full-matrix layout (inverse of
+    /// [`Self::enable_sharding`]) — used when an elastic rescale drops
+    /// the sync group to a single replica, where sharding buys nothing.
+    pub fn disable_sharding(&mut self) {
+        if self.shards.take().is_some() {
+            self.deltas = vec![0.0; self.replicas * self.params];
+            self.mean = vec![0.0; self.params];
+            let max_module_len = self
+                .module_ranges
+                .iter()
+                .map(|rs| rs.iter().map(|r| r.len).sum::<usize>())
+                .max()
+                .unwrap_or(0);
+            self.combined = vec![0.0; max_module_len];
+        }
+    }
+
+    /// Whether the sharded layout is active.
+    pub fn sharded(&self) -> bool {
+        self.shards.is_some()
     }
 
     /// Resize the per-replica buffers after an elastic rescale. No-op
     /// (and allocation-free) when the replica count is unchanged.
+    ///
+    /// Sharded mode: the lane buffers are NOT resized here — their
+    /// `slot * replicas + i` partial indexing is stride-sensitive, so an
+    /// in-place resize would scramble them. The one caller that changes
+    /// the replica count (`Trainer::rescale`) must follow up with
+    /// [`Self::enable_sharding`], which rebuilds every lane for the new
+    /// count (and the freed full Δ matrix must not be re-grown here).
     pub fn ensure_replicas(&mut self, replicas: usize) {
         if replicas == self.replicas {
             return;
         }
         self.replicas = replicas;
-        self.deltas.resize(replicas * self.params, 0.0);
+        if self.shards.is_some() {
+            debug_assert!(self.deltas.is_empty(), "sharded arena holds no full Δ matrix");
+        } else {
+            self.deltas.resize(replicas * self.params, 0.0);
+        }
         self.norms.reserve(replicas);
         self.screened.reserve(replicas);
         self.weights.reserve(replicas);
@@ -294,25 +498,182 @@ impl SyncScratch {
     pub fn delta_row(&self, j: usize) -> &[f32] {
         &self.deltas[j * self.params..(j + 1) * self.params]
     }
+
+    // --- sharded path (see the module docs' phase walkthrough) ----------
+
+    /// Phase 1 — the "reduce-scatter": every lane materializes the
+    /// members' pseudo-gradients over its owned ranges (member-compacted
+    /// rows, as in [`Self::load_module_subset`]) and records per-range
+    /// ‖Δ‖² partials for the deterministic norm fold. Lane-parallel when
+    /// `threads > 1`, bitwise identical either way.
+    pub fn shard_load<'a, F>(
+        &mut self,
+        members: &[usize],
+        row_params: F,
+        anchor: &[f32],
+        threads: usize,
+    ) where
+        F: Fn(usize) -> &'a [f32] + Sync,
+    {
+        let replicas = self.replicas;
+        debug_assert!(members.len() <= replicas);
+        let st = self.shards.as_mut().expect("sharding not enabled");
+        st.members = members.len();
+        for_each_lane(&mut st.lanes, threads, |lane| {
+            // Lane buffers must have been rebuilt for the current
+            // replica count (`enable_sharding`) — a stale stride would
+            // silently scramble the partial indexing below.
+            debug_assert_eq!(lane.load_sq.len(), lane.parts.len() * replicas);
+            debug_assert_eq!(lane.deltas.len(), replicas * lane.len);
+            for (i, &j) in members.iter().enumerate() {
+                let row = row_params(j);
+                let base = i * lane.len;
+                for (slot, p) in lane.parts.iter().enumerate() {
+                    let sq = kernels::sub_sq_norm_into(
+                        &mut lane.deltas[base + p.local..base + p.local + p.len],
+                        &row[p.offset..p.offset + p.len],
+                        &anchor[p.offset..p.offset + p.len],
+                    );
+                    lane.load_sq[slot * replicas + i] = sq;
+                }
+            }
+        });
+    }
+
+    /// Phase 2a: fold module `m`'s squared partials — in flat range
+    /// order, the exact f64 association of the unsharded
+    /// [`Self::load_module_subset`] — into [`Self::norms`].
+    pub fn shard_fold_norms(&mut self, m: usize) {
+        let Self { shards, norms, replicas, .. } = self;
+        let st = shards.as_ref().expect("sharding not enabled");
+        norms.clear();
+        for i in 0..st.members {
+            let mut sq = 0.0f64;
+            for &(lane, slot) in &st.module_slots[m] {
+                sq += st.lanes[lane as usize].load_sq[slot as usize * *replicas + i];
+            }
+            norms.push(sq.sqrt());
+        }
+    }
+
+    /// Phase 2b: publish module `m`'s combine weights (computed by
+    /// [`Self::compute_weights`]) to the weight matrix the shard-local
+    /// combine reads; `ok == false` marks the module rolled back
+    /// (combine and apply skip it).
+    pub fn shard_commit_weights(&mut self, m: usize, ok: bool) {
+        let Self { shards, weights, replicas, .. } = self;
+        let st = shards.as_mut().expect("sharding not enabled");
+        st.rollback[m] = !ok;
+        if ok {
+            st.weights_mat[m * *replicas..m * *replicas + weights.len()]
+                .copy_from_slice(weights);
+        }
+    }
+
+    /// Phase 3 — shard-local weighted combine: every lane folds the
+    /// members' Δ rows over its owned ranges with the committed
+    /// per-module weights (ascending member order, zero weights skipped
+    /// — the `collectives::group::reduce_scatter_weighted` fold) and
+    /// records per-range combined-norm partials for the β fold.
+    /// Lane-parallel when `threads > 1`.
+    pub fn shard_combine(&mut self, threads: usize) {
+        let replicas = self.replicas;
+        let st = self.shards.as_mut().expect("sharding not enabled");
+        let members = st.members;
+        let ShardState { lanes, weights_mat, rollback, .. } = st;
+        let weights_mat: &[f32] = weights_mat;
+        let rollback: &[bool] = rollback;
+        for_each_lane(lanes, threads, |lane| {
+            for (slot, p) in lane.parts.iter().enumerate() {
+                if rollback[p.module] {
+                    continue;
+                }
+                let w = &weights_mat[p.module * replicas..p.module * replicas + members];
+                lane.combine_sq[slot] = kernels::weighted_sum_sq_strided(
+                    &mut lane.combined[p.local..p.local + p.len],
+                    &lane.deltas,
+                    lane.len,
+                    p.local,
+                    w,
+                );
+            }
+        });
+    }
+
+    /// Phase 4a: module `m`'s combined squared norm, folded from the
+    /// lane partials in flat range order (the unsharded
+    /// [`Self::combine_module`] association).
+    pub fn shard_module_sq(&self, m: usize) -> f64 {
+        let st = self.shards.as_ref().expect("sharding not enabled");
+        let mut sq = 0.0f64;
+        for &(lane, slot) in &st.module_slots[m] {
+            sq += st.lanes[lane as usize].combine_sq[slot as usize];
+        }
+        sq
+    }
+
+    /// Whether module `m` was rolled back this sync (phase 2b).
+    pub fn shard_rollback(&self, m: usize) -> bool {
+        self.shards.as_ref().expect("sharding not enabled").rollback[m]
+    }
+
+    /// Phase 4b: record module `m`'s clip factor β for the apply.
+    pub fn shard_set_beta(&mut self, m: usize, beta: f32) {
+        self.shards.as_mut().expect("sharding not enabled").betas[m] = beta;
+    }
+
+    /// Phase 5 — shard-local outer update: each lane applies its
+    /// combined ranges through the outer optimizer with the per-module β
+    /// fused in. Ranges are disjoint slices of the anchor and momentum,
+    /// so the lane-major apply order is immaterial: the result is
+    /// bitwise the unsharded module-major sweep.
+    pub fn shard_apply(&self, outer: &mut OuterOpt, anchor: &mut [f32]) {
+        let st = self.shards.as_ref().expect("sharding not enabled");
+        for lane in &st.lanes {
+            for p in &lane.parts {
+                if st.rollback[p.module] {
+                    continue;
+                }
+                outer.apply_range_scaled(
+                    anchor,
+                    &lane.combined[p.local..p.local + p.len],
+                    p.offset,
+                    st.betas[p.module],
+                );
+            }
+        }
+    }
+
+    /// Number of shard ranks (0 when sharding is disabled).
+    pub fn shard_parts(&self) -> usize {
+        self.shards.as_ref().map_or(0, |st| st.lanes.len())
+    }
+
+    /// (offset, len) of shard rank `s`'s owned region.
+    pub fn shard_range(&self, s: usize) -> (usize, usize) {
+        let st = self.shards.as_ref().expect("sharding not enabled");
+        (st.lanes[s].offset, st.lanes[s].len)
+    }
+
+    /// Scratch bytes resident on shard rank `s`: its Δ shard rows,
+    /// combine buffer and scalar partials. The rank's anchor and
+    /// outer-momentum shards (`len · 4` bytes each) come on top —
+    /// together the per-rank sync high-water is ≈ the unsharded
+    /// footprint ÷ parts (asserted by `tests/sharded_sync.rs`).
+    pub fn shard_rank_bytes(&self, s: usize) -> usize {
+        let st = self.shards.as_ref().expect("sharding not enabled");
+        let lane = &st.lanes[s];
+        lane.deltas.len() * 4
+            + lane.combined.len() * 4
+            + (lane.load_sq.len() + lane.combine_sq.len()) * 8
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::outer::OuterOptKind;
-    use crate::tensor::{self, table::TensorEntry};
-
-    fn toy_table() -> ModuleTable {
-        ModuleTable::new(
-            vec![
-                TensorEntry { name: "embed".into(), shape: vec![4, 2], offset: 0, size: 8, stacked: false },
-                TensorEntry { name: "layers.b".into(), shape: vec![2, 2], offset: 8, size: 4, stacked: true },
-                TensorEntry { name: "layers.w".into(), shape: vec![2, 3, 2], offset: 12, size: 12, stacked: true },
-                TensorEntry { name: "head".into(), shape: vec![2, 2], offset: 24, size: 4, stacked: false },
-            ],
-            2,
-        )
-    }
+    use crate::tensor::{self, table::toy_table};
 
     fn rows(n: usize, p: usize) -> Vec<Vec<f32>> {
         (0..n)
@@ -469,6 +830,112 @@ mod tests {
         tensor::mean_into(&mut want, &views);
         assert_eq!(got, want);
         assert_eq!(owned, want);
+    }
+
+    #[test]
+    fn sharded_phases_match_reference_sweep_bitwise() {
+        let table = toy_table();
+        let p = table.total;
+        let anchor0: Vec<f32> = (0..p).map(|i| (i % 5) as f32 / 5.0).collect();
+        let params = rows(3, p);
+        let members = [0usize, 1, 2];
+        let phi = 0.6f64;
+        let eps = 1e-8f64;
+
+        // Reference module-major sweep.
+        let mut r = SyncScratch::new(&table, 3, 0);
+        let mut outer_r =
+            OuterOpt::new(OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }, p);
+        let mut anchor_r = anchor0.clone();
+        let mut norms_r: Vec<Vec<f64>> = Vec::new();
+        for m in 0..table.num_modules() {
+            r.load_module_subset(m, &members, |j| params[j].as_slice(), &anchor_r);
+            norms_r.push(r.norms().to_vec());
+            r.adopt_norms_unscreened();
+            assert!(r.compute_weights(true));
+            let sq = r.combine_module(m);
+            let beta = (phi / (sq.sqrt() + eps)).min(1.0);
+            r.apply_module(m, &mut outer_r, &mut anchor_r, beta as f32);
+        }
+
+        // Sharded five-phase pipeline, across shard counts (1 =
+        // degenerate single lane; 5 > modules exercises short lanes) and
+        // both the sequential and the 2-thread lane fan-out.
+        for parts in [1usize, 2, 3, 5] {
+            let threads = if parts == 2 { 2 } else { 1 };
+            let mut s = SyncScratch::new(&table, 3, 0);
+            s.enable_sharding(&table, parts);
+            let mut outer_s =
+                OuterOpt::new(OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }, p);
+            let mut anchor_s = anchor0.clone();
+            s.shard_load(&members, |j| params[j].as_slice(), &anchor_s, threads);
+            for m in 0..table.num_modules() {
+                s.shard_fold_norms(m);
+                assert_eq!(s.norms(), &norms_r[m][..], "parts={parts} m={m}");
+                s.adopt_norms_unscreened();
+                assert!(s.compute_weights(true));
+                s.shard_commit_weights(m, true);
+            }
+            s.shard_combine(threads);
+            for m in 0..table.num_modules() {
+                let sq = s.shard_module_sq(m);
+                let beta = (phi / (sq.sqrt() + eps)).min(1.0);
+                s.shard_set_beta(m, beta as f32);
+            }
+            s.shard_apply(&mut outer_s, &mut anchor_s);
+            assert_eq!(anchor_s, anchor_r, "parts={parts}");
+            assert_eq!(outer_s.momentum, outer_r.momentum, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn sharded_subset_and_rollback_semantics() {
+        // A-EDiT-style member subset + a rolled-back module: the lanes
+        // must compact rows to the member list and leave rolled-back
+        // modules' anchor slices untouched.
+        let table = toy_table();
+        let p = table.total;
+        let anchor0: Vec<f32> = (0..p).map(|i| (i % 3) as f32 / 3.0 - 0.2).collect();
+        let params = rows(4, p);
+        let members = [1usize, 3];
+
+        let mut s = SyncScratch::new(&table, 4, 0);
+        s.enable_sharding(&table, 4);
+        let mut outer = OuterOpt::new(OuterOptKind::Sgd { lr: 1.0 }, p);
+        let mut anchor = anchor0.clone();
+        s.shard_load(&members, |j| params[j].as_slice(), &anchor, 1);
+
+        let mut full = SyncScratch::new(&table, 4, 0);
+        for m in 0..table.num_modules() {
+            s.shard_fold_norms(m);
+            full.load_module_subset(m, &members, |j| params[j].as_slice(), &anchor0);
+            assert_eq!(s.norms(), full.norms(), "m={m}");
+            s.adopt_norms_unscreened();
+            assert!(s.compute_weights(true));
+            // Roll module 0 back; commit the rest.
+            s.shard_commit_weights(m, m != 0);
+        }
+        assert!(s.shard_rollback(0));
+        assert!(!s.shard_rollback(1));
+        s.shard_combine(1);
+        for m in 1..table.num_modules() {
+            let _ = s.shard_module_sq(m);
+            s.shard_set_beta(m, 1.0);
+        }
+        s.shard_apply(&mut outer, &mut anchor);
+        // Rolled-back module 0: anchor slices untouched.
+        for r in table.module_ranges(0) {
+            assert_eq!(
+                &anchor[r.offset..r.offset + r.len],
+                &anchor0[r.offset..r.offset + r.len]
+            );
+        }
+        // Non-rolled-back modules moved (SGD lr=1 ⇒ anchor + combined Δ).
+        let moved = table
+            .module_ranges(1)
+            .iter()
+            .any(|r| anchor[r.offset..r.offset + r.len] != anchor0[r.offset..r.offset + r.len]);
+        assert!(moved, "module 1 must have been applied");
     }
 
     #[test]

@@ -156,7 +156,14 @@ impl Corpus {
 
     /// One token sequence of length `len` for (split, worker, step, idx).
     /// Pure function of the corpus seed — identical across methods/runs.
-    pub fn sequence(&self, split: Split, worker: usize, step: u64, idx: usize, len: usize) -> Vec<u32> {
+    pub fn sequence(
+        &self,
+        split: Split,
+        worker: usize,
+        step: u64,
+        idx: usize,
+        len: usize,
+    ) -> Vec<u32> {
         let mut buf = Vec::with_capacity(len);
         self.sequence_into(split, worker, step, idx, len, &mut buf);
         buf.iter().map(|&t| t as u32).collect()

@@ -80,12 +80,16 @@ impl Probe {
                 // Same language, held-out streams. (LongRange/RareContext
                 // differ by namespace; with fixed seq_len the length axis is
                 // exercised by the caller choosing larger eval windows.)
-                let clean = Corpus::new(train.language.vocab(), train_seed(train), Quality::clean());
+                let clean =
+                    Corpus::new(train.language.vocab(), train_seed(train), Quality::clean());
                 clean.batch_i32(split, 0, step, batch, seq_plus_1)
             }
             Probe::NoisyUniform | Probe::NoisyRepeat | Probe::NoisyShuffle => {
-                let noisy =
-                    Corpus::new(train.language.vocab(), train_seed(train), Quality { noise_prob: 1.0 });
+                let noisy = Corpus::new(
+                    train.language.vocab(),
+                    train_seed(train),
+                    Quality { noise_prob: 1.0 },
+                );
                 noisy.batch_i32(split, 0, step, batch, seq_plus_1)
             }
             Probe::DomainShift => {
@@ -97,7 +101,8 @@ impl Probe {
                 shifted.batch_i32(split, 0, step, batch, seq_plus_1)
             }
             Probe::Mixed => {
-                let clean = Corpus::new(train.language.vocab(), train_seed(train), Quality::clean());
+                let clean =
+                    Corpus::new(train.language.vocab(), train_seed(train), Quality::clean());
                 let shifted = Corpus::new(
                     train.language.vocab(),
                     train_seed(train) ^ 0xD0_0D,
@@ -105,7 +110,13 @@ impl Probe {
                 );
                 let half = batch / 2;
                 let mut out = clean.batch_i32(split, 0, step, half.max(1), seq_plus_1);
-                out.extend(shifted.batch_i32(split, 1, step, batch - half.max(1).min(batch), seq_plus_1));
+                out.extend(shifted.batch_i32(
+                    split,
+                    1,
+                    step,
+                    batch - half.max(1).min(batch),
+                    seq_plus_1,
+                ));
                 out.truncate(batch * seq_plus_1);
                 // Pad if the halves under-filled (batch==1 edge case).
                 while out.len() < batch * seq_plus_1 {

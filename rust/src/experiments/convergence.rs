@@ -21,7 +21,8 @@ pub fn fig4(opts: &ExpOpts, methods: &[Method], noisy: bool) -> Result<Vec<(Meth
         &["method", "step", "train_loss", "val_ppl"],
     )?;
     let mut finals = Vec::new();
-    let mut table = Table::new(&["method", "final loss", "final PPL", "syncs", "anomalies", "rollbacks"]);
+    let mut table =
+        Table::new(&["method", "final loss", "final PPL", "syncs", "anomalies", "rollbacks"]);
 
     for &method in methods {
         let mut t = opts.trainer(method, quality, 0)?;

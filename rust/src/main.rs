@@ -45,6 +45,7 @@ fn usage() -> &'static str {
   train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit
             --lr X --noise P --straggler none|random:LAG|consistent:LAG[:REPLICA]
             --threads N --timeline FILE.csv --out curves.csv --log
+            --no-shard-outer (disable ZeRO-1 outer-state sharding)
   sweep:    --exp fig4|table1|fig8 [--noisy] [--methods a,b,c]
   simulate: --exp table2|fig5|fig5-trainer|fig9|measured
   ablation: (fig7)
@@ -136,6 +137,9 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
     }
     tc.worker_threads = args.usize("threads", 1).max(1);
     tc.trace_timeline = args.opt("timeline").is_some();
+    // Sharded outer state defaults on for the layer-wise methods; the
+    // flag forces the full-matrix reference path (bitwise identical).
+    tc.shard_outer = !args.flag("no-shard-outer") && cfg.i64("train.shard_outer", 1) != 0;
     tc.straggler = match args.str("straggler", "none").split_once(':') {
         Some(("random", lag)) => Straggler::Random { lag: lag.parse()? },
         Some(("consistent", rest)) => {

@@ -16,10 +16,42 @@ impl ScaleSpec {
     /// Paper Table 3 configurations (all 32 layers, vocab 79,800,
     /// context 4,096).
     pub const PAPER: [ScaleSpec; 4] = [
-        ScaleSpec { name: "350M", num_layers: 32, hidden: 768, intermediate: 2048, heads: 6, vocab: 79_800, seq: 4096 },
-        ScaleSpec { name: "1B", num_layers: 32, hidden: 1536, intermediate: 4096, heads: 12, vocab: 79_800, seq: 4096 },
-        ScaleSpec { name: "3B", num_layers: 32, hidden: 2560, intermediate: 6912, heads: 20, vocab: 79_800, seq: 4096 },
-        ScaleSpec { name: "7B", num_layers: 32, hidden: 4096, intermediate: 11_008, heads: 32, vocab: 79_800, seq: 4096 },
+        ScaleSpec {
+            name: "350M",
+            num_layers: 32,
+            hidden: 768,
+            intermediate: 2048,
+            heads: 6,
+            vocab: 79_800,
+            seq: 4096,
+        },
+        ScaleSpec {
+            name: "1B",
+            num_layers: 32,
+            hidden: 1536,
+            intermediate: 4096,
+            heads: 12,
+            vocab: 79_800,
+            seq: 4096,
+        },
+        ScaleSpec {
+            name: "3B",
+            num_layers: 32,
+            hidden: 2560,
+            intermediate: 6912,
+            heads: 20,
+            vocab: 79_800,
+            seq: 4096,
+        },
+        ScaleSpec {
+            name: "7B",
+            num_layers: 32,
+            hidden: 4096,
+            intermediate: 11_008,
+            heads: 32,
+            vocab: 79_800,
+            seq: 4096,
+        },
     ];
 
     pub fn by_name(name: &str) -> Option<ScaleSpec> {
@@ -32,8 +64,12 @@ impl ScaleSpec {
     /// Parameter count (same formula as the L2 model: embed + untied head
     /// + per-layer 2 norms + 4 attention mats + 3 SwiGLU mats + final norm).
     pub fn params(&self) -> u64 {
-        let (d, f, v, l) =
-            (self.hidden as u64, self.intermediate as u64, self.vocab as u64, self.num_layers as u64);
+        let (d, f, v, l) = (
+            self.hidden as u64,
+            self.intermediate as u64,
+            self.vocab as u64,
+            self.num_layers as u64,
+        );
         2 * v * d + d + l * (2 * d + 4 * d * d + 3 * d * f)
     }
 

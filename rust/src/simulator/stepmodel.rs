@@ -127,6 +127,18 @@ impl StepModel {
     /// behind the module all-reduces, so only a single latency is
     /// modeled as exposed.
     pub fn layerwise_exposed(&self, module_bytes: &[usize]) -> f64 {
+        self.layerwise_exposed_ops(module_bytes, false)
+    }
+
+    /// [`Self::layerwise_exposed`] with the per-module op decomposition
+    /// made explicit: `sharded` prices each module as a reduce-scatter
+    /// of the pseudo-gradients plus an all-gather of the updated anchor
+    /// shards (the ZeRO-1 outer-sharding path) instead of one
+    /// all-reduce. The ring α-β model decomposes exactly — the pair
+    /// costs bitwise the same as the all-reduce (`collectives::cost`) —
+    /// which is the paper's claim that sharding the outer state exposes
+    /// no additional synchronization time.
+    pub fn layerwise_exposed_ops(&self, module_bytes: &[usize], sharded: bool) -> f64 {
         let scalar = self
             .cost
             .time(CollOp::ScalarSync, 4, &self.mesh.shard_group(0));
@@ -135,12 +147,17 @@ impl StepModel {
             return scalar;
         }
         let group = self.mesh.sync_group(0);
-        let mut comm_end = 0.0f64; // completion time of module k's all-reduce
+        let mut comm_end = 0.0f64; // completion time of module k's exchange
         let mut fwd_end = 0.0f64; // completion time of module k's forward
         let mut compute_total = 0.0f64;
         for &mb in module_bytes {
             let shard_b = (mb / self.mesh.shard).max(1);
-            comm_end += self.cost.time(CollOp::AllReduce, shard_b, &group);
+            comm_end += if sharded {
+                self.cost.time(CollOp::ReduceScatter, shard_b, &group)
+                    + self.cost.time(CollOp::AllGather, shard_b, &group)
+            } else {
+                self.cost.time(CollOp::AllReduce, shard_b, &group)
+            };
             let c = self.compute * mb as f64 / total as f64;
             let start = comm_end.max(fwd_end);
             fwd_end = start + c;
@@ -251,6 +268,19 @@ mod tests {
         let m = model();
         let scalar = m.cost.time(CollOp::ScalarSync, 4, &m.mesh.shard_group(0));
         assert_eq!(m.layerwise_exposed(&[]), scalar);
+    }
+
+    #[test]
+    fn layerwise_sharded_pricing_is_bitwise_allreduce() {
+        // Reduce-scatter + all-gather per module must expose exactly the
+        // all-reduce pipeline stall: outer sharding costs no extra
+        // exposed communication.
+        let m = model();
+        for modules in [vec![m.param_bytes / 26; 26], vec![m.param_bytes / 8; 8]] {
+            let ar = m.layerwise_exposed_ops(&modules, false);
+            let rs_ag = m.layerwise_exposed_ops(&modules, true);
+            assert_eq!(ar.to_bits(), rs_ag.to_bits());
+        }
     }
 
     #[test]

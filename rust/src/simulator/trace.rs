@@ -106,7 +106,12 @@ pub fn sync_timeline(method: Method) -> Timeline {
             let mut t2 = t;
             push("module-0 sync + norms", SegKind::ExposedComm, &mut t, exposed);
             push("next-round fwd compute", SegKind::Compute, &mut t, compute);
-            push("layer-wise sync (prefetch-hidden)", SegKind::OverlappedComm, &mut t2, ar - exposed / 2.0);
+            push(
+                "layer-wise sync (prefetch-hidden)",
+                SegKind::OverlappedComm,
+                &mut t2,
+                ar - exposed / 2.0,
+            );
         }
     }
     Timeline { method, segments, exposed }

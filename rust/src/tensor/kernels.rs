@@ -357,7 +357,10 @@ mod tests {
 
     fn vec_pattern(n: usize, salt: u32) -> Vec<f32> {
         (0..n)
-            .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(salt) % 1000) as f32 / 250.0 - 2.0)
+            .map(|i| {
+                let h = (i as u32).wrapping_mul(2654435761).wrapping_add(salt) % 1000;
+                h as f32 / 250.0 - 2.0
+            })
             .collect()
     }
 

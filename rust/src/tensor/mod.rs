@@ -9,13 +9,15 @@
 //!    oracles the fused ops are tested against;
 //!  * [`table`]: the per-tensor / per-layer view over the flat vector
 //!    (drives layer-wise synchronization accounting);
-//!  * [`shard`]: ZeRO-3-style shard arithmetic for the model shard groups.
+//!  * [`shard`]: ZeRO-3-style shard arithmetic for the model shard
+//!    groups, plus the range-aligned [`TableShards`] partition behind
+//!    the ZeRO-1-style sharded outer synchronization path.
 
 pub mod kernels;
 pub mod shard;
 pub mod table;
 
-pub use shard::ShardSpec;
+pub use shard::{ShardSpec, TableShards};
 pub use table::{ModuleTable, TensorEntry};
 
 /// y += alpha * x

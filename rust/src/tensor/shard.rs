@@ -6,6 +6,15 @@
 //! last shard possibly short.  The same spec shards the outer-optimizer
 //! state (pseudo-gradient momentum) so EDiT's memory advantage over
 //! CO2 is reproduced faithfully in the memory model.
+//!
+//! [`TableShards`] is the ZeRO-1-style counterpart used by the sharded
+//! outer synchronization path: a contiguous partition of the flat space
+//! whose boundaries are *snapped to `ModuleTable` range boundaries*, so
+//! every per-module range is wholly owned by exactly one rank and the
+//! shard-local pseudo-gradient-penalty partial sums can be folded back
+//! in global range order — bitwise identical to the unsharded sweep.
+
+use super::table::{ModuleTable, Range};
 
 /// Sharding of a flat vector of `total` elements across `parts` owners.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,9 +66,81 @@ impl ShardSpec {
     }
 }
 
+/// Range-aligned contiguous partition of a [`ModuleTable`]'s flat space
+/// across `parts` owners (the sharded-outer sync path's layout).
+///
+/// Unlike [`ShardSpec`], boundaries never split a module range: each
+/// shard is a contiguous run of whole ranges, greedily balanced toward
+/// `ceil(total/parts)` elements (a shard absorbs the next range when
+/// that leaves it closer to the target than stopping short). Trailing
+/// shards may be empty when there are fewer ranges than parts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TableShards {
+    pub total: usize,
+    bounds: Vec<(usize, usize)>,
+}
+
+impl TableShards {
+    pub fn from_table(table: &ModuleTable, parts: usize) -> Self {
+        assert!(parts > 0);
+        // All module ranges in flat order — together they partition
+        // [0, total) (asserted module-table invariant).
+        let mut ranges: Vec<Range> = (0..table.num_modules())
+            .flat_map(|m| table.module_ranges(m))
+            .collect();
+        ranges.sort_by_key(|r| r.offset);
+        let per = table.total.div_ceil(parts).max(1);
+        let mut bounds: Vec<(usize, usize)> = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        let mut cursor = 0usize;
+        for r in &ranges {
+            debug_assert_eq!(r.offset, cursor, "module ranges must partition the flat space");
+            let cur = cursor - start;
+            let close = bounds.len() + 1 < parts
+                && cur > 0
+                && (cur >= per || (cur + r.len > per && cur + r.len - per > per - cur));
+            if close {
+                bounds.push((start, cur));
+                start = cursor;
+            }
+            cursor += r.len;
+        }
+        debug_assert_eq!(cursor, table.total);
+        bounds.push((start, table.total - start));
+        while bounds.len() < parts {
+            bounds.push((table.total, 0));
+        }
+        Self { total: table.total, bounds }
+    }
+
+    pub fn parts(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// The (offset, len) of shard `s`; len may be 0 at the tail.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        self.bounds[s]
+    }
+
+    /// Which shard owns flat offset `off` (must be < total).
+    pub fn owner_of(&self, off: usize) -> usize {
+        assert!(off < self.total);
+        // bounds are sorted by offset and partition [0, total).
+        self.bounds
+            .partition_point(|&(o, l)| o + l <= off)
+            .min(self.bounds.len() - 1)
+    }
+
+    /// Largest shard length (the per-rank high-water unit).
+    pub fn max_len(&self) -> usize {
+        self.bounds.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::table::toy_table;
 
     #[test]
     fn ranges_partition() {
@@ -101,5 +182,64 @@ mod tests {
         s.slice_mut(&mut flat, 1).iter_mut().for_each(|x| *x = -*x);
         assert_eq!(s.slice(&flat, 1), &[-4.0, -5.0, -6.0, -7.0]);
         assert_eq!(s.slice(&flat, 0), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn table_shards_partition_contiguously() {
+        let t = toy_table();
+        for parts in [1usize, 2, 3, 4, 7, 16] {
+            let s = TableShards::from_table(&t, parts);
+            assert_eq!(s.parts(), parts);
+            let mut pos = 0;
+            for i in 0..parts {
+                let (off, len) = s.range(i);
+                assert_eq!(off, pos, "parts={parts} shard {i}");
+                pos = off + len;
+            }
+            assert_eq!(pos, t.total, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn table_shards_never_split_a_range() {
+        let t = toy_table();
+        for parts in [2usize, 3, 4, 5] {
+            let s = TableShards::from_table(&t, parts);
+            for m in 0..t.num_modules() {
+                for r in t.module_ranges(m) {
+                    if r.len == 0 {
+                        continue;
+                    }
+                    let owner = s.owner_of(r.offset);
+                    let (off, len) = s.range(owner);
+                    assert!(
+                        r.offset >= off && r.offset + r.len <= off + len,
+                        "parts={parts} module {m} range {r:?} split across shards"
+                    );
+                    assert_eq!(s.owner_of(r.offset + r.len - 1), owner);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_shards_roughly_balanced() {
+        let t = toy_table();
+        let s = TableShards::from_table(&t, 3);
+        // Greedy target is ceil(28/3) = 10; no shard may exceed the
+        // target by more than the largest single range (8).
+        assert!(s.max_len() <= 10 + 8, "max {}", s.max_len());
+        assert!(s.max_len() >= t.total.div_ceil(3));
+    }
+
+    #[test]
+    fn table_shards_more_parts_than_ranges() {
+        let t = toy_table();
+        // 8 ranges total; 16 parts leaves empty tail shards but still
+        // partitions exactly.
+        let s = TableShards::from_table(&t, 16);
+        let covered: usize = (0..16).map(|i| s.range(i).1).sum();
+        assert_eq!(covered, t.total);
+        assert_eq!(s.range(15).1, 0);
     }
 }

@@ -138,22 +138,50 @@ impl ModuleTable {
     }
 }
 
+/// Shared unit-test fixture: embed(8) + 2 stacked layers (b: 2×2,
+/// w: 2×6) + head(4) = 28 flat elements, 3 sync modules. One definition
+/// serves the tensor and coordinator test suites so the layout can't
+/// drift between them.
+#[cfg(test)]
+pub(crate) fn toy_table() -> ModuleTable {
+    ModuleTable::new(
+        vec![
+            TensorEntry {
+                name: "embed".into(),
+                shape: vec![4, 2],
+                offset: 0,
+                size: 8,
+                stacked: false,
+            },
+            TensorEntry {
+                name: "layers.b".into(),
+                shape: vec![2, 2],
+                offset: 8,
+                size: 4,
+                stacked: true,
+            },
+            TensorEntry {
+                name: "layers.w".into(),
+                shape: vec![2, 3, 2],
+                offset: 12,
+                size: 12,
+                stacked: true,
+            },
+            TensorEntry {
+                name: "head".into(),
+                shape: vec![2, 2],
+                offset: 24,
+                size: 4,
+                stacked: false,
+            },
+        ],
+        2,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn toy_table() -> ModuleTable {
-        // embed(8), layers.w(2 layers x 6 = 12), layers.b(2 x 2 = 4), head(4)
-        ModuleTable::new(
-            vec![
-                TensorEntry { name: "embed".into(), shape: vec![4, 2], offset: 0, size: 8, stacked: false },
-                TensorEntry { name: "layers.b".into(), shape: vec![2, 2], offset: 8, size: 4, stacked: true },
-                TensorEntry { name: "layers.w".into(), shape: vec![2, 3, 2], offset: 12, size: 12, stacked: true },
-                TensorEntry { name: "head".into(), shape: vec![2, 2], offset: 24, size: 4, stacked: false },
-            ],
-            2,
-        )
-    }
 
     #[test]
     fn modules_partition_vector() {

@@ -232,7 +232,14 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
 fn write_num(out: &mut String, x: f64) {
     if !x.is_finite() {
         // JSON has no inf/nan; mirror python-side convention (strings).
-        let _ = write!(out, "\"{}\"", if x.is_nan() { "nan" } else if x > 0.0 { "inf" } else { "-inf" });
+        let tag = if x.is_nan() {
+            "nan"
+        } else if x > 0.0 {
+            "inf"
+        } else {
+            "-inf"
+        };
+        let _ = write!(out, "\"{tag}\"");
     } else if x == x.trunc() && x.abs() < 1e15 {
         let _ = write!(out, "{}", x as i64);
     } else {

@@ -1,0 +1,188 @@
+//! Property coverage for the reduce-scatter / all-gather collectives
+//! behind the sharded outer sync path: the threaded rendezvous
+//! implementations must be **bitwise** equal to the sequential `group`
+//! references (rank-0..n fold-order contract, `collectives::mod` docs)
+//! across uneven shard remainders and the 1-rank degenerate case, and
+//! the weighted reduce-scatter must reproduce the fused combine kernel
+//! the scratch arena's shard lanes run (`kernels::weighted_sum_sq_strided`).
+
+use edit_train::collectives::{group, ThreadComm};
+use edit_train::tensor::{kernels, ShardSpec};
+use edit_train::testing::{check, Gen};
+
+fn shards_of(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let spec = ShardSpec::new(len, n);
+    (0..n).map(|r| spec.range(r)).collect()
+}
+
+fn rand_bufs(g: &mut Gen, n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| g.vec_f32(len, 10.0)).collect()
+}
+
+/// Run `f` on every rank of an n-way ThreadComm over `bufs`, returning
+/// the per-rank buffers afterwards.
+fn run_threaded<F>(bufs: &[Vec<f32>], f: F) -> Vec<Vec<f32>>
+where
+    F: Fn(&ThreadComm, &mut Vec<f32>) + Send + Sync,
+{
+    let n = bufs.len();
+    let comms = ThreadComm::group(n);
+    let mut out = vec![Vec::new(); n];
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .zip(bufs.iter().cloned())
+            .map(|(c, mut buf)| {
+                s.spawn(move || {
+                    f(&c, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        for (r, h) in handles.into_iter().enumerate() {
+            out[r] = h.join().unwrap();
+        }
+    });
+    out
+}
+
+#[test]
+fn prop_threaded_reduce_scatter_sum_bitwise() {
+    check("threaded rs-sum == group rs-sum", 25, |g| {
+        // n includes the 1-rank degenerate case; lengths exercise empty
+        // tail shards and off-by-one remainders.
+        let n = g.usize(1, 6);
+        let len = g.usize(0, 3 * n + 7);
+        let shards = shards_of(len, n);
+        let bufs = rand_bufs(g, n, len);
+        let mut seq = bufs.clone();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                seq.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_sum(&mut refs, &shards);
+        }
+        let sh = &shards;
+        let got = run_threaded(&bufs, move |c, buf| c.reduce_scatter_sum(buf, sh));
+        assert_eq!(got, seq, "n={n} len={len}");
+    });
+}
+
+#[test]
+fn prop_threaded_reduce_scatter_weighted_bitwise() {
+    check("threaded rs-weighted == group rs-weighted", 25, |g| {
+        let n = g.usize(1, 6);
+        let len = g.usize(0, 3 * n + 5);
+        let shards = shards_of(len, n);
+        // Non-negative softmax-style weights with exact zeros mixed in
+        // (the skip-zero fold must match).
+        let weights: Vec<f32> =
+            (0..n).map(|_| if g.bool() { g.rng.f32() } else { 0.0 }).collect();
+        let bufs = rand_bufs(g, n, len);
+        let mut seq = bufs.clone();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                seq.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_weighted(&mut refs, &shards, &weights);
+        }
+        let (sh, ws) = (&shards, &weights);
+        let got =
+            run_threaded(&bufs, move |c, buf| c.reduce_scatter_weighted(buf, sh, ws));
+        assert_eq!(got, seq, "n={n} len={len} weights={weights:?}");
+    });
+}
+
+#[test]
+fn prop_threaded_all_gather_bitwise() {
+    check("threaded ag == group ag", 25, |g| {
+        let n = g.usize(1, 6);
+        let len = g.usize(0, 3 * n + 6);
+        let shards = shards_of(len, n);
+        let bufs = rand_bufs(g, n, len);
+        let mut seq = bufs.clone();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                seq.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::all_gather(&mut refs, &shards);
+        }
+        let sh = &shards;
+        let got = run_threaded(&bufs, move |c, buf| c.all_gather(buf, sh));
+        assert_eq!(got, seq, "n={n} len={len}");
+    });
+}
+
+#[test]
+fn prop_rs_sum_then_gather_is_sum_fold() {
+    // reduce-scatter(sum) + all-gather must leave every rank with the
+    // full rank-0..n fold — the decomposition the sharded sync path's
+    // pricing and numerics rely on.
+    check("rs-sum + ag == fold", 25, |g| {
+        let n = g.usize(1, 5);
+        let len = g.usize(1, 4 * n + 3);
+        let shards = shards_of(len, n);
+        let bufs = rand_bufs(g, n, len);
+        // Sequential rank-0..n fold reference.
+        let mut fold = bufs[0].clone();
+        for b in &bufs[1..] {
+            for (a, &x) in fold.iter_mut().zip(b) {
+                *a += x;
+            }
+        }
+        let mut work = bufs.clone();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                work.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_sum(&mut refs, &shards);
+            group::all_gather(&mut refs, &shards);
+        }
+        if n == 1 {
+            // Degenerate group: both ops are no-ops by contract.
+            assert_eq!(work[0], bufs[0]);
+            return;
+        }
+        for (r, b) in work.iter().enumerate() {
+            assert_eq!(b, &fold, "rank {r}");
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_rs_matches_fused_combine_kernel() {
+    // The scratch arena's shard-local combine
+    // (`kernels::weighted_sum_sq_strided` over a lane's Δ rows) and the
+    // weighted reduce-scatter collective are the same fold: ascending
+    // member order, zero weights skipped, f32 accumulation from zero.
+    check("rs-weighted == strided combine", 25, |g| {
+        let members = g.usize(1, 5);
+        let len = g.usize(1, 23);
+        let shards = shards_of(len, members);
+        let weights: Vec<f32> =
+            (0..members).map(|_| if g.bool() { g.rng.f32() } else { 0.0 }).collect();
+        let rows = rand_bufs(g, members, len);
+        // Collective reference.
+        let mut coll = rows.clone();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                coll.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_weighted(&mut refs, &shards, &weights);
+        }
+        // Kernel path: rows flattened into one strided matrix, combined
+        // over each shard's region exactly like a lane part.
+        let mut flat = Vec::with_capacity(members * len);
+        for r in &rows {
+            flat.extend_from_slice(r);
+        }
+        for (s, &(off, l)) in shards.iter().enumerate() {
+            if l == 0 {
+                continue;
+            }
+            let mut out = vec![0.0f32; l];
+            kernels::weighted_sum_sq_strided(&mut out, &flat, len, off, &weights);
+            assert_eq!(
+                &coll[s][off..off + l],
+                &out[..],
+                "shard {s} off={off} len={l}"
+            );
+        }
+    });
+}

@@ -105,7 +105,9 @@ fn penalty_hlo_matches_rust_implementation() {
             cfg!(not(feature = "pjrt")),
             "PJRT build with artifacts must expose a penalty HLO for w={w}"
         );
-        eprintln!("skipping: penalty HLO not executable on the stub backend (needs --features pjrt)");
+        eprintln!(
+            "skipping: penalty HLO not executable on the stub backend (needs --features pjrt)"
+        );
         return;
     }
     // Deterministic pseudo-grads

@@ -166,6 +166,56 @@ fn aedit_beats_edit_barrier_under_consistent_straggler() {
 }
 
 #[test]
+fn shard_outer_on_off_bitwise_identical() {
+    // The sharded-sync acceptance criterion: the ZeRO-1 path (outer
+    // state reduce-scattered / all-gathered across range-aligned
+    // shards) must reproduce the full-matrix reference BITWISE — on the
+    // EDiT barrier path and on the A-EDiT anchor path, including when a
+    // random straggler fragments the A-EDiT event groups into partial
+    // member sets.
+    for method in [Method::Edit, Method::AEdit] {
+        for straggler in [Straggler::None, Straggler::Random { lag: 0.7 }] {
+            let run = |shard: bool| {
+                let mut t = trainer(method, |c| {
+                    c.shard_outer = shard;
+                    c.straggler = straggler;
+                });
+                t.run().unwrap();
+                t
+            };
+            let on = run(true);
+            let off = run(false);
+            assert_bitwise_equal(&on, &off);
+            assert!(on.scratch().sharded(), "{method:?}: sharding must engage");
+            assert!(!off.scratch().sharded());
+        }
+    }
+}
+
+#[test]
+fn shard_outer_threaded_fanout_is_unobservable() {
+    // The sharded load/combine phases fan out across worker_threads
+    // over the shard lanes; results must stay bitwise identical to the
+    // sequential sweep (and the unsharded reference).
+    for method in [Method::Edit, Method::AEdit] {
+        let run = |threads: usize, shard: bool| {
+            let mut t = trainer(method, |c| {
+                c.shard_outer = shard;
+                c.worker_threads = threads;
+                c.straggler = Straggler::Random { lag: 0.7 };
+            });
+            t.run().unwrap();
+            t
+        };
+        let seq = run(1, true);
+        let par = run(3, true);
+        assert_bitwise_equal(&seq, &par);
+        let unsharded = run(1, false);
+        assert_bitwise_equal(&seq, &unsharded);
+    }
+}
+
+#[test]
 fn co2_flushes_staleness_queue_at_end_of_run() {
     // 2 rounds of τ=4: the round-2 combine is still in the staleness
     // queue when the run ends; `run()` must land it (the historical

@@ -1,6 +1,7 @@
 //! The steady-state zero-allocation invariant (see
 //! `coordinator::scratch`): after warm-up, full trainer rounds —
-//! τ inner steps per replica plus the synchronization — must perform
+//! τ inner steps per replica plus the synchronization, on both the
+//! sharded (`shard_outer`) and full-matrix sync paths — must perform
 //! zero heap allocations, up to the documented loss-trace bound
 //! (`LOSS_TRACE_CAP` = 2^20 inner steps per replica; these runs stay
 //! far below it). Asserted with a counting global allocator over the
@@ -47,7 +48,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-fn trainer(method: Method) -> Trainer {
+fn trainer(method: Method, shard_outer: bool) -> Trainer {
     let manifest = Manifest::synthetic("alloc-test", 3, 96, 40, 64, 2, 8);
     let vocab = manifest.model.vocab_size;
     let engine = Engine::synthetic(manifest);
@@ -56,23 +57,27 @@ fn trainer(method: Method) -> Trainer {
     cfg.tau = 4;
     cfg.t_warm = if method.uses_warmup() { 2 } else { 0 };
     cfg.eval_every_syncs = 0;
+    cfg.shard_outer = shard_outer;
     Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100())).unwrap()
 }
 
 #[test]
 fn trainer_rounds_allocation_free_in_steady_state() {
-    // Edit: fused per-module penalty sync. AEdit: the event-driven
-    // anchor-sync path (scheduler queue + group buffers are reused).
-    // DiLoCo: uniform averaging. Co2: staleness queue (recycled
-    // buffers). Baseline: pure DDP steps.
-    for method in [
-        Method::Edit,
-        Method::AEdit,
-        Method::DiLoCo,
-        Method::Co2,
-        Method::Baseline,
+    // Edit/AEdit run twice: the sharded outer path (default; shard
+    // lanes + range-order folds) and the full-matrix reference. AEdit
+    // additionally covers the event-driven anchor-sync path (scheduler
+    // queue + group buffers are reused). DiLoCo: uniform averaging.
+    // Co2: staleness queue (recycled buffers). Baseline: pure DDP.
+    for (method, shard_outer) in [
+        (Method::Edit, true),
+        (Method::Edit, false),
+        (Method::AEdit, true),
+        (Method::AEdit, false),
+        (Method::DiLoCo, false),
+        (Method::Co2, false),
+        (Method::Baseline, false),
     ] {
-        let mut t = trainer(method);
+        let mut t = trainer(method, shard_outer);
         // Warm-up: fills scratch capacities, the CO2 queue and the
         // tail-mean windows.
         for _ in 0..4 {
@@ -92,8 +97,9 @@ fn trainer_rounds_allocation_free_in_steady_state() {
         assert_eq!(
             allocs,
             0,
-            "{}: {} heap allocations in 6 steady-state rounds",
+            "{} (shard_outer={}): {} heap allocations in 6 steady-state rounds",
             method.name(),
+            shard_outer,
             allocs
         );
         // The rounds actually did work: losses recorded, syncs advanced.

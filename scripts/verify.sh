@@ -1,10 +1,27 @@
 #!/usr/bin/env bash
 # One-command verification gate (also `make verify`):
 #   tier-1:  cargo build --release && cargo test -q
+#   smoke:   fig5-trainer straggler cross-validation (real trainer)
 #   hygiene: cargo fmt --check, cargo clippy -D warnings (skipped with a
-#            notice when the components are not installed)
+#            notice when the components are not installed — CI installs
+#            them explicitly so the skips never trigger there)
+#
+# Flags:
+#   --quick  build + test only (no straggler smoke, no fmt/clippy) —
+#            the fast CI leg and the pre-push sanity loop.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+
+QUICK=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) QUICK=1 ;;
+        *)
+            echo "verify.sh: unknown option '$arg' (supported: --quick)" >&2
+            exit 2
+            ;;
+    esac
+done
 
 echo "== cargo build --release =="
 cargo build --release
@@ -12,14 +29,28 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+if [[ "$QUICK" == 1 ]]; then
+    echo "verify (--quick): OK"
+    exit 0
+fi
+
 # Straggler smoke: drive the REAL trainer (event-driven per-replica
 # core) through the consistent + random straggler scenarios and
 # cross-validate the A-EDiT : EDiT speedup against the analytic
 # simulator. Seconds-scale; falls back to the synthetic stub model when
 # AOT artifacts are absent, so it runs on a clean box. The harness
 # itself enforces the >=1.5x consistent-straggler acceptance bound.
+BIN=./target/release/edit-train
+if [[ ! -x "$BIN" ]]; then
+    echo "error: $BIN is missing or not executable." >&2
+    echo "       The release build above should have produced it — stale" >&2
+    echo "       checkout or a renamed bin target? Run 'cargo build --release'" >&2
+    echo "       inside rust/ and check [[bin]] in rust/Cargo.toml." >&2
+    exit 1
+fi
+mkdir -p results
 echo "== straggler smoke (real trainer, async A-EDiT path) =="
-./target/release/edit-train simulate --exp fig5-trainer --steps 32 --tau 4
+"$BIN" simulate --exp fig5-trainer --steps 32 --tau 4
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
