@@ -55,7 +55,7 @@ fn bench_table() -> ModuleTable {
     Manifest::synthetic("hotpath-bench", 8, 1 << 17, 1 << 14, 256, 2, 16).table
 }
 
-fn sync_round_benches(b: &mut Bencher) {
+fn sync_round_benches(b: &mut Bencher) -> (f64, f64) {
     println!("-- edit outer round: fused scratch vs naive reference --");
     let table = bench_table();
     let p = table.total;
@@ -137,6 +137,7 @@ fn sync_round_benches(b: &mut Bencher) {
         "edit outer round speedup (fused vs naive reference): {:.2}x",
         naive.median / fused.median
     );
+    (fused.median, naive.median)
 }
 
 fn engine_benches(b: &mut Bencher) {
@@ -240,13 +241,49 @@ fn trainer_round_benches(b: &mut Bencher) {
     }
 }
 
+/// Machine-readable perf snapshot (`results/bench_summary.json`): the
+/// kernel-layer GB/s, the fused-vs-naive outer-round speedup, and the
+/// end-to-end trainer round times. The CI full leg uploads it as a
+/// build artifact so the perf trajectory is tracked across PRs.
+fn write_summary_json(b: &Bencher, fused_s: f64, naive_s: f64) -> anyhow::Result<()> {
+    use edit_train::util::json::{Json, Obj};
+    let mut kernels = Obj::new();
+    let mut rounds = Obj::new();
+    for s in b.results() {
+        if s.name.starts_with("kernel ") {
+            if let Some(gbs) = s.gb_per_s() {
+                kernels.insert(s.name.clone(), gbs);
+            }
+        }
+        if s.name.starts_with("edit round e2e") {
+            rounds.insert(s.name.clone(), s.median);
+        }
+    }
+    let mut outer = Obj::new();
+    outer.insert("fused_median_s", fused_s);
+    outer.insert("reference_median_s", naive_s);
+    outer.insert("speedup", naive_s / fused_s);
+    let mut root = Obj::new();
+    root.insert("schema", 1i64);
+    root.insert("bench", "hotpath");
+    root.insert("fast_mode", std::env::var("EDIT_BENCH_FAST").is_ok());
+    root.insert("kernel_gb_per_s", kernels);
+    root.insert("edit_outer_round", outer);
+    root.insert("e2e_round_seconds", rounds);
+    std::fs::write("results/bench_summary.json", Json::Obj(root).to_string_pretty())?;
+    println!("summary -> results/bench_summary.json");
+    Ok(())
+}
+
 fn main() {
+    std::fs::create_dir_all("results").ok();
     let mut b = Bencher::new();
     println!("== hotpath ==");
     kernel_benches(&mut b);
-    sync_round_benches(&mut b);
+    let (fused_s, naive_s) = sync_round_benches(&mut b);
     engine_benches(&mut b);
     #[cfg(not(feature = "pjrt"))]
     trainer_round_benches(&mut b);
     b.write_csv("results/bench_hotpath.csv").unwrap();
+    write_summary_json(&b, fused_s, naive_s).unwrap();
 }

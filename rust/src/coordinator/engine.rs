@@ -1,4 +1,5 @@
-//! The local-SGD training engine (Alg. 1) — one engine, seven methods.
+//! The local-SGD training engine (Alg. 1) — one engine, every strategy
+//! a [`MethodSpec`] can describe.
 //!
 //! This file is the thin facade over the event-driven execution core:
 //!
@@ -13,7 +14,8 @@
 //!                 for A-EDiT (no global barrier), plus the precomputed
 //!                 `CommPlan` with layer-wise overlap accounting.
 //!
-//! Numerics model (DESIGN.md §4): each *column* of the M×N mesh (a model
+//! Numerics model (see [`super::spec`] for the strategy axes the engine
+//! dispatches on): each *column* of the M×N mesh (a model
 //! shard group) keeps bitwise-identical parameters at every inner step
 //! (per-step gradient averaging inside the column), so the engine
 //! simulates one logical replica per column.  Each replica executes the
@@ -58,10 +60,11 @@ use crate::tensor::ModuleTable;
 
 use super::mesh::MeshSpec;
 use super::method::Method;
-use super::outer::{OuterOpt, OuterOptKind};
-use super::penalty::{AnomalyDetector, PenaltyConfig};
+use super::outer::OuterOpt;
+use super::penalty::AnomalyDetector;
 use super::schedule::LrSchedule;
 use super::scratch::SyncScratch;
+use super::spec::MethodSpec;
 
 pub mod clock;
 mod sync;
@@ -107,19 +110,23 @@ pub struct Poison {
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    pub method: Method,
+    /// Strategy descriptor — the single source of truth for every
+    /// behavioral axis (sync trigger/granularity, outer optimizer,
+    /// staleness, penalty stages, sharding policy, warmup).
+    pub spec: MethodSpec,
+    /// Display name for logs and summaries ("edit", "palsgd",
+    /// "custom:base=edit,penalty=off", ...).
+    pub label: String,
     pub mesh: MeshSpec,
     /// Synchronization interval in inner steps (τ).
     pub tau: u64,
-    /// Time-based interval for A-EDiT (τ_time, simulated seconds).
+    /// Time-based interval for A-EDiT/PALSGD (τ_time, simulated seconds).
     pub tau_time: f64,
     /// Warmup (mini-batch DDP) inner steps, Alg. 1's t_warm.
     pub t_warm: u64,
     /// Experiment length in global inner steps.
     pub total_steps: u64,
     pub inner_lr: LrSchedule,
-    pub outer: OuterOptKind,
-    pub penalty: PenaltyConfig,
     pub seed: u64,
     /// Evaluate validation PPL every this many syncs (0 = never).
     pub eval_every_syncs: u64,
@@ -144,28 +151,41 @@ pub struct TrainConfig {
     /// all-gathered back. Bitwise identical to the full-matrix
     /// reference path; per-rank sync memory ≈ full ÷ N for near-uniform
     /// module tables (ranges are never split, so the largest shard is
-    /// floored at the largest single module range). Default on; engages
-    /// only for N > 1 (a single replica keeps the full-matrix path —
-    /// there is nothing to shard across).
+    /// floored at the largest single module range). Defaults to the
+    /// spec's `shard_outer_state` axis (on for the layer-wise presets;
+    /// `custom:...,shard=off` turns it off coherently); engages only
+    /// for layer-wise strategies with N > 1 (a single replica keeps the
+    /// full-matrix path — there is nothing to shard across).
     pub shard_outer: bool,
 }
 
 impl TrainConfig {
-    /// Paper-shaped defaults scaled to the CPU-trainable regime.
+    /// Paper-shaped defaults scaled to the CPU-trainable regime, for a
+    /// named preset.
     pub fn paper_default(method: Method, mesh: MeshSpec, total_steps: u64) -> Self {
+        Self::from_spec(method.spec(), method.name(), mesh, total_steps)
+    }
+
+    /// Paper-shaped defaults for an arbitrary strategy descriptor (the
+    /// `custom:` grammar path; named presets go through
+    /// [`Self::paper_default`]).
+    pub fn from_spec(
+        spec: MethodSpec,
+        label: impl Into<String>,
+        mesh: MeshSpec,
+        total_steps: u64,
+    ) -> Self {
         Self {
-            method,
+            label: label.into(),
             mesh,
             tau: 16,
             tau_time: 16.0 * 0.5,
-            t_warm: if method.uses_warmup() { 16 } else { 0 },
+            t_warm: if spec.warmup { 16 } else { 0 },
             total_steps,
             inner_lr: LrSchedule::paper_cosine(
-                if method.is_local_sgd() { 1.5e-3 } else { 3e-3 },
+                if spec.is_local_sgd() { 1.5e-3 } else { 3e-3 },
                 total_steps,
             ),
-            outer: method.default_outer(),
-            penalty: method.default_penalty(),
             seed: 42,
             eval_every_syncs: 4,
             eval_batches: 4,
@@ -175,7 +195,12 @@ impl TrainConfig {
             log_every: 0,
             worker_threads: 1,
             trace_timeline: false,
-            shard_outer: true,
+            // Runtime ZeRO-1 toggle follows the strategy's sharding
+            // axis, so `custom:...,shard=off` really runs unsharded
+            // (bitwise identical numerics, full-matrix memory). Flat
+            // strategies never engage it regardless.
+            shard_outer: spec.shard_outer_state,
+            spec,
         }
     }
 }
@@ -214,7 +239,8 @@ impl Replica {
 /// End-of-run summary (the numbers the experiment tables consume).
 #[derive(Debug, Clone)]
 pub struct RunSummary {
-    pub method: Method,
+    /// The run's method label (`TrainConfig::label`).
+    pub label: String,
     pub final_loss: f64,
     pub final_ppl: f64,
     pub sim_seconds: f64,
@@ -267,6 +293,9 @@ pub struct Trainer {
     all_members: Vec<usize>,
     /// Monotonic anchor-update counter (staleness bookkeeping).
     anchor_version: u64,
+    /// Deadline windows completed (time-based triggers) — keys the
+    /// stateless probabilistic sync draws (PALSGD).
+    sync_windows: u64,
     /// Per replica: anchor version after its last sync.
     last_sync_version: Vec<u64>,
     max_staleness: u64,
@@ -313,7 +342,7 @@ impl Trainer {
             })
             .collect();
         let detector =
-            AnomalyDetector::new(cfg.mesh.replicas, table.num_modules(), cfg.penalty);
+            AnomalyDetector::new(cfg.mesh.replicas, table.num_modules(), cfg.spec.penalty);
         let step_model = StepModel {
             mesh: cfg.mesh,
             cost,
@@ -324,7 +353,7 @@ impl Trainer {
         let [b, s1] = engine.manifest.token_shape;
         let token_cap = b * s1;
         let mut scratch = SyncScratch::new(&table, cfg.mesh.replicas, token_cap);
-        if cfg.shard_outer && cfg.method.layerwise_sync() && cfg.mesh.replicas > 1 {
+        if cfg.shard_outer && cfg.spec.layerwise() && cfg.mesh.replicas > 1 {
             // ZeRO-1-style outer sharding across the N sync-group ranks
             // (a single replica keeps the full-matrix path — there is
             // nothing to shard across).
@@ -333,14 +362,14 @@ impl Trainer {
         let lanes: Vec<worker::Lane> = (0..cfg.mesh.replicas)
             .map(|_| worker::Lane::with_token_capacity(token_cap))
             .collect();
-        let plan = sync::CommPlan::build(&step_model, cfg.method, &table, cfg.shard_outer);
+        let plan = sync::CommPlan::build(&step_model, &cfg.spec, &table, cfg.shard_outer);
         let mut tracker = RunTracker::new();
         // The tracker records once per round for step-synced local-SGD
         // methods (plus once per warmup DDP step), so reserving per-step
         // capacity would overshoot by ~τ. Baseline records every step and
         // A-EDiT's steps-per-round varies (1..4τ), so both keep the
         // conservative per-step bound.
-        let tracker_capacity = if cfg.method.is_local_sgd() && !cfg.method.time_based_sync() {
+        let tracker_capacity = if cfg.spec.is_local_sgd() && !cfg.spec.trigger.time_based() {
             cfg.t_warm
                 .saturating_add(
                     cfg.total_steps.saturating_sub(cfg.t_warm) / cfg.tau.max(1),
@@ -361,7 +390,7 @@ impl Trainer {
             timeline.reserve(est);
         }
         Ok(Self {
-            outer: OuterOpt::new(cfg.outer, n),
+            outer: OuterOpt::new(cfg.spec.outer, n),
             detector,
             pending: Default::default(),
             step_model,
@@ -379,6 +408,7 @@ impl Trainer {
             group_buf: Vec::with_capacity(cfg.mesh.replicas),
             all_members: (0..cfg.mesh.replicas).collect(),
             anchor_version: 0,
+            sync_windows: 0,
             last_sync_version: vec![0; cfg.mesh.replicas],
             max_staleness: 0,
             flushed_updates: 0,
@@ -430,8 +460,8 @@ impl Trainer {
     }
 
     fn in_warmup(&self) -> bool {
-        self.cfg.method == Method::Baseline
-            || (self.cfg.method.uses_warmup() && self.global_step < self.cfg.t_warm)
+        !self.cfg.spec.is_local_sgd()
+            || (self.cfg.spec.warmup && self.global_step < self.cfg.t_warm)
     }
 
     /// One synchronous mini-batch DDP step (Baseline & warmup phase).
@@ -584,22 +614,42 @@ impl Trainer {
         Ok((loss_sum, loss_count, max_steps))
     }
 
-    /// One local-SGD round. Step-synced methods: τ inner steps per
-    /// replica, then barrier synchronization. A-EDiT: every lane runs to
-    /// the τ_time deadline, then the event scheduler orders the sync
-    /// events by simulated clock (coalescing bitwise ties) and each
-    /// group anchor-syncs without waiting for the rest of the cluster.
+    /// One local-SGD round. Step-synced strategies: τ inner steps per
+    /// replica, then barrier synchronization. Time-based strategies
+    /// (A-EDiT, PALSGD): every lane runs to the τ_time deadline, then
+    /// the event scheduler orders the sync events by simulated clock
+    /// (coalescing bitwise ties) and each group anchor-syncs without
+    /// waiting for the rest of the cluster. Under the probabilistic
+    /// trigger (PALSGD) each replica joins its window's sync only with
+    /// probability p (stateless draw); skipped replicas keep training
+    /// against their stale anchor and simply accrue staleness.
     fn local_round(&mut self) -> Result<()> {
-        if self.cfg.method.time_based_sync() {
+        if self.cfg.spec.trigger.time_based() {
             let deadline = self.sim_time + self.cfg.tau_time;
             let cap = self.cfg.tau.saturating_mul(4).max(1);
             let (loss_sum, loss_count, max_steps) = self.run_lanes(Some(deadline), cap)?;
             self.global_step += max_steps;
             self.tracker
                 .record_loss(self.global_step, loss_sum / loss_count.max(1) as f64);
+            // The deadline frontier advances with the lanes regardless
+            // of which replicas draw a sync: PALSGD can skip a whole
+            // window, and the next one must still be τ_time wide (and
+            // end-of-run sim_seconds must count the time the lanes
+            // actually ran). Neutral for always-sync triggers — every
+            // replica's sync group finishes at max(member clocks) +
+            // exposed ≥ its clock, so the final sim_time is unchanged.
+            for r in &self.replicas {
+                if r.clock > self.sim_time {
+                    self.sim_time = r.clock;
+                }
+            }
+            let window = self.sync_windows;
+            self.sync_windows += 1;
             self.events.clear();
             for (j, r) in self.replicas.iter().enumerate() {
-                self.events.push(clock::Event { clock: r.clock, replica: j });
+                if worker::sync_draw(&self.cfg.spec.trigger, self.cfg.seed, j, window) {
+                    self.events.push(clock::Event { clock: r.clock, replica: j });
+                }
             }
             loop {
                 let mut members = std::mem::take(&mut self.group_buf);
@@ -696,7 +746,7 @@ impl Trainer {
         let train_calls: u64 = self.replicas.iter().map(|r| r.inner_steps).sum();
         let tokens = train_calls * tokens_per_call;
         RunSummary {
-            method: self.cfg.method,
+            label: self.cfg.label.clone(),
             final_loss: self.tracker.final_loss().unwrap_or(f64::NAN),
             final_ppl: self.tracker.final_ppl().unwrap_or(f64::NAN),
             sim_seconds: self.sim_time,
@@ -758,7 +808,7 @@ impl Trainer {
         self.step_model.mesh = self.cfg.mesh;
         self.detector.resize_replicas(new_replicas);
         self.scratch.ensure_replicas(new_replicas);
-        if self.cfg.shard_outer && self.cfg.method.layerwise_sync() && new_replicas > 1 {
+        if self.cfg.shard_outer && self.cfg.spec.layerwise() && new_replicas > 1 {
             // Re-partition the outer shards for the new sync-group size.
             self.scratch.enable_sharding(&self.table, new_replicas);
         } else {
@@ -768,7 +818,7 @@ impl Trainer {
         }
         self.plan = sync::CommPlan::build(
             &self.step_model,
-            self.cfg.method,
+            &self.cfg.spec,
             &self.table,
             self.cfg.shard_outer,
         );

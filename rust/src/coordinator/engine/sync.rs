@@ -52,7 +52,7 @@
 use anyhow::Result;
 
 use crate::collectives::CollOp;
-use crate::coordinator::method::Method;
+use crate::coordinator::spec::MethodSpec;
 use crate::metrics::TimelineEvent;
 use crate::simulator::stepmodel::StepModel;
 use crate::tensor::ModuleTable;
@@ -87,15 +87,15 @@ pub(super) struct CommPlan {
     /// Simulated duration of one local / one DDP inner step.
     pub step_time_local: f64,
     pub step_time_ddp: f64,
-    /// Exposed sync cost at an outer boundary for the configured method
-    /// (layer-wise pipeline residual for EDiT/A-EDiT).
+    /// Exposed sync cost at an outer boundary for the configured
+    /// strategy (layer-wise pipeline residual for EDiT/A-EDiT/PALSGD).
     pub sync_exposed: f64,
 }
 
 impl CommPlan {
     pub(super) fn build(
         step_model: &StepModel,
-        method: Method,
+        spec: &MethodSpec,
         table: &ModuleTable,
         shard_outer: bool,
     ) -> Self {
@@ -105,7 +105,7 @@ impl CommPlan {
         let mut plan = CommPlan {
             step_time_local: step_model.inner_step(false),
             step_time_ddp: step_model.inner_step(true),
-            sync_exposed: step_model.sync_exposed(method),
+            sync_exposed: step_model.sync_exposed(spec),
             ..Default::default()
         };
         for row in 0..mesh.shard {
@@ -120,7 +120,7 @@ impl CommPlan {
             plan.scalar_sync
                 .push((4, step_model.cost.time(CollOp::ScalarSync, 4, &group)));
         }
-        if method.layerwise_sync() {
+        if spec.layerwise() {
             let group = mesh.sync_group(0);
             let mut module_bytes = Vec::with_capacity(table.num_modules());
             for m in 0..table.num_modules() {
@@ -160,7 +160,7 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
     t.scratch.ensure_replicas(n);
 
     let mut rollbacks = 0u64;
-    if t.cfg.method.uses_penalty() {
+    if t.cfg.spec.layerwise() {
         // Layer-wise sync: one shard exchange (all-reduce, or
         // reduce-scatter + all-gather under `shard_outer`) per module
         // per mesh row.
@@ -184,7 +184,7 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
             t.scratch
                 .load_full(|j| replicas[j].params.as_slice(), &t.anchor);
         }
-        let staleness = t.cfg.method.outer_staleness();
+        let staleness = t.cfg.spec.outer_staleness;
         if staleness == 0 {
             let mean = t.scratch.mean_deltas();
             t.outer.apply(&mut t.anchor, mean);
@@ -222,7 +222,7 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
     t.sim_time = after;
 
     note_sync_all(t, after);
-    if t.cfg.method.uses_penalty() {
+    if t.cfg.spec.layerwise() {
         t.detector.advance();
     }
     if rollbacks > 0 {
@@ -296,7 +296,7 @@ fn layerwise_sync(t: &mut Trainer, members: &[usize]) -> Result<u64> {
 /// folds of the reference sweep; the data-parallel phases (1/3) fan out
 /// across `worker_threads` over the data-disjoint lanes.
 fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
-    t.detector.set_config(t.cfg.penalty);
+    t.detector.set_config(t.cfg.spec.penalty);
     let threads = t.cfg.worker_threads;
     // Phase 1: reduce-scatter the members' pseudo-gradients into the
     // owned shard lanes (per-range norm partials recorded).
@@ -326,7 +326,7 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
             let (bytes, secs) = t.plan.scalar_sync[j];
             t.comm.record(bytes, secs);
         }
-        let ok = t.scratch.compute_weights(t.cfg.penalty.weighted_averaging);
+        let ok = t.scratch.compute_weights(t.cfg.spec.penalty.weighted_averaging);
         t.scratch.shard_commit_weights(module, ok);
         if !ok {
             rollbacks += 1;
@@ -341,9 +341,9 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
         }
         let module_sq = t.scratch.shard_module_sq(module);
         let mut beta = 1.0f64;
-        if t.cfg.penalty.gradient_clip {
+        if t.cfg.spec.penalty.gradient_clip {
             let norm = module_sq.sqrt();
-            beta = (t.cfg.penalty.phi / (norm + t.cfg.penalty.eps)).min(1.0);
+            beta = (t.cfg.spec.penalty.phi / (norm + t.cfg.spec.penalty.eps)).min(1.0);
         }
         t.scratch.shard_set_beta(module, beta as f32);
     }
@@ -363,7 +363,7 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
 /// Full-matrix reference implementation of the layer-wise sync (the
 /// historical sequential per-module sweep; `shard_outer = false`).
 fn layerwise_sync_reference(t: &mut Trainer, members: &[usize]) -> Result<u64> {
-    t.detector.set_config(t.cfg.penalty);
+    t.detector.set_config(t.cfg.spec.penalty);
     let mut rollbacks = 0u64;
     // Module ranges partition the flat vector and each apply only
     // touches its own module, so computing Δ lazily per module from the
@@ -396,7 +396,7 @@ fn layerwise_sync_reference(t: &mut Trainer, members: &[usize]) -> Result<u64> {
             let (bytes, secs) = t.plan.scalar_sync[j];
             t.comm.record(bytes, secs);
         }
-        if !t.scratch.compute_weights(t.cfg.penalty.weighted_averaging) {
+        if !t.scratch.compute_weights(t.cfg.spec.penalty.weighted_averaging) {
             rollbacks += 1;
             // θ stays at the anchor for this module (rollback); members
             // still re-adopt it, discarding their local divergence.
@@ -407,9 +407,9 @@ fn layerwise_sync_reference(t: &mut Trainer, members: &[usize]) -> Result<u64> {
         // with clip-β folded in.
         let module_sq = t.scratch.combine_module(module);
         let mut beta = 1.0f64;
-        if t.cfg.penalty.gradient_clip {
+        if t.cfg.spec.penalty.gradient_clip {
             let norm = module_sq.sqrt();
-            beta = (t.cfg.penalty.phi / (norm + t.cfg.penalty.eps)).min(1.0);
+            beta = (t.cfg.spec.penalty.phi / (norm + t.cfg.spec.penalty.eps)).min(1.0);
         }
         t.scratch
             .apply_module(module, &mut t.outer, &mut t.anchor, beta as f32);
@@ -497,7 +497,7 @@ fn post_sync(t: &mut Trainer) -> Result<()> {
     if t.cfg.log_every > 0 && t.syncs % t.cfg.log_every == 0 {
         eprintln!(
             "[{}] step {:>6} sync {:>4} loss {:.4} ppl {:.2} simtime {:.1}s",
-            t.cfg.method.name(),
+            t.cfg.label,
             t.global_step,
             t.syncs,
             t.tracker.losses.last().map(|x| x.1).unwrap_or(f64::NAN),

@@ -36,6 +36,7 @@
 
 use anyhow::Result;
 
+use crate::coordinator::spec::SyncTrigger;
 use crate::data::{Corpus, Split};
 use crate::runtime::Engine;
 use crate::util::prng::{mix, Rng};
@@ -212,6 +213,23 @@ pub(super) fn straggler_lag(
     }
 }
 
+/// Stateless per-(replica, deadline-window) sync draw for the
+/// time-based triggers: `Time` always fires; `Probabilistic { prob }`
+/// (PALSGD) fires with probability `prob`. Keyed on the run seed like
+/// every other stochastic input, so the draw is reproducible across
+/// reruns and worker-thread counts, and `prob = 1` is bitwise A-EDiT
+/// (the draw is always true and touches no trainer state).
+pub(super) fn sync_draw(trigger: &SyncTrigger, seed: u64, replica: usize, window: u64) -> bool {
+    match *trigger {
+        SyncTrigger::Probabilistic { prob } => {
+            let key = (replica as u64) << 40 ^ window;
+            let mut rng = Rng::new(mix(seed ^ 0x50A1_56D0, key));
+            rng.f64() < prob
+        }
+        _ => true,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +255,25 @@ mod tests {
         }
         // Bernoulli(1/4) over 4000 draws.
         assert!((700..1300).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn sync_draw_is_stateless_and_respects_probability() {
+        // Time/Step-style triggers always fire.
+        assert!(sync_draw(&SyncTrigger::Time, 7, 0, 3));
+        // prob=1 always fires (f64() < 1.0 for any draw in [0,1)).
+        for w in 0..64u64 {
+            assert!(sync_draw(&SyncTrigger::Probabilistic { prob: 1.0 }, 7, 1, w));
+        }
+        // Reproducible, and roughly Bernoulli(p) over many windows.
+        let t = SyncTrigger::Probabilistic { prob: 0.5 };
+        let mut hits = 0usize;
+        for w in 0..4000u64 {
+            let a = sync_draw(&t, 42, 2, w);
+            assert_eq!(a, sync_draw(&t, 42, 2, w), "stateless draws must repeat");
+            hits += a as usize;
+        }
+        assert!((1700..2300).contains(&hits), "{hits}");
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! The method zoo: EDiT, A-EDiT, and every baseline the paper
-//! evaluates (Table 2 / Fig. 4).  All methods run on the same local-SGD
-//! engine; this enum captures where they differ (DESIGN.md §4).
+//! The method zoo as a **named-preset table**: every method the paper
+//! evaluates (Table 2 / Fig. 4) plus `palsgd`, each defined purely as a
+//! [`MethodSpec`] row in [`Method::spec`] (see `coordinator::spec` for
+//! the axes). All behavior — engine dispatch, simulator pricing, memory
+//! accounting — reads the spec; this enum survives only for CLI
+//! parsing, reporting labels and the experiment harness tables.
 
 use super::outer::OuterOptKind;
 use super::penalty::PenaltyConfig;
+use super::spec::{MethodSpec, SyncGranularity, SyncTrigger};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -25,9 +29,14 @@ pub enum Method {
     Edit,
     /// Asynchronous EDiT: time-based sync interval (§3.3).
     AEdit,
+    /// Probabilistic time-based sync riding the A-EDiT event core
+    /// (Naganuma et al., *Pseudo-Asynchronous Local SGD*, 2025): each
+    /// deadline window, a replica anchor-syncs only with probability p.
+    Palsgd,
 }
 
 impl Method {
+    /// The paper's seven methods — the rows/columns of its tables.
     pub const ALL: [Method; 7] = [
         Method::Baseline,
         Method::PostLocalSgd,
@@ -36,6 +45,19 @@ impl Method {
         Method::Co2Star,
         Method::Edit,
         Method::AEdit,
+    ];
+
+    /// Every named preset the CLI accepts (the paper's seven plus the
+    /// descriptor-registered extensions).
+    pub const NAMED: [Method; 8] = [
+        Method::Baseline,
+        Method::PostLocalSgd,
+        Method::DiLoCo,
+        Method::Co2,
+        Method::Co2Star,
+        Method::Edit,
+        Method::AEdit,
+        Method::Palsgd,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -47,12 +69,19 @@ impl Method {
             Method::Co2Star => "co2*",
             Method::Edit => "edit",
             Method::AEdit => "a-edit",
+            Method::Palsgd => "palsgd",
         }
+    }
+
+    /// Comma-separated list of every accepted method name (CLI errors).
+    pub fn name_list() -> String {
+        let names: Vec<&str> = Method::NAMED.iter().map(|m| m.name()).collect();
+        names.join(", ")
     }
 
     pub fn parse(s: &str) -> Option<Method> {
         let s = s.to_ascii_lowercase();
-        Method::ALL
+        Method::NAMED
             .iter()
             .copied()
             .find(|m| m.name() == s || m.name().replace('-', "_") == s)
@@ -60,69 +89,98 @@ impl Method {
                 "pls" => Some(Method::PostLocalSgd),
                 "co2star" | "co2s" => Some(Method::Co2Star),
                 "aedit" => Some(Method::AEdit),
+                "pal-sgd" => Some(Method::Palsgd),
                 _ => None,
             })
     }
 
-    /// Does this method run periodic (local-SGD) synchronization at all?
-    pub fn is_local_sgd(&self) -> bool {
-        !matches!(self, Method::Baseline)
-    }
-
-    /// Time-based (rather than step-based) sync trigger (§3.3).
-    pub fn time_based_sync(&self) -> bool {
-        matches!(self, Method::AEdit)
-    }
-
-    /// Paper's outer optimizer for this method.
-    pub fn default_outer(&self) -> OuterOptKind {
+    /// The preset table: one [`MethodSpec`] row per named method. This
+    /// is the ONLY place a named method's behavior is defined — every
+    /// consumer dispatches on the returned axes.
+    pub fn spec(&self) -> MethodSpec {
+        use SyncGranularity::{Flat, Layerwise};
+        let disabled = PenaltyConfig::disabled();
         match self {
-            Method::Baseline => OuterOptKind::averaging(), // unused
-            Method::PostLocalSgd => OuterOptKind::averaging(),
-            _ => OuterOptKind::paper_nesterov(),
-        }
-    }
-
-    /// Pseudo-gradient penalty active? (EDiT family only.)
-    pub fn uses_penalty(&self) -> bool {
-        matches!(self, Method::Edit | Method::AEdit)
-    }
-
-    /// Layer-wise (per-module) synchronization during forward pass.
-    pub fn layerwise_sync(&self) -> bool {
-        matches!(self, Method::Edit | Method::AEdit)
-    }
-
-    /// Outer update applied with one round of staleness (CO2 overlap).
-    pub fn outer_staleness(&self) -> usize {
-        match self {
-            Method::Co2 | Method::Co2Star => 1,
-            _ => 0,
-        }
-    }
-
-    /// Outer-optimizer state sharded across the shard group (vs a full
-    /// copy per worker)? Drives the memory model (Table 2 OOM column).
-    pub fn outer_state_sharded(&self) -> bool {
-        matches!(self, Method::Co2Star | Method::Edit | Method::AEdit)
-    }
-
-    /// Extra full parameter copy (θ_t anchor) sharded?
-    pub fn anchor_sharded(&self) -> bool {
-        self.outer_state_sharded() // same storage policy in all methods
-    }
-
-    /// DDP warmup phase length applies (two-phase training, Alg. 1).
-    pub fn uses_warmup(&self) -> bool {
-        matches!(self, Method::PostLocalSgd | Method::Edit | Method::AEdit)
-    }
-
-    /// Penalty config for this method (disabled for non-EDiT methods).
-    pub fn default_penalty(&self) -> PenaltyConfig {
-        if self.uses_penalty() {
-            PenaltyConfig::default()
-        } else {
-            PenaltyConfig::disabled()
+            Method::Baseline => MethodSpec {
+                trigger: SyncTrigger::None,
+                granularity: Flat,
+                outer: OuterOptKind::averaging(), // unused: never syncs
+                outer_staleness: 0,
+                penalty: disabled,
+                shard_outer_state: false,
+                shard_anchor: false,
+                warmup: false,
+            },
+            Method::PostLocalSgd => MethodSpec {
+                trigger: SyncTrigger::Step,
+                granularity: Flat,
+                outer: OuterOptKind::averaging(),
+                outer_staleness: 0,
+                penalty: disabled,
+                shard_outer_state: false,
+                shard_anchor: false,
+                warmup: true,
+            },
+            Method::DiLoCo => MethodSpec {
+                trigger: SyncTrigger::Step,
+                granularity: Flat,
+                outer: OuterOptKind::paper_nesterov(),
+                outer_staleness: 0,
+                penalty: disabled,
+                shard_outer_state: false,
+                shard_anchor: false,
+                warmup: false,
+            },
+            Method::Co2 => MethodSpec {
+                trigger: SyncTrigger::Step,
+                granularity: Flat,
+                outer: OuterOptKind::paper_nesterov(),
+                outer_staleness: 1,
+                penalty: disabled,
+                shard_outer_state: false,
+                shard_anchor: false,
+                warmup: false,
+            },
+            Method::Co2Star => MethodSpec {
+                trigger: SyncTrigger::Step,
+                granularity: Flat,
+                outer: OuterOptKind::paper_nesterov(),
+                outer_staleness: 1,
+                penalty: disabled,
+                shard_outer_state: true,
+                shard_anchor: true,
+                warmup: false,
+            },
+            Method::Edit => MethodSpec {
+                trigger: SyncTrigger::Step,
+                granularity: Layerwise,
+                outer: OuterOptKind::paper_nesterov(),
+                outer_staleness: 0,
+                penalty: PenaltyConfig::default(),
+                shard_outer_state: true,
+                shard_anchor: true,
+                warmup: true,
+            },
+            Method::AEdit => MethodSpec {
+                trigger: SyncTrigger::Time,
+                granularity: Layerwise,
+                outer: OuterOptKind::paper_nesterov(),
+                outer_staleness: 0,
+                penalty: PenaltyConfig::default(),
+                shard_outer_state: true,
+                shard_anchor: true,
+                warmup: true,
+            },
+            Method::Palsgd => MethodSpec {
+                trigger: SyncTrigger::Probabilistic { prob: 0.5 },
+                granularity: Layerwise,
+                outer: OuterOptKind::paper_nesterov(),
+                outer_staleness: 0,
+                penalty: PenaltyConfig::default(),
+                shard_outer_state: true,
+                shard_anchor: true,
+                warmup: true,
+            },
         }
     }
 }
@@ -133,32 +191,38 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for m in Method::ALL {
+        for m in Method::NAMED {
             assert_eq!(Method::parse(m.name()), Some(m));
         }
         assert_eq!(Method::parse("PLS"), Some(Method::PostLocalSgd));
         assert_eq!(Method::parse("co2star"), Some(Method::Co2Star));
         assert_eq!(Method::parse("aedit"), Some(Method::AEdit));
+        assert_eq!(Method::parse("pal-sgd"), Some(Method::Palsgd));
         assert_eq!(Method::parse("nope"), None);
     }
 
     #[test]
-    fn paper_property_matrix() {
-        use Method::*;
-        assert!(!Baseline.is_local_sgd());
-        assert!(Edit.uses_penalty() && AEdit.uses_penalty());
-        assert!(!DiLoCo.uses_penalty());
-        assert_eq!(Co2.outer_staleness(), 1);
-        assert_eq!(DiLoCo.outer_staleness(), 0);
-        assert!(Co2Star.outer_state_sharded() && !Co2.outer_state_sharded());
-        assert!(Edit.outer_state_sharded());
-        assert!(AEdit.time_based_sync() && !Edit.time_based_sync());
-        assert!(PostLocalSgd.uses_warmup() && !DiLoCo.uses_warmup());
+    fn all_is_the_papers_seven() {
+        assert_eq!(Method::ALL.len(), 7);
+        assert!(!Method::ALL.contains(&Method::Palsgd));
+        assert!(Method::NAMED.contains(&Method::Palsgd));
+        for m in Method::ALL {
+            assert!(Method::NAMED.contains(&m));
+        }
     }
 
     #[test]
-    fn outer_defaults() {
-        assert_eq!(Method::PostLocalSgd.default_outer(), OuterOptKind::averaging());
-        assert_eq!(Method::Edit.default_outer(), OuterOptKind::paper_nesterov());
+    fn name_list_mentions_every_preset() {
+        let list = Method::name_list();
+        for m in Method::NAMED {
+            assert!(list.contains(m.name()), "{list}");
+        }
+    }
+
+    #[test]
+    fn every_preset_spec_validates() {
+        for m in Method::NAMED {
+            m.spec().validate().unwrap_or_else(|e| panic!("{m:?}: {e}"));
+        }
     }
 }

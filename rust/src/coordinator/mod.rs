@@ -1,7 +1,12 @@
 //! Layer 3 — the paper's coordination contribution.
 //!
 //! * [`mesh`]     — the M×N device mesh (shard groups × sync groups);
-//! * [`method`]   — EDiT, A-EDiT and the baseline method zoo;
+//! * [`spec`]     — `MethodSpec`, the compositional strategy descriptor
+//!                  (sync trigger / granularity / outer opt / staleness
+//!                  / penalty / sharding / warmup axes) every consumer
+//!                  dispatches on, plus the `custom:` method grammar;
+//! * [`method`]   — the named-preset table (EDiT, A-EDiT, PALSGD and
+//!                  the baselines) over `MethodSpec`;
 //! * [`engine`]   — the local-SGD training engine (Alg. 1): a thin
 //!                  facade over the event-driven per-replica execution
 //!                  core (`engine/clock.rs` scheduler, `engine/worker.rs`
@@ -23,6 +28,7 @@ pub mod outer;
 pub mod penalty;
 pub mod schedule;
 pub mod scratch;
+pub mod spec;
 
 pub use engine::{Poison, Replica, RunSummary, Straggler, TrainConfig, Trainer};
 pub use mesh::MeshSpec;
@@ -31,3 +37,4 @@ pub use outer::{OuterOpt, OuterOptKind};
 pub use penalty::{AnomalyDetector, PenaltyConfig};
 pub use schedule::LrSchedule;
 pub use scratch::SyncScratch;
+pub use spec::{MethodSpec, SyncGranularity, SyncTrigger};

@@ -22,7 +22,7 @@
 use crate::tensor;
 
 /// Penalty hyperparameters (paper defaults).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PenaltyConfig {
     /// Clip threshold φ (paper: 10).
     pub phi: f64,

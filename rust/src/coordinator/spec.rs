@@ -1,0 +1,515 @@
+//! `MethodSpec` — the compositional strategy descriptor behind the
+//! method zoo.
+//!
+//! The paper's methods (Baseline / Post Local SGD / DiLoCo / CO2 / CO2*
+//! / EDiT / A-EDiT) and its §4.4 ablations all differ along a handful
+//! of **orthogonal axes**; this module makes those axes first-class
+//! plain data instead of scattered predicates on an enum:
+//!
+//! | axis               | values                               | consumers |
+//! |--------------------|--------------------------------------|-----------|
+//! | `trigger`          | none / step-τ / time-τ / prob(p)     | engine round driver, cluster straggler model |
+//! | `granularity`      | flat / layer-wise                    | engine sync path, overlap & memory models |
+//! | `outer`            | SGD / Nesterov (+hyperparams)        | outer optimizer, memory model |
+//! | `outer_staleness`  | 0 / k rounds (CO2 overlap)           | staleness queue, trace/step models |
+//! | `penalty`          | per-stage toggles + hyperparams      | sync numerics, anomaly detector |
+//! | `shard_outer_state`| full copy / sharded over the group   | memory model (Table 2 OOM column) |
+//! | `shard_anchor`     | full copy / sharded                  | memory model |
+//! | `warmup`           | DDP warmup phase applies             | engine phase logic |
+//!
+//! Every named method is a row of this table ([`Method::spec`]), every
+//! consumer (trainer, step/trace/memory models, cluster simulator)
+//! dispatches on the axes, and new strategies are **registered as
+//! descriptors** — no engine or simulator code to touch. `palsgd`
+//! (probabilistic time-based synchronization in the style of Naganuma
+//! et al., *Pseudo-Asynchronous Local SGD*, 2025) is exactly that: one
+//! preset row riding the existing A-EDiT event core.
+//!
+//! The `custom:` grammar ([`MethodSpec::parse`]) exposes the axes on
+//! the CLI, which makes the paper's §4.4 ablation rows first-class
+//! runs: `--method custom:base=edit,penalty=off` or
+//! `custom:base=edit,sync=flat` (see `experiments::convergence::
+//! ablation_rows`).
+
+use super::method::Method;
+use super::outer::OuterOptKind;
+use super::penalty::PenaltyConfig;
+
+/// When does a replica become sync-eligible?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SyncTrigger {
+    /// Never: fully synchronous mini-batch DDP every step (Baseline).
+    None,
+    /// Every τ inner steps, barriered across all replicas.
+    Step,
+    /// Every τ_time simulated seconds, per-replica anchor sync with no
+    /// global barrier (A-EDiT, §3.3).
+    Time,
+    /// Time-based deadline windows like [`SyncTrigger::Time`], but each
+    /// replica joins a window's sync only with probability `prob`
+    /// (stateless draw — see `engine::worker::sync_draw`); skipped
+    /// replicas keep training against their stale anchor (PALSGD).
+    Probabilistic { prob: f64 },
+}
+
+impl SyncTrigger {
+    /// Deadline-driven (event-core) trigger, as opposed to the fixed
+    /// step count? Selects the per-replica anchor-sync path.
+    pub fn time_based(&self) -> bool {
+        matches!(self, SyncTrigger::Time | SyncTrigger::Probabilistic { .. })
+    }
+}
+
+/// Synchronization granularity at an outer boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncGranularity {
+    /// One full-vector exchange + uniform pseudo-gradient mean.
+    Flat,
+    /// Per-module sweep (screen → weight → combine → clip → apply),
+    /// overlappable with the next round's forward pass (§3.1).
+    Layerwise,
+}
+
+/// Plain-data strategy descriptor: the single source of truth for every
+/// behavioral axis of a training method. `Copy`, comparable, and
+/// constructible from the preset table ([`Method::spec`]), the
+/// `custom:` grammar ([`MethodSpec::parse`]) or field-by-field.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MethodSpec {
+    pub trigger: SyncTrigger,
+    pub granularity: SyncGranularity,
+    /// Outer optimizer over the combined pseudo gradient.
+    pub outer: OuterOptKind,
+    /// Rounds of staleness on the outer update (CO2-style overlap; the
+    /// update combined in round t lands in round t+k).
+    pub outer_staleness: usize,
+    /// Pseudo-gradient penalty stages + hyperparameters (Alg. 2).
+    pub penalty: PenaltyConfig,
+    /// Outer-optimizer state sharded across the shard group (vs a full
+    /// copy per worker)? Drives the memory model (Table 2 OOM column)
+    /// and the trainer's default runtime ZeRO-1 toggle
+    /// (`TrainConfig::shard_outer` starts from this axis).
+    pub shard_outer_state: bool,
+    /// Extra full parameter copy (θ_t anchor) sharded?
+    pub shard_anchor: bool,
+    /// DDP warmup phase applies (two-phase training, Alg. 1).
+    pub warmup: bool,
+}
+
+impl MethodSpec {
+    /// Does this strategy run periodic (local-SGD) synchronization at
+    /// all? `false` only for the pure-DDP baseline.
+    pub fn is_local_sgd(&self) -> bool {
+        !matches!(self.trigger, SyncTrigger::None)
+    }
+
+    /// Layer-wise (per-module) synchronization?
+    pub fn layerwise(&self) -> bool {
+        self.granularity == SyncGranularity::Layerwise
+    }
+
+    /// Any pseudo-gradient penalty stage active?
+    pub fn uses_penalty(&self) -> bool {
+        self.penalty.anomaly_elimination
+            || self.penalty.weighted_averaging
+            || self.penalty.gradient_clip
+    }
+
+    /// Can the extra local-SGD state be staged on CPU when memory is
+    /// tight? Only when the outer update is applied immediately
+    /// (`outer_staleness == 0` — an overlapped in-flight buffer must
+    /// stay pinned on GPU) and there is momentum worth staging.
+    pub fn extra_offloadable(&self) -> bool {
+        self.is_local_sgd() && self.outer_staleness == 0 && self.outer.needs_momentum()
+    }
+
+    /// Does the strategy shard the *model* state (ZeRO-3) on the mesh?
+    /// Plain DDP composes with ZeRO-3; among the local-SGD strategies
+    /// only the layer-wise ones do (paper §2: the All-Reduce-based
+    /// methods hold complete parameters on every GPU).
+    pub fn model_sharded(&self) -> bool {
+        !self.is_local_sgd() || self.layerwise()
+    }
+
+    /// Canonicalize a hand-built/parsed spec: the flat sync path has no
+    /// per-module statistics, so penalty stages are cleared there (the
+    /// §4.4 "w/o layer-wise sync" row drops the penalty with it).
+    pub fn normalize(&mut self) {
+        if !self.layerwise() && self.uses_penalty() {
+            self.penalty = PenaltyConfig::disabled();
+        }
+    }
+
+    /// Reject axis combinations the engine does not implement.
+    pub fn validate(&self) -> Result<(), String> {
+        if let SyncTrigger::Probabilistic { prob } = self.trigger {
+            if !(prob > 0.0 && prob <= 1.0) {
+                return Err(format!(
+                    "probabilistic sync needs 0 < prob <= 1, got {prob}"
+                ));
+            }
+        }
+        if self.trigger.time_based() && !self.layerwise() {
+            return Err(
+                "time-based/probabilistic triggers ride the per-module anchor \
+                 sync; add sync=layer (or drop trigger=time/prob)"
+                    .into(),
+            );
+        }
+        if self.outer_staleness > 0 && self.layerwise() {
+            return Err(
+                "outer staleness (CO2 overlap) is only implemented for the \
+                 flat sync path; use sync=flat with staleness=N"
+                    .into(),
+            );
+        }
+        if self.outer_staleness > 0 && self.trigger != SyncTrigger::Step {
+            return Err("outer staleness requires the step-τ trigger".into());
+        }
+        if self.uses_penalty() && !self.layerwise() {
+            return Err(
+                "the pseudo-gradient penalty needs per-module statistics; \
+                 use sync=layer or penalty=off"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Set one axis from its `custom:` grammar key/value (also the
+    /// backing store for the `train.*` config keys — see
+    /// [`CUSTOM_GRAMMAR`]).
+    pub fn set_axis(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "base" => {
+                let m = Method::parse(value).ok_or_else(|| {
+                    format!(
+                        "unknown base method '{value}' (expected one of: {})",
+                        Method::name_list()
+                    )
+                })?;
+                *self = m.spec();
+            }
+            "sync" => {
+                self.granularity = match value {
+                    "layer" | "layerwise" => SyncGranularity::Layerwise,
+                    "flat" | "full" => SyncGranularity::Flat,
+                    other => return Err(format!("sync must be layer|flat, got '{other}'")),
+                }
+            }
+            "trigger" => {
+                self.trigger = if value == "step" {
+                    SyncTrigger::Step
+                } else if value == "time" {
+                    SyncTrigger::Time
+                } else if value == "none" {
+                    SyncTrigger::None
+                } else if let Some(p) = value.strip_prefix("prob:") {
+                    let prob: f64 = p
+                        .parse()
+                        .map_err(|_| format!("bad probability in trigger '{value}'"))?;
+                    SyncTrigger::Probabilistic { prob }
+                } else {
+                    return Err(format!(
+                        "trigger must be step|time|prob:<p>|none, got '{value}'"
+                    ));
+                }
+            }
+            "penalty" => match value {
+                "on" => self.penalty = PenaltyConfig::default(),
+                "off" => self.penalty = PenaltyConfig::disabled(),
+                "no-ae" => self.penalty.anomaly_elimination = false,
+                "no-wa" => self.penalty.weighted_averaging = false,
+                "no-gc" => self.penalty.gradient_clip = false,
+                other => {
+                    return Err(format!(
+                        "penalty must be on|off|no-ae|no-wa|no-gc, got '{other}'"
+                    ))
+                }
+            },
+            "outer" => self.outer = parse_outer(value)?,
+            "staleness" => {
+                self.outer_staleness = value
+                    .parse()
+                    .map_err(|_| format!("staleness must be an integer, got '{value}'"))?
+            }
+            "warmup" => self.warmup = parse_bool("warmup", value)?,
+            "shard" => {
+                let b = parse_bool("shard", value)?;
+                self.shard_outer_state = b;
+                self.shard_anchor = b;
+            }
+            other => {
+                return Err(format!(
+                    "unknown custom-method key '{other}' ({CUSTOM_GRAMMAR})"
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve a method string — a named preset (`edit`, `palsgd`, ...)
+    /// or the `custom:` grammar — into `(spec, canonical label)`. The
+    /// label round-trips: `parse(label)` yields the same spec.
+    pub fn parse(s: &str) -> Result<(MethodSpec, String), String> {
+        let raw = s.trim().to_ascii_lowercase();
+        if let Some(m) = Method::parse(&raw) {
+            return Ok((m.spec(), m.name().to_string()));
+        }
+        let Some(body) = raw.strip_prefix("custom:") else {
+            return Err(format!(
+                "unknown method '{s}'. valid methods: {}; or a custom \
+                 descriptor ({CUSTOM_GRAMMAR})",
+                Method::name_list()
+            ));
+        };
+        let mut spec = Method::Edit.spec();
+        let mut explicit_penalty = false;
+        for (i, pair) in body.split(',').filter(|p| !p.trim().is_empty()).enumerate() {
+            let (key, value) = pair.split_once('=').ok_or_else(|| {
+                format!("custom method: expected key=value, got '{pair}' ({CUSTOM_GRAMMAR})")
+            })?;
+            let key = key.trim();
+            // base= resets every axis, so later keys layer on top of it;
+            // accepting it mid-list would silently wipe earlier keys.
+            if key == "base" && i > 0 {
+                return Err(
+                    "base= must be the first key of a custom descriptor \
+                     (it resets every axis)"
+                        .into(),
+                );
+            }
+            explicit_penalty |= key == "penalty";
+            spec.set_axis(key, value.trim())?;
+        }
+        // An explicitly requested penalty must not be silently dropped
+        // by the flat-sync normalization — that combination is an error.
+        // (Penalty stages merely *inherited* from the base preset
+        // normalize away quietly: that is the §4.4 flat-sync row.)
+        if explicit_penalty && !spec.layerwise() && spec.uses_penalty() {
+            return Err(
+                "penalty=... conflicts with sync=flat (penalty stages need \
+                 per-module statistics); drop the penalty key or use sync=layer"
+                    .into(),
+            );
+        }
+        spec.normalize();
+        spec.validate()?;
+        Ok((spec, raw))
+    }
+}
+
+/// One-line help string for the `custom:` method grammar, embedded in
+/// CLI errors and `edit-train` usage output.
+pub const CUSTOM_GRAMMAR: &str = "custom:base=<method>[,key=value...] with keys \
+base=<named method>, sync=layer|flat, trigger=step|time|prob:<p>, \
+penalty=on|off|no-ae|no-wa|no-gc, outer=nesterov[:lr[:mu]]|sgd[:lr]|avg, \
+staleness=<rounds>, shard=on|off, warmup=on|off \
+— e.g. custom:base=edit,penalty=off,sync=flat";
+
+fn parse_bool(key: &str, value: &str) -> Result<bool, String> {
+    match value {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => Err(format!("{key} must be on|off, got '{other}'")),
+    }
+}
+
+fn parse_outer(value: &str) -> Result<OuterOptKind, String> {
+    let mut parts = value.split(':');
+    let kind = parts.next().unwrap_or("");
+    let lr = parts.next();
+    let mu = parts.next();
+    if parts.next().is_some() {
+        return Err(format!("outer has too many ':' parts: '{value}'"));
+    }
+    let parse_f = |s: &str| -> Result<f64, String> {
+        s.parse()
+            .map_err(|_| format!("bad number '{s}' in outer '{value}'"))
+    };
+    match kind {
+        "avg" | "averaging" => {
+            if lr.is_some() {
+                return Err("outer=avg takes no hyperparameters".into());
+            }
+            Ok(OuterOptKind::averaging())
+        }
+        "sgd" => {
+            if mu.is_some() {
+                return Err(format!("outer=sgd takes at most one ':lr' part: '{value}'"));
+            }
+            Ok(OuterOptKind::Sgd {
+                lr: lr.map(parse_f).transpose()?.unwrap_or(1.0),
+            })
+        }
+        "nesterov" => {
+            let base = OuterOptKind::paper_nesterov();
+            let (dlr, dmu) = match base {
+                OuterOptKind::Nesterov { lr, momentum } => (lr, momentum),
+                _ => unreachable!(),
+            };
+            Ok(OuterOptKind::Nesterov {
+                lr: lr.map(parse_f).transpose()?.unwrap_or(dlr),
+                momentum: mu.map(parse_f).transpose()?.unwrap_or(dmu),
+            })
+        }
+        other => Err(format!(
+            "outer must be nesterov[:lr[:mu]]|sgd[:lr]|avg, got '{other}'"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The historical predicate matrix, restated over the spec axes —
+    /// the preset table must encode exactly the seed semantics.
+    #[test]
+    fn preset_axes_match_paper_property_matrix() {
+        use Method::*;
+        assert!(!Baseline.spec().is_local_sgd());
+        for m in [PostLocalSgd, DiLoCo, Co2, Co2Star, Edit, AEdit, Palsgd] {
+            assert!(m.spec().is_local_sgd(), "{m:?}");
+        }
+        assert!(Edit.spec().uses_penalty() && AEdit.spec().uses_penalty());
+        assert!(!DiLoCo.spec().uses_penalty());
+        assert!(Edit.spec().layerwise() && AEdit.spec().layerwise());
+        assert!(!Co2.spec().layerwise() && !PostLocalSgd.spec().layerwise());
+        assert_eq!(Co2.spec().outer_staleness, 1);
+        assert_eq!(Co2Star.spec().outer_staleness, 1);
+        assert_eq!(DiLoCo.spec().outer_staleness, 0);
+        assert!(Co2Star.spec().shard_outer_state && !Co2.spec().shard_outer_state);
+        assert!(Edit.spec().shard_outer_state && Edit.spec().shard_anchor);
+        assert!(AEdit.spec().trigger.time_based() && !Edit.spec().trigger.time_based());
+        assert_eq!(Edit.spec().trigger, SyncTrigger::Step);
+        assert!(PostLocalSgd.spec().warmup && !DiLoCo.spec().warmup);
+        assert_eq!(PostLocalSgd.spec().outer, OuterOptKind::averaging());
+        assert_eq!(Edit.spec().outer, OuterOptKind::paper_nesterov());
+        // Derived axes reproduce the seed memory-model tables.
+        assert!(Baseline.spec().model_sharded());
+        assert!(Edit.spec().model_sharded() && AEdit.spec().model_sharded());
+        for m in [PostLocalSgd, DiLoCo, Co2, Co2Star] {
+            assert!(!m.spec().model_sharded(), "{m:?}");
+        }
+        for m in [DiLoCo, Edit, AEdit] {
+            assert!(m.spec().extra_offloadable(), "{m:?}");
+        }
+        for m in [Baseline, PostLocalSgd, Co2, Co2Star] {
+            assert!(!m.spec().extra_offloadable(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn palsgd_is_a_probabilistic_aedit() {
+        let p = Method::Palsgd.spec();
+        assert!(matches!(p.trigger, SyncTrigger::Probabilistic { prob } if prob > 0.0));
+        assert!(p.trigger.time_based());
+        // Everything else rides the EDiT/A-EDiT recipe.
+        let mut a = Method::AEdit.spec();
+        a.trigger = p.trigger;
+        assert_eq!(a, p);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn named_parse_roundtrip() {
+        for m in Method::NAMED {
+            let (spec, label) = MethodSpec::parse(m.name()).unwrap();
+            assert_eq!(spec, m.spec(), "{m:?}");
+            assert_eq!(label, m.name());
+        }
+        let (spec, _) = MethodSpec::parse("PALSGD").unwrap();
+        assert_eq!(spec, Method::Palsgd.spec());
+    }
+
+    #[test]
+    fn custom_grammar_parse_and_roundtrip() {
+        let cases = [
+            "custom:base=edit",
+            "custom:base=edit,penalty=off",
+            "custom:base=edit,sync=flat",
+            "custom:base=edit,penalty=no-ae,penalty=no-gc",
+            "custom:base=diloco,staleness=1",
+            "custom:base=a-edit,trigger=prob:0.25",
+            "custom:base=edit,outer=sgd:0.7,warmup=off,shard=off",
+        ];
+        for s in cases {
+            let (spec, label) = MethodSpec::parse(s).unwrap();
+            // The canonical label round-trips to the same spec.
+            let (spec2, label2) = MethodSpec::parse(&label).unwrap();
+            assert_eq!(spec, spec2, "{s}");
+            assert_eq!(label, label2, "{s}");
+            assert!(spec.validate().is_ok(), "{s}");
+        }
+        // Semantic spot checks.
+        let (base, _) = MethodSpec::parse("custom:base=edit").unwrap();
+        assert_eq!(base, Method::Edit.spec());
+        let (off, _) = MethodSpec::parse("custom:base=edit,penalty=off").unwrap();
+        assert!(!off.uses_penalty() && off.layerwise());
+        let (flat, _) = MethodSpec::parse("custom:base=edit,sync=flat").unwrap();
+        assert!(!flat.layerwise());
+        // Flat sync drops the per-module penalty with it (normalize).
+        assert!(!flat.uses_penalty());
+        let (noae, _) =
+            MethodSpec::parse("custom:base=edit,penalty=no-ae,penalty=no-gc").unwrap();
+        assert!(!noae.penalty.anomaly_elimination);
+        assert!(noae.penalty.weighted_averaging);
+        assert!(!noae.penalty.gradient_clip);
+        let (sgd, _) =
+            MethodSpec::parse("custom:base=edit,outer=sgd:0.7,warmup=off,shard=off").unwrap();
+        assert_eq!(sgd.outer, OuterOptKind::Sgd { lr: 0.7 });
+        assert!(!sgd.warmup && !sgd.shard_outer_state && !sgd.shard_anchor);
+    }
+
+    #[test]
+    fn custom_grammar_rejects_bad_input() {
+        for s in [
+            "nope",
+            "custom:granularity=layer",   // unknown key
+            "custom:base=nope",           // unknown base
+            "custom:base=edit,sync=diag", // bad value
+            "custom:base=edit,trigger=prob:0", // prob out of range
+            "custom:base=edit,trigger=prob:1.5",
+            "custom:base=edit,penalty",           // missing '='
+            "custom:base=edit,outer=adamw",       // unknown outer
+            "custom:base=co2,trigger=time",       // staleness + time trigger
+            "custom:base=edit,sync=flat,trigger=time", // flat + time trigger
+            "custom:sync=flat,base=edit",         // base= must come first
+            "custom:base=edit,sync=flat,penalty=on", // explicit penalty vs flat
+        ] {
+            let err = MethodSpec::parse(s).unwrap_err();
+            assert!(!err.is_empty(), "{s}");
+        }
+        // The unknown-method error lists the valid names and grammar.
+        let err = MethodSpec::parse("nope").unwrap_err();
+        for name in ["baseline", "edit", "a-edit", "palsgd", "custom:"] {
+            assert!(err.contains(name), "error should mention '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_unimplemented_combinations() {
+        let mut s = Method::Edit.spec();
+        s.outer_staleness = 1;
+        assert!(s.validate().is_err(), "layerwise + staleness");
+        let mut s = Method::Co2.spec();
+        s.trigger = SyncTrigger::Time;
+        assert!(s.validate().is_err(), "flat + time trigger");
+        let mut s = Method::AEdit.spec();
+        s.trigger = SyncTrigger::Probabilistic { prob: 0.0 };
+        assert!(s.validate().is_err(), "prob out of range");
+    }
+
+    #[test]
+    fn normalize_clears_penalty_on_flat() {
+        let mut s = Method::Edit.spec();
+        s.granularity = SyncGranularity::Flat;
+        s.normalize();
+        assert!(!s.uses_penalty());
+        // Layer-wise specs are untouched.
+        let mut e = Method::Edit.spec();
+        e.normalize();
+        assert_eq!(e, Method::Edit.spec());
+    }
+}

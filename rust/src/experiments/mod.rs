@@ -3,7 +3,9 @@
 //! paper-shaped table and writes CSVs under `results/`.
 //!
 //! * [`convergence`] — Fig. 4 loss/PPL curves, Table 1 probe evals,
-//!   Fig. 7 penalty ablation + per-worker spike traces, Fig. 8 scales;
+//!   Fig. 7 penalty ablation + per-worker spike traces, Fig. 8 scales,
+//!   plus the §4.4 `custom:`-descriptor ablation rows
+//!   ([`convergence::ablation_rows`]);
 //! * [`throughput`]  — Table 2 tokens/s + TFLOPS + OOM grid, Fig. 5 /
 //!   Table 6 straggler & bandwidth scenarios, Fig. 9 sync timelines;
 //! * [`scaling`]     — Fig. 6a/b LR-transfer sweep, Fig. 6c elastic runs.
@@ -13,7 +15,7 @@ pub mod scaling;
 pub mod throughput;
 
 use crate::collectives::{CostModel, Topology};
-use crate::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
+use crate::coordinator::{MeshSpec, Method, MethodSpec, TrainConfig, Trainer};
 use crate::data::{Corpus, Quality};
 use crate::runtime::Engine;
 
@@ -54,18 +56,69 @@ impl ExpOpts {
         self.results.join(name)
     }
 
-    /// Build a trainer for `method` on a corpus of the given quality.
+    /// Build a trainer for a named preset on a corpus of the given
+    /// quality.
     pub fn trainer(&self, method: Method, quality: Quality, seed_off: u64) -> Result<Trainer> {
+        self.trainer_spec(method.spec(), method.name(), quality, seed_off)
+    }
+
+    /// Build a trainer for an arbitrary strategy descriptor (the
+    /// `custom:` ablation rows and descriptor-registered methods).
+    pub fn trainer_spec(
+        &self,
+        spec: MethodSpec,
+        label: &str,
+        quality: Quality,
+        seed_off: u64,
+    ) -> Result<Trainer> {
         let engine = Engine::load(&self.artifacts, &self.model)?;
+        self.trainer_with_engine(engine, spec, label, quality, seed_off)
+    }
+
+    /// [`Self::trainer_spec`] substituting the deterministic synthetic
+    /// stub model when AOT artifacts are absent — the clean-box trick of
+    /// `throughput::fig5_trainer`, for harnesses whose point is the
+    /// strategy axes rather than the real model. The substitution is
+    /// announced on stderr so stub numbers can't masquerade as the real
+    /// model's.
+    pub fn trainer_spec_or_synthetic(
+        &self,
+        spec: MethodSpec,
+        label: &str,
+        quality: Quality,
+        seed_off: u64,
+    ) -> Result<Trainer> {
+        use crate::runtime::Manifest;
+        let engine = match Engine::load(&self.artifacts, &self.model) {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!(
+                    "artifacts unavailable ({err:#}); using the deterministic \
+                     synthetic stub model (run `make artifacts` for the real model)"
+                );
+                Engine::synthetic(Manifest::synthetic_fallback("exp-synthetic"))
+            }
+        };
+        self.trainer_with_engine(engine, spec, label, quality, seed_off)
+    }
+
+    fn trainer_with_engine(
+        &self,
+        engine: Engine,
+        spec: MethodSpec,
+        label: &str,
+        quality: Quality,
+        seed_off: u64,
+    ) -> Result<Trainer> {
         let corpus = Corpus::new(
             engine.manifest.model.vocab_size,
             self.seed + seed_off,
             quality,
         );
-        let mut cfg = TrainConfig::paper_default(method, self.mesh, self.steps);
+        let mut cfg = TrainConfig::from_spec(spec, label, self.mesh, self.steps);
         cfg.tau = self.tau;
         cfg.tau_time = self.tau as f64 * cfg.base_step_time;
-        cfg.t_warm = if method.uses_warmup() {
+        cfg.t_warm = if spec.warmup {
             (self.steps / 12).max(self.tau.min(8))
         } else {
             0

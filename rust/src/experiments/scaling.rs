@@ -83,7 +83,7 @@ pub fn fig6c(opts: &ExpOpts, steps_per_phase: u64, lr: f64) -> Result<()> {
             t.cfg.total_steps = 0;
             // ExpOpts::trainer derives t_warm from steps (u64::MAX here);
             // pin it so EDiT actually leaves the DDP warmup phase.
-            t.cfg.t_warm = if method.uses_warmup() { 8 } else { 0 };
+            t.cfg.t_warm = if t.cfg.spec.warmup { 8 } else { 0 };
             let phases = elastic::paper_schedule(up, steps_per_phase);
             let points = elastic::run_schedule(&mut t, &phases)?;
             let dir = if up { "up" } else { "down" };

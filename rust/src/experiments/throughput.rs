@@ -153,9 +153,8 @@ pub fn fig5_trainer(opts: &ExpOpts) -> Result<()> {
     let build = |method: Method, straggler: Straggler| -> Result<Trainer> {
         // Real artifacts when built; otherwise the deterministic stub
         // model (same trick as the steady-state and determinism tests).
-        let engine = Engine::load(&opts.artifacts, &opts.model).unwrap_or_else(|_| {
-            Engine::synthetic(Manifest::synthetic("fig5-xval", 4, 256, 128, 64, 2, 8))
-        });
+        let engine = Engine::load(&opts.artifacts, &opts.model)
+            .unwrap_or_else(|_| Engine::synthetic(Manifest::synthetic_fallback("fig5-xval")));
         let corpus =
             Corpus::new(engine.manifest.model.vocab_size, opts.seed, Quality::clean());
         let mut cfg = TrainConfig::paper_default(method, mesh, opts.steps);

@@ -22,8 +22,10 @@
 //! provides the synthetic corpus substrate; [`collectives`] the
 //! deterministic communication substrate with its α-β cost model.
 //!
-//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! Training strategies are described by the compositional
+//! [`coordinator::spec::MethodSpec`] descriptor (named presets +
+//! `custom:` grammar). See the repo-root README.md for the quickstart
+//! and the method-zoo axes table.
 
 pub mod bench;
 pub mod collectives;

@@ -17,13 +17,13 @@ use anyhow::Result;
 
 use edit_train::collectives::{CostModel, Topology};
 use edit_train::coordinator::{
-    LrSchedule, MeshSpec, Method, Straggler, TrainConfig, Trainer,
+    LrSchedule, MeshSpec, Method, MethodSpec, Straggler, TrainConfig, Trainer,
 };
 use edit_train::data::{Corpus, Quality};
 use edit_train::experiments::{convergence, scaling, throughput, ExpOpts};
 use edit_train::metrics::format_g;
-use edit_train::runtime::Engine;
-use edit_train::util::cfg::Config;
+use edit_train::runtime::{Engine, Manifest};
+use edit_train::util::cfg::{Config, Value};
 use edit_train::util::cli::Args;
 
 fn main() {
@@ -42,11 +42,14 @@ fn usage() -> &'static str {
     "usage: edit-train <train|sweep|simulate|ablation|elastic|probe|info> [options]
   common: --artifacts DIR --results DIR --model test|petite|tiny|mini
           --mesh MxN --steps N --tau N --seed N --config FILE --set k=v,...
-  train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit
+  train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit|palsgd
+            or --method custom:base=edit,penalty=off,sync=flat,... (the
+            MethodSpec grammar; axes also settable via train.* config
+            keys: sync/trigger/penalty/outer/staleness/shard/warmup)
             --lr X --noise P --straggler none|random:LAG|consistent:LAG[:REPLICA]
             --threads N --timeline FILE.csv --out curves.csv --log
             --no-shard-outer (disable ZeRO-1 outer-state sharding)
-  sweep:    --exp fig4|table1|fig8 [--noisy] [--methods a,b,c]
+  sweep:    --exp fig4|table1|fig8|ablations [--noisy] [--methods a,b,c]
   simulate: --exp table2|fig5|fig5-trainer|fig9|measured
   ablation: (fig7)
   elastic:  --exp fig6ab|fig6c --phase-steps N --lr X
@@ -116,17 +119,77 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// Apply `train.*` strategy-axis config keys (sync/trigger/penalty/
+/// outer/staleness/shard/warmup) over a parsed spec, then re-normalize
+/// and validate — the config-file twin of the `custom:` grammar.
+/// Returns the applied `key=value` pairs so the caller can fold them
+/// into the run label (the label must describe what actually runs).
+fn apply_spec_cfg(spec: &mut MethodSpec, cfg: &Config) -> Result<Vec<String>> {
+    let mut applied = Vec::new();
+    for key in ["sync", "trigger", "penalty", "outer", "staleness", "shard", "warmup"] {
+        let Some(v) = cfg.get(&format!("train.{key}")) else {
+            continue;
+        };
+        let value = match v {
+            Value::Str(s) => s.clone(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => f.to_string(),
+            Value::Bool(true) => "on".to_string(),
+            Value::Bool(false) => "off".to_string(),
+            Value::Arr(_) => {
+                anyhow::bail!("train.{key}: expected a scalar value, got an array")
+            }
+        };
+        spec.set_axis(key, &value)
+            .map_err(|e| anyhow::anyhow!("train.{key}: {e}"))?;
+        applied.push(format!("{key}={value}"));
+    }
+    // Same contract as the custom: grammar: an explicitly requested
+    // penalty must not be silently normalized away by flat sync.
+    let explicit_penalty = applied.iter().any(|a| a.starts_with("penalty="));
+    if explicit_penalty && !spec.layerwise() && spec.uses_penalty() {
+        anyhow::bail!(
+            "train.penalty conflicts with sync=flat (penalty stages need \
+             per-module statistics); drop train.penalty or use sync=layer"
+        );
+    }
+    spec.normalize();
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(applied)
+}
+
 fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
-    let method = Method::parse(&args.str("method", &cfg.str("train.method", "edit")))
-        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    // `--method` accepts every named preset plus the custom: grammar;
+    // parse errors list the valid names and the grammar.
+    let raw_method = args.str("method", &cfg.str("train.method", "edit"));
+    let (mut spec, mut label) =
+        MethodSpec::parse(&raw_method).map_err(|e| anyhow::anyhow!(e))?;
+    let overrides = apply_spec_cfg(&mut spec, cfg)?;
+    if !overrides.is_empty() {
+        // The label must name what actually runs, not just what
+        // --method said (train.* keys may have changed the axes).
+        label = format!("{label}+{}", overrides.join("+"));
+    }
     let noise = args.f64("noise", cfg.f64("data.noise", 0.0));
-    let engine = Engine::load(&opts.artifacts, &opts.model)?;
+    // Without AOT artifacts (`make artifacts`), train on the
+    // deterministic synthetic stub model instead of erroring — loudly,
+    // so nobody mistakes a stub run for the real model.
+    let engine = match Engine::load(&opts.artifacts, &opts.model) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!(
+                "artifacts unavailable ({err:#}); training the deterministic \
+                 synthetic stub model (run `make artifacts` for the real model)"
+            );
+            Engine::synthetic(Manifest::synthetic_fallback("train-synthetic"))
+        }
+    };
     let corpus = Corpus::new(
         engine.manifest.model.vocab_size,
         opts.seed,
         Quality { noise_prob: noise },
     );
-    let mut tc = TrainConfig::paper_default(method, opts.mesh, opts.steps);
+    let mut tc = TrainConfig::from_spec(spec, label.clone(), opts.mesh, opts.steps);
     tc.tau = opts.tau;
     tc.tau_time = cfg.f64("train.tau_time", opts.tau as f64 * tc.base_step_time);
     tc.seed = opts.seed;
@@ -137,9 +200,12 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
     }
     tc.worker_threads = args.usize("threads", 1).max(1);
     tc.trace_timeline = args.opt("timeline").is_some();
-    // Sharded outer state defaults on for the layer-wise methods; the
-    // flag forces the full-matrix reference path (bitwise identical).
-    tc.shard_outer = !args.flag("no-shard-outer") && cfg.i64("train.shard_outer", 1) != 0;
+    // Runtime ZeRO-1 toggle: defaults to the spec's sharding axis
+    // (layer-wise presets on, `custom:...,shard=off` off); the flag and
+    // `train.shard_outer = 0` force the full-matrix reference path
+    // (bitwise identical numerics either way).
+    tc.shard_outer =
+        tc.shard_outer && !args.flag("no-shard-outer") && cfg.i64("train.shard_outer", 1) != 0;
     tc.straggler = match args.str("straggler", "none").split_once(':') {
         Some(("random", lag)) => Straggler::Random { lag: lag.parse()? },
         Some(("consistent", rest)) => {
@@ -155,7 +221,7 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
 
     println!(
         "training: method={} model={} mesh={}x{} steps={} tau={} params={}",
-        method.name(),
+        label,
         opts.model,
         opts.mesh.shard,
         opts.mesh.replicas,
@@ -229,6 +295,7 @@ fn cmd_sweep(args: &Args, opts: &ExpOpts) -> Result<()> {
             let refs: Vec<&str> = models.iter().map(String::as_str).collect();
             convergence::fig8(opts, &refs)?;
         }
+        "ablations" => convergence::ablation_rows(opts)?,
         other => anyhow::bail!("unknown sweep exp '{other}'"),
     }
     Ok(())
@@ -274,11 +341,11 @@ fn cmd_elastic(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
 }
 
 fn cmd_probe(args: &Args, opts: &ExpOpts) -> Result<()> {
-    let method = Method::parse(&args.str("method", "edit"))
-        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    let mut t = opts.trainer(method, Quality::clean(), 0)?;
+    let (spec, label) = MethodSpec::parse(&args.str("method", "edit"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut t = opts.trainer_spec(spec, &label, Quality::clean(), 0)?;
     t.run()?;
-    println!("probe PPLs for {} after {} steps:", method.name(), opts.steps);
+    println!("probe PPLs for {} after {} steps:", label, opts.steps);
     for (name, ppl) in t.probe_ppls()? {
         println!("  {name:<14} {}", format_g(ppl));
     }

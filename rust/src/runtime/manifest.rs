@@ -127,6 +127,14 @@ impl Manifest {
     /// parameter counts on a clean box. `layer_params` is the per-layer
     /// element count of the stacked block; `tail_params` is split
     /// between the unstacked embed/head tensors.
+    /// The canonical clean-box stub-model shape shared by every
+    /// artifacts-absent fallback (the `train` CLI, the experiment
+    /// harnesses, the fig5 cross-validation) — one definition so the
+    /// fallbacks can never drift apart in model shape.
+    pub fn synthetic_fallback(name: &str) -> Manifest {
+        Manifest::synthetic(name, 4, 256, 128, 64, 2, 8)
+    }
+
     pub fn synthetic(
         name: &str,
         num_layers: usize,

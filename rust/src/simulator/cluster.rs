@@ -15,7 +15,7 @@
 //! (inter-node comms repeated `repeat`×).
 
 use crate::collectives::{CollOp, CostModel, Topology};
-use crate::coordinator::{MeshSpec, Method};
+use crate::coordinator::{MeshSpec, Method, MethodSpec};
 
 use super::memory::{self, MemoryBreakdown};
 use super::scales::{ScaleSpec, A100_MEM_BYTES, A100_PEAK_FLOPS};
@@ -32,7 +32,11 @@ pub enum Scenario {
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    pub method: Method,
+    /// Strategy descriptor — every per-method branch below prices its
+    /// axes, so custom `MethodSpec`s simulate exactly like presets.
+    pub spec: MethodSpec,
+    /// Reporting label ("edit", "custom:base=edit,penalty=off", ...).
+    pub label: String,
     pub scale: ScaleSpec,
     pub mesh: MeshSpec,
     pub topo: Topology,
@@ -46,8 +50,15 @@ pub struct SimConfig {
 impl SimConfig {
     /// Table 2 setting: two A100 nodes (8×2 mesh), τ=5, 2 sequences/GPU.
     pub fn table2(method: Method, scale: ScaleSpec) -> Self {
+        Self::table2_spec(method.spec(), method.name(), scale)
+    }
+
+    /// [`Self::table2`] for an arbitrary strategy descriptor (the
+    /// `custom:` ablation rows).
+    pub fn table2_spec(spec: MethodSpec, label: impl Into<String>, scale: ScaleSpec) -> Self {
         Self {
-            method,
+            spec,
+            label: label.into(),
             scale,
             mesh: MeshSpec::new(8, 2),
             topo: Topology::a100(),
@@ -61,8 +72,14 @@ impl SimConfig {
     /// 4 sequences/GPU (calibrated to the paper's ~225 TFLOPS baseline;
     /// EDiT/A-EDiT offload their sharded extra state at this size).
     pub fn fig5(method: Method, scenario: Scenario) -> Self {
+        Self::fig5_spec(method.spec(), method.name(), scenario)
+    }
+
+    /// [`Self::fig5`] for an arbitrary strategy descriptor.
+    pub fn fig5_spec(spec: MethodSpec, label: impl Into<String>, scenario: Scenario) -> Self {
         Self {
-            method,
+            spec,
+            label: label.into(),
             scale: ScaleSpec::by_name("7B").unwrap(),
             mesh: MeshSpec::new(8, 8),
             topo: Topology::a100(),
@@ -75,7 +92,8 @@ impl SimConfig {
 
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    pub method: Method,
+    /// The simulated strategy's label (`SimConfig::label`).
+    pub label: String,
     /// None on OOM.
     pub tokens_per_sec: Option<f64>,
     pub tflops_per_gpu: Option<f64>,
@@ -107,7 +125,7 @@ const SYNC_BYTES: f64 = 4.0;
 
 pub fn simulate(cfg: &SimConfig) -> SimResult {
     let memory = memory::breakdown(
-        cfg.method,
+        &cfg.spec,
         &cfg.scale,
         cfg.mesh.shard,
         cfg.tokens_per_gpu,
@@ -115,7 +133,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     );
     if memory.total() > A100_MEM_BYTES {
         return SimResult {
-            method: cfg.method,
+            label: cfg.label.clone(),
             tokens_per_sec: None,
             tflops_per_gpu: None,
             step_seconds: None,
@@ -142,7 +160,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     // Baseline / warmup: inter-node gradient all-reduce each step, each
     // GPU moving its P/M shard across its sync group; overlappable with
     // part of the backward pass.
-    if cfg.method == Method::Baseline {
+    if !cfg.spec.is_local_sgd() {
         let sync_group = cfg.mesh.sync_group(0);
         let shard_bytes =
             (cfg.scale.params() as f64 * GRAD_BYTES / cfg.mesh.shard as f64) as usize;
@@ -154,7 +172,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     }
 
     // Periodic synchronization residual, amortized over τ.
-    if cfg.method.is_local_sgd() {
+    if cfg.spec.is_local_sgd() {
         let sm = StepModel {
             mesh: cfg.mesh,
             cost,
@@ -162,52 +180,57 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
             compute,
             cpu_offload: memory.offloaded,
         };
-        step += sm.sync_exposed(cfg.method) / cfg.tau as f64;
+        step += sm.sync_exposed(&cfg.spec) / cfg.tau as f64;
     }
 
     // Straggler scenarios (§4.3). τ-round analysis, one lagging node of
-    // the N replicas per step:
+    // the N replicas per step. The trigger axis decides the barrier
+    // behavior: no periodic sync = fully synchronous DDP (everyone
+    // waits every step); time-based/probabilistic triggers never
+    // barrier (A-EDiT/PALSGD); the step-τ trigger barriers per round.
     step += match cfg.scenario {
         Scenario::Normal | Scenario::LimitedBandwidth { .. } => 0.0,
         Scenario::RandomStraggler { lag } => {
             let n = cfg.mesh.replicas as f64;
-            match cfg.method {
+            if !cfg.spec.is_local_sgd() {
                 // Synchronous: someone always lags, everyone waits.
-                Method::Baseline => lag,
-                // A-EDiT: no sync barrier stretch; only the victim's share
-                // of wall time is lost (it contributes fewer steps).
-                Method::AEdit => lag / n,
+                lag
+            } else if cfg.spec.trigger.time_based() {
+                // No sync barrier stretch; only the victim's share of
+                // wall time is lost (it contributes fewer steps).
+                lag / n
+            } else {
                 // Step-synced local methods: per-round delay is the MAX
                 // over nodes of Binomial(τ, 1/n) lag sums.
-                _ => {
-                    let tau = cfg.tau as f64;
-                    let mean = tau / n;
-                    let sd = (tau * (1.0 / n) * (1.0 - 1.0 / n)).sqrt();
-                    let max_extra = sd * (2.0 * (cfg.mesh.replicas as f64).ln()).sqrt();
-                    (mean + max_extra) * lag / tau
-                }
+                let tau = cfg.tau as f64;
+                let mean = tau / n;
+                let sd = (tau * (1.0 / n) * (1.0 - 1.0 / n)).sqrt();
+                let max_extra = sd * (2.0 * (cfg.mesh.replicas as f64).ln()).sqrt();
+                (mean + max_extra) * lag / tau
             }
         }
-        Scenario::ConsistentStraggler { lag } => match cfg.method {
-            Method::Baseline => lag,
-            // A-EDiT: the slow replica just does fewer steps; cluster
-            // throughput scales by the mean step-rate.
-            Method::AEdit => {
+        Scenario::ConsistentStraggler { lag } => {
+            if !cfg.spec.is_local_sgd() {
+                lag
+            } else if cfg.spec.trigger.time_based() {
+                // The slow replica just does fewer steps; cluster
+                // throughput scales by the mean step-rate.
                 let n = cfg.mesh.replicas as f64;
                 let slow_rate = step / (step + lag);
                 // Convert rate loss into an equivalent per-step stretch.
                 let eff = ((n - 1.0) + slow_rate) / n;
                 step * (1.0 / eff - 1.0)
+            } else {
+                // Step-synced: the same node accumulates lag every step
+                // and the others wait at each sync — full lag per step.
+                lag
             }
-            // Step-synced: the same node accumulates lag every step and
-            // the others wait at each sync — full lag per step.
-            _ => lag,
-        },
+        }
     };
 
     let tokens_cluster = cfg.tokens_per_gpu * cfg.mesh.workers() as f64;
     SimResult {
-        method: cfg.method,
+        label: cfg.label.clone(),
         tokens_per_sec: Some(tokens_cluster / step),
         tflops_per_gpu: Some(flops_step / step / 1e12),
         step_seconds: Some(step),

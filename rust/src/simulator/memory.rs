@@ -1,17 +1,25 @@
-//! Per-GPU memory model — reproduces Table 2's OOM column.
+//! Per-GPU memory model — reproduces Table 2's OOM column, priced from
+//! the [`MethodSpec`] strategy axes.
 //!
 //! The decisive structural fact (paper §2, Related Work): the
 //! All-Reduce-based Local SGD methods (Post Local SGD, DiLoCo, CO2,
 //! CO2*) hold COMPLETE model parameters/gradients/optimizer state on
 //! every GPU — they do not compose with ZeRO-3 sharding — while
-//! Baseline (plain ZeRO-3) and EDiT/A-EDiT shard everything across the
-//! model shard group of size M.  Extra local-SGD state (the θ_t anchor
-//! and the outer momentum) is:
+//! Baseline (plain ZeRO-3) and the layer-wise strategies (EDiT, A-EDiT,
+//! PALSGD) shard everything across the model shard group of size M
+//! ([`MethodSpec::model_sharded`]).  Extra local-SGD state decomposes
+//! along the axes:
+//!   * the θ_t anchor (+4P bytes), divided by M when `shard_anchor`;
+//!   * the outer momentum (+4P when the outer optimizer carries one),
+//!     divided by M when `shard_outer_state`;
+//!   * an async in-flight pseudo-gradient snapshot (+4P) when the outer
+//!     update is overlapped (`outer_staleness > 0`) with full state —
+//!     pinned on GPU, which is what keeps CO2 from offloading.
+//!
+//! This reproduces the seed per-method table exactly:
 //!   PLS    anchor only, full                    (+4P bytes)
 //!   DiLoCo anchor+momentum, full                (+8P, CPU-offloadable)
-//!   CO2    anchor+momentum+async send snapshot  (+12P, pinned on GPU —
-//!          the in-flight pseudo-gradient buffer is what the overlap
-//!          needs, so it cannot offload)
+//!   CO2    anchor+momentum+async send snapshot  (+12P, pinned on GPU)
 //!   CO2*   anchor+momentum, sharded             (+8P/M)
 //!   EDiT   anchor+momentum, sharded             (+8P/M, CPU-offloadable)
 //!
@@ -20,16 +28,14 @@
 //! grads (2) = 16 bytes over M; unsharded (All-Reduce-based) methods pay
 //! the same plus a bf16 compute copy = 18 bytes, NOT divided.
 
-use crate::coordinator::Method;
 use super::scales::ScaleSpec;
+use crate::coordinator::spec::MethodSpec;
 
 const SHARDED_STATE_BYTES_PER_PARAM: f64 = 16.0;
 const UNSHARDED_STATE_BYTES_PER_PARAM: f64 = 18.0;
-/// Extra bytes per parameter for one fp32 (anchor) / two fp32 (anchor+momentum).
-const ANCHOR: f64 = 4.0;
-const ANCHOR_PLUS_MOMENTUM: f64 = 8.0;
-/// CO2: anchor + momentum + fp32 async-send snapshot.
-const CO2_EXTRA: f64 = 12.0;
+/// Extra bytes per parameter for one fp32 copy (anchor / momentum /
+/// async snapshot each cost one).
+const FP32_COPY: f64 = 4.0;
 /// Activation bytes per token per layer per hidden unit (bf16 with flash
 /// attention and selective recompute).
 const ACT_FACTOR: f64 = 6.0;
@@ -52,28 +58,49 @@ impl MemoryBreakdown {
     }
 }
 
-/// Does `method` shard the *model* state (ZeRO-3) on this mesh?
-pub fn model_sharded(method: Method) -> bool {
-    matches!(method, Method::Baseline | Method::Edit | Method::AEdit)
+/// Extra local-SGD bytes per parameter for `spec` with shard-group size
+/// `m` — the axis decomposition documented in the module header.
+fn extra_bytes_per_param(spec: &MethodSpec, m: usize) -> f64 {
+    if !spec.is_local_sgd() {
+        return 0.0;
+    }
+    let anchor = if spec.shard_anchor {
+        FP32_COPY / m as f64
+    } else {
+        FP32_COPY
+    };
+    let momentum = if spec.outer.needs_momentum() {
+        if spec.shard_outer_state {
+            FP32_COPY / m as f64
+        } else {
+            FP32_COPY
+        }
+    } else {
+        0.0
+    };
+    // Overlapped outer update with full state: the in-flight async send
+    // snapshot is pinned on GPU (CO2). The sharded variant (CO2*) pays
+    // exposed shard handling at sync time instead of resident memory.
+    let snapshot = if spec.outer_staleness > 0 && !spec.shard_outer_state {
+        FP32_COPY
+    } else {
+        0.0
+    };
+    anchor + momentum + snapshot
 }
 
-/// Whether the extra state can be staged on CPU when tight.
-pub fn extra_offloadable(method: Method) -> bool {
-    matches!(method, Method::DiLoCo | Method::Edit | Method::AEdit)
-}
-
-/// Per-GPU memory for `method` at `scale` with shard-group size `m` and
+/// Per-GPU memory for `spec` at `scale` with shard-group size `m` and
 /// `tokens_per_gpu` tokens resident per step. Offload is applied
 /// automatically (when supported) if the GPU budget would overflow.
 pub fn breakdown(
-    method: Method,
+    spec: &MethodSpec,
     scale: &ScaleSpec,
     m: usize,
     tokens_per_gpu: f64,
     budget: f64,
 ) -> MemoryBreakdown {
     let p = scale.params() as f64;
-    let model_state = if model_sharded(method) {
+    let model_state = if spec.model_sharded() {
         SHARDED_STATE_BYTES_PER_PARAM * p / m as f64
             // Gathered working set of ~2 layers of bf16 params (prefetch).
             + 2.0 * 2.0 * p / scale.num_layers as f64
@@ -81,22 +108,14 @@ pub fn breakdown(
         UNSHARDED_STATE_BYTES_PER_PARAM * p
     };
 
-    let extra_per_param = match method {
-        Method::Baseline => 0.0,
-        Method::PostLocalSgd => ANCHOR,
-        Method::DiLoCo => ANCHOR_PLUS_MOMENTUM,
-        Method::Co2 => CO2_EXTRA,
-        Method::Co2Star => ANCHOR_PLUS_MOMENTUM / m as f64,
-        Method::Edit | Method::AEdit => ANCHOR_PLUS_MOMENTUM / m as f64,
-    };
-    let mut local_sgd_extra = extra_per_param * p;
+    let mut local_sgd_extra = extra_bytes_per_param(spec, m) * p;
 
     let activations =
         ACT_FACTOR * tokens_per_gpu * (scale.num_layers as f64) * (scale.hidden as f64);
 
     let mut offloaded = false;
     let pre_total = model_state + local_sgd_extra + activations + WORKSPACE;
-    if pre_total > budget && extra_offloadable(method) && local_sgd_extra > 0.0 {
+    if pre_total > budget && spec.extra_offloadable() && local_sgd_extra > 0.0 {
         offloaded = true;
         local_sgd_extra = 0.0;
     }
@@ -107,6 +126,7 @@ pub fn breakdown(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Method;
     use crate::simulator::scales::A100_MEM_BYTES;
 
     fn scale(name: &str) -> ScaleSpec {
@@ -117,7 +137,7 @@ mod tests {
     const TOKENS: f64 = 2.0 * 4096.0;
 
     fn fits(method: Method, name: &str) -> bool {
-        breakdown(method, &scale(name), 8, TOKENS, A100_MEM_BYTES).total()
+        breakdown(&method.spec(), &scale(name), 8, TOKENS, A100_MEM_BYTES).total()
             <= A100_MEM_BYTES
     }
 
@@ -134,31 +154,63 @@ mod tests {
     }
 
     #[test]
+    fn axis_decomposition_reproduces_seed_per_method_extras() {
+        use Method::*;
+        // The historical hard-coded table, now derived from the axes.
+        assert_eq!(extra_bytes_per_param(&Baseline.spec(), 8), 0.0);
+        assert_eq!(extra_bytes_per_param(&PostLocalSgd.spec(), 8), 4.0);
+        assert_eq!(extra_bytes_per_param(&DiLoCo.spec(), 8), 8.0);
+        assert_eq!(extra_bytes_per_param(&Co2.spec(), 8), 12.0);
+        assert_eq!(extra_bytes_per_param(&Co2Star.spec(), 8), 8.0 / 8.0);
+        assert_eq!(extra_bytes_per_param(&Edit.spec(), 8), 8.0 / 8.0);
+        assert_eq!(extra_bytes_per_param(&AEdit.spec(), 8), 8.0 / 8.0);
+        // Arbitrary group sizes stay bitwise (4/m + 4/m == 8/m exactly).
+        for m in [2usize, 3, 5, 7, 8, 16] {
+            assert_eq!(
+                extra_bytes_per_param(&Edit.spec(), m).to_bits(),
+                (8.0 / m as f64).to_bits(),
+                "m={m}"
+            );
+        }
+    }
+
+    #[test]
     fn diloco_1b_requires_offload() {
-        let b = breakdown(Method::DiLoCo, &scale("1B"), 8, TOKENS, A100_MEM_BYTES);
+        let b = breakdown(&Method::DiLoCo.spec(), &scale("1B"), 8, TOKENS, A100_MEM_BYTES);
         assert!(b.offloaded, "paper: DiLoCo@1B staged extra state on CPU");
-        let b350 = breakdown(Method::DiLoCo, &scale("350M"), 8, TOKENS, A100_MEM_BYTES);
+        let b350 =
+            breakdown(&Method::DiLoCo.spec(), &scale("350M"), 8, TOKENS, A100_MEM_BYTES);
         assert!(!b350.offloaded);
     }
 
     #[test]
     fn edit_extra_is_sharded() {
-        let e = breakdown(Method::Edit, &scale("1B"), 8, TOKENS, f64::INFINITY);
-        let c = breakdown(Method::Co2, &scale("1B"), 8, TOKENS, f64::INFINITY);
+        let e = breakdown(&Method::Edit.spec(), &scale("1B"), 8, TOKENS, f64::INFINITY);
+        let c = breakdown(&Method::Co2.spec(), &scale("1B"), 8, TOKENS, f64::INFINITY);
         assert!(e.local_sgd_extra * 7.9 < c.local_sgd_extra);
     }
 
     #[test]
     fn sharding_helps_model_state() {
-        let b1 = breakdown(Method::Baseline, &scale("7B"), 1, TOKENS, f64::INFINITY);
-        let b8 = breakdown(Method::Baseline, &scale("7B"), 8, TOKENS, f64::INFINITY);
+        let b1 = breakdown(&Method::Baseline.spec(), &scale("7B"), 1, TOKENS, f64::INFINITY);
+        let b8 = breakdown(&Method::Baseline.spec(), &scale("7B"), 8, TOKENS, f64::INFINITY);
         assert!(b8.model_state < b1.model_state / 4.0);
     }
 
     #[test]
     fn totals_positive_and_ordered() {
-        let b = breakdown(Method::Edit, &scale("350M"), 8, TOKENS, A100_MEM_BYTES);
+        let b = breakdown(&Method::Edit.spec(), &scale("350M"), 8, TOKENS, A100_MEM_BYTES);
         assert!(b.total() > 0.0);
         assert!(b.activations > 0.0 && b.model_state > 0.0);
+    }
+
+    #[test]
+    fn palsgd_prices_like_the_edit_family() {
+        // The descriptor-registered strategy needs no new memory-model
+        // code: its axes land in the EDiT bucket.
+        let p = breakdown(&Method::Palsgd.spec(), &scale("7B"), 8, TOKENS, A100_MEM_BYTES);
+        let e = breakdown(&Method::Edit.spec(), &scale("7B"), 8, TOKENS, A100_MEM_BYTES);
+        assert_eq!(p.total().to_bits(), e.total().to_bits());
+        assert!(p.total() <= A100_MEM_BYTES);
     }
 }

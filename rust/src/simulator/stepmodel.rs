@@ -1,6 +1,7 @@
 //! Per-step and per-sync timing shared by the numerics trainer and the
-//! analytic cluster simulator (DESIGN.md §5 — single source of truth
-//! for the timing assumptions).
+//! analytic cluster simulator — the single source of truth for the
+//! timing assumptions, priced from the [`MethodSpec`] strategy axes
+//! (see `coordinator::spec`).
 //!
 //! Inner step (every method, FSDP/ZeRO-3 inside the shard group):
 //!   fwd  all-gather(P·4 bytes)  + bwd all-gather + reduce-scatter,
@@ -21,8 +22,8 @@
 //!                    scalar norm exchanges (~19 ms)
 
 use crate::collectives::{CollOp, CostModel};
-use crate::coordinator::Method;
 use crate::coordinator::mesh::MeshSpec;
+use crate::coordinator::spec::MethodSpec;
 
 /// Fraction of a sync all-reduce EDiT cannot hide (first layer's comm
 /// cannot overlap with anything).
@@ -78,34 +79,44 @@ impl StepModel {
         self.compute + self.inner_step_exposed(warmup_or_ddp)
     }
 
-    /// Exposed synchronization time at an outer boundary for `method`.
-    /// (The overlapped portion rides on top of the next round's compute.)
-    pub fn sync_exposed(&self, method: Method) -> f64 {
+    /// Exposed synchronization time at an outer boundary for the
+    /// strategy axes in `spec`. (The overlapped portion rides on top of
+    /// the next round's compute.)
+    pub fn sync_exposed(&self, spec: &MethodSpec) -> f64 {
         let group = self.mesh.sync_group(0);
         let shard_bytes = self.param_bytes / self.mesh.shard;
         let ar = self.cost.time(CollOp::AllReduce, shard_bytes, &group);
-        match method {
-            Method::Baseline => 0.0,
-            Method::PostLocalSgd => ar, // fully exposed
-            Method::DiLoCo => {
-                let mut t = ar;
-                if self.cpu_offload {
-                    // Stage full extra params + momentum over PCIe, exposed.
-                    t += 2.0 * (self.param_bytes as f64) / PCIE_BW;
-                }
-                t
-            }
-            Method::Co2 => 0.0, // fully overlapped (one-step staleness)
-            Method::Co2Star => ar * CO2STAR_EXPOSED_FACTOR,
-            Method::Edit | Method::AEdit => {
-                // Layer-wise prefetch hides all but the first module, plus
-                // the per-module scalar norm exchange.
-                let scalar = self
-                    .cost
-                    .time(CollOp::ScalarSync, 4, &self.mesh.shard_group(0));
-                ar * EDIT_EXPOSED_FRACTION + scalar
-            }
+        if !spec.is_local_sgd() {
+            // No periodic sync at all (pure DDP baseline).
+            return 0.0;
         }
+        if spec.layerwise() {
+            // Layer-wise prefetch hides all but the first module, plus
+            // the per-module scalar norm exchange (EDiT family).
+            let scalar = self
+                .cost
+                .time(CollOp::ScalarSync, 4, &self.mesh.shard_group(0));
+            return ar * EDIT_EXPOSED_FRACTION + scalar;
+        }
+        if spec.outer_staleness > 0 {
+            // CO2-style overlap: the exchange hides behind the next
+            // round; sharded outer state (CO2*) pays the exposed shard
+            // gather/scatter segments instead.
+            return if spec.shard_outer_state {
+                ar * CO2STAR_EXPOSED_FACTOR
+            } else {
+                0.0
+            };
+        }
+        // Flat, immediately-applied outer update: the all-reduce is
+        // fully exposed (PLS/DiLoCo), plus PCIe staging when the outer
+        // state lives on CPU (DiLoCo at 1B in the paper).
+        let mut t = ar;
+        if self.cpu_offload {
+            // Stage full extra params + momentum over PCIe, exposed.
+            t += 2.0 * (self.param_bytes as f64) / PCIE_BW;
+        }
+        t
     }
 
     /// Exposed residual of the layer-wise sync pipeline, given the
@@ -168,9 +179,9 @@ impl StepModel {
 
     /// Average simulated seconds per inner step including the amortized
     /// sync cost at interval `tau`.
-    pub fn amortized_step(&self, method: Method, tau: u64, warmup_or_ddp: bool) -> f64 {
-        let sync = if method.is_local_sgd() {
-            self.sync_exposed(method) / tau.max(1) as f64
+    pub fn amortized_step(&self, spec: &MethodSpec, tau: u64, warmup_or_ddp: bool) -> f64 {
+        let sync = if spec.is_local_sgd() {
+            self.sync_exposed(spec) / tau.max(1) as f64
         } else {
             0.0
         };
@@ -182,6 +193,7 @@ impl StepModel {
 mod tests {
     use super::*;
     use crate::collectives::{CostModel, Topology};
+    use crate::coordinator::Method;
 
     fn model() -> StepModel {
         StepModel {
@@ -196,8 +208,8 @@ mod tests {
     #[test]
     fn baseline_slower_than_local_sgd() {
         let m = model();
-        let ddp = m.amortized_step(Method::Baseline, 1, true);
-        let edit = m.amortized_step(Method::Edit, 128, false);
+        let ddp = m.amortized_step(&Method::Baseline.spec(), 1, true);
+        let edit = m.amortized_step(&Method::Edit.spec(), 128, false);
         assert!(ddp > edit, "ddp {ddp} vs edit {edit}");
     }
 
@@ -206,10 +218,10 @@ mod tests {
         // PLS (exposed) > CO2* (two exposed segments relative to shard
         // all-reduce)... per Fig 9 CO2* ~300ms > PLS ~160ms > EDiT ~19ms > CO2 ~0.
         let m = model();
-        let pls = m.sync_exposed(Method::PostLocalSgd);
-        let co2s = m.sync_exposed(Method::Co2Star);
-        let edit = m.sync_exposed(Method::Edit);
-        let co2 = m.sync_exposed(Method::Co2);
+        let pls = m.sync_exposed(&Method::PostLocalSgd.spec());
+        let co2s = m.sync_exposed(&Method::Co2Star.spec());
+        let edit = m.sync_exposed(&Method::Edit.spec());
+        let co2 = m.sync_exposed(&Method::Co2.spec());
         assert!(co2s > pls, "{co2s} {pls}");
         assert!(pls > edit);
         assert!(edit > co2);
@@ -220,9 +232,9 @@ mod tests {
     fn fig9_absolute_scale_plausible() {
         // Paper: PLS ~160ms, CO2* ~300ms, EDiT ~19ms on Llama 1B (8x8).
         let m = model();
-        let pls = m.sync_exposed(Method::PostLocalSgd);
-        let co2s = m.sync_exposed(Method::Co2Star);
-        let edit = m.sync_exposed(Method::Edit);
+        let pls = m.sync_exposed(&Method::PostLocalSgd.spec());
+        let co2s = m.sync_exposed(&Method::Co2Star.spec());
+        let edit = m.sync_exposed(&Method::Edit.spec());
         assert!((0.05..0.5).contains(&pls), "PLS {pls}");
         assert!((0.1..0.9).contains(&co2s), "CO2* {co2s}");
         assert!((0.004..0.08).contains(&edit), "EDiT {edit}");
@@ -243,7 +255,7 @@ mod tests {
         assert!(exposed < 0.5 * serial, "exposed {exposed} vs serial {serial}");
         assert!(exposed >= per_module, "first module can never hide");
         // And it stays in the same regime as the legacy fraction model.
-        let legacy = m.sync_exposed(Method::Edit);
+        let legacy = m.sync_exposed(&Method::Edit.spec());
         assert!(exposed < 10.0 * legacy && exposed * 10.0 > legacy,
             "pipeline {exposed} vs legacy {legacy}");
     }
@@ -286,9 +298,9 @@ mod tests {
     #[test]
     fn diloco_offload_penalty() {
         let mut m = model();
-        let base = m.sync_exposed(Method::DiLoCo);
+        let base = m.sync_exposed(&Method::DiLoCo.spec());
         m.cpu_offload = true;
-        assert!(m.sync_exposed(Method::DiLoCo) > base + 0.1);
+        assert!(m.sync_exposed(&Method::DiLoCo.spec()) > base + 0.1);
     }
 
     #[test]
@@ -300,8 +312,8 @@ mod tests {
     #[test]
     fn larger_tau_amortizes_better() {
         let m = model();
-        let t16 = m.amortized_step(Method::PostLocalSgd, 16, false);
-        let t128 = m.amortized_step(Method::PostLocalSgd, 128, false);
+        let t16 = m.amortized_step(&Method::PostLocalSgd.spec(), 16, false);
+        let t128 = m.amortized_step(&Method::PostLocalSgd.spec(), 128, false);
         assert!(t128 < t16);
     }
 }

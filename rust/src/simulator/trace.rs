@@ -9,7 +9,8 @@
 use crate::collectives::{CollOp, CostModel, Topology};
 use crate::coordinator::{MeshSpec, Method};
 
-use super::scales::{ScaleSpec, A100_PEAK_FLOPS};
+use super::memory;
+use super::scales::{ScaleSpec, A100_MEM_BYTES, A100_PEAK_FLOPS};
 use super::stepmodel::StepModel;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,22 +50,28 @@ pub struct Timeline {
 
 /// Build the sync-boundary timeline for `method` (Llama 1B, 8×8 mesh).
 pub fn sync_timeline(method: Method) -> Timeline {
+    let spec = method.spec();
     let scale = ScaleSpec::by_name("1B").unwrap();
     let mesh = MeshSpec::new(8, 8);
     let cost = CostModel::new(Topology::a100());
     let tokens = 2.0 * 4096.0;
     let compute = tokens * scale.flops_per_token() / (A100_PEAK_FLOPS * scale.a100_mfu());
+    // Offload comes from the memory model at this scale instead of a
+    // per-method special case (paper: DiLoCo@1B stages its extra state
+    // on CPU; everything else fits or cannot offload).
+    let offloaded = memory::breakdown(&spec, &scale, mesh.shard, tokens, A100_MEM_BYTES)
+        .offloaded;
     let sm = StepModel {
         mesh,
         cost,
         param_bytes: (scale.params() * 4) as usize, // fp32 pseudo-grad state
         compute,
-        cpu_offload: method == Method::DiLoCo, // paper: DiLoCo@1B offloads
+        cpu_offload: offloaded,
     };
     let sync_group = mesh.sync_group(0);
     let shard_bytes = sm.param_bytes / mesh.shard;
     let ar = cost.time(CollOp::AllReduce, shard_bytes, &sync_group);
-    let exposed = sm.sync_exposed(method);
+    let exposed = sm.sync_exposed(&spec);
 
     let mut t = 0.0;
     let mut segments = Vec::new();
@@ -75,44 +82,45 @@ pub fn sync_timeline(method: Method) -> Timeline {
         }
     };
 
-    // Step τ's compute finishes, then the method-specific sync unfolds.
+    // Step τ's compute finishes, then the strategy's sync unfolds —
+    // segment layout dispatches on the spec axes, so new descriptors
+    // land in the right profile without a new match arm.
     push("step τ compute", SegKind::Compute, &mut t, compute);
-    match method {
-        Method::Baseline => {
-            push("grad all-reduce (every step)", SegKind::ExposedComm, &mut t, ar * 0.45);
-        }
-        Method::PostLocalSgd => {
-            push("param all-reduce (exposed)", SegKind::ExposedComm, &mut t, exposed);
-        }
-        Method::DiLoCo => {
-            push("pseudo-grad all-reduce", SegKind::ExposedComm, &mut t, ar);
-            push("CPU⇄GPU outer state", SegKind::CpuTransfer, &mut t, exposed - ar);
-        }
-        Method::Co2 => {
-            // One-step-stale all-reduce rides the next round's compute.
-            let mut t2 = t;
-            push("next-round compute", SegKind::Compute, &mut t, compute);
-            push("async all-reduce (hidden)", SegKind::OverlappedComm, &mut t2, ar);
-        }
-        Method::Co2Star => {
+    if !spec.is_local_sgd() {
+        // Synchronous DDP: the gradient all-reduce runs every step.
+        push("grad all-reduce (every step)", SegKind::ExposedComm, &mut t, ar * 0.45);
+    } else if spec.layerwise() {
+        // Layer-wise: module 0's sync is exposed; modules 1..L overlap
+        // with the forward pass of the next round (prefetch).
+        let mut t2 = t;
+        push("module-0 sync + norms", SegKind::ExposedComm, &mut t, exposed);
+        push("next-round fwd compute", SegKind::Compute, &mut t, compute);
+        push(
+            "layer-wise sync (prefetch-hidden)",
+            SegKind::OverlappedComm,
+            &mut t2,
+            ar - exposed / 2.0,
+        );
+    } else if spec.outer_staleness > 0 {
+        if spec.shard_outer_state {
+            // CO2*: overlapped all-reduce + exposed shard handling.
             let mut t2 = t;
             push("shard gather (exposed)", SegKind::ExposedComm, &mut t, exposed / 2.0);
             push("shard scatter (exposed)", SegKind::ExposedComm, &mut t, exposed / 2.0);
             push("async all-reduce (hidden)", SegKind::OverlappedComm, &mut t2, ar);
-        }
-        Method::Edit | Method::AEdit => {
-            // Layer-wise: module 0's sync is exposed; modules 1..L overlap
-            // with the forward pass of the next round (prefetch).
+        } else {
+            // CO2: one-round-stale all-reduce rides the next compute.
             let mut t2 = t;
-            push("module-0 sync + norms", SegKind::ExposedComm, &mut t, exposed);
-            push("next-round fwd compute", SegKind::Compute, &mut t, compute);
-            push(
-                "layer-wise sync (prefetch-hidden)",
-                SegKind::OverlappedComm,
-                &mut t2,
-                ar - exposed / 2.0,
-            );
+            push("next-round compute", SegKind::Compute, &mut t, compute);
+            push("async all-reduce (hidden)", SegKind::OverlappedComm, &mut t2, ar);
         }
+    } else if sm.cpu_offload {
+        // DiLoCo with CPU-staged outer state.
+        push("pseudo-grad all-reduce", SegKind::ExposedComm, &mut t, ar);
+        push("CPU⇄GPU outer state", SegKind::CpuTransfer, &mut t, exposed - ar);
+    } else {
+        // Flat, fully exposed parameter exchange (Post Local SGD).
+        push("param all-reduce (exposed)", SegKind::ExposedComm, &mut t, exposed);
     }
     Timeline { method, segments, exposed }
 }

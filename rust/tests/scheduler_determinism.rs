@@ -26,17 +26,29 @@ use edit_train::data::{Corpus, Quality};
 use edit_train::elastic;
 use edit_train::runtime::{Engine, Manifest};
 
-fn trainer(method: Method, tweak: impl FnOnce(&mut TrainConfig)) -> Trainer {
+/// One shared synthetic-stub trainer recipe, built from an explicit
+/// [`MethodSpec`] descriptor (the `TrainConfig::from_spec` path the
+/// custom grammar uses); `trainer` delegates through the `Method`
+/// preset table so the two construction paths stay comparable.
+fn trainer_from_spec(
+    spec: edit_train::coordinator::MethodSpec,
+    label: &str,
+    tweak: impl FnOnce(&mut TrainConfig),
+) -> Trainer {
     let manifest = Manifest::synthetic("sched-det", 3, 128, 64, 64, 2, 8);
     let vocab = manifest.model.vocab_size;
     let engine = Engine::synthetic(manifest);
     let corpus = Corpus::new(vocab, 17, Quality::clean());
-    let mut cfg = TrainConfig::paper_default(method, MeshSpec::new(2, 4), 48);
+    let mut cfg = TrainConfig::from_spec(spec, label, MeshSpec::new(2, 4), 48);
     cfg.tau = 4;
-    cfg.t_warm = if method.uses_warmup() { 4 } else { 0 };
+    cfg.t_warm = if spec.warmup { 4 } else { 0 };
     cfg.eval_every_syncs = 0;
     tweak(&mut cfg);
     Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100())).unwrap()
+}
+
+fn trainer(method: Method, tweak: impl FnOnce(&mut TrainConfig)) -> Trainer {
+    trainer_from_spec(method.spec(), method.name(), tweak)
 }
 
 /// Assert two finished trainers are bitwise-identical in every
@@ -71,6 +83,94 @@ fn rerun_is_bitwise_identical() {
         assert_eq!(sa.tokens, sb.tokens);
         assert_eq!(sa.max_staleness, sb.max_staleness);
     }
+}
+
+#[test]
+fn every_named_preset_runs_bitwise_reproducibly_through_the_spec_layer() {
+    // The preset-equivalence suite: every named preset — the paper's
+    // seven plus palsgd — runs (a) bitwise identical across reruns and
+    // (b) bitwise identical whether the trainer is built through the
+    // `Method` preset table (`paper_default`) or directly from its
+    // `MethodSpec` descriptor (`from_spec`). Together with the
+    // preset-axis matrix test in `coordinator::spec`, this pins the
+    // named methods to the pre-MethodSpec seed behavior.
+    for method in Method::NAMED {
+        let mut via_method = trainer(method, |_| {});
+        let mut rerun = trainer(method, |_| {});
+        let mut via_spec = trainer_from_spec(method.spec(), method.name(), |_| {});
+        let s1 = via_method.run().unwrap();
+        let s2 = rerun.run().unwrap();
+        let s3 = via_spec.run().unwrap();
+        assert_bitwise_equal(&via_method, &rerun);
+        assert_bitwise_equal(&via_method, &via_spec);
+        assert_eq!(s1.final_loss.to_bits(), s2.final_loss.to_bits(), "{method:?}");
+        assert_eq!(s1.final_loss.to_bits(), s3.final_loss.to_bits(), "{method:?}");
+        assert_eq!(s1.label, method.name());
+        assert!(s1.final_loss.is_finite(), "{method:?}");
+    }
+}
+
+#[test]
+fn custom_base_descriptor_is_bitwise_the_named_preset() {
+    // `--method custom:base=edit` must be indistinguishable from
+    // `--method edit` — the grammar is a veneer over the same spec.
+    use edit_train::coordinator::MethodSpec;
+    for method in [Method::Edit, Method::AEdit, Method::Co2, Method::Palsgd] {
+        let descriptor = format!("custom:base={}", method.name());
+        let (spec, label) = MethodSpec::parse(&descriptor).unwrap();
+        assert_eq!(spec, method.spec(), "{method:?}");
+        let mut named = trainer(method, |_| {});
+        let mut custom = trainer_from_spec(spec, &label, |_| {});
+        named.run().unwrap();
+        custom.run().unwrap();
+        assert_bitwise_equal(&named, &custom);
+    }
+}
+
+#[test]
+fn palsgd_prob_one_is_bitwise_aedit() {
+    // The probabilistic trigger with p=1 fires every window, so the
+    // event sets — and therefore the entire run — must be bitwise
+    // A-EDiT: the new strategy is a strict generalization.
+    use edit_train::coordinator::MethodSpec;
+    let (p1, _) = MethodSpec::parse("custom:base=a-edit,trigger=prob:1.0").unwrap();
+    let mut aedit = trainer(Method::AEdit, |_| {});
+    let mut palsgd1 = trainer_from_spec(p1, "palsgd-p1", |_| {});
+    aedit.run().unwrap();
+    palsgd1.run().unwrap();
+    assert_bitwise_equal(&aedit, &palsgd1);
+}
+
+#[test]
+fn palsgd_skips_windows_and_stays_deterministic() {
+    // With p = 0.5 over many short deadline windows × 4 replicas, some
+    // windows must sync and some replica must skip (accruing anchor
+    // staleness); reruns stay bitwise identical and the loss keeps
+    // falling. τ_time ≈ 4 inner steps keeps the window count high
+    // enough (~12 windows → 48 Bernoulli draws) that both events are
+    // certain for any reasonable hash stream.
+    let run = || {
+        let mut t = trainer(Method::Palsgd, |c| {
+            c.t_warm = 0;
+            c.tau_time = 2.0;
+        });
+        let s = t.run().unwrap();
+        (t, s)
+    };
+    let (ta, sa) = run();
+    let (tb, sb) = run();
+    assert_bitwise_equal(&ta, &tb);
+    assert_eq!(sa.syncs, sb.syncs);
+    assert!(sa.syncs > 0, "some window must draw a sync");
+    assert!(
+        sa.max_staleness >= 1,
+        "some replica must skip a window (staleness {})",
+        sa.max_staleness
+    );
+    assert!(sa.final_loss.is_finite());
+    let first = ta.tracker.losses.first().unwrap().1;
+    let last = ta.tracker.losses.last().unwrap().1;
+    assert!(last < first, "loss should fall: {first} -> {last}");
 }
 
 #[test]
@@ -172,8 +272,8 @@ fn shard_outer_on_off_bitwise_identical() {
     // shards) must reproduce the full-matrix reference BITWISE — on the
     // EDiT barrier path and on the A-EDiT anchor path, including when a
     // random straggler fragments the A-EDiT event groups into partial
-    // member sets.
-    for method in [Method::Edit, Method::AEdit] {
+    // member sets (and PALSGD's probabilistic draws thin them further).
+    for method in [Method::Edit, Method::AEdit, Method::Palsgd] {
         for straggler in [Straggler::None, Straggler::Random { lag: 0.7 }] {
             let run = |shard: bool| {
                 let mut t = trainer(method, |c| {

@@ -23,7 +23,7 @@ fn trainer(method: Method, replicas: usize, tweak: impl FnOnce(&mut TrainConfig)
     let corpus = Corpus::new(vocab, 23, Quality::clean());
     let mut cfg = TrainConfig::paper_default(method, MeshSpec::new(2, replicas), 48);
     cfg.tau = 4;
-    cfg.t_warm = if method.uses_warmup() { 2 } else { 0 };
+    cfg.t_warm = if method.spec().warmup { 2 } else { 0 };
     cfg.eval_every_syncs = 0;
     tweak(&mut cfg);
     Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100())).unwrap()
@@ -113,8 +113,8 @@ fn rollback_storm_bitwise_identical_across_shard_modes() {
     let tweak = |shard: bool| {
         move |c: &mut TrainConfig| {
             c.shard_outer = shard;
-            c.penalty.delta = f64::NEG_INFINITY;
-            c.penalty.warmup_syncs = 1;
+            c.spec.penalty.delta = f64::NEG_INFINITY;
+            c.spec.penalty.warmup_syncs = 1;
         }
     };
     for method in [Method::Edit, Method::AEdit] {

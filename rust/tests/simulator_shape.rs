@@ -159,13 +159,14 @@ fn larger_tau_never_hurts_throughput() {
 
 #[test]
 fn method_matrix_consistency() {
-    // Structural invariants tying the method flags to the simulator.
+    // Structural invariants tying the spec axes to the simulator.
     for m in Method::ALL {
-        if m.uses_penalty() {
-            assert!(m.outer_state_sharded(), "{m:?}: penalty implies sharded state");
-            assert!(m.layerwise_sync(), "{m:?}");
+        let spec = m.spec();
+        if spec.uses_penalty() {
+            assert!(spec.shard_outer_state, "{m:?}: penalty implies sharded state");
+            assert!(spec.layerwise(), "{m:?}");
         }
-        if m.outer_staleness() > 0 {
+        if spec.outer_staleness > 0 {
             // CO2 family: overlapped sync -> zero exposed residual when
             // unsharded, CO2* pays shard handling.
             let tl = sync_timeline(m);
@@ -176,4 +177,54 @@ fn method_matrix_consistency() {
             }
         }
     }
+}
+
+#[test]
+fn palsgd_simulates_like_aedit_under_stragglers() {
+    // The descriptor-registered strategy rides the asynchronous trigger
+    // arm of the cluster model: under any straggler it must price
+    // exactly like A-EDiT (same axes apart from the probability), and
+    // strictly above barriered EDiT.
+    for lag in [1.5, 3.5] {
+        for s in [
+            Scenario::RandomStraggler { lag },
+            Scenario::ConsistentStraggler { lag },
+        ] {
+            let a = simulate(&SimConfig::fig5(Method::AEdit, s)).tflops_per_gpu.unwrap();
+            let p = simulate(&SimConfig::fig5(Method::Palsgd, s)).tflops_per_gpu.unwrap();
+            let e = simulate(&SimConfig::fig5(Method::Edit, s)).tflops_per_gpu.unwrap();
+            assert_eq!(p.to_bits(), a.to_bits(), "lag {lag}");
+            assert!(p > e, "lag {lag}: palsgd {p} <= edit {e}");
+        }
+    }
+}
+
+#[test]
+fn custom_flat_sync_row_loses_the_layerwise_overlap() {
+    // The §4.4 "w/o layer-wise sync" ablation row, priced analytically:
+    // dropping sync=layer forfeits both the pipeline overlap (larger
+    // exposed sync) and the ZeRO-3 composition (more memory).
+    use edit_train::coordinator::MethodSpec;
+    let (flat, label) =
+        MethodSpec::parse("custom:base=edit,sync=flat").expect("grammar parses");
+    let scale = ScaleSpec::by_name("350M").unwrap();
+    let e = simulate(&SimConfig::table2(Method::Edit, scale));
+    let f = simulate(&SimConfig::table2_spec(flat, label.as_str(), scale));
+    assert!(!e.oom && !f.oom);
+    assert!(
+        f.tflops_per_gpu.unwrap() < e.tflops_per_gpu.unwrap(),
+        "flat-sync row must pay exposed sync: {:?} vs {:?}",
+        f.tflops_per_gpu,
+        e.tflops_per_gpu
+    );
+    assert!(f.memory.total() > e.memory.total(), "flat row loses ZeRO-3");
+    // Penalty-off keeps the layer-wise overlap: throughput unchanged.
+    let (off, label_off) =
+        MethodSpec::parse("custom:base=edit,penalty=off").expect("grammar parses");
+    let e = simulate(&SimConfig::table2(Method::Edit, scale));
+    let o = simulate(&SimConfig::table2_spec(off, label_off.as_str(), scale));
+    assert_eq!(
+        o.tflops_per_gpu.unwrap().to_bits(),
+        e.tflops_per_gpu.unwrap().to_bits()
+    );
 }

@@ -29,7 +29,7 @@ fn trainer(method: Method, steps: u64, seed: u64) -> Trainer {
     let mut cfg = TrainConfig::paper_default(method, MeshSpec::new(2, 2), steps);
     cfg.tau = 4;
     cfg.tau_time = 4.0 * cfg.base_step_time;
-    cfg.t_warm = if method.uses_warmup() { 4 } else { 0 };
+    cfg.t_warm = if method.spec().warmup { 4 } else { 0 };
     cfg.seed = seed;
     cfg.eval_every_syncs = 0;
     cfg.inner_lr = LrSchedule::Constant { lr: 2e-3 };
@@ -66,7 +66,7 @@ fn every_method_learns() {
         );
         assert!(summary.final_loss.is_finite());
         assert!(summary.throughput > 0.0);
-        if method.is_local_sgd() {
+        if method.spec().is_local_sgd() {
             assert!(summary.syncs > 0, "{}", method.name());
         }
     }
@@ -93,7 +93,7 @@ fn edit_equals_diloco_when_penalty_disabled() {
     // same Nesterov outer state (module-partitioned application of the
     // same elementwise update).
     let mut edit = trainer(Method::Edit, 16, 9);
-    edit.cfg.penalty = PenaltyConfig::disabled();
+    edit.cfg.spec.penalty = PenaltyConfig::disabled();
     edit.cfg.t_warm = 0;
     let se = edit.run().unwrap();
     let sd = trainer(Method::DiLoCo, 16, 9).run().unwrap();

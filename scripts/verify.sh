@@ -7,8 +7,9 @@
 #            them explicitly so the skips never trigger there)
 #
 # Flags:
-#   --quick  build + test only (no straggler smoke, no fmt/clippy) —
-#            the fast CI leg and the pre-push sanity loop.
+#   --quick  build (incl. --examples, so example targets can't bit-rot)
+#            + test only (no straggler smoke, no fmt/clippy) — the fast
+#            CI leg and the pre-push sanity loop.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -30,6 +31,10 @@ echo "== cargo test -q =="
 cargo test -q
 
 if [[ "$QUICK" == 1 ]]; then
+    # Example targets are part of the quick gate so they can't bit-rot
+    # (the full gate covers them via `clippy --all-targets`).
+    echo "== cargo build --release --examples =="
+    cargo build --release --examples
     echo "verify (--quick): OK"
     exit 0
 fi
