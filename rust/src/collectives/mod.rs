@@ -36,9 +36,209 @@
 //! all-reduce by RS+AG changes neither the simulated clock nor any
 //! comparison against the unsharded plan.
 
+//!
+//! # Fault tolerance: the fallible surface
+//!
+//! The historical collective API is infallible — every rank always
+//! shows up. The elastic runtime needs the opposite assumption:
+//! [`Collective`] is the **fallible** trait (every op takes a timeout
+//! and returns [`CommError`]), [`RetryPolicy`] is the bounded
+//! retry/backoff loop callers wrap it in, and [`ThreadComm`] implements
+//! the trait with a condvar rendezvous gate that counts only live ranks
+//! (`mark_failed` / `shutdown`). Semantics per error:
+//!
+//!  * [`CommError::Timeout`] — a peer did not arrive in time. Possibly
+//!    transient (a hang, a slow rank): **retryable**, and the only
+//!    variant [`RetryPolicy::run`] retries.
+//!  * [`CommError::PeerFailed`] — the op is impossible without the dead
+//!    rank (a broadcast root, an all-gather shard owner). Deterministic:
+//!    retrying cannot help; callers degrade membership instead (the
+//!    trainer's timeout-then-evict barrier in `engine/sync.rs` is the
+//!    simulated-clock mirror of exactly this policy).
+//!  * [`CommError::Shutdown`] — the communicator is being torn down.
+//!    Terminal.
+//!
+//! Reductions over a degraded group fold the **live ranks in ascending
+//! rank order** (means divide by the live count) — the same membership
+//! semantics the trainer's sync paths apply when a replica crashes.
+
+use std::time::Duration;
+
 pub mod cost;
 pub mod group;
 pub mod thread;
 
 pub use cost::{CollOp, CommStats, CostModel, Topology};
 pub use thread::ThreadComm;
+
+/// Why a fallible collective did not complete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// A rank required by the op is marked failed (broadcast root,
+    /// all-gather shard owner). Deterministic — do not retry.
+    PeerFailed { rank: usize },
+    /// The rendezvous did not complete within the timeout. Possibly
+    /// transient — the retryable variant.
+    Timeout { op: &'static str, waited: Duration },
+    /// The communicator is shutting down. Terminal.
+    Shutdown,
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::PeerFailed { rank } => write!(f, "collective peer rank {rank} failed"),
+            CommError::Timeout { op, waited } => {
+                write!(f, "collective '{op}' timed out after {waited:?}")
+            }
+            CommError::Shutdown => write!(f, "communicator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+pub type CommResult<T> = Result<T, CommError>;
+
+/// Bounded retry/backoff policy for the fallible surface: up to
+/// `max_attempts` tries, exponential backoff between them, each attempt
+/// given `timeout` to rendezvous. Only [`CommError::Timeout`] is
+/// retried — `PeerFailed` is deterministic and `Shutdown` is terminal,
+/// so both surface immediately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub base_backoff: Duration,
+    pub timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(10),
+            timeout: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): `base · 2^attempt`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        self.base_backoff * (1u32 << attempt.min(16))
+    }
+
+    /// Drive `op` (called with the per-attempt timeout) until it
+    /// succeeds, fails deterministically, or the attempt budget is
+    /// spent. The final timeout error is returned as-is.
+    pub fn run<T>(&self, mut op: impl FnMut(Duration) -> CommResult<T>) -> CommResult<T> {
+        let mut attempt = 0u32;
+        loop {
+            match op(self.timeout) {
+                Err(CommError::Timeout { op: name, waited }) => {
+                    attempt += 1;
+                    if attempt >= self.max_attempts.max(1) {
+                        return Err(CommError::Timeout { op: name, waited });
+                    }
+                    std::thread::sleep(self.backoff(attempt - 1));
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+/// The fallible collective surface: every op takes a rendezvous timeout
+/// and reports failure instead of blocking forever on a dead peer.
+/// Degraded-group semantics (live-rank folds, live-count means) are
+/// part of the contract — see the module docs.
+pub trait Collective {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    /// Rendezvous with every live rank.
+    fn try_barrier(&self, timeout: Duration) -> CommResult<()>;
+    /// Mean all-reduce over the live ranks (ascending-rank fold, mean
+    /// over the live count).
+    fn try_all_reduce_mean(&self, buf: &mut [f32], timeout: Duration) -> CommResult<()>;
+    /// All-gather of owned shards; fails with `PeerFailed` if any shard
+    /// owner is dead (its shard cannot be reconstructed).
+    fn try_all_gather(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()>;
+    /// Reduce-scatter (mean) over the live ranks into this rank's shard.
+    fn try_reduce_scatter_mean(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()>;
+    /// Broadcast from `root`; fails with `PeerFailed` if the root is dead.
+    fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()>;
+}
+
+#[cfg(test)]
+mod retry_tests {
+    use super::*;
+
+    #[test]
+    fn retry_policy_retries_only_timeouts() {
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(1),
+            timeout: Duration::from_millis(1),
+        };
+        // Two timeouts, then success: three attempts total.
+        let mut calls = 0;
+        let got = policy.run(|_t| {
+            calls += 1;
+            if calls < 3 {
+                Err(CommError::Timeout { op: "x", waited: Duration::from_millis(1) })
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(got, Ok(3));
+
+        // PeerFailed is deterministic: exactly one attempt.
+        let mut calls = 0;
+        let got: CommResult<()> = policy.run(|_t| {
+            calls += 1;
+            Err(CommError::PeerFailed { rank: 1 })
+        });
+        assert_eq!(got, Err(CommError::PeerFailed { rank: 1 }));
+        assert_eq!(calls, 1);
+
+        // Shutdown is terminal: exactly one attempt.
+        let mut calls = 0;
+        let got: CommResult<()> = policy.run(|_t| {
+            calls += 1;
+            Err(CommError::Shutdown)
+        });
+        assert_eq!(got, Err(CommError::Shutdown));
+        assert_eq!(calls, 1);
+
+        // The attempt budget is honored.
+        let mut calls = 0;
+        let got: CommResult<()> = policy.run(|_t| {
+            calls += 1;
+            Err(CommError::Timeout { op: "y", waited: Duration::from_millis(1) })
+        });
+        assert!(matches!(got, Err(CommError::Timeout { op: "y", .. })));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let policy = RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(10),
+            timeout: Duration::from_secs(1),
+        };
+        assert_eq!(policy.backoff(0), Duration::from_millis(10));
+        assert_eq!(policy.backoff(1), Duration::from_millis(20));
+        assert_eq!(policy.backoff(3), Duration::from_millis(80));
+    }
+}

@@ -24,9 +24,32 @@
 //! and this box has one core), so this module is exercised by tests,
 //! benches, and any future multi-process deployment of the coordinator.
 
-use std::sync::{Arc, Barrier, RwLock};
+//! # Fallible surface ([`crate::collectives::Collective`])
+//!
+//! The infallible ops above assume every rank always arrives — a dead
+//! peer deadlocks the `Barrier`. The `try_*` ops replace it with a
+//! condvar **rendezvous gate** that counts only live ranks: marking a
+//! rank failed ([`ThreadComm::mark_failed`]) wakes current waiters so
+//! they re-count the quorum, and later ops simply rendezvous without
+//! the dead rank. Degraded reductions fold the live ranks in ascending
+//! rank order over the full vector (means divide by the live count) —
+//! the same membership semantics the trainer's sync paths apply when a
+//! replica crashes, favoring simplicity over the striped fast path
+//! (fault handling is not the hot path).
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::collectives::{Collective, CommError, CommResult};
 use crate::tensor::{kernels, ShardSpec};
+
+/// Generation-counted rendezvous state (sense-reversing: waiters key on
+/// the generation, so back-to-back rendezvous cannot mix arrivals).
+struct Gate {
+    arrived: usize,
+    generation: u64,
+}
 
 struct Inner {
     n: usize,
@@ -35,6 +58,11 @@ struct Inner {
     /// Per-rank reduced-stripe slots (all-reduce slab).
     stripes: Vec<RwLock<Vec<f32>>>,
     barrier: Barrier,
+    /// Liveness flags for the fallible surface (true = failed).
+    failed: Vec<AtomicBool>,
+    shutdown: AtomicBool,
+    gate: Mutex<Gate>,
+    cv: Condvar,
 }
 
 /// Per-rank handle; clone-free — create one set via [`ThreadComm::group`].
@@ -51,6 +79,10 @@ impl ThreadComm {
             staging: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
             stripes: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
             barrier: Barrier::new(n),
+            failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            shutdown: AtomicBool::new(false),
+            gate: Mutex::new(Gate { arrived: 0, generation: 0 }),
+            cv: Condvar::new(),
         });
         (0..n).map(|rank| ThreadComm { rank, inner: Arc::clone(&inner) }).collect()
     }
@@ -231,6 +263,245 @@ impl ThreadComm {
             buf.copy_from_slice(&slot);
         }
         self.inner.barrier.wait();
+    }
+
+    // --- fallible surface (see module docs / `collectives::Collective`) ---
+
+    /// Mark `rank` failed: it no longer counts toward any rendezvous
+    /// quorum, and reductions skip its contribution. Wakes current
+    /// waiters so a rendezvous blocked on the dead rank re-counts and
+    /// completes. Any live rank (or an external monitor holding a
+    /// handle) may report a failure.
+    pub fn mark_failed(&self, rank: usize) {
+        self.inner.failed[rank].store(true, Ordering::SeqCst);
+        let _g = self.inner.gate.lock().unwrap();
+        self.inner.cv.notify_all();
+    }
+
+    /// Whether `rank` is marked failed.
+    pub fn is_failed(&self, rank: usize) -> bool {
+        self.inner.failed[rank].load(Ordering::SeqCst)
+    }
+
+    /// Ranks still participating in rendezvous.
+    pub fn live_ranks(&self) -> usize {
+        self.inner
+            .failed
+            .iter()
+            .filter(|f| !f.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Tear the communicator down: every current and future `try_*` op
+    /// returns [`CommError::Shutdown`].
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        let _g = self.inner.gate.lock().unwrap();
+        self.inner.cv.notify_all();
+    }
+
+    /// Rendezvous with every live rank, or time out. The arrival is
+    /// undone on timeout so a later retry starts from a clean count
+    /// (the rendezvous-level mirror of `RetryPolicy`'s attempts).
+    fn try_rendezvous(&self, op: &'static str, timeout: Duration) -> CommResult<()> {
+        let inner = &self.inner;
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return Err(CommError::Shutdown);
+        }
+        let deadline = Instant::now() + timeout;
+        let mut g = inner.gate.lock().unwrap();
+        g.arrived += 1;
+        if g.arrived >= self.live_ranks() {
+            g.arrived = 0;
+            g.generation = g.generation.wrapping_add(1);
+            inner.cv.notify_all();
+            return Ok(());
+        }
+        let gen = g.generation;
+        loop {
+            if inner.shutdown.load(Ordering::SeqCst) {
+                g.arrived = g.arrived.saturating_sub(1);
+                inner.cv.notify_all();
+                return Err(CommError::Shutdown);
+            }
+            if g.generation != gen {
+                // A peer completed the rendezvous (and consumed our
+                // arrival) while we waited.
+                return Ok(());
+            }
+            // A peer may have been marked failed while we waited —
+            // re-count the quorum before sleeping again.
+            if g.arrived >= self.live_ranks() {
+                g.arrived = 0;
+                g.generation = g.generation.wrapping_add(1);
+                inner.cv.notify_all();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                g.arrived = g.arrived.saturating_sub(1);
+                return Err(CommError::Timeout { op, waited: timeout });
+            }
+            let (guard, _) = inner.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    fn try_barrier_impl(&self, timeout: Duration) -> CommResult<()> {
+        if self.live_ranks() <= 1 {
+            return check_shutdown(&self.inner);
+        }
+        self.try_rendezvous("barrier", timeout)
+    }
+
+    fn try_all_reduce_mean_impl(&self, buf: &mut [f32], timeout: Duration) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        if self.live_ranks() <= 1 {
+            // Sole survivor: the live-group mean is its own contribution.
+            return Ok(());
+        }
+        self.stage(buf);
+        self.try_rendezvous("all_reduce_mean", timeout)?;
+        let inv = 1.0 / self.live_ranks() as f32;
+        buf.fill(0.0);
+        for r in 0..self.inner.n {
+            if self.is_failed(r) {
+                continue;
+            }
+            let sr = self.inner.staging[r].read().unwrap();
+            kernels::add(buf, &sr[..]);
+        }
+        kernels::scale(buf, inv);
+        // Nobody restages until every live rank has read.
+        self.try_rendezvous("all_reduce_mean.exit", timeout)
+    }
+
+    fn try_all_gather_impl(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        // Every shard owner must be alive — a dead rank's shard cannot
+        // be reconstructed by the survivors. Deterministic failure.
+        for (r, &(_, len)) in shards.iter().enumerate() {
+            if len > 0 && self.is_failed(r) {
+                return Err(CommError::PeerFailed { rank: r });
+            }
+        }
+        if self.live_ranks() <= 1 {
+            return Ok(());
+        }
+        let (off, len) = shards[self.rank];
+        self.stage(&full[off..off + len]);
+        self.try_rendezvous("all_gather", timeout)?;
+        for (r, &(o, l)) in shards.iter().enumerate() {
+            if r != self.rank && !self.is_failed(r) {
+                let sr = self.inner.staging[r].read().unwrap();
+                full[o..o + l].copy_from_slice(&sr);
+            }
+        }
+        self.try_rendezvous("all_gather.exit", timeout)
+    }
+
+    fn try_reduce_scatter_mean_impl(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        if self.live_ranks() <= 1 {
+            return Ok(());
+        }
+        self.stage(full);
+        self.try_rendezvous("reduce_scatter_mean", timeout)?;
+        let inv = 1.0 / self.live_ranks() as f32;
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for r in 0..self.inner.n {
+            if self.is_failed(r) {
+                continue;
+            }
+            let sr = self.inner.staging[r].read().unwrap();
+            kernels::add(&mut full[off..off + len], &sr[off..off + len]);
+        }
+        kernels::scale(&mut full[off..off + len], inv);
+        self.try_rendezvous("reduce_scatter_mean.exit", timeout)
+    }
+
+    fn try_broadcast_impl(
+        &self,
+        buf: &mut [f32],
+        root: usize,
+        timeout: Duration,
+    ) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        if self.is_failed(root) {
+            // The payload only exists on the root. Deterministic failure.
+            return Err(CommError::PeerFailed { rank: root });
+        }
+        if self.live_ranks() <= 1 {
+            return Ok(());
+        }
+        if self.rank == root {
+            self.stage(buf);
+        }
+        self.try_rendezvous("broadcast", timeout)?;
+        if self.rank != root {
+            let slot = self.inner.staging[root].read().unwrap();
+            buf.copy_from_slice(&slot);
+        }
+        self.try_rendezvous("broadcast.exit", timeout)
+    }
+}
+
+fn check_shutdown(inner: &Inner) -> CommResult<()> {
+    if inner.shutdown.load(Ordering::SeqCst) {
+        Err(CommError::Shutdown)
+    } else {
+        Ok(())
+    }
+}
+
+impl Collective for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.inner.n
+    }
+
+    fn try_barrier(&self, timeout: Duration) -> CommResult<()> {
+        self.try_barrier_impl(timeout)
+    }
+
+    fn try_all_reduce_mean(&self, buf: &mut [f32], timeout: Duration) -> CommResult<()> {
+        self.try_all_reduce_mean_impl(buf, timeout)
+    }
+
+    fn try_all_gather(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.try_all_gather_impl(full, shards, timeout)
+    }
+
+    fn try_reduce_scatter_mean(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.try_reduce_scatter_mean_impl(full, shards, timeout)
+    }
+
+    fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()> {
+        self.try_broadcast_impl(buf, root, timeout)
     }
 }
 
@@ -447,5 +718,126 @@ mod tests {
         for b in &got[1..] {
             assert_eq!(b, &got[0]);
         }
+    }
+
+    // --- fallible surface ------------------------------------------------
+
+    use crate::collectives::{Collective, CommError};
+    use std::time::Duration;
+
+    #[test]
+    fn try_barrier_times_out_without_quorum() {
+        // Two live ranks; only one shows up.
+        let comms = ThreadComm::group(2);
+        let got = comms[0].try_barrier(Duration::from_millis(40));
+        assert!(
+            matches!(got, Err(CommError::Timeout { op: "barrier", .. })),
+            "{got:?}"
+        );
+        // The timed-out arrival was undone: a later full rendezvous works.
+        let (c0, c1) = (&comms[0], &comms[1]);
+        std::thread::scope(|s| {
+            let a = s.spawn(move || c0.try_barrier(Duration::from_secs(5)));
+            let b = s.spawn(move || c1.try_barrier(Duration::from_secs(5)));
+            assert_eq!(a.join().unwrap(), Ok(()));
+            assert_eq!(b.join().unwrap(), Ok(()));
+        });
+    }
+
+    #[test]
+    fn mark_failed_releases_a_blocked_rendezvous() {
+        let comms = ThreadComm::group(2);
+        let (c0, c1) = (&comms[0], &comms[1]);
+        std::thread::scope(|s| {
+            let h = s.spawn(move || c0.try_barrier(Duration::from_secs(10)));
+            // Rank 1 dies while rank 0 waits; the waiter must re-count
+            // the quorum and complete instead of riding out the timeout.
+            std::thread::sleep(Duration::from_millis(30));
+            c1.mark_failed(1);
+            assert_eq!(h.join().unwrap(), Ok(()));
+        });
+        assert_eq!(comms[0].live_ranks(), 1);
+    }
+
+    #[test]
+    fn degraded_all_reduce_means_over_live_ranks() {
+        let comms = ThreadComm::group(3);
+        comms[0].mark_failed(2);
+        let (c0, c1) = (&comms[0], &comms[1]);
+        let t = Duration::from_secs(5);
+        std::thread::scope(|s| {
+            let a = s.spawn(move || {
+                let mut buf = vec![1.0f32; 7];
+                c0.try_all_reduce_mean(&mut buf, t).map(|_| buf)
+            });
+            let b = s.spawn(move || {
+                let mut buf = vec![2.0f32; 7];
+                c1.try_all_reduce_mean(&mut buf, t).map(|_| buf)
+            });
+            // Mean over the two live ranks, the dead rank excluded.
+            assert_eq!(a.join().unwrap().unwrap(), vec![1.5f32; 7]);
+            assert_eq!(b.join().unwrap().unwrap(), vec![1.5f32; 7]);
+        });
+    }
+
+    #[test]
+    fn dead_root_and_dead_shard_owner_fail_deterministically() {
+        let comms = ThreadComm::group(2);
+        comms[0].mark_failed(1);
+        let mut buf = vec![0.0f32; 4];
+        assert_eq!(
+            comms[0].try_broadcast(&mut buf, 1, Duration::from_millis(10)),
+            Err(CommError::PeerFailed { rank: 1 })
+        );
+        let shards = [(0usize, 2usize), (2, 2)];
+        let mut full = vec![0.0f32; 4];
+        assert_eq!(
+            comms[0].try_all_gather(&mut full, &shards, Duration::from_millis(10)),
+            Err(CommError::PeerFailed { rank: 1 })
+        );
+        // A broadcast from a live root among the survivors still works
+        // (sole survivor: trivially complete).
+        assert_eq!(comms[0].try_broadcast(&mut buf, 0, Duration::from_millis(10)), Ok(()));
+    }
+
+    #[test]
+    fn degraded_reduce_scatter_means_over_live_ranks() {
+        let comms = ThreadComm::group(3);
+        comms[0].mark_failed(1);
+        let shards = [(0usize, 2usize), (2, 2), (4, 2)];
+        let (c0, c2) = (&comms[0], &comms[2]);
+        let t = Duration::from_secs(5);
+        std::thread::scope(|s| {
+            let a = s.spawn(move || {
+                let mut full = vec![2.0f32; 6];
+                c0.try_reduce_scatter_mean(&mut full, &shards, t).map(|_| full)
+            });
+            let b = s.spawn(move || {
+                let mut full = vec![4.0f32; 6];
+                c2.try_reduce_scatter_mean(&mut full, &shards, t).map(|_| full)
+            });
+            let a = a.join().unwrap().unwrap();
+            let b = b.join().unwrap().unwrap();
+            // Own shard holds the live mean (2+4)/2; the rest untouched.
+            assert_eq!(a, vec![3.0, 3.0, 2.0, 2.0, 2.0, 2.0]);
+            assert_eq!(b, vec![4.0, 4.0, 4.0, 4.0, 3.0, 3.0]);
+        });
+    }
+
+    #[test]
+    fn shutdown_wakes_waiters_and_poisons_later_ops() {
+        let comms = ThreadComm::group(2);
+        let (c0, c1) = (&comms[0], &comms[1]);
+        std::thread::scope(|s| {
+            let h = s.spawn(move || c0.try_barrier(Duration::from_secs(10)));
+            std::thread::sleep(Duration::from_millis(30));
+            c1.shutdown();
+            assert_eq!(h.join().unwrap(), Err(CommError::Shutdown));
+        });
+        let mut buf = vec![0.0f32; 2];
+        assert_eq!(
+            comms[1].try_all_reduce_mean(&mut buf, Duration::from_millis(10)),
+            Err(CommError::Shutdown)
+        );
     }
 }

@@ -66,6 +66,7 @@ use super::schedule::LrSchedule;
 use super::scratch::SyncScratch;
 use super::spec::MethodSpec;
 
+mod checkpoint;
 pub mod clock;
 mod sync;
 mod worker;
@@ -157,6 +158,22 @@ pub struct TrainConfig {
     /// for layer-wise strategies with N > 1 (a single replica keeps the
     /// full-matrix path — there is nothing to shard across).
     pub shard_outer: bool,
+    /// Deterministic fault schedule (crash / hang / rejoin events keyed
+    /// on the local-round counter; see [`crate::fault`]). Empty by
+    /// default — the harness is compiled in but completely inactive, so
+    /// the steady-state zero-allocation invariant is unaffected.
+    /// Requires a layer-wise local-SGD strategy (the membership-aware
+    /// sync paths); `Trainer::new` rejects other combinations.
+    pub fault_plan: crate::fault::FaultPlan,
+    /// Simulated seconds a step-synced barrier waits for a missing
+    /// member before evicting it (charged once per round with a crash;
+    /// the A-EDiT anchor path has no barrier and never pays it).
+    pub evict_timeout: f64,
+    /// Write a checkpoint every N local rounds (0 = never). Requires
+    /// `checkpoint_dir`.
+    pub checkpoint_every: u64,
+    /// Directory for periodic checkpoints (`ckpt-round-NNNNNN.bin`).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 impl TrainConfig {
@@ -200,6 +217,12 @@ impl TrainConfig {
             // (bitwise identical numerics, full-matrix memory). Flat
             // strategies never engage it regardless.
             shard_outer: spec.shard_outer_state,
+            fault_plan: crate::fault::FaultPlan::default(),
+            // Two step-times of grace before a straggling member is
+            // declared dead at a barrier.
+            evict_timeout: 2.0 * 0.5,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
             spec,
         }
     }
@@ -255,6 +278,16 @@ pub struct RunSummary {
     pub max_staleness: u64,
     /// CO2 staleness-queue updates applied by the end-of-run flush.
     pub flushed_updates: u64,
+    /// Fault-plan crash events that fired.
+    pub crashes: u64,
+    /// Fault-plan join events that fired (revive or live append).
+    pub rejoins: u64,
+    /// Members evicted from a timed-out step-synced barrier (always 0
+    /// on the A-EDiT anchor path — no barrier to time out).
+    pub evictions: u64,
+    /// Syncs that ran with at least one replica dead (degraded
+    /// membership — the survivors kept syncing without the victim).
+    pub degraded_syncs: u64,
     pub comm: CommStats,
 }
 
@@ -289,8 +322,10 @@ pub struct Trainer {
     events: clock::EventQueue,
     /// Scratch member list for coalesced event groups.
     group_buf: Vec<usize>,
-    /// Cached `[0, 1, .., N-1]` member list for barrier syncs.
-    all_members: Vec<usize>,
+    /// Scratch member list for barrier syncs — rebuilt from the alive
+    /// set each round (capacity pinned to the replica count, so the
+    /// rebuild never allocates in steady state).
+    member_buf: Vec<usize>,
     /// Monotonic anchor-update counter (staleness bookkeeping).
     anchor_version: u64,
     /// Deadline windows completed (time-based triggers) — keys the
@@ -300,6 +335,28 @@ pub struct Trainer {
     last_sync_version: Vec<u64>,
     max_staleness: u64,
     flushed_updates: u64,
+    // --- fault-tolerance state (see `crate::fault`) ---------------------
+    /// Local rounds completed (the fault plan's round key; warmup DDP
+    /// steps do not count — plan events simply wait for round 0).
+    rounds: u64,
+    /// Next unconsumed event in `cfg.fault_plan` (sorted by round).
+    fault_cursor: usize,
+    /// Liveness per replica; dead replicas take no steps and are
+    /// excluded from sync membership until a Join revives them.
+    alive: Vec<bool>,
+    /// Per-round per-lane step budget: `u64::MAX` for alive replicas, a
+    /// crash event's `after_steps` for this round's victims, 0 for the
+    /// dead. Refilled in place each round — no allocation.
+    fault_caps: Vec<u64>,
+    /// Victims of this round's crash events (committed after the lanes
+    /// run, so a victim's partial steps still happen).
+    pending_crash: Vec<usize>,
+    crashes: u64,
+    rejoins: u64,
+    evictions: u64,
+    degraded_syncs: u64,
+    /// One-shot flag: the next barrier prices the evict timeout.
+    evict_charge: bool,
     /// Per-replica sync-event trace (filled when `cfg.trace_timeline`).
     pub timeline: Timeline,
     // reusable scratch
@@ -320,6 +377,11 @@ impl Trainer {
             "corpus vocab {} != model vocab {}",
             corpus.language.vocab(),
             engine.manifest.model.vocab_size
+        );
+        anyhow::ensure!(
+            cfg.fault_plan.is_empty() || (cfg.spec.is_local_sgd() && cfg.spec.layerwise()),
+            "fault plan requires a layer-wise local-SGD strategy (edit / a-edit / palsgd): \
+             the flat uniform-averaging sync has no membership-aware combine to degrade to"
         );
         let init = engine.init_params()?;
         let n = init.len();
@@ -406,12 +468,22 @@ impl Trainer {
             lanes,
             events: clock::EventQueue::with_capacity(cfg.mesh.replicas),
             group_buf: Vec::with_capacity(cfg.mesh.replicas),
-            all_members: (0..cfg.mesh.replicas).collect(),
+            member_buf: Vec::with_capacity(cfg.mesh.replicas),
             anchor_version: 0,
             sync_windows: 0,
             last_sync_version: vec![0; cfg.mesh.replicas],
             max_staleness: 0,
             flushed_updates: 0,
+            rounds: 0,
+            fault_cursor: 0,
+            alive: vec![true; cfg.mesh.replicas],
+            fault_caps: vec![u64::MAX; cfg.mesh.replicas],
+            pending_crash: Vec::with_capacity(cfg.mesh.replicas),
+            crashes: 0,
+            rejoins: 0,
+            evictions: 0,
+            degraded_syncs: 0,
+            evict_charge: false,
             timeline,
             grad_buf: vec![0.0; n],
             grad_acc: vec![0.0; n],
@@ -556,9 +628,11 @@ impl Trainer {
             global_step,
             syncs,
             pjrt_calls,
+            fault_caps,
             ..
         } = self;
         debug_assert_eq!(replicas.len(), lanes.len());
+        debug_assert_eq!(replicas.len(), fault_caps.len());
         let ctx = worker::RoundCtx {
             engine: &*engine,
             corpus: &*corpus,
@@ -567,6 +641,7 @@ impl Trainer {
             base_step: *global_step,
             deadline,
             step_cap,
+            caps: fault_caps,
             syncs: *syncs,
         };
         let threads = ctx.cfg.worker_threads.max(1).min(replicas.len().max(1));
@@ -624,10 +699,15 @@ impl Trainer {
     /// probability p (stateless draw); skipped replicas keep training
     /// against their stale anchor and simply accrue staleness.
     fn local_round(&mut self) -> Result<()> {
+        // Fault events scheduled for this round fire first: joins and
+        // hangs take effect before the lanes run; crash victims get
+        // their partial step budget and are committed dead after.
+        self.apply_fault_events()?;
         if self.cfg.spec.trigger.time_based() {
             let deadline = self.sim_time + self.cfg.tau_time;
             let cap = self.cfg.tau.saturating_mul(4).max(1);
             let (loss_sum, loss_count, max_steps) = self.run_lanes(Some(deadline), cap)?;
+            self.commit_crashes()?;
             self.global_step += max_steps;
             self.tracker
                 .record_loss(self.global_step, loss_sum / loss_count.max(1) as f64);
@@ -646,8 +726,13 @@ impl Trainer {
             let window = self.sync_windows;
             self.sync_windows += 1;
             self.events.clear();
+            // Dead replicas enqueue no sync event: a crashed replica's
+            // pending contribution is excluded from the anchor sync (a
+            // per-group membership change, not a global abort).
             for (j, r) in self.replicas.iter().enumerate() {
-                if worker::sync_draw(&self.cfg.spec.trigger, self.cfg.seed, j, window) {
+                if self.alive[j]
+                    && worker::sync_draw(&self.cfg.spec.trigger, self.cfg.seed, j, window)
+                {
                     self.events.push(clock::Event { clock: r.clock, replica: j });
                 }
             }
@@ -670,12 +755,197 @@ impl Trainer {
             let remaining = self.cfg.total_steps.saturating_sub(self.global_step);
             let tau = self.cfg.tau.min(remaining.max(1));
             let (loss_sum, loss_count, max_steps) = self.run_lanes(None, tau)?;
+            self.commit_crashes()?;
             self.global_step += max_steps;
             self.tracker
                 .record_loss(self.global_step, loss_sum / loss_count.max(1) as f64);
             sync::barrier_sync(self)?;
         }
+        self.rounds += 1;
         Ok(())
+    }
+
+    /// Fire every fault-plan event scheduled for the current round (and
+    /// any that pointed at already-elapsed rounds, e.g. plans written
+    /// against a longer schedule): joins and hangs apply immediately;
+    /// crash victims get their per-lane step budget for this round and
+    /// are committed dead after the lanes run ([`Self::commit_crashes`]).
+    /// With an empty plan this refills the cap vector and returns — no
+    /// allocation, no branches on the hot path beyond the cursor check.
+    fn apply_fault_events(&mut self) -> Result<()> {
+        for j in 0..self.fault_caps.len() {
+            self.fault_caps[j] = if self.alive[j] { u64::MAX } else { 0 };
+        }
+        self.pending_crash.clear();
+        let plan_len = self.cfg.fault_plan.events().len();
+        while self.fault_cursor < plan_len {
+            let ev = self.cfg.fault_plan.events()[self.fault_cursor];
+            if ev.round > self.rounds {
+                break;
+            }
+            self.fault_cursor += 1;
+            self.apply_fault_event(ev)?;
+        }
+        Ok(())
+    }
+
+    fn apply_fault_event(&mut self, ev: crate::fault::FaultEvent) -> Result<()> {
+        use crate::fault::FaultKind;
+        let n = self.replicas.len();
+        match ev.kind {
+            FaultKind::Crash { after_steps } => {
+                anyhow::ensure!(
+                    ev.replica < n && self.alive[ev.replica],
+                    "fault plan: crash@{}:{} targets a {} replica",
+                    ev.round,
+                    ev.replica,
+                    if ev.replica < n { "dead" } else { "nonexistent" }
+                );
+                self.fault_caps[ev.replica] = after_steps;
+                self.pending_crash.push(ev.replica);
+            }
+            FaultKind::Hang { secs } => {
+                anyhow::ensure!(
+                    ev.replica < n && self.alive[ev.replica],
+                    "fault plan: hang@{}:{} targets a dead or nonexistent replica",
+                    ev.round,
+                    ev.replica
+                );
+                self.replicas[ev.replica].clock += secs;
+            }
+            FaultKind::Join if ev.replica < n => {
+                anyhow::ensure!(
+                    !self.alive[ev.replica],
+                    "fault plan: join@{}:{} targets a replica that is already alive",
+                    ev.round,
+                    ev.replica
+                );
+                self.revive(ev.replica);
+            }
+            FaultKind::Join => {
+                anyhow::ensure!(
+                    ev.replica == n,
+                    "fault plan: join@{}:{} would leave a gap (cluster has {} replicas)",
+                    ev.round,
+                    ev.replica,
+                    n
+                );
+                self.append_replica();
+            }
+        }
+        Ok(())
+    }
+
+    /// Flip this round's crash victims dead, after their partial steps
+    /// ran. Step-synced rounds additionally arm the barrier's
+    /// timeout-then-evict pricing.
+    fn commit_crashes(&mut self) -> Result<()> {
+        if self.pending_crash.is_empty() {
+            return Ok(());
+        }
+        let pending = std::mem::take(&mut self.pending_crash);
+        for &j in &pending {
+            self.alive[j] = false;
+            self.fault_caps[j] = 0;
+            self.crashes += 1;
+            if !self.cfg.spec.trigger.time_based() {
+                self.evict_charge = true;
+                self.evictions += 1;
+            }
+        }
+        self.pending_crash = pending;
+        self.pending_crash.clear();
+        anyhow::ensure!(
+            self.alive.iter().any(|&a| a),
+            "fault plan crashed every replica (round {})",
+            self.rounds
+        );
+        Ok(())
+    }
+
+    /// Revive a crashed replica in place: it adopts the current anchor,
+    /// zeroed inner-optimizer moments, the present simulated clock and
+    /// the cluster's AdamW step count — exactly the state a fresh
+    /// elastic joiner gets from [`Self::rescale`]. Its data-stream
+    /// cursor (`inner_steps`) continues where it left off, and the
+    /// anchor versions it slept through are folded into the staleness
+    /// high-water before its cursor resets.
+    fn revive(&mut self, j: usize) {
+        let missed = self.anchor_version.saturating_sub(self.last_sync_version[j]);
+        if missed > self.max_staleness {
+            self.max_staleness = missed;
+        }
+        self.last_sync_version[j] = self.anchor_version;
+        let adam_t = self
+            .alive
+            .iter()
+            .position(|&a| a)
+            .map(|k| self.replicas[k].adam_t)
+            .unwrap_or(self.replicas[j].adam_t);
+        let clock = self.sim_time;
+        let r = &mut self.replicas[j];
+        r.params.copy_from_slice(&self.anchor);
+        r.m.fill(0.0);
+        r.v.fill(0.0);
+        r.adam_t = adam_t;
+        r.clock = clock;
+        self.alive[j] = true;
+        self.fault_caps[j] = u64::MAX;
+        self.rejoins += 1;
+    }
+
+    /// Live-append a brand-new replica mid-run (a mid-round elastic
+    /// join): unlike [`Self::rescale`], the existing replicas' state is
+    /// untouched — only the joiner starts from the anchor. The mesh is
+    /// column-major (`rank = col * shard + row`), so appending a column
+    /// leaves every existing replica's worker ranks, and therefore its
+    /// data streams, unchanged.
+    fn append_replica(&mut self) {
+        let n = self.replicas.len() + 1;
+        let adam_t = self
+            .alive
+            .iter()
+            .position(|&a| a)
+            .map(|k| self.replicas[k].adam_t)
+            .unwrap_or(0);
+        let mut r = Replica::new(self.anchor.clone());
+        r.losses.reserve(self.loss_capacity);
+        r.adam_t = adam_t;
+        r.clock = self.sim_time;
+        self.replicas.push(r);
+        let [b, s1] = self.engine.manifest.token_shape;
+        self.lanes.push(worker::Lane::with_token_capacity(b * s1));
+        self.alive.push(true);
+        self.fault_caps.push(u64::MAX);
+        self.last_sync_version.push(self.anchor_version);
+        self.rejoins += 1;
+        self.refresh_topology(n);
+    }
+
+    /// Rebuild everything derived from the replica count (mesh, step
+    /// model, comm plan, detector width, scratch arena, sharding) —
+    /// shared by [`Self::rescale`] and the live-join path.
+    fn refresh_topology(&mut self, new_replicas: usize) {
+        self.member_buf.reserve(new_replicas);
+        self.group_buf.reserve(new_replicas);
+        self.cfg.mesh = MeshSpec::new(self.cfg.mesh.shard, new_replicas);
+        self.step_model.mesh = self.cfg.mesh;
+        self.detector.resize_replicas(new_replicas);
+        self.scratch.ensure_replicas(new_replicas);
+        if self.cfg.shard_outer && self.cfg.spec.layerwise() && new_replicas > 1 {
+            // Re-partition the outer shards for the new sync-group size.
+            self.scratch.enable_sharding(&self.table, new_replicas);
+        } else {
+            // Down to one replica (or sharding off): the full-matrix
+            // path resumes; restore its buffers if lanes were active.
+            self.scratch.disable_sharding();
+        }
+        self.plan = sync::CommPlan::build(
+            &self.step_model,
+            &self.cfg.spec,
+            &self.table,
+            self.cfg.shard_outer,
+        );
     }
 
     /// Mean validation loss over `eval_batches` held-out batches.
@@ -719,6 +989,7 @@ impl Trainer {
                 self.ddp_step()?;
             } else {
                 self.local_round()?;
+                self.maybe_checkpoint()?;
             }
         }
         sync::flush_pending(self)?;
@@ -761,8 +1032,41 @@ impl Trainer {
             rollbacks: self.detector.rollbacks,
             max_staleness: self.max_staleness,
             flushed_updates: self.flushed_updates,
+            crashes: self.crashes,
+            rejoins: self.rejoins,
+            evictions: self.evictions,
+            degraded_syncs: self.degraded_syncs,
             comm: self.comm.clone(),
         }
+    }
+
+    /// Local rounds completed (the fault plan's round key and the
+    /// `--checkpoint-every` cadence unit).
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Per-replica liveness under the fault harness (all true without
+    /// one).
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// CO2 staleness-queue updates currently in flight.
+    pub fn pending_updates(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Periodic checkpoint at a round boundary (`cfg.checkpoint_every`).
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        if self.cfg.checkpoint_every == 0 || self.rounds % self.cfg.checkpoint_every != 0 {
+            return Ok(());
+        }
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            anyhow::bail!("checkpoint_every is set but checkpoint_dir is not");
+        };
+        let path = dir.join(format!("ckpt-round-{:06}.bin", self.rounds));
+        self.save_checkpoint(&path)
     }
 
     /// Elastic rescale to `new_replicas` columns (Fig. 6c): new replicas
@@ -773,11 +1077,14 @@ impl Trainer {
     /// and all clocks re-align to the current simulated time).
     pub fn rescale(&mut self, new_replicas: usize) -> Result<()> {
         anyhow::ensure!(new_replicas > 0);
-        debug_assert!(
+        // A real error (not just a debug assert): silently rescaling on
+        // a dirty queue would drop pending sync contributions in release
+        // builds. Mid-round membership changes go through the fault
+        // plan's live evict/join path instead.
+        anyhow::ensure!(
             self.events.is_empty(),
             "rescale with undrained sync events (mid-round rescale?)"
         );
-        self.events.clear();
         self.group_buf.clear();
         // Synchronize state into the anchor first if mid-round divergence
         // exists (callers rescale at round boundaries; anchor is current).
@@ -802,26 +1109,15 @@ impl Trainer {
             .resize_with(new_replicas, || worker::Lane::with_token_capacity(token_cap));
         // Joining replicas start "fresh" at the current anchor version.
         self.last_sync_version.resize(new_replicas, self.anchor_version);
-        self.all_members.clear();
-        self.all_members.extend(0..new_replicas);
-        self.cfg.mesh = MeshSpec::new(self.cfg.mesh.shard, new_replicas);
-        self.step_model.mesh = self.cfg.mesh;
-        self.detector.resize_replicas(new_replicas);
-        self.scratch.ensure_replicas(new_replicas);
-        if self.cfg.shard_outer && self.cfg.spec.layerwise() && new_replicas > 1 {
-            // Re-partition the outer shards for the new sync-group size.
-            self.scratch.enable_sharding(&self.table, new_replicas);
-        } else {
-            // Down to one replica (or sharding off): the full-matrix
-            // path resumes; restore its buffers if lanes were active.
-            self.scratch.disable_sharding();
-        }
-        self.plan = sync::CommPlan::build(
-            &self.step_model,
-            &self.cfg.spec,
-            &self.table,
-            self.cfg.shard_outer,
-        );
+        // A rescale is a full-cluster rendezvous: everyone present is
+        // alive and unbudgeted afterwards.
+        self.alive.clear();
+        self.alive.resize(new_replicas, true);
+        self.fault_caps.clear();
+        self.fault_caps.resize(new_replicas, u64::MAX);
+        self.pending_crash.clear();
+        self.evict_charge = false;
+        self.refresh_topology(new_replicas);
         Ok(())
     }
 

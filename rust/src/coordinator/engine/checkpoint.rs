@@ -1,0 +1,477 @@
+//! Checkpoint/restore of the full run state — the fault-tolerance half
+//! of the elastic runtime (see `crate::fault` for the injection half).
+//!
+//! A checkpoint captures *everything* the training trajectory depends
+//! on: the anchor and outer-optimizer momentum, every replica's
+//! parameters / Adam moments / clocks / loss traces, the CO2 staleness
+//! queue, the anomaly detector's EMA statistics, the run tracker, the
+//! fault-plan cursor and liveness, and every counter that keys a
+//! stateless draw (every stochastic input in this codebase is a pure
+//! function of `(seed, replica, inner_step)` — so checkpointing the
+//! counters *is* checkpointing the RNG cursors). Killing a run at any
+//! round boundary and restoring therefore replays **bitwise
+//! identically** to the uninterrupted run (`tests/fault_recovery.rs`).
+//!
+//! On-disk format (version [`RUN_STATE_VERSION`]):
+//!
+//! ```text
+//! b"EDITCKPT" | version: u32 LE | header_len: u64 LE
+//! header: JSON (RunManifest — identity + section table)
+//! body: concatenated little-endian sections, in table order
+//! ```
+//!
+//! The header's section table makes the body self-describing; integers
+//! live in typed binary sections (not JSON) because the hand-rolled
+//! `util::json` number is an f64 and would corrupt counters past 2^53.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::{
+    RunManifest, RunSection, SectionKind, RUN_STATE_MAGIC, RUN_STATE_VERSION,
+};
+
+use super::Trainer;
+
+/// Fixed order of the `counters` section. Extend at the END and bump
+/// [`RUN_STATE_VERSION`] if the meaning of existing slots changes.
+const COUNTERS: usize = 19;
+
+struct SectionWriter {
+    buf: Vec<u8>,
+    sections: Vec<RunSection>,
+}
+
+impl SectionWriter {
+    fn new() -> Self {
+        Self { buf: Vec::new(), sections: Vec::new() }
+    }
+
+    fn write(&mut self, name: &str, kind: SectionKind, fill: impl FnOnce(&mut Vec<u8>)) {
+        let start = self.buf.len();
+        fill(&mut self.buf);
+        let bytes = self.buf.len() - start;
+        debug_assert_eq!(bytes % kind.elem_bytes(), 0, "section {name} misaligned");
+        self.sections.push(RunSection {
+            name: name.to_string(),
+            kind,
+            count: bytes / kind.elem_bytes(),
+        });
+    }
+
+    fn f32s<'a>(&mut self, name: &str, parts: impl IntoIterator<Item = &'a [f32]>) {
+        self.write(name, SectionKind::F32, |buf| {
+            for part in parts {
+                for &x in part {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        });
+    }
+
+    fn f64s(&mut self, name: &str, data: impl IntoIterator<Item = f64>) {
+        self.write(name, SectionKind::F64, |buf| {
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        });
+    }
+
+    fn u64s(&mut self, name: &str, data: impl IntoIterator<Item = u64>) {
+        self.write(name, SectionKind::U64, |buf| {
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        });
+    }
+
+    fn i64s(&mut self, name: &str, data: impl IntoIterator<Item = i64>) {
+        self.write(name, SectionKind::I64, |buf| {
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        });
+    }
+
+    fn u8s(&mut self, name: &str, data: impl IntoIterator<Item = u8>) {
+        self.write(name, SectionKind::U8, |buf| buf.extend(data));
+    }
+}
+
+/// Sequential reader over the body, validating each section against the
+/// manifest's table (order, name, kind) as it goes — a truncated or
+/// reordered file fails loudly instead of silently misreading.
+struct SectionReader<'a> {
+    body: &'a [u8],
+    pos: usize,
+    sections: &'a [RunSection],
+    idx: usize,
+}
+
+impl<'a> SectionReader<'a> {
+    fn new(body: &'a [u8], sections: &'a [RunSection]) -> Self {
+        Self { body, pos: 0, sections, idx: 0 }
+    }
+
+    fn expect(&mut self, name: &str, kind: SectionKind) -> Result<(usize, &'a [u8])> {
+        let s = self
+            .sections
+            .get(self.idx)
+            .with_context(|| format!("checkpoint body ends before section '{name}'"))?;
+        anyhow::ensure!(
+            s.name == name && s.kind == kind,
+            "checkpoint section {} is '{}' ({}), expected '{name}' ({})",
+            self.idx,
+            s.name,
+            s.kind.name(),
+            kind.name()
+        );
+        let bytes = s.count * kind.elem_bytes();
+        anyhow::ensure!(
+            self.pos + bytes <= self.body.len(),
+            "checkpoint body truncated inside section '{name}'"
+        );
+        let slice = &self.body[self.pos..self.pos + bytes];
+        self.pos += bytes;
+        self.idx += 1;
+        Ok((s.count, slice))
+    }
+
+    fn f32s_into(&mut self, name: &str, out: &mut [f32]) -> Result<()> {
+        let (count, bytes) = self.expect(name, SectionKind::F32)?;
+        anyhow::ensure!(
+            count == out.len(),
+            "section '{name}' has {count} elements, expected {}",
+            out.len()
+        );
+        for (dst, src) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    fn f32s(&mut self, name: &str) -> Result<Vec<f32>> {
+        let (_, bytes) = self.expect(name, SectionKind::F32)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self, name: &str) -> Result<Vec<f64>> {
+        let (_, bytes) = self.expect(name, SectionKind::F64)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self, name: &str) -> Result<Vec<u64>> {
+        let (_, bytes) = self.expect(name, SectionKind::U64)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i64s(&mut self, name: &str) -> Result<Vec<i64>> {
+        let (_, bytes) = self.expect(name, SectionKind::I64)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u8s(&mut self, name: &str) -> Result<Vec<u8>> {
+        let (_, bytes) = self.expect(name, SectionKind::U8)?;
+        Ok(bytes.to_vec())
+    }
+}
+
+impl Trainer {
+    /// Serialize the complete run state to `path` (parent directories
+    /// are created). Call at a round boundary — mid-round state (lane
+    /// scratch, undrained sync events) is transient by design and a
+    /// checkpoint taken there would not be a consistent cut.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        anyhow::ensure!(
+            self.events.is_empty(),
+            "checkpoint with undrained sync events (mid-round checkpoint?)"
+        );
+        let n = self.anchor.len();
+        let mut w = SectionWriter::new();
+
+        w.f32s("anchor", [self.anchor.as_slice()]);
+        w.f32s("outer_momentum", [self.outer.momentum.as_slice()]);
+        w.f32s("params", self.replicas.iter().map(|r| r.params.as_slice()));
+        w.f32s("m", self.replicas.iter().map(|r| r.m.as_slice()));
+        w.f32s("v", self.replicas.iter().map(|r| r.v.as_slice()));
+        w.i64s("adam_t", self.replicas.iter().map(|r| r.adam_t as i64));
+        w.f64s("clock", self.replicas.iter().map(|r| r.clock));
+        w.u64s("inner_steps", self.replicas.iter().map(|r| r.inner_steps));
+        w.u64s("loss_lens", self.replicas.iter().map(|r| r.losses.len() as u64));
+        w.u64s(
+            "loss_steps",
+            self.replicas.iter().flat_map(|r| r.losses.iter().map(|&(s, _)| s)),
+        );
+        w.write("loss_vals", SectionKind::F32, |buf| {
+            for r in &self.replicas {
+                for &(_, loss) in &r.losses {
+                    buf.extend_from_slice(&loss.to_le_bytes());
+                }
+            }
+        });
+        w.f32s("pending", self.pending.iter().map(|u| u.as_slice()));
+        w.u64s("last_sync_version", self.last_sync_version.iter().copied());
+        w.u8s("alive", self.alive.iter().map(|&a| a as u8));
+        let (det_mean, det_var, det_init) = self.detector.export_state();
+        w.f64s("det_mean", det_mean);
+        w.f64s("det_var", det_var);
+        w.u8s("det_init", det_init);
+        w.u64s("tracker_steps", self.tracker.losses.iter().map(|&(s, _)| s));
+        w.f64s("tracker_losses", self.tracker.losses.iter().map(|&(_, l)| l));
+        w.u64s("val_steps", self.tracker.val_ppl.iter().map(|&(s, _)| s));
+        w.f64s("val_ppl", self.tracker.val_ppl.iter().map(|&(_, p)| p));
+        w.f64s("scalars", [self.sim_time, self.comm.seconds]);
+        let counters: [u64; COUNTERS] = [
+            self.global_step,
+            self.syncs,
+            self.sync_windows,
+            self.anchor_version,
+            self.max_staleness,
+            self.flushed_updates,
+            self.pjrt_calls,
+            self.rounds,
+            self.fault_cursor as u64,
+            self.crashes,
+            self.rejoins,
+            self.evictions,
+            self.degraded_syncs,
+            self.evict_charge as u64,
+            self.detector.syncs_seen(),
+            self.detector.anomalies_flagged,
+            self.detector.rollbacks,
+            self.comm.ops as u64,
+            self.comm.bytes as u64,
+        ];
+        w.u64s("counters", counters);
+
+        let manifest = RunManifest {
+            version: RUN_STATE_VERSION,
+            label: self.cfg.label.clone(),
+            seed: self.cfg.seed,
+            replicas: self.replicas.len(),
+            params: n,
+            modules: self.table.num_modules(),
+            sections: w.sections,
+        };
+        let header = manifest.to_json().to_string();
+        let mut out =
+            Vec::with_capacity(RUN_STATE_MAGIC.len() + 12 + header.len() + w.buf.len());
+        out.extend_from_slice(RUN_STATE_MAGIC);
+        out.extend_from_slice(&RUN_STATE_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&w.buf);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        }
+        std::fs::write(path, out)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Restore the run state written by [`Self::save_checkpoint`] into
+    /// this trainer. The trainer must have been built with the same
+    /// engine manifest, seed and strategy — identity fields are
+    /// validated; the replica count is reconciled via [`Self::rescale`]
+    /// before the per-replica state lands. Continuing the run afterwards
+    /// is bitwise identical to never having stopped.
+    pub fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() >= RUN_STATE_MAGIC.len() + 12 && bytes.starts_with(RUN_STATE_MAGIC),
+            "{} is not a run-state checkpoint (bad magic)",
+            path.display()
+        );
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == RUN_STATE_VERSION,
+            "checkpoint version {version} != supported {RUN_STATE_VERSION}"
+        );
+        let header_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        anyhow::ensure!(20 + header_len <= bytes.len(), "checkpoint header truncated");
+        let header = std::str::from_utf8(&bytes[20..20 + header_len])
+            .context("checkpoint header is not UTF-8")?;
+        let json = crate::util::json::Json::parse(header)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e:?}"))?;
+        let manifest = RunManifest::from_json(&json)?;
+        let body = &bytes[20 + header_len..];
+        anyhow::ensure!(
+            body.len() == manifest.body_bytes(),
+            "checkpoint body is {} bytes, section table says {}",
+            body.len(),
+            manifest.body_bytes()
+        );
+
+        let n = self.anchor.len();
+        anyhow::ensure!(
+            manifest.params == n,
+            "checkpoint has {} params, model has {n}",
+            manifest.params
+        );
+        anyhow::ensure!(
+            manifest.modules == self.table.num_modules(),
+            "checkpoint has {} modules, model has {}",
+            manifest.modules,
+            self.table.num_modules()
+        );
+        anyhow::ensure!(
+            manifest.seed == self.cfg.seed,
+            "checkpoint seed {} != configured seed {} (every stochastic draw keys on it)",
+            manifest.seed,
+            self.cfg.seed
+        );
+        if manifest.replicas != self.replicas.len() {
+            self.rescale(manifest.replicas)?;
+        }
+        let replicas = manifest.replicas;
+
+        let mut r = SectionReader::new(body, &manifest.sections);
+        r.f32s_into("anchor", &mut self.anchor)?;
+        r.f32s_into("outer_momentum", &mut self.outer.momentum)?;
+        let params = r.f32s("params")?;
+        let m = r.f32s("m")?;
+        let v = r.f32s("v")?;
+        anyhow::ensure!(
+            params.len() == replicas * n && m.len() == params.len() && v.len() == params.len(),
+            "checkpoint replica state has the wrong shape"
+        );
+        let adam_t = r.i64s("adam_t")?;
+        let clocks = r.f64s("clock")?;
+        let inner_steps = r.u64s("inner_steps")?;
+        let loss_lens = r.u64s("loss_lens")?;
+        anyhow::ensure!(
+            adam_t.len() == replicas
+                && clocks.len() == replicas
+                && inner_steps.len() == replicas
+                && loss_lens.len() == replicas,
+            "checkpoint per-replica sections disagree with the replica count"
+        );
+        let loss_steps = r.u64s("loss_steps")?;
+        let loss_vals = r.f32s("loss_vals")?;
+        let total_losses: u64 = loss_lens.iter().sum();
+        anyhow::ensure!(
+            loss_steps.len() as u64 == total_losses && loss_vals.len() as u64 == total_losses,
+            "checkpoint loss traces disagree with loss_lens"
+        );
+        for (j, rep) in self.replicas.iter_mut().enumerate() {
+            rep.params.copy_from_slice(&params[j * n..(j + 1) * n]);
+            rep.m.copy_from_slice(&m[j * n..(j + 1) * n]);
+            rep.v.copy_from_slice(&v[j * n..(j + 1) * n]);
+            rep.adam_t = adam_t[j] as i32;
+            rep.clock = clocks[j];
+            rep.inner_steps = inner_steps[j];
+        }
+        let mut cursor = 0usize;
+        for (j, &len) in loss_lens.iter().enumerate() {
+            let len = len as usize;
+            let rep = &mut self.replicas[j];
+            rep.losses.clear();
+            rep.losses.reserve(len.max(self.loss_capacity));
+            for i in cursor..cursor + len {
+                rep.losses.push((loss_steps[i], loss_vals[i]));
+            }
+            cursor += len;
+        }
+
+        let pending_flat = r.f32s("pending")?;
+        anyhow::ensure!(
+            pending_flat.len() % n == 0,
+            "checkpoint CO2 queue is not a multiple of the param count"
+        );
+        self.pending.clear();
+        for chunk in pending_flat.chunks_exact(n) {
+            self.pending.push_back(chunk.to_vec());
+        }
+
+        let last_sync = r.u64s("last_sync_version")?;
+        anyhow::ensure!(last_sync.len() == replicas, "bad last_sync_version length");
+        self.last_sync_version.copy_from_slice(&last_sync);
+        let alive = r.u8s("alive")?;
+        anyhow::ensure!(alive.len() == replicas, "bad alive length");
+        for (dst, &a) in self.alive.iter_mut().zip(alive.iter()) {
+            *dst = a != 0;
+        }
+
+        let det_mean = r.f64s("det_mean")?;
+        let det_var = r.f64s("det_var")?;
+        let det_init = r.u8s("det_init")?;
+        self.detector.import_state(&det_mean, &det_var, &det_init)?;
+
+        let tracker_steps = r.u64s("tracker_steps")?;
+        let tracker_losses = r.f64s("tracker_losses")?;
+        let val_steps = r.u64s("val_steps")?;
+        let val_ppl = r.f64s("val_ppl")?;
+        anyhow::ensure!(
+            tracker_steps.len() == tracker_losses.len() && val_steps.len() == val_ppl.len(),
+            "checkpoint tracker traces are misaligned"
+        );
+        self.tracker = crate::metrics::RunTracker::new();
+        self.tracker.reserve(tracker_steps.len());
+        for (&s, &l) in tracker_steps.iter().zip(tracker_losses.iter()) {
+            // record_loss replays the tail window exactly.
+            self.tracker.record_loss(s, l);
+        }
+        for (&s, &p) in val_steps.iter().zip(val_ppl.iter()) {
+            // The val trace stores PPL (already exp'd) — pushing through
+            // record_val would exponentiate twice, so land it directly.
+            self.tracker.val_ppl.push((s, p));
+            self.tracker.tail_ppl.push(p);
+        }
+
+        let scalars = r.f64s("scalars")?;
+        anyhow::ensure!(scalars.len() == 2, "bad scalars length");
+        self.sim_time = scalars[0];
+        let counters = r.u64s("counters")?;
+        anyhow::ensure!(
+            counters.len() == COUNTERS,
+            "checkpoint has {} counters, expected {COUNTERS}",
+            counters.len()
+        );
+        self.global_step = counters[0];
+        self.syncs = counters[1];
+        self.sync_windows = counters[2];
+        self.anchor_version = counters[3];
+        self.max_staleness = counters[4];
+        self.flushed_updates = counters[5];
+        self.pjrt_calls = counters[6];
+        self.rounds = counters[7];
+        self.fault_cursor = counters[8] as usize;
+        self.crashes = counters[9];
+        self.rejoins = counters[10];
+        self.evictions = counters[11];
+        self.degraded_syncs = counters[12];
+        self.evict_charge = counters[13] != 0;
+        self.detector.restore_syncs_seen(counters[14]);
+        self.detector.anomalies_flagged = counters[15];
+        self.detector.rollbacks = counters[16];
+        self.comm.ops = counters[17] as usize;
+        self.comm.bytes = counters[18] as usize;
+        self.comm.seconds = scalars[1];
+
+        // Derived state: the fault caps follow liveness; transient
+        // per-round scratch starts clean.
+        for (cap, &a) in self.fault_caps.iter_mut().zip(self.alive.iter()) {
+            *cap = if a { u64::MAX } else { 0 };
+        }
+        self.pending_crash.clear();
+        self.events.clear();
+        self.group_buf.clear();
+        self.member_buf.clear();
+        Ok(())
+    }
+}

@@ -154,10 +154,21 @@ impl CommPlan {
 }
 
 /// Barrier synchronization at a step-synced outer boundary (Alg. 1
-/// lines 7-9 / Alg. 2): every replica participates; clocks rendezvous.
+/// lines 7-9 / Alg. 2): every **live** replica participates; member
+/// clocks rendezvous. Without a fault plan every replica is alive and
+/// this is the historical full-cluster barrier, bitwise. With a crashed
+/// member the rendezvous degrades instead of aborting: the survivors
+/// wait out `TrainConfig::evict_timeout` once (the round the crash is
+/// detected), evict the victim from membership and sync without it —
+/// its pending contribution is dropped, its clock stays frozen.
 pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
     let n = t.replicas.len();
     t.scratch.ensure_replicas(n);
+
+    let mut members = std::mem::take(&mut t.member_buf);
+    members.clear();
+    members.extend((0..n).filter(|&j| t.alive[j]));
+    let degraded = members.len() < n;
 
     let mut rollbacks = 0u64;
     if t.cfg.spec.layerwise() {
@@ -170,11 +181,18 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
                 t.comm.record(bytes, secs);
             }
         }
-        let members = std::mem::take(&mut t.all_members);
         let res = layerwise_sync(t, &members);
-        t.all_members = members;
-        rollbacks = res?;
+        rollbacks = match res {
+            Ok(r) => r,
+            Err(e) => {
+                t.member_buf = members;
+                return Err(e);
+            }
+        };
     } else {
+        // Flat strategies cannot carry a fault plan (`Trainer::new`
+        // rejects the combination), so membership is always full here.
+        debug_assert_eq!(members.len(), n);
         // Full-shard all-reduce per mesh row (uniform-averaging methods).
         for &(bytes, secs) in &t.plan.sync_allreduce {
             t.comm.record(bytes, secs);
@@ -209,19 +227,31 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
         }
     }
 
-    // Clock barrier + exposed sync cost.
-    let max_clock = t
-        .replicas
+    // Clock barrier + exposed sync cost over the members; a dead
+    // replica's clock stays frozen where it crashed. The round a crash
+    // is detected, the survivors additionally pay the evict timeout —
+    // the rendezvous grace period before the victim is declared dead.
+    let max_clock = members
         .iter()
-        .map(|r| r.clock)
+        .map(|&j| t.replicas[j].clock)
         .fold(0.0f64, f64::max);
-    let after = max_clock + t.plan.sync_exposed;
-    for r in &mut t.replicas {
-        r.clock = after;
+    let timeout = if t.evict_charge { t.cfg.evict_timeout } else { 0.0 };
+    t.evict_charge = false;
+    let after = max_clock + timeout + t.plan.sync_exposed;
+    for &j in members.iter() {
+        t.replicas[j].clock = after;
     }
-    t.sim_time = after;
+    // Monotonic frontier: `after` can only trail `sim_time` when a
+    // previously-faster replica crashed and froze ahead of the pack.
+    if after > t.sim_time {
+        t.sim_time = after;
+    }
+    if degraded {
+        t.degraded_syncs += 1;
+    }
 
-    note_sync_all(t, after);
+    note_sync_members(t, &members, after);
+    t.member_buf = members;
     if t.cfg.spec.layerwise() {
         t.detector.advance();
     }
@@ -260,6 +290,11 @@ pub(super) fn anchor_sync(t: &mut Trainer, members: &[usize]) -> Result<()> {
     }
     if after > t.sim_time {
         t.sim_time = after;
+    }
+    // Degradation bookkeeping: a PALSGD partial window is by design,
+    // but syncing while a peer is dead is degraded membership.
+    if t.alive.iter().any(|&a| !a) {
+        t.degraded_syncs += 1;
     }
 
     note_sync_members(t, members, after);
@@ -452,16 +487,9 @@ pub(super) fn flush_pending(t: &mut Trainer) -> Result<()> {
     Ok(())
 }
 
-/// Staleness + timeline bookkeeping for a full-cluster sync.
-fn note_sync_all(t: &mut Trainer, clock: f64) {
-    let v = t.anchor_version;
-    for j in 0..t.replicas.len() {
-        note_one(t, j, v, clock);
-    }
-    t.anchor_version = v + 1;
-}
-
-/// Staleness + timeline bookkeeping for one anchor-sync group.
+/// Staleness + timeline bookkeeping for one sync's member set (the
+/// whole live cluster at a barrier, one event group on the anchor
+/// path).
 fn note_sync_members(t: &mut Trainer, members: &[usize], clock: f64) {
     let v = t.anchor_version;
     for &j in members {

@@ -57,6 +57,13 @@ pub(super) struct RoundCtx<'a> {
     /// Steps per lane: the exact count in fixed-step mode, the safety
     /// cap (4τ) in deadline mode.
     pub step_cap: u64,
+    /// Per-replica fault budget (`Trainer::fault_caps`): `u64::MAX`
+    /// when healthy, a crash event's `after_steps` for this round's
+    /// victims, 0 for dead replicas. The effective cap for lane `j` is
+    /// `step_cap.min(caps[j])` — a zero budget means zero steps, even
+    /// in deadline mode (the "at least one step" rule applies only to
+    /// live replicas).
+    pub caps: &'a [u64],
     /// Completed sync rounds at round start (poison windows key on it).
     pub syncs: u64,
 }
@@ -99,14 +106,15 @@ impl Lane {
     /// steps, or — in deadline mode — until the replica's clock passes
     /// the τ_time deadline (at least one step, at most the cap).
     pub fn run_round(&mut self, j: usize, r: &mut Replica, ctx: &RoundCtx) -> Result<()> {
+        let cap = ctx.step_cap.min(ctx.caps[j]);
         match ctx.deadline {
             Some(deadline) => {
-                while (r.clock < deadline || self.steps == 0) && self.steps < ctx.step_cap {
+                while (r.clock < deadline || self.steps == 0) && self.steps < cap {
                     self.inner_step(j, r, ctx)?;
                 }
             }
             None => {
-                for _ in 0..ctx.step_cap {
+                for _ in 0..cap {
                     self.inner_step(j, r, ctx)?;
                 }
             }

@@ -221,6 +221,45 @@ impl AnomalyDetector {
     pub fn syncs_seen(&self) -> u64 {
         self.syncs_seen
     }
+
+    /// Export the per-(replica, module) EMA z-test state for
+    /// checkpointing: `(means, variances, initialized-flags)`, each of
+    /// length `replicas * modules` in `stats` index order.
+    pub fn export_state(&self) -> (Vec<f64>, Vec<f64>, Vec<u8>) {
+        let mut mean = Vec::with_capacity(self.stats.len());
+        let mut var = Vec::with_capacity(self.stats.len());
+        let mut init = Vec::with_capacity(self.stats.len());
+        for s in &self.stats {
+            mean.push(s.mean);
+            var.push(s.var);
+            init.push(s.initialized as u8);
+        }
+        (mean, var, init)
+    }
+
+    /// Restore the EMA state written by [`Self::export_state`]. Lengths
+    /// must match the detector's current `replicas * modules` layout
+    /// (resize before importing when the replica count changed).
+    pub fn import_state(&mut self, mean: &[f64], var: &[f64], init: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            mean.len() == self.stats.len()
+                && var.len() == self.stats.len()
+                && init.len() == self.stats.len(),
+            "detector state length {} != expected {}",
+            mean.len(),
+            self.stats.len()
+        );
+        for (i, s) in self.stats.iter_mut().enumerate() {
+            *s = EmaStat { mean: mean[i], var: var[i], initialized: init[i] != 0 };
+        }
+        Ok(())
+    }
+
+    /// Restore the warmup/round counter alongside
+    /// [`Self::import_state`] (the z-test warmup gate keys on it).
+    pub fn restore_syncs_seen(&mut self, syncs_seen: u64) {
+        self.syncs_seen = syncs_seen;
+    }
 }
 
 /// Result of combining one module's pseudo gradients.

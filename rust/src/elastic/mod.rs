@@ -10,8 +10,10 @@
 //! only rescales at round boundaries — by then every pending sync event
 //! of the event-driven A-EDiT path has been processed (the per-round
 //! event queue drains before `run_round` returns) and `rescale()`
-//! re-aligns all replica clocks to the current simulated time (it also
-//! defensively clears the queue and debug-asserts it was empty).
+//! re-aligns all replica clocks to the current simulated time (it
+//! errors out if the queue is not empty). Mid-round membership changes
+//! — live evict on crash, live join — are driven by a fault plan
+//! instead (see [`crate::fault`]).
 
 use anyhow::Result;
 
@@ -43,6 +45,18 @@ pub struct ElasticPoint {
 /// PPL checkpoints (one per phase end, plus periodic samples recorded
 /// in the trainer's own tracker).
 pub fn run_schedule(trainer: &mut Trainer, phases: &[Phase]) -> Result<Vec<ElasticPoint>> {
+    // The phase loop retargets `total_steps` so each phase's rounds
+    // stop at its boundary (and τ truncation + the LR-schedule clamp see
+    // the phase end). That is a *loan*, not a config change: restore the
+    // configured value afterwards — and on early error — so a schedule
+    // never permanently clobbers the trainer's configuration.
+    let configured_total = trainer.cfg.total_steps;
+    let result = run_phases(trainer, phases);
+    trainer.cfg.total_steps = configured_total;
+    result
+}
+
+fn run_phases(trainer: &mut Trainer, phases: &[Phase]) -> Result<Vec<ElasticPoint>> {
     let mut points = Vec::new();
     for phase in phases {
         trainer.rescale(phase.replicas)?;

@@ -1,0 +1,295 @@
+//! Chaos harness — the CI leg behind `edit-train chaos` and the bitwise
+//! kill/restore acceptance check of `tests/fault_recovery.rs`.
+//!
+//! For every preset × sharding mode × seed it runs the same seeded
+//! fault schedule ([`FaultPlan::random`]: crash+rejoin pairs, never
+//! replica 0) twice:
+//!
+//!  * **run A** — uninterrupted, start to finish;
+//!  * **run B** — killed at the midpoint round, checkpointed
+//!    ([`Trainer::save_checkpoint`]), restored into a *fresh* trainer
+//!    ([`Trainer::restore_checkpoint`]) and run to completion.
+//!
+//! The two must agree **bitwise**: every replica's params/m/v/clock,
+//! the anchor, the loss and validation traces, the simulated clock and
+//! the comm ledger ([`state_mismatches`] diffs the public surface), and
+//! — the stronger check — the final checkpoint files themselves must be
+//! byte-identical, which also covers outer momentum, the anomaly
+//! detector and every internal counter. Rows land in
+//! `results/fault_recovery.csv`; any mismatch fails the run.
+
+use super::ExpOpts;
+use crate::collectives::{CostModel, Topology};
+use crate::coordinator::{Method, TrainConfig, Trainer};
+use crate::data::{Corpus, Quality};
+use crate::fault::FaultPlan;
+use crate::metrics::{format_g, CsvWriter};
+use crate::runtime::{Engine, Manifest};
+
+use anyhow::Result;
+
+/// The presets the chaos leg exercises: the two EDiT variants plus the
+/// PALSGD baseline (a different sync/trigger axis combination).
+pub const CHAOS_METHODS: [Method; 3] = [Method::Edit, Method::AEdit, Method::Palsgd];
+
+/// Build a chaos-harness trainer on the deterministic synthetic stub
+/// model: preset `method`, ZeRO-1 sharding forced off when `shard` is
+/// false (and left at the spec's axis when true), warmup disabled so
+/// the fault plan's round keys start at round 0.
+pub fn chaos_trainer(
+    opts: &ExpOpts,
+    method: Method,
+    shard: bool,
+    seed: u64,
+    plan: FaultPlan,
+) -> Result<Trainer> {
+    let engine = Engine::synthetic(Manifest::synthetic_fallback("chaos"));
+    let corpus = Corpus::new(engine.manifest.model.vocab_size, seed, Quality::clean());
+    let label = format!("{}{}", method.name(), if shard { "" } else { "+noshard" });
+    let mut cfg = TrainConfig::from_spec(method.spec(), label, opts.mesh, opts.steps);
+    cfg.tau = opts.tau;
+    cfg.tau_time = opts.tau as f64 * cfg.base_step_time;
+    cfg.t_warm = 0;
+    cfg.seed = seed;
+    cfg.eval_every_syncs = 2;
+    cfg.shard_outer = cfg.shard_outer && shard;
+    cfg.fault_plan = plan;
+    Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100()))
+}
+
+fn first_f32_diff(a: &[f32], b: &[f32]) -> Option<usize> {
+    if a.len() != b.len() {
+        return Some(a.len().min(b.len()));
+    }
+    (0..a.len()).find(|&i| a[i].to_bits() != b[i].to_bits())
+}
+
+fn trace_eq(a: &[(u64, f64)], b: &[(u64, f64)]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.0 == y.0 && x.1.to_bits() == y.1.to_bits())
+}
+
+/// Diff the publicly visible trainer state of two runs, bitwise. Empty
+/// means indistinguishable; each entry names one divergent field (the
+/// diagnostic the CSV's `bitwise_ok=0` rows point at).
+pub fn state_mismatches(a: &Trainer, b: &Trainer) -> Vec<String> {
+    let mut out = Vec::new();
+    if a.global_step != b.global_step {
+        out.push(format!("global_step: {} vs {}", a.global_step, b.global_step));
+    }
+    if a.syncs != b.syncs {
+        out.push(format!("syncs: {} vs {}", a.syncs, b.syncs));
+    }
+    if a.rounds() != b.rounds() {
+        out.push(format!("rounds: {} vs {}", a.rounds(), b.rounds()));
+    }
+    if a.sim_time.to_bits() != b.sim_time.to_bits() {
+        out.push(format!("sim_time: {} vs {}", a.sim_time, b.sim_time));
+    }
+    if let Some(i) = first_f32_diff(&a.anchor, &b.anchor) {
+        out.push(format!("anchor diverges at [{i}]"));
+    }
+    if a.alive() != b.alive() {
+        out.push(format!("alive: {:?} vs {:?}", a.alive(), b.alive()));
+    }
+    if a.pending_updates() != b.pending_updates() {
+        out.push(format!(
+            "pending updates: {} vs {}",
+            a.pending_updates(),
+            b.pending_updates()
+        ));
+    }
+    if a.replicas.len() != b.replicas.len() {
+        out.push(format!("replica count: {} vs {}", a.replicas.len(), b.replicas.len()));
+    } else {
+        for (j, (ra, rb)) in a.replicas.iter().zip(&b.replicas).enumerate() {
+            if let Some(i) = first_f32_diff(&ra.params, &rb.params) {
+                out.push(format!("replica {j} params diverge at [{i}]"));
+            }
+            if let Some(i) = first_f32_diff(&ra.m, &rb.m) {
+                out.push(format!("replica {j} adam m diverges at [{i}]"));
+            }
+            if let Some(i) = first_f32_diff(&ra.v, &rb.v) {
+                out.push(format!("replica {j} adam v diverges at [{i}]"));
+            }
+            if ra.adam_t != rb.adam_t {
+                out.push(format!("replica {j} adam_t: {} vs {}", ra.adam_t, rb.adam_t));
+            }
+            if ra.clock.to_bits() != rb.clock.to_bits() {
+                out.push(format!("replica {j} clock: {} vs {}", ra.clock, rb.clock));
+            }
+            if ra.inner_steps != rb.inner_steps {
+                out.push(format!(
+                    "replica {j} inner_steps: {} vs {}",
+                    ra.inner_steps, rb.inner_steps
+                ));
+            }
+            if ra.losses.len() != rb.losses.len()
+                || ra
+                    .losses
+                    .iter()
+                    .zip(&rb.losses)
+                    .any(|(x, y)| x.0 != y.0 || x.1.to_bits() != y.1.to_bits())
+            {
+                out.push(format!("replica {j} loss window diverges"));
+            }
+        }
+    }
+    if !trace_eq(&a.tracker.losses, &b.tracker.losses) {
+        out.push("tracker loss trace diverges".into());
+    }
+    if !trace_eq(&a.tracker.val_ppl, &b.tracker.val_ppl) {
+        out.push("tracker val-ppl trace diverges".into());
+    }
+    if a.comm.ops != b.comm.ops || a.comm.bytes != b.comm.bytes {
+        out.push(format!(
+            "comm ledger: {} ops / {} B vs {} ops / {} B",
+            a.comm.ops, a.comm.bytes, b.comm.ops, b.comm.bytes
+        ));
+    }
+    if a.comm.seconds.to_bits() != b.comm.seconds.to_bits() {
+        out.push(format!("comm seconds: {} vs {}", a.comm.seconds, b.comm.seconds));
+    }
+    let (sa, sb) = (a.summary(), b.summary());
+    for (name, x, y) in [
+        ("crashes", sa.crashes, sb.crashes),
+        ("rejoins", sa.rejoins, sb.rejoins),
+        ("evictions", sa.evictions, sb.evictions),
+        ("degraded_syncs", sa.degraded_syncs, sb.degraded_syncs),
+        ("max_staleness", sa.max_staleness, sb.max_staleness),
+        ("flushed_updates", sa.flushed_updates, sb.flushed_updates),
+        ("anomalies", sa.anomalies, sb.anomalies),
+        ("rollbacks", sa.rollbacks, sb.rollbacks),
+    ] {
+        if x != y {
+            out.push(format!("summary {name}: {x} vs {y}"));
+        }
+    }
+    out
+}
+
+/// One kill/restore pair under a given fault plan. Runs A start to
+/// finish, runs B to the midpoint of A's round count, checkpoints,
+/// restores into a fresh trainer and finishes. Returns the finished
+/// pair plus the kill round (for reporting).
+pub fn kill_restore_pair(
+    opts: &ExpOpts,
+    method: Method,
+    shard: bool,
+    seed: u64,
+    plan: &FaultPlan,
+    ckpt: &std::path::Path,
+) -> Result<(Trainer, Trainer, u64)> {
+    let mut ta = chaos_trainer(opts, method, shard, seed, plan.clone())?;
+    ta.run()?;
+    let kill = (ta.rounds() / 2).max(1);
+
+    let mut tb = chaos_trainer(opts, method, shard, seed, plan.clone())?;
+    while tb.rounds() < kill && tb.global_step < tb.cfg.total_steps {
+        tb.run_round()?;
+    }
+    tb.save_checkpoint(ckpt)?;
+    // The restore target is a *fresh* trainer: nothing of run B's
+    // in-memory state survives except what the checkpoint carries.
+    let mut tb2 = chaos_trainer(opts, method, shard, seed, plan.clone())?;
+    tb2.restore_checkpoint(ckpt)?;
+    tb2.run()?;
+    Ok((ta, tb2, kill))
+}
+
+/// The `edit-train chaos` entrypoint: `seeds` schedules per preset ×
+/// sharding mode, `pairs` crash+rejoin pairs per schedule. Writes
+/// `results/fault_recovery.csv` and fails if any pair is not bitwise
+/// identical after restore.
+pub fn run_chaos(opts: &ExpOpts, seeds: u64, pairs: usize) -> Result<()> {
+    let ckpt_dir = opts.results.join("checkpoints");
+    let mut csv = CsvWriter::create(
+        opts.result_path("fault_recovery.csv"),
+        &[
+            "method",
+            "shard_outer",
+            "seed",
+            "events",
+            "kill_round",
+            "crashes",
+            "rejoins",
+            "evictions",
+            "degraded_syncs",
+            "max_staleness",
+            "final_loss",
+            "bitwise_ok",
+        ],
+    )?;
+    let rounds_est = (opts.steps / opts.tau.max(1)).max(3);
+    let mut failures = 0usize;
+    for method in CHAOS_METHODS {
+        for shard in [true, false] {
+            for s in 0..seeds {
+                let seed = opts.seed + s;
+                let plan = FaultPlan::random(seed, opts.mesh.replicas, rounds_est, pairs);
+                let tag = format!(
+                    "{}-{}-s{}",
+                    method.name(),
+                    if shard { "shard" } else { "noshard" },
+                    seed
+                );
+                let ckpt = ckpt_dir.join(format!("chaos-{tag}.bin"));
+                let (ta, tb, kill) = kill_restore_pair(opts, method, shard, seed, &plan, &ckpt)?;
+
+                let mut diffs = state_mismatches(&ta, &tb);
+                // The stronger check: the final checkpoints must be
+                // byte-identical too (covers outer momentum, detector
+                // state and internal counters the diff can't see).
+                let fa = ckpt_dir.join(format!("chaos-{tag}-final-a.bin"));
+                let fb = ckpt_dir.join(format!("chaos-{tag}-final-b.bin"));
+                ta.save_checkpoint(&fa)?;
+                tb.save_checkpoint(&fb)?;
+                if std::fs::read(&fa)? != std::fs::read(&fb)? {
+                    diffs.push("final checkpoint bytes differ".into());
+                }
+
+                let sum = tb.summary();
+                let ok = diffs.is_empty();
+                failures += usize::from(!ok);
+                println!(
+                    "chaos {tag}: rounds={} kill={} crashes={} rejoins={} evictions={} \
+                     degraded={} loss={} bitwise={}",
+                    ta.rounds(),
+                    kill,
+                    sum.crashes,
+                    sum.rejoins,
+                    sum.evictions,
+                    sum.degraded_syncs,
+                    format_g(sum.final_loss),
+                    if ok { "ok" } else { "MISMATCH" },
+                );
+                for d in &diffs {
+                    eprintln!("  mismatch: {d}");
+                }
+                csv.row(&[
+                    method.name().to_string(),
+                    (shard as u8).to_string(),
+                    seed.to_string(),
+                    plan.describe().replace(',', ";"),
+                    kill.to_string(),
+                    sum.crashes.to_string(),
+                    sum.rejoins.to_string(),
+                    sum.evictions.to_string(),
+                    sum.degraded_syncs.to_string(),
+                    sum.max_staleness.to_string(),
+                    format_g(sum.final_loss),
+                    (ok as u8).to_string(),
+                ])?;
+            }
+        }
+    }
+    csv.flush()?;
+    println!("fault recovery -> {}", opts.result_path("fault_recovery.csv").display());
+    anyhow::ensure!(
+        failures == 0,
+        "{failures} kill/restore pair(s) were not bitwise identical after restore"
+    );
+    Ok(())
+}

@@ -8,8 +8,11 @@
 //!   ([`convergence::ablation_rows`]);
 //! * [`throughput`]  — Table 2 tokens/s + TFLOPS + OOM grid, Fig. 5 /
 //!   Table 6 straggler & bandwidth scenarios, Fig. 9 sync timelines;
-//! * [`scaling`]     — Fig. 6a/b LR-transfer sweep, Fig. 6c elastic runs.
+//! * [`scaling`]     — Fig. 6a/b LR-transfer sweep, Fig. 6c elastic runs;
+//! * [`chaos`]       — seeded fault schedules + kill/restore bitwise
+//!   replay (the `fault_recovery.csv` CI leg).
 
+pub mod chaos;
 pub mod convergence;
 pub mod scaling;
 pub mod throughput;

@@ -1,0 +1,339 @@
+//! Deterministic fault injection for the elastic runtime.
+//!
+//! A [`FaultPlan`] is a seed-keyed schedule of worker **crash**,
+//! **hang** and **rejoin** events, keyed on the trainer's local-round
+//! counter and consumed by the round driver (`Trainer::local_round`)
+//! before the lanes run. Every event is resolved from the plan — never
+//! from wall-clock time or an ambient RNG — so a faulty run is exactly
+//! as reproducible as a clean one: same seed + same plan ⇒ bitwise
+//! identical trajectory, which is what lets `tests/fault_recovery.rs`
+//! assert kill-at-round-k + restore against an uninterrupted run.
+//!
+//! Semantics (per event, applied at the *start* of the named round):
+//!
+//!  * `Crash { after_steps }` — the replica runs at most `after_steps`
+//!    inner steps of the round (0 = dies immediately), then drops out:
+//!    its pending contribution is excluded from the round's sync
+//!    (A-EDiT: a per-group membership change; EDiT: the barrier falls
+//!    back to a timeout-then-evict rendezvous priced at
+//!    `TrainConfig::evict_timeout`), its clock freezes and it takes no
+//!    further steps until a `Join` revives it.
+//!  * `Hang { secs }` — a transient stall: the replica's clock jumps by
+//!    `secs` before the round runs. Step-synced peers absorb the delay
+//!    at the barrier; A-EDiT peers do not (no global barrier).
+//!  * `Join` — revives a crashed replica, or (when targeting index
+//!    `== replicas`) live-appends a brand-new one. Either way the
+//!    joiner adopts the current anchor, zeroed inner-optimizer state
+//!    and the present simulated clock; a revived replica's accrued
+//!    anchor staleness is folded into `RunSummary::max_staleness`.
+//!
+//! Plans come from the `--fault-plan` CLI grammar ([`FaultPlan::parse`])
+//! or the seeded generator ([`FaultPlan::random`]) used by the chaos CI
+//! leg. Replica 0 is never a generated victim, so a generated plan can
+//! never crash the whole cluster.
+
+use crate::util::prng::{mix, Rng};
+
+/// What happens to the targeted replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Drop out after at most `after_steps` inner steps of the round.
+    Crash { after_steps: u64 },
+    /// Clock jumps by `secs` (transient stall) before the round runs.
+    Hang { secs: f64 },
+    /// Revive a crashed replica, or live-append when the target index
+    /// equals the current replica count.
+    Join,
+}
+
+/// One scheduled fault: `kind` applied to `replica` at the start of
+/// local round `round` (the trainer's post-warmup round counter).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub round: u64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of fault events, sorted by round (stable:
+/// same-round events keep their spec order, so `crash@3:1,join@3:2`
+/// applies left to right).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan from explicit events (sorted by round, stably).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.round);
+        Self { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Parse the `--fault-plan` grammar: comma-separated clauses
+    ///
+    /// ```text
+    /// crash@ROUND:REPLICA        crash at round start (0 steps taken)
+    /// crash@ROUND:REPLICA+STEPS  crash STEPS inner steps into the round
+    /// hang@ROUND:REPLICA:SECS    clock stall of SECS simulated seconds
+    /// join@ROUND:REPLICA         revive (or live-append at index = N)
+    /// random:PAIRS[:ROUNDS]      PAIRS seeded crash+rejoin pairs drawn
+    ///                            over the first ROUNDS rounds (default
+    ///                            16), keyed on the run seed
+    /// ```
+    ///
+    /// `seed` keys the `random:` clause; `replicas` bounds its victims.
+    pub fn parse(spec: &str, seed: u64, replicas: usize) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some(rest) = clause.strip_prefix("random:") {
+                let mut it = rest.split(':');
+                let pairs: usize = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("bad pair count in '{clause}'"))?;
+                let rounds: u64 = match it.next() {
+                    Some(s) => s.parse().map_err(|_| format!("bad round count in '{clause}'"))?,
+                    None => 16,
+                };
+                if it.next().is_some() {
+                    return Err(format!("trailing fields in '{clause}'"));
+                }
+                events.extend(Self::random(seed, replicas, rounds, pairs).events);
+                continue;
+            }
+            let (kind, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("expected 'kind@round:replica' in '{clause}'"))?;
+            let mut fields = rest.split(':');
+            let round_field = fields
+                .next()
+                .ok_or_else(|| format!("missing round in '{clause}'"))?;
+            let round: u64 = round_field
+                .parse()
+                .map_err(|_| format!("bad round '{round_field}' in '{clause}'"))?;
+            let replica_field = fields
+                .next()
+                .ok_or_else(|| format!("missing replica in '{clause}'"))?;
+            match kind {
+                "crash" => {
+                    let (rep, steps) = match replica_field.split_once('+') {
+                        Some((r, s)) => (
+                            r,
+                            s.parse::<u64>()
+                                .map_err(|_| format!("bad step count in '{clause}'"))?,
+                        ),
+                        None => (replica_field, 0),
+                    };
+                    let replica: usize = rep
+                        .parse()
+                        .map_err(|_| format!("bad replica '{rep}' in '{clause}'"))?;
+                    if fields.next().is_some() {
+                        return Err(format!("trailing fields in '{clause}'"));
+                    }
+                    events.push(FaultEvent {
+                        round,
+                        replica,
+                        kind: FaultKind::Crash { after_steps: steps },
+                    });
+                }
+                "hang" => {
+                    let replica: usize = replica_field
+                        .parse()
+                        .map_err(|_| format!("bad replica '{replica_field}' in '{clause}'"))?;
+                    let secs_field = fields
+                        .next()
+                        .ok_or_else(|| format!("missing seconds in '{clause}'"))?;
+                    let secs: f64 = secs_field
+                        .parse()
+                        .map_err(|_| format!("bad seconds '{secs_field}' in '{clause}'"))?;
+                    if !(secs >= 0.0) || fields.next().is_some() {
+                        return Err(format!("bad hang clause '{clause}'"));
+                    }
+                    events.push(FaultEvent { round, replica, kind: FaultKind::Hang { secs } });
+                }
+                "join" => {
+                    let replica: usize = replica_field
+                        .parse()
+                        .map_err(|_| format!("bad replica '{replica_field}' in '{clause}'"))?;
+                    if fields.next().is_some() {
+                        return Err(format!("trailing fields in '{clause}'"));
+                    }
+                    events.push(FaultEvent { round, replica, kind: FaultKind::Join });
+                }
+                other => return Err(format!("unknown fault kind '{other}' in '{clause}'")),
+            }
+        }
+        Ok(Self::new(events))
+    }
+
+    /// Seeded crash+rejoin pairs for the chaos CI leg: `pairs` victims
+    /// cycle over replicas `1..replicas` (never 0 — at least one
+    /// survivor is guaranteed), each crashed partway into a round drawn
+    /// from `[1, rounds)` and revived 1-3 rounds later. Windows on the
+    /// same victim never overlap. Pure function of `(seed, replicas,
+    /// rounds, pairs)`.
+    pub fn random(seed: u64, replicas: usize, rounds: u64, pairs: usize) -> Self {
+        let mut events = Vec::new();
+        if replicas < 2 || rounds < 3 {
+            return Self::new(events);
+        }
+        let mut rng = Rng::new(mix(seed ^ 0x00FA_0175, 0));
+        // Earliest round each victim is free again (its last join + 1).
+        let mut next_free = vec![1u64; replicas];
+        for i in 0..pairs {
+            let victim = 1 + i % (replicas - 1);
+            let crash = next_free[victim] + rng.below(3);
+            if crash + 2 > rounds {
+                continue; // no room left for this victim's window
+            }
+            let after_steps = rng.below(3);
+            // `crash + 2 <= rounds` above guarantees room for the join.
+            let join = (crash + 1 + rng.below(3)).min(rounds - 1);
+            events.push(FaultEvent {
+                round: crash,
+                replica: victim,
+                kind: FaultKind::Crash { after_steps },
+            });
+            events.push(FaultEvent { round: join, replica: victim, kind: FaultKind::Join });
+            next_free[victim] = join + 1;
+        }
+        Self::new(events)
+    }
+
+    /// Human-readable one-line rendering (logs, CSV rows).
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            match e.kind {
+                FaultKind::Crash { after_steps } if after_steps > 0 => {
+                    out.push_str(&format!("crash@{}:{}+{}", e.round, e.replica, after_steps));
+                }
+                FaultKind::Crash { .. } => {
+                    out.push_str(&format!("crash@{}:{}", e.round, e.replica));
+                }
+                FaultKind::Hang { secs } => {
+                    out.push_str(&format!("hang@{}:{}:{}", e.round, e.replica, secs));
+                }
+                FaultKind::Join => out.push_str(&format!("join@{}:{}", e.round, e.replica)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_explicit_clauses() {
+        let p = FaultPlan::parse("crash@3:1, join@6:1, hang@2:0:4.5, crash@4:2+3", 42, 4).unwrap();
+        assert_eq!(p.events().len(), 4);
+        // Sorted by round, stable.
+        assert_eq!(p.events()[0], FaultEvent {
+            round: 2,
+            replica: 0,
+            kind: FaultKind::Hang { secs: 4.5 },
+        });
+        assert_eq!(p.events()[1], FaultEvent {
+            round: 3,
+            replica: 1,
+            kind: FaultKind::Crash { after_steps: 0 },
+        });
+        assert_eq!(p.events()[2], FaultEvent {
+            round: 4,
+            replica: 2,
+            kind: FaultKind::Crash { after_steps: 3 },
+        });
+        assert_eq!(p.events()[3], FaultEvent { round: 6, replica: 1, kind: FaultKind::Join });
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "crash3:1",
+            "crash@x:1",
+            "crash@3:y",
+            "hang@3:1",
+            "hang@3:1:-2",
+            "explode@3:1",
+            "join@3:1:9",
+            "random:x",
+        ] {
+            assert!(FaultPlan::parse(bad, 42, 4).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        assert!(FaultPlan::parse("", 42, 4).unwrap().is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn random_plan_is_seed_deterministic_and_spares_replica_zero() {
+        let a = FaultPlan::random(7, 4, 12, 3);
+        let b = FaultPlan::random(7, 4, 12, 3);
+        assert_eq!(a, b);
+        let c = FaultPlan::random(8, 4, 12, 3);
+        assert_ne!(a, c, "different seeds should differ");
+        assert!(!a.is_empty());
+        assert!(a.events().iter().all(|e| e.replica != 0));
+        // Every crash has a later join for the same victim.
+        for e in a.events() {
+            if let FaultKind::Crash { .. } = e.kind {
+                assert!(a.events().iter().any(|j| j.replica == e.replica
+                    && j.kind == FaultKind::Join
+                    && j.round > e.round));
+            }
+        }
+    }
+
+    #[test]
+    fn random_windows_never_overlap_per_victim() {
+        let p = FaultPlan::random(3, 3, 40, 10);
+        // Walk each victim's events in round order: must alternate
+        // crash, join, crash, join...
+        for victim in 1..3 {
+            let mut down = false;
+            for e in p.events().iter().filter(|e| e.replica == victim) {
+                match e.kind {
+                    FaultKind::Crash { .. } => {
+                        assert!(!down, "crash while already down");
+                        down = true;
+                    }
+                    FaultKind::Join => {
+                        assert!(down, "join while alive");
+                        down = false;
+                    }
+                    FaultKind::Hang { .. } => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_degenerate_configs_are_empty() {
+        assert!(FaultPlan::random(7, 1, 20, 3).is_empty(), "single replica: no victims");
+        assert!(FaultPlan::random(7, 4, 2, 3).is_empty(), "too few rounds");
+    }
+
+    #[test]
+    fn describe_roundtrips_through_parse() {
+        let p = FaultPlan::parse("crash@3:1+2,join@6:1,hang@2:0:4.5", 42, 4).unwrap();
+        let q = FaultPlan::parse(&p.describe(), 42, 4).unwrap();
+        assert_eq!(p, q);
+    }
+}

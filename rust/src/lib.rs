@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod elastic;
 pub mod experiments;
+pub mod fault;
 pub mod metrics;
 pub mod runtime;
 pub mod simulator;

@@ -20,7 +20,8 @@ use edit_train::coordinator::{
     LrSchedule, MeshSpec, Method, MethodSpec, Straggler, TrainConfig, Trainer,
 };
 use edit_train::data::{Corpus, Quality};
-use edit_train::experiments::{convergence, scaling, throughput, ExpOpts};
+use edit_train::experiments::{chaos, convergence, scaling, throughput, ExpOpts};
+use edit_train::fault::FaultPlan;
 use edit_train::metrics::format_g;
 use edit_train::runtime::{Engine, Manifest};
 use edit_train::util::cfg::{Config, Value};
@@ -39,7 +40,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: edit-train <train|sweep|simulate|ablation|elastic|probe|info> [options]
+    "usage: edit-train <train|sweep|simulate|ablation|elastic|chaos|probe|info> [options]
   common: --artifacts DIR --results DIR --model test|petite|tiny|mini
           --mesh MxN --steps N --tau N --seed N --config FILE --set k=v,...
   train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit|palsgd
@@ -49,10 +50,15 @@ fn usage() -> &'static str {
             --lr X --noise P --straggler none|random:LAG|consistent:LAG[:REPLICA]
             --threads N --timeline FILE.csv --out curves.csv --log
             --no-shard-outer (disable ZeRO-1 outer-state sharding)
+            --fault-plan 'crash@R:N[+S],hang@R:N:SECS,join@R:N,random:PAIRS[:ROUNDS]'
+            --evict-timeout SECS --checkpoint-every ROUNDS --checkpoint-dir DIR
+            --restore FILE.bin (resume from a checkpoint before training)
   sweep:    --exp fig4|table1|fig8|ablations [--noisy] [--methods a,b,c]
   simulate: --exp table2|fig5|fig5-trainer|fig9|measured
   ablation: (fig7)
   elastic:  --exp fig6ab|fig6c --phase-steps N --lr X
+  chaos:    --seeds N --pairs N (seeded fault schedules; kill/restore
+            bitwise replay -> results/fault_recovery.csv)
   info:     [--model NAME]"
 }
 
@@ -110,6 +116,7 @@ fn run(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args, &opts),
         Some("ablation") => convergence::fig7(&opts),
         Some("elastic") => cmd_elastic(args, &cfg, &opts),
+        Some("chaos") => chaos::run_chaos(&opts, args.u64("seeds", 2), args.usize("pairs", 2)),
         Some("probe") => cmd_probe(args, &opts),
         Some("info") => cmd_info(&opts),
         _ => {
@@ -218,6 +225,18 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
         }
         _ => Straggler::None,
     };
+    // Fault-tolerance surface: a deterministic fault schedule, the
+    // barrier evict grace period, and round-boundary checkpointing.
+    if let Some(spec) = args.opt("fault-plan") {
+        tc.fault_plan = FaultPlan::parse(spec, opts.seed, opts.mesh.replicas)
+            .map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?;
+    }
+    tc.evict_timeout = args.f64("evict-timeout", tc.evict_timeout);
+    tc.checkpoint_every = args.u64("checkpoint-every", 0);
+    tc.checkpoint_dir = args
+        .opt("checkpoint-dir")
+        .map(std::path::PathBuf::from)
+        .or_else(|| (tc.checkpoint_every > 0).then(|| opts.results.join("checkpoints")));
 
     println!(
         "training: method={} model={} mesh={}x{} steps={} tau={} params={}",
@@ -231,6 +250,14 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
     );
     let mut trainer =
         Trainer::new(engine, corpus, tc, CostModel::new(Topology::a100()))?;
+    if let Some(path) = args.opt("restore") {
+        trainer.restore_checkpoint(std::path::Path::new(path))?;
+        println!(
+            "restored {path} (round {}, step {})",
+            trainer.rounds(),
+            trainer.global_step
+        );
+    }
     let start = std::time::Instant::now();
     let summary = trainer.run()?;
     let host = start.elapsed().as_secs_f64();
@@ -244,6 +271,12 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
         summary.rollbacks,
         summary.max_staleness,
     );
+    if summary.crashes + summary.rejoins + summary.evictions > 0 {
+        println!(
+            "faults: crashes={} rejoins={} evictions={} degraded_syncs={}",
+            summary.crashes, summary.rejoins, summary.evictions, summary.degraded_syncs,
+        );
+    }
     println!(
         "time: host={host:.1}s simulated={:.1}s tokens={} throughput={} tok/sim-s comm={} MB",
         summary.sim_seconds,

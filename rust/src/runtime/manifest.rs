@@ -197,6 +197,173 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Run-state checkpoint manifest (fault tolerance / elastic restarts)
+// ---------------------------------------------------------------------------
+
+/// Version of the on-disk run-state checkpoint format. Bump on any
+/// layout change; `RunManifest::from_json` rejects mismatches loudly
+/// instead of misreading old files.
+pub const RUN_STATE_VERSION: u32 = 1;
+
+/// Magic prefix of a run-state checkpoint file.
+pub const RUN_STATE_MAGIC: &[u8; 8] = b"EDITCKPT";
+
+/// Element type of one checkpoint body section. Everything is encoded
+/// little-endian; integers live in typed binary sections rather than
+/// the JSON header because `Json::Num` is an f64 and would silently
+/// lose precision past 2^53.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SectionKind {
+    F32,
+    F64,
+    U64,
+    I64,
+    U8,
+}
+
+impl SectionKind {
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            SectionKind::F32 => 4,
+            SectionKind::F64 | SectionKind::U64 | SectionKind::I64 => 8,
+            SectionKind::U8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SectionKind::F32 => "f32",
+            SectionKind::F64 => "f64",
+            SectionKind::U64 => "u64",
+            SectionKind::I64 => "i64",
+            SectionKind::U8 => "u8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "f32" => SectionKind::F32,
+            "f64" => SectionKind::F64,
+            "u64" => SectionKind::U64,
+            "i64" => SectionKind::I64,
+            "u8" => SectionKind::U8,
+            _ => return None,
+        })
+    }
+}
+
+/// One named, typed, fixed-length section of the checkpoint body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSection {
+    pub name: String,
+    pub kind: SectionKind,
+    pub count: usize,
+}
+
+/// The versioned JSON header of a run-state checkpoint: identity checks
+/// (seed, shapes) plus the self-describing section table of the binary
+/// body that follows it. The writer/reader live in
+/// `coordinator::engine::checkpoint`; this type owns only the format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    pub version: u32,
+    pub label: String,
+    /// Written as a decimal string — a u64 seed does not fit `Json::Num`.
+    pub seed: u64,
+    pub replicas: usize,
+    pub params: usize,
+    pub modules: usize,
+    pub sections: Vec<RunSection>,
+}
+
+impl RunManifest {
+    pub fn to_json(&self) -> Json {
+        let mut obj = crate::util::json::Obj::new();
+        obj.insert("version", self.version as usize);
+        obj.insert("label", self.label.as_str());
+        obj.insert("seed", format!("{}", self.seed));
+        obj.insert("replicas", self.replicas);
+        obj.insert("params", self.params);
+        obj.insert("modules", self.modules);
+        let sections: Vec<Json> = self
+            .sections
+            .iter()
+            .map(|s| {
+                let mut o = crate::util::json::Obj::new();
+                o.insert("name", s.name.as_str());
+                o.insert("kind", s.kind.name());
+                o.insert("count", s.count);
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("sections", Json::Arr(sections));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let version = json
+            .at(&["version"])
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("run manifest missing version"))?
+            as u32;
+        anyhow::ensure!(
+            version == RUN_STATE_VERSION,
+            "run-state checkpoint version {version} != supported {RUN_STATE_VERSION}"
+        );
+        let get = |key: &str| -> Result<usize> {
+            json.at(&[key])
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("run manifest missing {key}"))
+        };
+        let seed: u64 = json
+            .at(&["seed"])
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("run manifest missing seed"))?;
+        let mut sections = Vec::new();
+        for s in json
+            .at(&["sections"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("run manifest missing sections"))?
+        {
+            let name = s
+                .at(&["name"])
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("section missing name"))?
+                .to_string();
+            let kind = s
+                .at(&["kind"])
+                .and_then(Json::as_str)
+                .and_then(SectionKind::parse)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}' has a bad kind"))?;
+            let count = s
+                .at(&["count"])
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}' missing count"))?;
+            sections.push(RunSection { name, kind, count });
+        }
+        Ok(Self {
+            version,
+            label: json
+                .at(&["label"])
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            seed,
+            replicas: get("replicas")?,
+            params: get("params")?,
+            modules: get("modules")?,
+            sections,
+        })
+    }
+
+    /// Total byte length of the binary body the section table describes.
+    pub fn body_bytes(&self) -> usize {
+        self.sections.iter().map(|s| s.count * s.kind.elem_bytes()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +433,58 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn run_manifest_roundtrips_through_json() {
+        let m = RunManifest {
+            version: RUN_STATE_VERSION,
+            label: "edit".to_string(),
+            // Past 2^53 — would corrupt if stored as a JSON number.
+            seed: u64::MAX - 7,
+            replicas: 4,
+            params: 331,
+            modules: 4,
+            sections: vec![
+                RunSection { name: "anchor".into(), kind: SectionKind::F32, count: 331 },
+                RunSection { name: "counters".into(), kind: SectionKind::U64, count: 19 },
+                RunSection { name: "alive".into(), kind: SectionKind::U8, count: 4 },
+            ],
+        };
+        let text = m.to_json().to_string();
+        let back = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.body_bytes(), 331 * 4 + 19 * 8 + 4);
+    }
+
+    #[test]
+    fn run_manifest_rejects_bad_versions() {
+        let mut m = RunManifest {
+            version: RUN_STATE_VERSION,
+            label: "x".into(),
+            seed: 1,
+            replicas: 1,
+            params: 1,
+            modules: 1,
+            sections: Vec::new(),
+        };
+        m.version = RUN_STATE_VERSION + 1;
+        let text = m.to_json().to_string();
+        assert!(RunManifest::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn section_kind_names_roundtrip() {
+        for kind in [
+            SectionKind::F32,
+            SectionKind::F64,
+            SectionKind::U64,
+            SectionKind::I64,
+            SectionKind::U8,
+        ] {
+            assert_eq!(SectionKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SectionKind::parse("f16"), None);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Fault-tolerant elastic runtime acceptance suite (ISSUE 6):
+//!
+//!  * kill-at-round-k + checkpoint/restore replays **bitwise identical**
+//!    to an uninterrupted run, for EDiT / A-EDiT / PALSGD, sharded and
+//!    unsharded, with seeded crash+rejoin schedules active — and across
+//!    a DDP warmup phase;
+//!  * A-EDiT survives a mid-window crash under a consistent straggler
+//!    and under a rollback storm (all-replica poison), and the faulty
+//!    runs stay deterministic;
+//!  * EDiT's barrier falls back to timeout-then-evict when a member
+//!    dies (eviction counted, survivors keep stepping);
+//!  * a rejoining replica adopts the current anchor with zeroed inner
+//!    moments; a `join@r:N` live-appends a brand-new replica;
+//!  * checkpoints survive a rescale boundary (the restore rescales the
+//!    fresh trainer to the manifest's replica count);
+//!  * malformed / mismatched checkpoint files are rejected.
+#![cfg(not(feature = "pjrt"))]
+
+use std::path::PathBuf;
+
+use edit_train::collectives::{CostModel, Topology};
+use edit_train::coordinator::{MeshSpec, Method, Poison, Straggler, TrainConfig, Trainer};
+use edit_train::data::{Corpus, Quality};
+use edit_train::experiments::chaos::{kill_restore_pair, state_mismatches, CHAOS_METHODS};
+use edit_train::experiments::ExpOpts;
+use edit_train::fault::FaultPlan;
+use edit_train::runtime::{Engine, Manifest};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("edit_train_fault_recovery");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Synthetic-stub trainer with the fault surface under direct control
+/// (the `scheduler_determinism` recipe + a fault plan).
+fn trainer(method: Method, plan: FaultPlan, tweak: impl FnOnce(&mut TrainConfig)) -> Trainer {
+    let manifest = Manifest::synthetic("fault-rec", 3, 128, 64, 64, 2, 8);
+    let vocab = manifest.model.vocab_size;
+    let engine = Engine::synthetic(manifest);
+    let corpus = Corpus::new(vocab, 17, Quality::clean());
+    let mut cfg = TrainConfig::from_spec(method.spec(), method.name(), MeshSpec::new(2, 4), 48);
+    cfg.tau = 4;
+    cfg.t_warm = 0;
+    cfg.eval_every_syncs = 2;
+    cfg.fault_plan = plan;
+    tweak(&mut cfg);
+    let mut t = Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100())).unwrap();
+    // Time-based windows worth exactly τ unlagged steps, so every
+    // strategy runs ~12 rounds and the fault plans' round keys land.
+    t.cfg.tau_time = (t.cfg.tau as f64 - 0.5) * t.inner_step_seconds();
+    t
+}
+
+/// Kill/restore pair over any builder: A runs start to finish; B runs
+/// to round `kill`, checkpoints, restores into a FRESH trainer and
+/// finishes. Both must be bitwise indistinguishable.
+fn kill_restore_with(build: impl Fn() -> Trainer, kill: u64, ckpt: &PathBuf) -> (Trainer, Trainer) {
+    let mut ta = build();
+    ta.run().unwrap();
+    let mut tb = build();
+    while tb.rounds() < kill && tb.global_step < tb.cfg.total_steps {
+        tb.run_round().unwrap();
+    }
+    tb.save_checkpoint(ckpt).unwrap();
+    let mut tb2 = build();
+    tb2.restore_checkpoint(ckpt).unwrap();
+    tb2.run().unwrap();
+    (ta, tb2)
+}
+
+fn assert_bitwise(a: &Trainer, b: &Trainer, what: &str) {
+    let diffs = state_mismatches(a, b);
+    assert!(diffs.is_empty(), "{what}: restore diverged:\n  {}", diffs.join("\n  "));
+}
+
+#[test]
+fn kill_restore_is_bitwise_identical_for_every_preset() {
+    // The headline acceptance criterion, through the same harness the
+    // `edit-train chaos` CI leg drives: every preset × sharding mode,
+    // under a live seeded crash+rejoin schedule.
+    let opts = ExpOpts { steps: 48, tau: 4, seed: 11, ..ExpOpts::default() };
+    for method in CHAOS_METHODS {
+        for shard in [true, false] {
+            let plan = FaultPlan::random(opts.seed, opts.mesh.replicas, 12, 2);
+            assert!(!plan.is_empty());
+            let ckpt = tmp(&format!("preset-{}-{}.bin", method.name(), shard));
+            let (ta, tb, kill) =
+                kill_restore_pair(&opts, method, shard, opts.seed, &plan, &ckpt).unwrap();
+            assert!(kill >= 1);
+            let tag = format!("{} shard={shard}", method.name());
+            assert_bitwise(&ta, &tb, &tag);
+            assert!(ta.summary().crashes >= 1, "{tag}: the schedule must actually fire");
+        }
+    }
+}
+
+#[test]
+fn kill_restore_spans_a_ddp_warmup_phase() {
+    // EDiT's spec warms up with lock-step DDP; the checkpoint lands
+    // after warmup but the trajectory it must replay includes it.
+    let build = || {
+        trainer(Method::Edit, FaultPlan::parse("crash@3:1,join@5:1", 17, 4).unwrap(), |c| {
+            c.t_warm = 4;
+        })
+    };
+    let (ta, tb) = kill_restore_with(build, 2, &tmp("warmup.bin"));
+    assert_bitwise(&ta, &tb, "warmup");
+    assert!(ta.cfg.t_warm > 0);
+    let s = ta.summary();
+    assert_eq!((s.crashes, s.rejoins), (1, 1));
+}
+
+#[test]
+fn aedit_survives_midwindow_crash_under_consistent_straggler() {
+    // Replica 1 dies two steps into a window while replica 0 is a
+    // consistent straggler: the victim's pending contribution is
+    // excluded (degraded per-group sync, not a global abort), the
+    // survivors keep their own clocks, and the whole faulty trajectory
+    // still kill/restores bitwise.
+    let build = || {
+        trainer(Method::AEdit, FaultPlan::parse("crash@2:1+2,join@5:1", 17, 4).unwrap(), |c| {
+            c.straggler = Straggler::Consistent { lag: 0.6, replica: 0 };
+        })
+    };
+    let mut ta = build();
+    let s = ta.run().unwrap();
+    assert_eq!((s.crashes, s.rejoins), (1, 1));
+    assert!(s.degraded_syncs >= 1, "the victim's windows must sync degraded");
+    assert!(s.final_loss.is_finite());
+    assert!(ta.alive().iter().all(|&a| a), "the victim rejoined");
+    // The victim sat out rounds 2..5 while its (equal-speed) peers kept
+    // stepping.
+    assert!(
+        ta.replicas[1].inner_steps < ta.replicas[2].inner_steps,
+        "victim {} vs survivor {}",
+        ta.replicas[1].inner_steps,
+        ta.replicas[2].inner_steps
+    );
+    let (ra, rb) = kill_restore_with(build, 3, &tmp("aedit-straggler.bin"));
+    assert_bitwise(&ra, &rb, "a-edit straggler");
+}
+
+#[test]
+fn aedit_survives_rollback_storm_with_midwindow_crash() {
+    // The Fig. 7c all-anomalous scenario (every replica's state drifts
+    // for a sync round) stacked on a crash+rejoin: the detector's
+    // rollback machinery and the fault harness must compose, stay
+    // finite, and replay bitwise through a kill/restore.
+    let build = || {
+        trainer(Method::AEdit, FaultPlan::parse("crash@4:1+1,join@7:1", 17, 4).unwrap(), |c| {
+            c.spec.penalty.warmup_syncs = 3;
+            c.spec.penalty.alpha = 0.3;
+            c.spec.penalty.phi = 0.3;
+            c.poison = vec![
+                Poison { replica: 2, from_sync: 4, to_sync: 6, strength: 1e-2 },
+                Poison { replica: usize::MAX, from_sync: 7, to_sync: 8, strength: 1e-2 },
+            ];
+        })
+    };
+    let mut t = build();
+    let s = t.run().unwrap();
+    assert_eq!((s.crashes, s.rejoins), (1, 1));
+    assert!(s.final_loss.is_finite());
+    let (ra, rb) = kill_restore_with(build, 5, &tmp("aedit-storm.bin"));
+    assert_bitwise(&ra, &rb, "a-edit rollback storm");
+    // The storm actually happened on the replayed trajectory too.
+    let (sa, sb) = (ra.summary(), rb.summary());
+    assert_eq!(sa.anomalies, sb.anomalies);
+    assert_eq!(sa.rollbacks, sb.rollbacks);
+}
+
+#[test]
+fn edit_barrier_evicts_a_crashed_member() {
+    // Step-synced EDiT: a dead member can never reach the barrier, so
+    // the rendezvous times out, charges the evict grace period, and the
+    // round commits over the survivors.
+    let mut t = trainer(Method::Edit, FaultPlan::parse("crash@2:1", 17, 4).unwrap(), |_| {});
+    let s = t.run().unwrap();
+    assert_eq!(s.crashes, 1);
+    assert!(s.evictions >= 1, "the barrier must evict");
+    assert!(s.degraded_syncs >= 1, "post-crash rounds sync degraded");
+    assert_eq!(s.rejoins, 0);
+    assert!(!t.alive()[1], "nobody revived the victim");
+    assert!(t.alive()[0] && t.alive()[2] && t.alive()[3]);
+    assert!(
+        t.replicas[1].inner_steps < t.replicas[0].inner_steps,
+        "survivors kept stepping past the victim"
+    );
+    assert!(s.final_loss.is_finite());
+}
+
+#[test]
+fn rejoining_replica_adopts_the_current_anchor() {
+    // join@4 revives the victim at the start of round 4; an immediate
+    // crash@4 with a zero step budget freezes it right there, so the
+    // adopted state is directly observable: params == the anchor as of
+    // round-4 start, inner moments zeroed.
+    let plan = FaultPlan::parse("crash@1:1,join@4:1,crash@4:1", 17, 4).unwrap();
+    let mut t = trainer(Method::Edit, plan, |_| {});
+    while t.rounds() < 4 {
+        t.run_round().unwrap();
+    }
+    let anchor_before = t.anchor.clone();
+    t.run_round().unwrap();
+    assert_eq!(t.replicas[1].params, anchor_before, "joiner must adopt the anchor");
+    assert!(t.replicas[1].m.iter().all(|&x| x == 0.0), "inner moments zeroed");
+    assert!(t.replicas[1].v.iter().all(|&x| x == 0.0));
+    assert!(!t.alive()[1], "the round-4 crash froze it again");
+    let s = t.summary();
+    assert_eq!((s.crashes, s.rejoins), (2, 1));
+    assert!(s.max_staleness >= 1, "slept-through anchor versions fold into staleness");
+}
+
+#[test]
+fn join_at_cluster_size_live_appends_a_new_replica() {
+    let build = || trainer(Method::Edit, FaultPlan::parse("join@2:4", 17, 4).unwrap(), |_| {});
+    let mut t = build();
+    let s = t.run().unwrap();
+    assert_eq!(t.replicas.len(), 5, "the cluster grew mid-run");
+    assert_eq!(t.alive().len(), 5);
+    assert!(t.alive().iter().all(|&a| a));
+    assert_eq!(s.rejoins, 1);
+    assert!(s.final_loss.is_finite());
+    // The joiner started late and from the anchor, so it stepped less.
+    assert!(t.replicas[4].inner_steps < t.replicas[0].inner_steps);
+    // Growth is deterministic, and kill/restore works across the join
+    // boundary (the checkpoint carries 5 replicas into a 4-replica
+    // fresh trainer, which rescales on restore).
+    let (ra, rb) = kill_restore_with(build, 4, &tmp("append.bin"));
+    assert_bitwise(&ra, &rb, "live append");
+    assert_eq!(rb.replicas.len(), 5);
+}
+
+#[test]
+fn checkpoint_restore_crosses_a_rescale_boundary() {
+    // Rescale 4 -> 2, run, checkpoint, restore into a FRESH 4-replica
+    // trainer: the restore must rescale down to the manifest's count
+    // and then replay bitwise against an uninterrupted rescaled run.
+    let build = || trainer(Method::Edit, FaultPlan::default(), |_| {});
+    let run_rounds = |t: &mut Trainer, upto: u64| {
+        while t.rounds() < upto && t.global_step < t.cfg.total_steps {
+            t.run_round().unwrap();
+        }
+    };
+    let mut ta = build();
+    ta.rescale(2).unwrap();
+    run_rounds(&mut ta, 6);
+
+    let mut tb = build();
+    tb.rescale(2).unwrap();
+    run_rounds(&mut tb, 3);
+    let ckpt = tmp("rescale.bin");
+    tb.save_checkpoint(&ckpt).unwrap();
+    let mut tc = build();
+    assert_eq!(tc.replicas.len(), 4);
+    tc.restore_checkpoint(&ckpt).unwrap();
+    assert_eq!(tc.replicas.len(), 2, "restore adopts the checkpoint's replica count");
+    run_rounds(&mut tc, 6);
+    assert_bitwise(&ta, &tc, "rescale boundary");
+}
+
+#[test]
+fn checkpoint_cadence_writes_round_files() {
+    let dir = tmp("cadence");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut t = trainer(Method::Edit, FaultPlan::default(), |c| {
+        c.checkpoint_every = 2;
+        c.checkpoint_dir = Some(dir.clone());
+    });
+    t.run().unwrap();
+    assert!(t.rounds() >= 4);
+    for round in (2..=t.rounds()).step_by(2) {
+        let path = dir.join(format!("ckpt-round-{round:06}.bin"));
+        assert!(path.is_file(), "missing {}", path.display());
+    }
+
+    // The cadence without a directory is a configuration error.
+    let mut bad = trainer(Method::Edit, FaultPlan::default(), |c| {
+        c.checkpoint_every = 2;
+        c.checkpoint_dir = None;
+    });
+    assert!(bad.run().is_err());
+}
+
+#[test]
+fn malformed_and_mismatched_checkpoints_are_rejected() {
+    // Garbage bytes: bad magic.
+    let garbage = tmp("garbage.bin");
+    std::fs::write(&garbage, b"not a checkpoint").unwrap();
+    let mut t = trainer(Method::Edit, FaultPlan::default(), |_| {});
+    let err = t.restore_checkpoint(&garbage).unwrap_err().to_string();
+    assert!(err.contains("magic"), "unexpected error: {err}");
+
+    // A checkpoint from a different seed must not restore (the replay
+    // guarantee is per-(seed, config) trajectory).
+    let ckpt = tmp("seed-a.bin");
+    let mut a = trainer(Method::Edit, FaultPlan::default(), |_| {});
+    while a.rounds() < 2 {
+        a.run_round().unwrap();
+    }
+    a.save_checkpoint(&ckpt).unwrap();
+    let mut b = trainer(Method::Edit, FaultPlan::default(), |c| c.seed += 1);
+    let err = b.restore_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("seed"), "unexpected error: {err}");
+}

@@ -15,7 +15,9 @@
 //!    post-sync clock (the ISSUE's acceptance criteria);
 //!  * CO2's staleness queue flushes at end of run (regression for the
 //!    historical silent drop);
-//!  * elastic rescale drains the event state mid-schedule.
+//!  * elastic rescale drains the event state mid-schedule, survives
+//!    scaling to a single replica and back, and carries CO2's in-flight
+//!    staleness queue across the boundary.
 #![cfg(not(feature = "pjrt"))]
 
 use edit_train::collectives::{CostModel, Topology};
@@ -371,6 +373,57 @@ fn elastic_rescale_drains_event_core_state() {
     assert!(t.sim_time > 0.0);
     for r in &t.replicas {
         assert!(r.clock <= t.sim_time + 1e-9);
+    }
+}
+
+#[test]
+fn elastic_rescale_to_one_and_back_is_deterministic_and_restores_total_steps() {
+    // Degenerate elastic edges: scale down to a single replica (the
+    // sharded outer path must fall back to full-matrix — there is
+    // nothing to shard across) and back up to the full mesh (sharding
+    // re-engages). The whole schedule is deterministic, and
+    // `run_schedule` must hand back `total_steps` unchanged (it loans
+    // the field to bound each phase; clobbering it was a real bug).
+    let run = || {
+        let mut t = trainer(Method::Edit, |c| {
+            c.t_warm = 0;
+            c.shard_outer = true;
+        });
+        let before = t.cfg.total_steps;
+        let phases = [
+            elastic::Phase { replicas: 1, steps: 12 },
+            elastic::Phase { replicas: 4, steps: 12 },
+        ];
+        let points = elastic::run_schedule(&mut t, &phases).unwrap();
+        assert_eq!(t.cfg.total_steps, before, "run_schedule must restore total_steps");
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.val_ppl.is_finite()));
+        t
+    };
+    let ta = run();
+    let tb = run();
+    assert_bitwise_equal(&ta, &tb);
+    assert_eq!(ta.replicas.len(), 4);
+    assert!(ta.scratch().sharded(), "sharding re-engages after scaling back up");
+}
+
+#[test]
+fn elastic_rescale_preserves_inflight_co2_queue() {
+    // CO2's staleness-queue entries are full-parameter combines —
+    // replica-count agnostic — so a rescale at a round boundary must
+    // carry the in-flight update across and land it later, not drop it.
+    let mut t = trainer(Method::Co2, |c| c.total_steps = 24);
+    t.run_round().unwrap();
+    t.run_round().unwrap();
+    assert_eq!(t.pending_updates(), 1, "one combine must be in flight");
+    t.rescale(3).unwrap();
+    assert_eq!(t.pending_updates(), 1, "rescale must not drop the queue");
+    let s = t.run().unwrap();
+    assert_eq!(t.replicas.len(), 3);
+    assert!(s.flushed_updates >= 1, "the queued update must land");
+    assert!(s.final_loss.is_finite());
+    for r in &t.replicas {
+        assert_eq!(r.params, t.anchor, "end of run: replicas share the flushed anchor");
     }
 }
 

@@ -8,6 +8,12 @@
 //! deterministic stub engine (default build; the PJRT backend
 //! allocates inside the XLA FFI, which is outside this contract).
 //!
+//! The fault-injection harness is compiled into every round
+//! (`apply_fault_events` runs before the lanes even with an empty
+//! plan), so this test also pins the ISSUE-6 requirement that the
+//! inactive harness costs nothing: the per-round cap refill and crash
+//! bookkeeping reuse preallocated vectors and must not allocate.
+//!
 //! Single-test file on purpose: the allocation counter is global, so no
 //! other test may run concurrently in this binary.
 #![cfg(not(feature = "pjrt"))]

@@ -2,6 +2,8 @@
 # One-command verification gate (also `make verify`):
 #   tier-1:  cargo build --release && cargo test -q
 #   smoke:   fig5-trainer straggler cross-validation (real trainer)
+#   chaos:   seeded fault schedules, kill-at-midpoint + restore must
+#            replay bitwise (writes results/fault_recovery.csv)
 #   hygiene: cargo fmt --check, cargo clippy -D warnings (skipped with a
 #            notice when the components are not installed — CI installs
 #            them explicitly so the skips never trigger there)
@@ -56,6 +58,14 @@ fi
 mkdir -p results
 echo "== straggler smoke (real trainer, async A-EDiT path) =="
 "$BIN" simulate --exp fig5-trainer --steps 32 --tau 4
+
+# Chaos smoke: every layer-wise preset x sharding mode under a seeded
+# crash/rejoin schedule, run twice — uninterrupted vs killed at the
+# midpoint round + restored from the checkpoint — and diffed field by
+# field plus final-checkpoint bytes. Any divergence exits non-zero;
+# the per-run rows land in results/fault_recovery.csv (a CI artifact).
+echo "== chaos smoke (fault injection + kill/restore bitwise replay) =="
+"$BIN" chaos --steps 32 --tau 4 --seeds 2 --pairs 2
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
