@@ -1,0 +1,90 @@
+//! CI perf gate: diff the machine-readable bench snapshot
+//! (`results/bench_summary.json`, written by `cargo bench --bench
+//! hotpath`) against the committed baseline (`BENCH_BASELINE.json` at
+//! the repo root) and exit non-zero on regression.
+//!
+//! The baseline is a list of gates, each a dotted path into the summary
+//! plus a band:
+//!
+//!  * `exact` — the value must match exactly (schema version pins);
+//!  * `min` + optional `tolerance` — the value must be at least
+//!    `min * (1 - tolerance)`. Timing-derived gates carry wide
+//!    tolerances (shared CI runners); deterministic gates — the
+//!    bytes-on-wire reduction comes straight from the comm-plan byte
+//!    accounting — carry none.
+//!
+//! A gate whose path is missing from the summary **fails**: silently
+//! dropping a tracked metric is itself a regression.
+//!
+//! Paths default to the CI layout (`cd rust && cargo run --release
+//! --example bench_gate`); override with `EDIT_BENCH_SUMMARY` /
+//! `EDIT_BENCH_BASELINE`.
+
+use anyhow::Context;
+use edit_train::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let summary_path = std::env::var("EDIT_BENCH_SUMMARY")
+        .unwrap_or_else(|_| "results/bench_summary.json".to_string());
+    let baseline_path = std::env::var("EDIT_BENCH_BASELINE")
+        .unwrap_or_else(|_| "../BENCH_BASELINE.json".to_string());
+
+    let summary = Json::parse(
+        &std::fs::read_to_string(&summary_path)
+            .with_context(|| format!("reading {summary_path} (run the hotpath bench first)"))?,
+    )
+    .with_context(|| format!("parsing {summary_path}"))?;
+    let baseline = Json::parse(
+        &std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("reading {baseline_path}"))?,
+    )
+    .with_context(|| format!("parsing {baseline_path}"))?;
+
+    let gates = baseline
+        .at(&["gates"])
+        .and_then(Json::as_arr)
+        .context("baseline has no 'gates' array")?;
+
+    let mut failures = 0usize;
+    for gate in gates {
+        let path = gate
+            .at(&["path"])
+            .and_then(Json::as_str)
+            .context("gate entry missing 'path'")?;
+        let keys: Vec<&str> = path.split('.').collect();
+        let value = match summary.at(&keys).and_then(Json::as_f64) {
+            Some(v) => v,
+            None => {
+                println!("FAIL {path}: missing from {summary_path}");
+                failures += 1;
+                continue;
+            }
+        };
+        if let Some(exact) = gate.at(&["exact"]).and_then(Json::as_f64) {
+            if value != exact {
+                println!("FAIL {path}: {value} != required {exact}");
+                failures += 1;
+            } else {
+                println!("ok   {path}: {value} (exact)");
+            }
+        } else if let Some(min) = gate.at(&["min"]).and_then(Json::as_f64) {
+            let tol = gate.at(&["tolerance"]).and_then(Json::as_f64).unwrap_or(0.0);
+            let floor = min * (1.0 - tol);
+            if value < floor {
+                println!("FAIL {path}: {value:.4} < floor {floor:.4} (baseline {min}, tolerance {tol})");
+                failures += 1;
+            } else {
+                println!("ok   {path}: {value:.4} >= floor {floor:.4}");
+            }
+        } else {
+            println!("FAIL {path}: gate has neither 'exact' nor 'min'");
+            failures += 1;
+        }
+    }
+
+    if failures > 0 {
+        anyhow::bail!("{failures} perf gate(s) failed against {baseline_path}");
+    }
+    println!("bench gate: all {} gates passed", gates.len());
+    Ok(())
+}

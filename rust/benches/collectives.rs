@@ -26,6 +26,14 @@ fn main() {
                     bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
                 group::reduce_scatter_mean(&mut refs, &shards);
             });
+            // Compressed payload lane (payload=int8): GB/s is still the
+            // logical f32 payload so the row is comparable to the
+            // uncompressed one — the wire moves ~3.8x fewer bytes.
+            b.bench_gbs(&format!("seq reduce_scatter q8 n={n} len={len}"), bytes, || {
+                let mut refs: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
+                group::reduce_scatter_mean_q8(&mut refs, &shards);
+            });
         }
     }
     // Striped threaded rendezvous round-trip (thread spawn included —
@@ -54,6 +62,18 @@ fn main() {
                     s.spawn(move || {
                         let mut buf = vec![c.rank() as f32; len];
                         c.reduce_scatter_mean(&mut buf, sh);
+                    });
+                }
+            });
+        });
+        b.bench_gbs(&format!("striped threaded reduce_scatter q8 n={n} len={len}"), bytes, || {
+            let comms = ThreadComm::group(n);
+            let sh = &shards;
+            std::thread::scope(|s| {
+                for c in comms {
+                    s.spawn(move || {
+                        let mut buf = vec![c.rank() as f32; len];
+                        c.reduce_scatter_mean_q8(&mut buf, sh);
                     });
                 }
             });

@@ -16,7 +16,7 @@ use edit_train::bench::Bencher;
 use edit_train::coordinator::penalty::{softmax_neg_weights, PenaltyConfig};
 use edit_train::coordinator::{OuterOpt, OuterOptKind, SyncScratch};
 use edit_train::runtime::Manifest;
-use edit_train::tensor::{self, kernels, ModuleTable};
+use edit_train::tensor::{self, kernels, ModuleTable, PayloadKind};
 
 fn kernel_benches(b: &mut Bencher) {
     println!("-- fused kernels (n=2^20) --");
@@ -46,6 +46,22 @@ fn kernel_benches(b: &mut Bencher) {
     b.bench_gbs("kernel sub+norm reference (two pass)", rr + (n * 4) as u64, || {
         kernels::reference::sub(&mut y, &a, &x);
         std::hint::black_box(kernels::reference::sq_norm(&y));
+    });
+    // Compressed-payload kernel: error-feedback int8 quantize→dequantize
+    // in one pass over the pseudo-gradient. Traffic: refresh y from x,
+    // then read+write y and the residual — four vector touches.
+    let mut residual = vec![0.0f32; n];
+    let qb = (4 * n * 4) as u64;
+    b.bench_gbs("kernel quant int8 ef fused", qb, || {
+        y.copy_from_slice(&x);
+        kernels::quant_dequant_ef(PayloadKind::Int8, &mut y, &mut residual);
+        std::hint::black_box(y[0]);
+    });
+    residual.fill(0.0);
+    b.bench_gbs("kernel quant int8 ef reference", qb, || {
+        y.copy_from_slice(&x);
+        kernels::reference::quant_dequant_ef(PayloadKind::Int8, &mut y, &mut residual);
+        std::hint::black_box(y[0]);
     });
 }
 
@@ -241,11 +257,74 @@ fn trainer_round_benches(b: &mut Bencher) {
     }
 }
 
+/// Bytes-on-wire per sync round, measured from the trainer's own comm
+/// accounting (`Trainer::comm`): two identical EDiT runs on the stub
+/// engine, differing only in the payload axis, each driven for two
+/// rounds. Deterministic — the per-round byte charge is a function of
+/// the comm plan, not of wall clock — so the reduction ratio is exact
+/// and CI-gateable.
+#[cfg(not(feature = "pjrt"))]
+fn sync_bytes_benches() -> Option<(f64, f64)> {
+    use edit_train::collectives::{CostModel, Topology};
+    use edit_train::coordinator::{MeshSpec, MethodSpec, TrainConfig, Trainer};
+    use edit_train::data::{Corpus, Quality};
+    use edit_train::runtime::Engine;
+
+    println!("-- sync bytes on wire (per round, trainer comm accounting) --");
+    let rounds = 2u64;
+    let mut per_round = [0.0f64; 2];
+    for (slot, spec_str) in [(0usize, "custom:base=edit"), (1, "custom:base=edit,payload=int8")] {
+        let engine = Engine::synthetic(Manifest::synthetic(
+            "hotpath-wire",
+            4,
+            1 << 14,
+            1 << 13,
+            256,
+            2,
+            16,
+        ));
+        let corpus = Corpus::new(256, 5, Quality::clean());
+        let (spec, _) = MethodSpec::parse(spec_str).unwrap();
+        let mut tc = TrainConfig::from_spec(spec, spec_str, MeshSpec::new(2, 2), u64::MAX);
+        tc.tau = 1;
+        tc.t_warm = 0;
+        tc.eval_every_syncs = 0;
+        let mut trainer =
+            Trainer::new(engine, corpus, tc, CostModel::new(Topology::a100())).unwrap();
+        for _ in 0..rounds {
+            trainer.run_round().unwrap();
+        }
+        per_round[slot] = trainer.comm.bytes as f64 / rounds as f64;
+    }
+    let (f32_b, int8_b) = (per_round[0], per_round[1]);
+    println!(
+        "sync bytes/round: f32 {:.0} B, int8 {:.0} B  ({:.2}x reduction)",
+        f32_b,
+        int8_b,
+        f32_b / int8_b
+    );
+    Some((f32_b, int8_b))
+}
+
+#[cfg(feature = "pjrt")]
+fn sync_bytes_benches() -> Option<(f64, f64)> {
+    println!("sync bytes section: stub-engine only; skipping under pjrt");
+    None
+}
+
 /// Machine-readable perf snapshot (`results/bench_summary.json`): the
-/// kernel-layer GB/s, the fused-vs-naive outer-round speedup, and the
-/// end-to-end trainer round times. The CI full leg uploads it as a
-/// build artifact so the perf trajectory is tracked across PRs.
-fn write_summary_json(b: &Bencher, fused_s: f64, naive_s: f64) -> anyhow::Result<()> {
+/// kernel-layer GB/s, the fused-vs-naive outer-round speedup, the
+/// end-to-end trainer round times, and the compressed-payload
+/// bytes-on-wire reduction. The CI full leg uploads it as a build
+/// artifact and diffs it against `BENCH_BASELINE.json` (see
+/// `examples/bench_gate.rs`) so the perf trajectory is tracked — and
+/// gated — across PRs.
+fn write_summary_json(
+    b: &Bencher,
+    fused_s: f64,
+    naive_s: f64,
+    wire: Option<(f64, f64)>,
+) -> anyhow::Result<()> {
     use edit_train::util::json::{Json, Obj};
     let mut kernels = Obj::new();
     let mut rounds = Obj::new();
@@ -264,12 +343,19 @@ fn write_summary_json(b: &Bencher, fused_s: f64, naive_s: f64) -> anyhow::Result
     outer.insert("reference_median_s", naive_s);
     outer.insert("speedup", naive_s / fused_s);
     let mut root = Obj::new();
-    root.insert("schema", 1i64);
+    root.insert("schema", 2i64);
     root.insert("bench", "hotpath");
     root.insert("fast_mode", std::env::var("EDIT_BENCH_FAST").is_ok());
     root.insert("kernel_gb_per_s", kernels);
     root.insert("edit_outer_round", outer);
     root.insert("e2e_round_seconds", rounds);
+    if let Some((f32_b, int8_b)) = wire {
+        let mut w = Obj::new();
+        w.insert("f32_bytes_per_round", f32_b);
+        w.insert("int8_bytes_per_round", int8_b);
+        w.insert("reduction", f32_b / int8_b);
+        root.insert("sync_bytes_on_wire", w);
+    }
     std::fs::write("results/bench_summary.json", Json::Obj(root).to_string_pretty())?;
     println!("summary -> results/bench_summary.json");
     Ok(())
@@ -284,6 +370,7 @@ fn main() {
     engine_benches(&mut b);
     #[cfg(not(feature = "pjrt"))]
     trainer_round_benches(&mut b);
+    let wire = sync_bytes_benches();
     b.write_csv("results/bench_hotpath.csv").unwrap();
-    write_summary_json(&b, fused_s, naive_s).unwrap();
+    write_summary_json(&b, fused_s, naive_s, wire).unwrap();
 }

@@ -118,6 +118,21 @@ impl CostModel {
         };
         t * rep
     }
+
+    /// [`Self::time`] for a payload of `elems` f32 elements travelling
+    /// at `payload`'s wire width (codes + per-chunk scales for the
+    /// quantized kinds — see `tensor::kernels::PayloadKind::wire_bytes`).
+    /// For `PayloadKind::F32` this is exactly `time(op, elems * 4, ..)`,
+    /// so f32 plans price bitwise like the historical byte expression.
+    pub fn payload_time(
+        &self,
+        op: CollOp,
+        elems: usize,
+        payload: crate::tensor::PayloadKind,
+        ranks: &[usize],
+    ) -> f64 {
+        self.time(op, payload.wire_bytes(elems), ranks)
+    }
 }
 
 /// Per-op byte/time accounting, accumulated by the trainer.
@@ -216,6 +231,29 @@ mod tests {
         assert_eq!(intra, base.time(CollOp::Broadcast, 1 << 20, &[0, 1]));
         let inter = m.time(CollOp::Broadcast, 1 << 20, &[0, 8]);
         assert!((inter / base.time(CollOp::Broadcast, 1 << 20, &[0, 8]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn payload_time_tracks_wire_bytes() {
+        use crate::tensor::PayloadKind;
+        let m = CostModel::new(Topology::flat(1e9, 0.0));
+        let ranks = [0, 1, 2, 3];
+        let elems = 1 << 20;
+        let f = m.payload_time(CollOp::AllReduce, elems, PayloadKind::F32, &ranks);
+        let q = m.payload_time(CollOp::AllReduce, elems, PayloadKind::Int8, &ranks);
+        let b = m.payload_time(CollOp::AllReduce, elems, PayloadKind::Bit1, &ranks);
+        // f32 is the plain byte expression, bitwise.
+        assert_eq!(
+            f.to_bits(),
+            m.time(CollOp::AllReduce, elems * 4, &ranks).to_bits()
+        );
+        // Zero latency ⇒ time ratio equals the wire-byte ratio exactly.
+        let ratio = f / q;
+        let byte_ratio = (elems * 4) as f64
+            / PayloadKind::Int8.wire_bytes(elems) as f64;
+        assert!((ratio - byte_ratio).abs() < 1e-9, "{ratio} vs {byte_ratio}");
+        assert!(ratio >= 3.5, "int8 must cut wire time >= 3.5x, got {ratio}");
+        assert!(b < q, "bit1 must be cheaper than int8");
     }
 
     #[test]

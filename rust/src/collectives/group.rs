@@ -6,6 +6,16 @@
 //! worker states it owns (DESIGN.md §1: workers are simulated in one
 //! process); the threaded rendezvous variant lives in [`super::thread`]
 //! and shares these reference semantics.
+//!
+//! The `_q8` variants model the compressed payload axis
+//! (`payload=int8`): each rank's contribution is quantized to int8
+//! codes + per-[`QUANT_CHUNK`] f32 scales (the bytes that would travel
+//! the wire), and the fold dequantizes in ascending rank order — the
+//! same formulas as `tensor::kernels`' fused qdq chunk, so receiver-side
+//! results are deterministic across the sequential and threaded
+//! implementations.
+
+use crate::tensor::QUANT_CHUNK;
 
 /// Sum-reduce all buffers into every buffer (in place).
 pub fn all_reduce_sum(bufs: &mut [&mut [f32]]) {
@@ -138,6 +148,65 @@ pub fn reduce_scatter_weighted(
     }
 }
 
+/// Symmetric int8 per-[`QUANT_CHUNK`] quantization of a full vector —
+/// the staging half of [`reduce_scatter_mean_q8`]. Scale is
+/// max|v|/127 per chunk with deterministic round-to-nearest codes in
+/// [-127, 127]; an all-zero chunk stays (codes 0, scale 0). Formulas
+/// identical to `tensor::kernels::quant_dequant_ef`'s int8 chunk, so
+/// wire payloads agree across layers. Buffers are `clear()`ed and
+/// refilled — repeated calls at a size allocate nothing.
+pub fn quantize_int8_into(x: &[f32], codes: &mut Vec<i8>, scales: &mut Vec<f32>) {
+    codes.clear();
+    codes.resize(x.len(), 0);
+    scales.clear();
+    scales.resize(x.len().div_ceil(QUANT_CHUNK), 0.0);
+    for (c, chunk) in x.chunks(QUANT_CHUNK).enumerate() {
+        let mut mx = 0.0f32;
+        for &v in chunk {
+            mx = mx.max(v.abs());
+        }
+        if mx == 0.0 {
+            continue;
+        }
+        let scale = mx / 127.0;
+        let inv = 1.0 / scale;
+        scales[c] = scale;
+        for (i, &v) in chunk.iter().enumerate() {
+            codes[c * QUANT_CHUNK + i] = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Reduce-scatter (mean) over int8-quantized wire payloads: each rank's
+/// contribution is quantized ([`quantize_int8_into`]) as it would be
+/// staged on the wire, and rank `dst`'s shard ends with the mean of the
+/// **dequantized** contributions (ascending-rank fold, then the 1/n
+/// scale). The quantization error stays with the *sender* — callers run
+/// error feedback around this op (see `coordinator::scratch`).
+pub fn reduce_scatter_mean_q8(fulls: &mut [&mut [f32]], shards: &[(usize, usize)]) {
+    let n = fulls.len();
+    debug_assert_eq!(n, shards.len());
+    if n <= 1 {
+        return;
+    }
+    let mut codes: Vec<Vec<i8>> = vec![Vec::new(); n];
+    let mut scales: Vec<Vec<f32>> = vec![Vec::new(); n];
+    for (r, full) in fulls.iter().enumerate() {
+        quantize_int8_into(full, &mut codes[r], &mut scales[r]);
+    }
+    let inv = 1.0 / n as f32;
+    for (dst, &(off, len)) in shards.iter().enumerate() {
+        for i in 0..len {
+            let gi = off + i;
+            let mut acc = 0.0f32;
+            for r in 0..n {
+                acc += codes[r][gi] as f32 * scales[r][gi / QUANT_CHUNK];
+            }
+            fulls[dst][gi] = acc * inv;
+        }
+    }
+}
+
 /// Broadcast rank `root`'s buffer to all others.
 pub fn broadcast(bufs: &mut [&mut [f32]], root: usize) {
     let n = bufs.len();
@@ -262,6 +331,59 @@ mod tests {
                 assert_eq!(got[dst][i], want, "dst={dst} i={i}");
             }
         }
+    }
+
+    #[test]
+    fn reduce_scatter_q8_tracks_unquantized_within_chunk_bound() {
+        // The q8 fold must land within the mean of the per-rank
+        // half-step quantization bounds (chunk max|v|/127/2) of the
+        // exact f32 reduce-scatter, element-wise. Length chosen to
+        // exercise a remainder chunk.
+        let n = 3usize;
+        let len = 2 * QUANT_CHUNK + 17;
+        let spec = ShardSpec::new(len, n);
+        let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+        let make = |r: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| ((i * 37 + r * 101) % 255) as f32 * 0.01 - 1.2)
+                .collect()
+        };
+        let orig: Vec<Vec<f32>> = (0..n).map(make).collect();
+        let mut exact: Vec<Vec<f32>> = (0..n).map(make).collect();
+        let mut quant: Vec<Vec<f32>> = (0..n).map(make).collect();
+        reduce_scatter_mean(&mut as_mut(&mut exact), &shards);
+        reduce_scatter_mean_q8(&mut as_mut(&mut quant), &shards);
+        for (dst, &(off, dlen)) in shards.iter().enumerate() {
+            for i in off..off + dlen {
+                let c = i / QUANT_CHUNK;
+                let mut bound = 0.0f64;
+                for rank in orig.iter() {
+                    let chunk = &rank[c * QUANT_CHUNK..((c + 1) * QUANT_CHUNK).min(len)];
+                    let mx = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    bound += (mx as f64 / 127.0) / 2.0;
+                }
+                bound = bound / n as f64 * 1.001 + 1e-9;
+                let err = (exact[dst][i] as f64 - quant[dst][i] as f64).abs();
+                assert!(err <= bound, "dst={dst} i={i} err={err} bound={bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_int8_zero_chunks_and_reuse() {
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        let x = vec![0.0f32; QUANT_CHUNK + 3];
+        quantize_int8_into(&x, &mut codes, &mut scales);
+        assert_eq!(codes.len(), QUANT_CHUNK + 3);
+        assert_eq!(scales, vec![0.0, 0.0]);
+        assert!(codes.iter().all(|&c| c == 0));
+        // Reuse with a different length: buffers resize cleanly.
+        let y = vec![1.0f32; 5];
+        quantize_int8_into(&y, &mut codes, &mut scales);
+        assert_eq!(codes, vec![127i8; 5]);
+        assert_eq!(scales.len(), 1);
+        assert!((scales[0] - 1.0 / 127.0).abs() < 1e-9);
     }
 
     #[test]

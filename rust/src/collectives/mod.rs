@@ -29,6 +29,13 @@
 //!    shard-local fused kernels bitwise interchangeable.
 //!  * `all_gather` — each rank contributes its owned shard; afterwards
 //!    every rank holds the concatenation.
+//!  * `reduce_scatter_mean_q8` — the compressed payload lane
+//!    (`payload=int8`): contributions are staged as int8 codes +
+//!    per-chunk f32 scales (the actual wire bytes, ~3.8× fewer than
+//!    f32), dequantized on receipt and folded in the same ascending
+//!    rank order. Sequential reference and threaded implementation are
+//!    bitwise interchangeable; the quantization error stays with the
+//!    sender, where the trainer's error-feedback residuals absorb it.
 //!
 //! Pricing: the ring α-β formulas decompose exactly — `time(RS) +
 //! time(AG) == time(AllReduce)` **bitwise** (scaling by two commutes

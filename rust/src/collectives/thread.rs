@@ -41,8 +41,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::collectives::{Collective, CommError, CommResult};
-use crate::tensor::{kernels, ShardSpec};
+use crate::collectives::{group, Collective, CommError, CommResult};
+use crate::tensor::{kernels, ShardSpec, QUANT_CHUNK};
 
 /// Generation-counted rendezvous state (sense-reversing: waiters key on
 /// the generation, so back-to-back rendezvous cannot mix arrivals).
@@ -51,12 +51,24 @@ struct Gate {
     generation: u64,
 }
 
+/// Per-rank staging slot for the int8 payload lane: the codes + scales
+/// that would travel the wire under `payload=int8`. Buffers are cleared
+/// and refilled, so repeated quantized collectives at a size allocate
+/// nothing after the first round.
+#[derive(Default)]
+struct QSlot {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
 struct Inner {
     n: usize,
     /// Per-rank contribution slots.
     staging: Vec<RwLock<Vec<f32>>>,
     /// Per-rank reduced-stripe slots (all-reduce slab).
     stripes: Vec<RwLock<Vec<f32>>>,
+    /// Per-rank quantized-payload slots (int8 reduce-scatter lane).
+    qslots: Vec<RwLock<QSlot>>,
     barrier: Barrier,
     /// Liveness flags for the fallible surface (true = failed).
     failed: Vec<AtomicBool>,
@@ -78,6 +90,7 @@ impl ThreadComm {
             n,
             staging: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
             stripes: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
+            qslots: (0..n).map(|_| RwLock::new(QSlot::default())).collect(),
             barrier: Barrier::new(n),
             failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
             shutdown: AtomicBool::new(false),
@@ -207,6 +220,37 @@ impl ThreadComm {
             let sr = self.inner.staging[r].read().unwrap();
             kernels::add(&mut full[off..off + len], &sr[off..off + len]);
         }
+        self.inner.barrier.wait();
+    }
+
+    /// Reduce-scatter (mean) over int8-quantized wire payloads: each
+    /// rank stages codes + per-[`QUANT_CHUNK`] scales (the bytes that
+    /// would travel the wire under `payload=int8`,
+    /// [`group::quantize_int8_into`]), and this rank's shard ends with
+    /// the mean of the **dequantized** contributions — ascending-rank
+    /// fold per element, then the 1/n scale, bitwise equal to
+    /// [`group::reduce_scatter_mean_q8`]. The quantization error stays
+    /// with the sender (error feedback is the caller's job).
+    pub fn reduce_scatter_mean_q8(&self, full: &mut [f32], shards: &[(usize, usize)]) {
+        let n = self.inner.n;
+        if n == 1 {
+            return;
+        }
+        {
+            let mut slot = self.inner.qslots[self.rank].write().unwrap();
+            let QSlot { codes, scales } = &mut *slot;
+            group::quantize_int8_into(full, codes, scales);
+        }
+        self.inner.barrier.wait();
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for r in 0..n {
+            let sr = self.inner.qslots[r].read().unwrap();
+            for i in off..off + len {
+                full[i] += sr.codes[i] as f32 * sr.scales[i / QUANT_CHUNK];
+            }
+        }
+        kernels::scale(&mut full[off..off + len], 1.0 / n as f32);
         self.inner.barrier.wait();
     }
 
@@ -653,6 +697,53 @@ mod tests {
             let mut refs: Vec<&mut [f32]> =
                 refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
             group::reduce_scatter_sum(&mut refs, &shards);
+            assert_eq!(got, refbufs, "n={n} len={len}");
+        }
+    }
+
+    #[test]
+    fn threaded_reduce_scatter_q8_matches_sequential_bitwise() {
+        // Chunk-remainder lengths and magnitude-staggered values: any
+        // deviation in quantize formulas or fold order shows up bitwise.
+        use crate::tensor::QUANT_CHUNK;
+        for (n, len) in [
+            (4usize, 2 * QUANT_CHUNK),
+            (3, QUANT_CHUNK + 7),
+            (2, 1),
+            (4, 3 * QUANT_CHUNK + 1),
+        ] {
+            let spec = ShardSpec::new(len, n);
+            let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+            let make = |r: usize| -> Vec<f32> {
+                (0..len)
+                    .map(|i| {
+                        [1e3f32, -3.7, 0.01, 42.0][r % 4]
+                            * (1.0 + (i as f32) * 0.37).sin()
+                    })
+                    .collect()
+            };
+            let comms = ThreadComm::group(n);
+            let mut got = vec![Vec::new(); n];
+            let (sh, mk) = (&shards, &make);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let mut buf = mk(c.rank());
+                            c.reduce_scatter_mean_q8(&mut buf, sh);
+                            buf
+                        })
+                    })
+                    .collect();
+                for (r, h) in handles.into_iter().enumerate() {
+                    got[r] = h.join().unwrap();
+                }
+            });
+            let mut refbufs: Vec<Vec<f32>> = (0..n).map(mk).collect();
+            let mut refs: Vec<&mut [f32]> =
+                refbufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            group::reduce_scatter_mean_q8(&mut refs, &shards);
             assert_eq!(got, refbufs, "n={n} len={len}");
         }
     }

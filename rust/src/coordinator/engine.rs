@@ -421,6 +421,10 @@ impl Trainer {
             // nothing to shard across).
             scratch.enable_sharding(&table, cfg.mesh.replicas);
         }
+        // Payload axis: size the error-feedback residual buffers (a
+        // no-op for f32 — the buffers stay empty and the quantization
+        // branch never runs, keeping the f32 path bitwise identical).
+        scratch.set_payload(cfg.spec.payload);
         let lanes: Vec<worker::Lane> = (0..cfg.mesh.replicas)
             .map(|_| worker::Lane::with_token_capacity(token_cap))
             .collect();

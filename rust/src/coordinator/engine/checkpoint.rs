@@ -204,6 +204,14 @@ impl Trainer {
 
         w.f32s("anchor", [self.anchor.as_slice()]);
         w.f32s("outer_momentum", [self.outer.momentum.as_slice()]);
+        // Error-feedback residuals of the quantized payload axis:
+        // replica-major flat [replicas × params] in the canonical order
+        // (identical bytes whether the arena runs sharded or not), empty
+        // for payload=f32. A kill/restore with residuals in flight must
+        // replay bitwise — the residual is training state, not cache.
+        let mut residuals = Vec::new();
+        self.scratch.export_residuals_into(&mut residuals);
+        w.f32s("sync_residuals", [residuals.as_slice()]);
         w.f32s("params", self.replicas.iter().map(|r| r.params.as_slice()));
         w.f32s("m", self.replicas.iter().map(|r| r.m.as_slice()));
         w.f32s("v", self.replicas.iter().map(|r| r.v.as_slice()));
@@ -343,6 +351,24 @@ impl Trainer {
         let mut r = SectionReader::new(body, &manifest.sections);
         r.f32s_into("anchor", &mut self.anchor)?;
         r.f32s_into("outer_momentum", &mut self.outer.momentum)?;
+        let residuals = r.f32s("sync_residuals")?;
+        if self.scratch.residuals_enabled() {
+            anyhow::ensure!(
+                residuals.len() == replicas * n,
+                "checkpoint sync_residuals has {} elements; this quantized-payload \
+                 run needs {} (was the checkpoint written with payload=f32?)",
+                residuals.len(),
+                replicas * n
+            );
+            self.scratch.import_residuals(&residuals);
+        } else {
+            anyhow::ensure!(
+                residuals.is_empty(),
+                "checkpoint carries {} sync_residuals elements but this run has \
+                 payload=f32 (strategy mismatch)",
+                residuals.len()
+            );
+        }
         let params = r.f32s("params")?;
         let m = r.f32s("m")?;
         let v = r.f32s("v")?;

@@ -68,8 +68,15 @@ use super::Trainer;
 #[derive(Debug, Clone, Default)]
 pub(super) struct CommPlan {
     /// (bytes, seconds) of one full-shard all-reduce per mesh row (sync
-    /// group) — warmup/DDP gradient exchange and uniform-averaging sync.
+    /// group) — the warmup/DDP gradient exchange. Always f32: gradients
+    /// are exchanged uncompressed (the payload axis applies to
+    /// pseudo-gradients only).
     pub sync_allreduce: Vec<(usize, f64)>,
+    /// (bytes, seconds) of one full-shard pseudo-gradient exchange per
+    /// mesh row — the flat (uniform-averaging / DiLoCo / CO2) sync.
+    /// Priced at the payload wire width ([`PayloadKind::wire_bytes`]);
+    /// identical to `sync_allreduce` for `payload=f32`.
+    pub flat_sync: Vec<(usize, f64)>,
     /// (bytes, seconds) of one scalar-norm exchange per mesh column
     /// (shard group) — charged per participating member per module.
     pub scalar_sync: Vec<(usize, f64)>,
@@ -102,6 +109,10 @@ impl CommPlan {
         let mesh = step_model.mesh;
         let param_count = table.total;
         let shard_bytes = param_count * 4 / mesh.shard;
+        // Pseudo-gradient exchanges travel at the payload wire width;
+        // for f32 this is exactly `shard_bytes` (bitwise-identical
+        // plan), for int8/bit1 it shrinks bytes-on-wire ~3.8x/~21x.
+        let flat_wire = spec.payload.wire_bytes(param_count) / mesh.shard;
         let mut plan = CommPlan {
             step_time_local: step_model.inner_step(false),
             step_time_ddp: step_model.inner_step(true),
@@ -114,6 +125,10 @@ impl CommPlan {
                 shard_bytes,
                 step_model.cost.time(CollOp::AllReduce, shard_bytes, &group),
             ));
+            plan.flat_sync.push((
+                flat_wire,
+                step_model.cost.time(CollOp::AllReduce, flat_wire, &group),
+            ));
         }
         for col in 0..mesh.replicas {
             let group = mesh.shard_group(col);
@@ -124,9 +139,14 @@ impl CommPlan {
             let group = mesh.sync_group(0);
             let mut module_bytes = Vec::with_capacity(table.num_modules());
             for m in 0..table.num_modules() {
-                let full = table.module_len(m) * 4;
+                // Pseudo-gradient shards travel at the payload wire
+                // width (== elems*4 for f32, so the plan is bitwise
+                // unchanged there). Anchors are *parameters*, not
+                // pseudo-gradients: the push/pull below stays f32.
+                let full = spec.payload.wire_bytes(table.module_len(m));
                 module_bytes.push(full);
                 let mb = (full / mesh.shard).max(1);
+                let mb_anchor = (table.module_len(m) * 4 / mesh.shard).max(1);
                 let secs = if shard_outer {
                     // Sharded outer state: reduce-scatter of the
                     // pseudo-gradients into the owned shards, all-gather
@@ -141,8 +161,8 @@ impl CommPlan {
                 // Anchor push + pull of the module shard over the slow
                 // links (no peer involvement).
                 plan.anchor_exchange.push((
-                    2 * mb,
-                    2.0 * step_model.cost.time(CollOp::Broadcast, mb, &group),
+                    2 * mb_anchor,
+                    2.0 * step_model.cost.time(CollOp::Broadcast, mb_anchor, &group),
                 ));
             }
             // Layer-wise overlap: exposed = pipeline stall, not the full
@@ -193,8 +213,9 @@ pub(super) fn barrier_sync(t: &mut Trainer) -> Result<()> {
         // Flat strategies cannot carry a fault plan (`Trainer::new`
         // rejects the combination), so membership is always full here.
         debug_assert_eq!(members.len(), n);
-        // Full-shard all-reduce per mesh row (uniform-averaging methods).
-        for &(bytes, secs) in &t.plan.sync_allreduce {
+        // Full-shard pseudo-gradient all-reduce per mesh row
+        // (uniform-averaging methods), at the payload wire width.
+        for &(bytes, secs) in &t.plan.flat_sync {
             t.comm.record(bytes, secs);
         }
         {
@@ -387,7 +408,7 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
     // union of the updated anchor shards (rolled-back modules keep the
     // old anchor, which the copy re-imposes exactly like the reference
     // sweep's per-module adoption).
-    t.scratch.shard_apply(&mut t.outer, &mut t.anchor);
+    t.scratch.shard_apply(&mut t.outer, &mut t.anchor, threads);
     let Trainer { replicas, anchor, .. } = t;
     for &j in members {
         replicas[j].params.copy_from_slice(anchor);

@@ -7,7 +7,7 @@
 
 use super::outer::OuterOptKind;
 use super::penalty::PenaltyConfig;
-use super::spec::{MethodSpec, SyncGranularity, SyncTrigger};
+use super::spec::{MethodSpec, PayloadKind, SyncGranularity, SyncTrigger};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -110,6 +110,7 @@ impl Method {
                 shard_outer_state: false,
                 shard_anchor: false,
                 warmup: false,
+                payload: PayloadKind::F32,
             },
             Method::PostLocalSgd => MethodSpec {
                 trigger: SyncTrigger::Step,
@@ -120,6 +121,7 @@ impl Method {
                 shard_outer_state: false,
                 shard_anchor: false,
                 warmup: true,
+                payload: PayloadKind::F32,
             },
             Method::DiLoCo => MethodSpec {
                 trigger: SyncTrigger::Step,
@@ -130,6 +132,7 @@ impl Method {
                 shard_outer_state: false,
                 shard_anchor: false,
                 warmup: false,
+                payload: PayloadKind::F32,
             },
             Method::Co2 => MethodSpec {
                 trigger: SyncTrigger::Step,
@@ -140,6 +143,7 @@ impl Method {
                 shard_outer_state: false,
                 shard_anchor: false,
                 warmup: false,
+                payload: PayloadKind::F32,
             },
             Method::Co2Star => MethodSpec {
                 trigger: SyncTrigger::Step,
@@ -150,6 +154,7 @@ impl Method {
                 shard_outer_state: true,
                 shard_anchor: true,
                 warmup: false,
+                payload: PayloadKind::F32,
             },
             Method::Edit => MethodSpec {
                 trigger: SyncTrigger::Step,
@@ -160,6 +165,7 @@ impl Method {
                 shard_outer_state: true,
                 shard_anchor: true,
                 warmup: true,
+                payload: PayloadKind::F32,
             },
             Method::AEdit => MethodSpec {
                 trigger: SyncTrigger::Time,
@@ -170,6 +176,7 @@ impl Method {
                 shard_outer_state: true,
                 shard_anchor: true,
                 warmup: true,
+                payload: PayloadKind::F32,
             },
             Method::Palsgd => MethodSpec {
                 trigger: SyncTrigger::Probabilistic { prob: 0.5 },
@@ -180,6 +187,7 @@ impl Method {
                 shard_outer_state: true,
                 shard_anchor: true,
                 warmup: true,
+                payload: PayloadKind::F32,
             },
         }
     }

@@ -37,4 +37,4 @@ pub use outer::{OuterOpt, OuterOptKind};
 pub use penalty::{AnomalyDetector, PenaltyConfig};
 pub use schedule::LrSchedule;
 pub use scratch::SyncScratch;
-pub use spec::{MethodSpec, SyncGranularity, SyncTrigger};
+pub use spec::{MethodSpec, PayloadKind, SyncGranularity, SyncTrigger};

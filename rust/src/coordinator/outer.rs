@@ -32,6 +32,36 @@ impl OuterOptKind {
     pub fn needs_momentum(&self) -> bool {
         matches!(self, OuterOptKind::Nesterov { .. })
     }
+
+    /// Stateless slice-level update: apply β·delta to `params` with
+    /// `momentum` as the matching slice of outer-momentum state (pass
+    /// `&mut []` for SGD, which carries none). This is the kernel both
+    /// [`OuterOpt::apply_range_scaled`] and the parallel shard apply
+    /// fan-out call, so the threaded path is bitwise identical to the
+    /// sequential one by construction.
+    pub fn apply_scaled(
+        &self,
+        params: &mut [f32],
+        momentum: &mut [f32],
+        delta: &[f32],
+        beta: f32,
+    ) {
+        debug_assert_eq!(params.len(), delta.len());
+        match *self {
+            OuterOptKind::Sgd { lr } => {
+                crate::tensor::kernels::scale_axpy(params, lr as f32, beta, delta);
+            }
+            OuterOptKind::Nesterov { lr, momentum: mu } => {
+                let (lr, mu) = (lr as f32, mu as f32);
+                debug_assert_eq!(momentum.len(), delta.len());
+                for ((p, m), &d) in params.iter_mut().zip(momentum.iter_mut()).zip(delta) {
+                    let g = -(beta * d);
+                    *m = mu * *m + g;
+                    *p -= lr * (g + mu * *m);
+                }
+            }
+        }
+    }
 }
 
 /// Outer optimizer state over the flat vector.
@@ -67,26 +97,13 @@ impl OuterOpt {
         off: usize,
         beta: f32,
     ) {
-        match self.kind {
-            OuterOptKind::Sgd { lr } => {
-                crate::tensor::kernels::scale_axpy(
-                    &mut params[off..off + delta.len()],
-                    lr as f32,
-                    beta,
-                    delta,
-                );
-            }
-            OuterOptKind::Nesterov { lr, momentum } => {
-                let (lr, mu) = (lr as f32, momentum as f32);
-                let params = &mut params[off..off + delta.len()];
-                let moment = &mut self.momentum[off..off + delta.len()];
-                for ((p, m), &d) in params.iter_mut().zip(moment.iter_mut()).zip(delta) {
-                    let g = -(beta * d);
-                    *m = mu * *m + g;
-                    *p -= lr * (g + mu * *m);
-                }
-            }
-        }
+        let moment = if self.kind.needs_momentum() {
+            &mut self.momentum[off..off + delta.len()]
+        } else {
+            &mut []
+        };
+        self.kind
+            .apply_scaled(&mut params[off..off + delta.len()], moment, delta, beta);
     }
 
     pub fn apply(&mut self, params: &mut [f32], delta: &[f32]) {

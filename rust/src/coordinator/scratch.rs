@@ -69,7 +69,7 @@
 //! zero-allocation steady-state invariant holds with sharding on.
 
 use crate::tensor::table::{ModuleTable, Range};
-use crate::tensor::{kernels, TableShards};
+use crate::tensor::{kernels, PayloadKind, TableShards};
 
 use super::outer::OuterOpt;
 use super::penalty;
@@ -105,6 +105,11 @@ struct ShardLane {
     load_sq: Vec<f64>,
     /// Per-part combined squared-norm partials.
     combine_sq: Vec<f64>,
+    /// Error-feedback residuals over the owned shard, indexed by
+    /// **replica id** (`j * len + local`), NOT the compacted member
+    /// slot — a replica that skips a sync (fault, A-EDiT subset) keeps
+    /// its residual untouched. Empty when `payload = f32`.
+    residuals: Vec<f32>,
 }
 
 /// Sharded-sync state: the lanes, the range-order fold metadata and the
@@ -176,6 +181,13 @@ pub struct SyncScratch {
     mean: Vec<f32>,
     /// Recycled full-vector buffers for the CO2 staleness queue.
     spare: Vec<Vec<f32>>,
+    /// Sync wire format ([`PayloadKind`]); `F32` is the historical
+    /// uncompressed path with no residual state.
+    payload: PayloadKind,
+    /// Full-matrix error-feedback residuals (row j = replica j), the
+    /// unsharded twin of the per-lane `ShardLane::residuals`. Empty
+    /// when `payload = f32` or sharding is active.
+    residuals: Vec<f32>,
     /// ZeRO-1-style shard lanes (`TrainConfig::shard_outer`); `None`
     /// runs the historical full-matrix path.
     shards: Option<ShardState>,
@@ -203,7 +215,51 @@ impl SyncScratch {
             tokens: Vec::with_capacity(token_capacity),
             mean: vec![0.0; params],
             spare: Vec::new(),
+            payload: PayloadKind::F32,
+            residuals: Vec::new(),
             shards: None,
+        }
+    }
+
+    /// Select the sync wire format and (re)size the error-feedback
+    /// residual buffers for the current layout. Setup-path only: the
+    /// steady-state sweep allocates nothing, so this must be called at
+    /// trainer construction and after any layout change
+    /// ([`Self::enable_sharding`] / [`Self::disable_sharding`] /
+    /// [`Self::ensure_replicas`] call it themselves).
+    pub fn set_payload(&mut self, payload: PayloadKind) {
+        self.payload = payload;
+        self.resize_residuals();
+    }
+
+    /// Active sync wire format.
+    pub fn payload(&self) -> PayloadKind {
+        self.payload
+    }
+
+    /// Size the residual buffers for the active layout; `payload=f32`
+    /// carries none (so the arena is byte-for-byte the pre-payload-axis
+    /// arena). On a size change the buffer restarts at zero — residual
+    /// state deliberately resets across elastic layout changes, and the
+    /// checkpoint restore that follows a rescale re-imports it.
+    fn resize_residuals(&mut self) {
+        let (replicas, params) = (self.replicas, self.params);
+        let quantized = self.payload.quantized();
+        if let Some(st) = self.shards.as_mut() {
+            for lane in &mut st.lanes {
+                let want = if quantized { replicas * lane.len } else { 0 };
+                if lane.residuals.len() != want {
+                    lane.residuals.clear();
+                    lane.residuals.resize(want, 0.0);
+                }
+            }
+            self.residuals = Vec::new();
+        } else {
+            let want = if quantized { replicas * params } else { 0 };
+            if self.residuals.len() != want {
+                self.residuals.clear();
+                self.residuals.resize(want, 0.0);
+            }
         }
     }
 
@@ -226,6 +282,7 @@ impl SyncScratch {
                     combined: vec![0.0; len],
                     load_sq: Vec::new(),
                     combine_sq: Vec::new(),
+                    residuals: Vec::new(),
                 }
             })
             .collect();
@@ -265,6 +322,7 @@ impl SyncScratch {
             betas: vec![1.0; modules],
             members: 0,
         });
+        self.resize_residuals();
     }
 
     /// Restore the full-matrix layout (inverse of
@@ -281,6 +339,7 @@ impl SyncScratch {
                 .max()
                 .unwrap_or(0);
             self.combined = vec![0.0; max_module_len];
+            self.resize_residuals();
         }
     }
 
@@ -307,6 +366,7 @@ impl SyncScratch {
             debug_assert!(self.deltas.is_empty(), "sharded arena holds no full Δ matrix");
         } else {
             self.deltas.resize(replicas * self.params, 0.0);
+            self.resize_residuals();
         }
         self.norms.reserve(replicas);
         self.screened.reserve(replicas);
@@ -361,7 +421,7 @@ impl SyncScratch {
     {
         self.norms.clear();
         for j in 0..self.replicas {
-            let sq = self.load_one_row(m, j, row_params(j), anchor);
+            let sq = self.load_one_row(m, j, j, row_params(j), anchor);
             self.norms.push(sq.sqrt());
         }
     }
@@ -385,35 +445,73 @@ impl SyncScratch {
         debug_assert!(members.len() <= self.replicas);
         self.norms.clear();
         for (i, &j) in members.iter().enumerate() {
-            let sq = self.load_one_row(m, i, row_params(j), anchor);
+            let sq = self.load_one_row(m, i, j, row_params(j), anchor);
             self.norms.push(sq.sqrt());
         }
     }
 
     /// Δ-matrix row fill for one (row slot, module): fused subtraction +
-    /// squared norm over the module's ranges.
-    fn load_one_row(&mut self, m: usize, slot: usize, row: &[f32], anchor: &[f32]) -> f64 {
+    /// squared norm over the module's ranges. Quantized payloads fold
+    /// the error-feedback residual add → quantize → dequantize into the
+    /// same sweep, so the Δ row (and its norm — downstream consumes
+    /// wire values) holds what actually crosses the wire. `slot` is the
+    /// compacted Δ-matrix row; `replica` indexes the persistent
+    /// residual row (they differ under member subsets).
+    fn load_one_row(
+        &mut self,
+        m: usize,
+        slot: usize,
+        replica: usize,
+        row: &[f32],
+        anchor: &[f32],
+    ) -> f64 {
         debug_assert_eq!(row.len(), self.params);
         let base = slot * self.params;
         let mut sq = 0.0f64;
-        for r in &self.module_ranges[m] {
-            sq += kernels::sub_sq_norm_into(
-                &mut self.deltas[base + r.offset..base + r.offset + r.len],
-                &row[r.offset..r.offset + r.len],
-                &anchor[r.offset..r.offset + r.len],
-            );
+        if self.payload.quantized() {
+            let rbase = replica * self.params;
+            let Self { deltas, residuals, module_ranges, payload, .. } = self;
+            for r in &module_ranges[m] {
+                sq += kernels::sub_qdq_ef_sq_norm_into(
+                    *payload,
+                    &mut deltas[base + r.offset..base + r.offset + r.len],
+                    &row[r.offset..r.offset + r.len],
+                    &anchor[r.offset..r.offset + r.len],
+                    &mut residuals[rbase + r.offset..rbase + r.offset + r.len],
+                );
+            }
+        } else {
+            for r in &self.module_ranges[m] {
+                sq += kernels::sub_sq_norm_into(
+                    &mut self.deltas[base + r.offset..base + r.offset + r.len],
+                    &row[r.offset..r.offset + r.len],
+                    &anchor[r.offset..r.offset + r.len],
+                );
+            }
         }
         sq
     }
 
     /// Fill the whole Δ matrix (uniform-averaging path; no norms).
+    /// Quantized payloads run the error-feedback quantize/dequantize
+    /// over each full row (chunks restart per row) so the flat-sync
+    /// methods (DiLoCo, CO2, ...) compress their exchange too.
     pub fn load_full<'a, F>(&mut self, row_params: F, anchor: &[f32])
     where
         F: Fn(usize) -> &'a [f32],
     {
-        for j in 0..self.replicas {
-            let base = j * self.params;
-            kernels::sub(&mut self.deltas[base..base + self.params], row_params(j), anchor);
+        let Self { deltas, residuals, params, replicas, payload, .. } = self;
+        let (params, replicas) = (*params, *replicas);
+        for j in 0..replicas {
+            let base = j * params;
+            kernels::sub(&mut deltas[base..base + params], row_params(j), anchor);
+            if payload.quantized() {
+                kernels::quant_dequant_ef(
+                    *payload,
+                    &mut deltas[base..base + params],
+                    &mut residuals[base..base + params],
+                );
+            }
         }
     }
 
@@ -516,6 +614,7 @@ impl SyncScratch {
         F: Fn(usize) -> &'a [f32] + Sync,
     {
         let replicas = self.replicas;
+        let payload = self.payload;
         debug_assert!(members.len() <= replicas);
         let st = self.shards.as_mut().expect("sharding not enabled");
         st.members = members.len();
@@ -525,16 +624,37 @@ impl SyncScratch {
             // silently scramble the partial indexing below.
             debug_assert_eq!(lane.load_sq.len(), lane.parts.len() * replicas);
             debug_assert_eq!(lane.deltas.len(), replicas * lane.len);
+            debug_assert!(
+                !payload.quantized() || lane.residuals.len() == replicas * lane.len
+            );
+            let len = lane.len;
+            let ShardLane { parts, deltas, load_sq, residuals, .. } = lane;
             for (i, &j) in members.iter().enumerate() {
                 let row = row_params(j);
-                let base = i * lane.len;
-                for (slot, p) in lane.parts.iter().enumerate() {
-                    let sq = kernels::sub_sq_norm_into(
-                        &mut lane.deltas[base + p.local..base + p.local + p.len],
-                        &row[p.offset..p.offset + p.len],
-                        &anchor[p.offset..p.offset + p.len],
-                    );
-                    lane.load_sq[slot * replicas + i] = sq;
+                let base = i * len;
+                for (slot, p) in parts.iter().enumerate() {
+                    // `LanePart`s are whole module ranges (the
+                    // range-aligned partition never splits one), so the
+                    // quantization chunks restart exactly where the
+                    // unsharded per-range sweep restarts them — sharded
+                    // on/off stays bitwise identical. Residuals are
+                    // indexed by replica id `j`, not member slot `i`.
+                    let sq = if payload.quantized() {
+                        kernels::sub_qdq_ef_sq_norm_into(
+                            payload,
+                            &mut deltas[base + p.local..base + p.local + p.len],
+                            &row[p.offset..p.offset + p.len],
+                            &anchor[p.offset..p.offset + p.len],
+                            &mut residuals[j * len + p.local..j * len + p.local + p.len],
+                        )
+                    } else {
+                        kernels::sub_sq_norm_into(
+                            &mut deltas[base + p.local..base + p.local + p.len],
+                            &row[p.offset..p.offset + p.len],
+                            &anchor[p.offset..p.offset + p.len],
+                        )
+                    };
+                    load_sq[slot * replicas + i] = sq;
                 }
             }
         });
@@ -626,20 +746,133 @@ impl SyncScratch {
     /// combined ranges through the outer optimizer with the per-module β
     /// fused in. Ranges are disjoint slices of the anchor and momentum,
     /// so the lane-major apply order is immaterial: the result is
-    /// bitwise the unsharded module-major sweep.
-    pub fn shard_apply(&self, outer: &mut OuterOpt, anchor: &mut [f32]) {
+    /// bitwise the unsharded module-major sweep. Fanned out across up
+    /// to `threads` scoped threads over contiguous lane batches (the
+    /// `for_each_lane` chunking): lanes tile the flat space in
+    /// ascending order, so the anchor and momentum split into disjoint
+    /// per-batch slices with `split_at_mut` — no allocation, and the
+    /// per-element update (`OuterOptKind::apply_scaled`) is the same
+    /// kernel the sequential path runs.
+    pub fn shard_apply(&self, outer: &mut OuterOpt, anchor: &mut [f32], threads: usize) {
         let st = self.shards.as_ref().expect("sharding not enabled");
-        for lane in &st.lanes {
-            for p in &lane.parts {
-                if st.rollback[p.module] {
-                    continue;
+        let threads = threads.max(1).min(st.lanes.len().max(1));
+        if threads <= 1 {
+            for lane in &st.lanes {
+                for p in &lane.parts {
+                    if st.rollback[p.module] {
+                        continue;
+                    }
+                    outer.apply_range_scaled(
+                        anchor,
+                        &lane.combined[p.local..p.local + p.len],
+                        p.offset,
+                        st.betas[p.module],
+                    );
                 }
-                outer.apply_range_scaled(
-                    anchor,
-                    &lane.combined[p.local..p.local + p.len],
-                    p.offset,
-                    st.betas[p.module],
-                );
+            }
+            return;
+        }
+        let kind = outer.kind;
+        let has_momentum = kind.needs_momentum();
+        let chunk = st.lanes.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut a_rest: &mut [f32] = anchor;
+            let mut m_rest: &mut [f32] = &mut outer.momentum;
+            let mut cursor = 0usize;
+            for batch in st.lanes.chunks(chunk) {
+                // Lanes tile [0, params) contiguously in ascending
+                // order; a batch therefore owns [cursor, cursor+len).
+                debug_assert_eq!(batch[0].offset, cursor);
+                let len: usize = batch.iter().map(|l| l.len).sum();
+                let (a_cut, a_next) = a_rest.split_at_mut(len);
+                a_rest = a_next;
+                let (m_cut, m_next) = if has_momentum {
+                    m_rest.split_at_mut(len)
+                } else {
+                    (&mut [][..], m_rest)
+                };
+                m_rest = m_next;
+                let base = cursor;
+                cursor += len;
+                scope.spawn(move || {
+                    for lane in batch {
+                        for p in &lane.parts {
+                            if st.rollback[p.module] {
+                                continue;
+                            }
+                            let lo = p.offset - base;
+                            let momentum = if has_momentum {
+                                &mut m_cut[lo..lo + p.len]
+                            } else {
+                                &mut [][..]
+                            };
+                            kind.apply_scaled(
+                                &mut a_cut[lo..lo + p.len],
+                                momentum,
+                                &lane.combined[p.local..p.local + p.len],
+                                st.betas[p.module],
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Error-feedback residual state present? (`payload=f32` carries
+    /// none — the checkpoint section is written empty.)
+    pub fn residuals_enabled(&self) -> bool {
+        self.payload.quantized()
+    }
+
+    /// Gather the residual matrix into `out` in the canonical
+    /// replica-major flat order (`replicas × params`) — identical bytes
+    /// whether sharding is on or off, so a checkpoint written by either
+    /// layout restores into the other. Save-path only (may allocate);
+    /// leaves `out` empty when the payload carries no residuals.
+    pub fn export_residuals_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        if !self.payload.quantized() {
+            return;
+        }
+        let (replicas, params) = (self.replicas, self.params);
+        out.resize(replicas * params, 0.0);
+        match &self.shards {
+            None => out.copy_from_slice(&self.residuals),
+            Some(st) => {
+                for j in 0..replicas {
+                    for lane in &st.lanes {
+                        out[j * params + lane.offset..j * params + lane.offset + lane.len]
+                            .copy_from_slice(
+                                &lane.residuals[j * lane.len..(j + 1) * lane.len],
+                            );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`Self::export_residuals_into`]: scatter a canonical
+    /// flat residual matrix into the active layout. `flat` must be
+    /// `replicas × params` long (checkpoint restore validates the
+    /// section count before calling). No-op for `payload=f32`.
+    pub fn import_residuals(&mut self, flat: &[f32]) {
+        if !self.payload.quantized() {
+            return;
+        }
+        let (replicas, params) = (self.replicas, self.params);
+        assert_eq!(flat.len(), replicas * params, "residual import size");
+        match &mut self.shards {
+            None => self.residuals.copy_from_slice(flat),
+            Some(st) => {
+                for j in 0..replicas {
+                    for lane in &mut st.lanes {
+                        lane.residuals[j * lane.len..(j + 1) * lane.len].copy_from_slice(
+                            &flat[j * params + lane.offset
+                                ..j * params + lane.offset + lane.len],
+                        );
+                    }
+                }
             }
         }
     }
@@ -663,8 +896,7 @@ impl SyncScratch {
     pub fn shard_rank_bytes(&self, s: usize) -> usize {
         let st = self.shards.as_ref().expect("sharding not enabled");
         let lane = &st.lanes[s];
-        lane.deltas.len() * 4
-            + lane.combined.len() * 4
+        (lane.deltas.len() + lane.combined.len() + lane.residuals.len()) * 4
             + (lane.load_sq.len() + lane.combine_sq.len()) * 8
     }
 }
@@ -882,7 +1114,7 @@ mod tests {
                 let beta = (phi / (sq.sqrt() + eps)).min(1.0);
                 s.shard_set_beta(m, beta as f32);
             }
-            s.shard_apply(&mut outer_s, &mut anchor_s);
+            s.shard_apply(&mut outer_s, &mut anchor_s, threads);
             assert_eq!(anchor_s, anchor_r, "parts={parts}");
             assert_eq!(outer_s.momentum, outer_r.momentum, "parts={parts}");
         }
@@ -922,7 +1154,7 @@ mod tests {
             let _ = s.shard_module_sq(m);
             s.shard_set_beta(m, 1.0);
         }
-        s.shard_apply(&mut outer, &mut anchor);
+        s.shard_apply(&mut outer, &mut anchor, 1);
         // Rolled-back module 0: anchor slices untouched.
         for r in table.module_ranges(0) {
             assert_eq!(
@@ -936,6 +1168,162 @@ mod tests {
             .iter()
             .any(|r| anchor[r.offset..r.offset + r.len] != anchor0[r.offset..r.offset + r.len]);
         assert!(moved, "module 1 must have been applied");
+    }
+
+    #[test]
+    fn parallel_shard_apply_bitwise_matches_sequential() {
+        let table = toy_table();
+        let p = table.total;
+        let anchor0: Vec<f32> = (0..p).map(|i| (i % 11) as f32 / 11.0 - 0.3).collect();
+        let params = rows(3, p);
+        let members = [0usize, 1, 2];
+        for kind in [
+            OuterOptKind::Sgd { lr: 0.7 },
+            OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 },
+        ] {
+            let run = |threads: usize| {
+                let mut s = SyncScratch::new(&table, 3, 0);
+                s.enable_sharding(&table, 3);
+                let mut outer = OuterOpt::new(kind, p);
+                // Seed a nonzero momentum so the threaded split is
+                // exercised against real state, not all-zeros.
+                for (i, m) in outer.momentum.iter_mut().enumerate() {
+                    *m = (i % 5) as f32 * 0.1 - 0.2;
+                }
+                let mut anchor = anchor0.clone();
+                s.shard_load(&members, |j| params[j].as_slice(), &anchor, 1);
+                for m in 0..table.num_modules() {
+                    s.shard_fold_norms(m);
+                    s.adopt_norms_unscreened();
+                    assert!(s.compute_weights(true));
+                    s.shard_commit_weights(m, true);
+                }
+                s.shard_combine(1);
+                for m in 0..table.num_modules() {
+                    let _ = s.shard_module_sq(m);
+                    s.shard_set_beta(m, 0.9);
+                }
+                s.shard_apply(&mut outer, &mut anchor, threads);
+                (anchor, outer.momentum)
+            };
+            let (a1, m1) = run(1);
+            for threads in [2, 3, 7] {
+                let (at, mt) = run(threads);
+                assert_eq!(a1, at, "{kind:?} threads={threads}");
+                assert_eq!(m1, mt, "{kind:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_full_and_sharded_paths_match_bitwise() {
+        // payload=int8: the sharded five-phase pipeline must reproduce
+        // the unsharded module-major sweep bitwise — norms, anchor,
+        // momentum AND the error-feedback residual state.
+        let table = toy_table();
+        let p = table.total;
+        let anchor0: Vec<f32> = (0..p).map(|i| (i % 5) as f32 / 5.0).collect();
+        let params = rows(3, p);
+        let members = [0usize, 1, 2];
+        let phi = 0.6f64;
+        let eps = 1e-8f64;
+
+        for payload in [PayloadKind::Int8, PayloadKind::Bit1] {
+            let mut r = SyncScratch::new(&table, 3, 0);
+            r.set_payload(payload);
+            let mut outer_r =
+                OuterOpt::new(OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }, p);
+            let mut anchor_r = anchor0.clone();
+            let mut norms_r: Vec<Vec<f64>> = Vec::new();
+            for m in 0..table.num_modules() {
+                r.load_module_subset(m, &members, |j| params[j].as_slice(), &anchor_r);
+                norms_r.push(r.norms().to_vec());
+                r.adopt_norms_unscreened();
+                assert!(r.compute_weights(true));
+                let sq = r.combine_module(m);
+                let beta = (phi / (sq.sqrt() + eps)).min(1.0);
+                r.apply_module(m, &mut outer_r, &mut anchor_r, beta as f32);
+            }
+            let mut res_r = Vec::new();
+            r.export_residuals_into(&mut res_r);
+            assert_eq!(res_r.len(), 3 * p);
+            assert!(
+                res_r.iter().any(|&x| x != 0.0),
+                "{payload:?}: quantization must leave a nonzero residual"
+            );
+
+            for parts in [2usize, 3] {
+                let threads = parts; // exercise the lane fan-out too
+                let mut s = SyncScratch::new(&table, 3, 0);
+                s.enable_sharding(&table, parts);
+                s.set_payload(payload);
+                let mut outer_s =
+                    OuterOpt::new(OuterOptKind::Nesterov { lr: 0.8, momentum: 0.85 }, p);
+                let mut anchor_s = anchor0.clone();
+                s.shard_load(&members, |j| params[j].as_slice(), &anchor_s, threads);
+                for m in 0..table.num_modules() {
+                    s.shard_fold_norms(m);
+                    assert_eq!(s.norms(), &norms_r[m][..], "{payload:?} parts={parts} m={m}");
+                    s.adopt_norms_unscreened();
+                    assert!(s.compute_weights(true));
+                    s.shard_commit_weights(m, true);
+                }
+                s.shard_combine(threads);
+                for m in 0..table.num_modules() {
+                    let sq = s.shard_module_sq(m);
+                    let beta = (phi / (sq.sqrt() + eps)).min(1.0);
+                    s.shard_set_beta(m, beta as f32);
+                }
+                s.shard_apply(&mut outer_s, &mut anchor_s, threads);
+                assert_eq!(anchor_s, anchor_r, "{payload:?} parts={parts}");
+                assert_eq!(outer_s.momentum, outer_r.momentum, "{payload:?} parts={parts}");
+                let mut res_s = Vec::new();
+                s.export_residuals_into(&mut res_s);
+                assert_eq!(res_s, res_r, "{payload:?} parts={parts} residuals");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_export_import_roundtrips_across_layouts() {
+        let table = toy_table();
+        let p = table.total;
+        let anchor: Vec<f32> = (0..p).map(|i| (i % 7) as f32 / 7.0 - 0.4).collect();
+        let params = rows(2, p);
+
+        // Populate residuals on a sharded arena.
+        let mut s = SyncScratch::new(&table, 2, 0);
+        s.enable_sharding(&table, 2);
+        s.set_payload(PayloadKind::Int8);
+        s.shard_load(&[0, 1], |j| params[j].as_slice(), &anchor, 1);
+        let mut flat = Vec::new();
+        s.export_residuals_into(&mut flat);
+        assert_eq!(flat.len(), 2 * p);
+
+        // Import into an unsharded arena and re-export: identical.
+        let mut u = SyncScratch::new(&table, 2, 0);
+        u.set_payload(PayloadKind::Int8);
+        u.import_residuals(&flat);
+        let mut flat2 = Vec::new();
+        u.export_residuals_into(&mut flat2);
+        assert_eq!(flat, flat2);
+
+        // And back into a differently-sharded arena.
+        let mut s3 = SyncScratch::new(&table, 2, 0);
+        s3.enable_sharding(&table, 3);
+        s3.set_payload(PayloadKind::Int8);
+        s3.import_residuals(&flat);
+        let mut flat3 = Vec::new();
+        s3.export_residuals_into(&mut flat3);
+        assert_eq!(flat, flat3);
+
+        // f32 payload: no residual state at all.
+        let mut f = SyncScratch::new(&table, 2, 0);
+        f.set_payload(PayloadKind::F32);
+        assert!(!f.residuals_enabled());
+        let mut none = vec![1.0f32; 3];
+        f.export_residuals_into(&mut none);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | `shard_outer_state`| full copy / sharded over the group   | memory model (Table 2 OOM column) |
 //! | `shard_anchor`     | full copy / sharded                  | memory model |
 //! | `warmup`           | DDP warmup phase applies             | engine phase logic |
+//! | `payload`          | f32 / int8 / bit1 (error feedback)   | sync numerics, collectives, α-β cost model |
 //!
 //! Every named method is a row of this table ([`Method::spec`]), every
 //! consumer (trainer, step/trace/memory models, cluster simulator)
@@ -34,6 +35,8 @@
 use super::method::Method;
 use super::outer::OuterOptKind;
 use super::penalty::PenaltyConfig;
+
+pub use crate::tensor::kernels::PayloadKind;
 
 /// When does a replica become sync-eligible?
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -94,6 +97,12 @@ pub struct MethodSpec {
     pub shard_anchor: bool,
     /// DDP warmup phase applies (two-phase training, Alg. 1).
     pub warmup: bool,
+    /// Wire format of the pseudo-gradient payload. Quantized payloads
+    /// (`int8`/`bit1`) compress the sync exchange with per-chunk scales
+    /// and an error-feedback residual carried in `SyncScratch`;
+    /// [`PayloadKind::F32`] is a complete code-path bypass, bitwise
+    /// identical to the pre-payload-axis behavior.
+    pub payload: PayloadKind,
 }
 
 impl MethodSpec {
@@ -173,6 +182,14 @@ impl MethodSpec {
                     .into(),
             );
         }
+        if self.payload.quantized() && !self.is_local_sgd() {
+            return Err(
+                "payload quantization compresses the local-SGD sync exchange; \
+                 it has no effect with trigger=none (pure DDP) — drop payload= \
+                 or pick a syncing trigger"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
@@ -234,6 +251,11 @@ impl MethodSpec {
                     .map_err(|_| format!("staleness must be an integer, got '{value}'"))?
             }
             "warmup" => self.warmup = parse_bool("warmup", value)?,
+            "payload" => {
+                self.payload = PayloadKind::parse(value).ok_or_else(|| {
+                    format!("payload must be f32|int8|bit1, got '{value}'")
+                })?
+            }
             "shard" => {
                 let b = parse_bool("shard", value)?;
                 self.shard_outer_state = b;
@@ -304,7 +326,7 @@ impl MethodSpec {
 pub const CUSTOM_GRAMMAR: &str = "custom:base=<method>[,key=value...] with keys \
 base=<named method>, sync=layer|flat, trigger=step|time|prob:<p>, \
 penalty=on|off|no-ae|no-wa|no-gc, outer=nesterov[:lr[:mu]]|sgd[:lr]|avg, \
-staleness=<rounds>, shard=on|off, warmup=on|off \
+staleness=<rounds>, shard=on|off, warmup=on|off, payload=f32|int8|bit1 \
 — e.g. custom:base=edit,penalty=off,sync=flat";
 
 fn parse_bool(key: &str, value: &str) -> Result<bool, String> {
@@ -433,6 +455,9 @@ mod tests {
             "custom:base=diloco,staleness=1",
             "custom:base=a-edit,trigger=prob:0.25",
             "custom:base=edit,outer=sgd:0.7,warmup=off,shard=off",
+            "custom:base=edit,payload=int8",
+            "custom:base=a-edit,payload=bit1",
+            "custom:base=diloco,payload=int8",
         ];
         for s in cases {
             let (spec, label) = MethodSpec::parse(s).unwrap();
@@ -460,6 +485,14 @@ mod tests {
             MethodSpec::parse("custom:base=edit,outer=sgd:0.7,warmup=off,shard=off").unwrap();
         assert_eq!(sgd.outer, OuterOptKind::Sgd { lr: 0.7 });
         assert!(!sgd.warmup && !sgd.shard_outer_state && !sgd.shard_anchor);
+        // Presets default to the uncompressed wire format; payload= is
+        // purely additive on top of any base.
+        assert_eq!(base.payload, PayloadKind::F32);
+        let (q, _) = MethodSpec::parse("custom:base=edit,payload=int8").unwrap();
+        assert_eq!(q.payload, PayloadKind::Int8);
+        let mut f32_again = q;
+        f32_again.payload = PayloadKind::F32;
+        assert_eq!(f32_again, Method::Edit.spec());
     }
 
     #[test]
@@ -477,6 +510,9 @@ mod tests {
             "custom:base=edit,sync=flat,trigger=time", // flat + time trigger
             "custom:sync=flat,base=edit",         // base= must come first
             "custom:base=edit,sync=flat,penalty=on", // explicit penalty vs flat
+            "custom:base=edit,payload=f16",       // unknown payload
+            "custom:base=baseline,payload=int8",  // quantized + no sync
+            "custom:base=edit,trigger=none,payload=bit1", // same, explicit
         ] {
             let err = MethodSpec::parse(s).unwrap_err();
             assert!(!err.is_empty(), "{s}");

@@ -227,12 +227,14 @@ pub fn ablation_rows(opts: &ExpOpts) -> Result<()> {
     use crate::coordinator::MethodSpec;
     use crate::simulator::{simulate, ScaleSpec, SimConfig};
 
-    let rows: [(&str, &str); 5] = [
+    let rows: [(&str, &str); 7] = [
         ("edit (full)", "custom:base=edit"),
         ("w/o penalty", "custom:base=edit,penalty=off"),
         ("w/o layer-wise sync", "custom:base=edit,sync=flat"),
         ("w/o warmup", "custom:base=edit,warmup=off"),
         ("probabilistic sync", "custom:base=edit,trigger=prob:0.5"),
+        ("int8 payload", "custom:base=edit,payload=int8"),
+        ("1-bit payload", "custom:base=edit,payload=bit1"),
     ];
     let mut csv = CsvWriter::create(
         opts.result_path("table4_ablation_rows.csv"),

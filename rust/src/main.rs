@@ -46,7 +46,8 @@ fn usage() -> &'static str {
   train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit|palsgd
             or --method custom:base=edit,penalty=off,sync=flat,... (the
             MethodSpec grammar; axes also settable via train.* config
-            keys: sync/trigger/penalty/outer/staleness/shard/warmup)
+            keys: sync/trigger/penalty/outer/staleness/shard/warmup/
+            payload — payload=f32|int8|bit1 compresses the sync wire)
             --lr X --noise P --straggler none|random:LAG|consistent:LAG[:REPLICA]
             --threads N --timeline FILE.csv --out curves.csv --log
             --no-shard-outer (disable ZeRO-1 outer-state sharding)
@@ -127,13 +128,15 @@ fn run(args: &Args) -> Result<()> {
 }
 
 /// Apply `train.*` strategy-axis config keys (sync/trigger/penalty/
-/// outer/staleness/shard/warmup) over a parsed spec, then re-normalize
+/// outer/staleness/shard/warmup/payload) over a parsed spec, then re-normalize
 /// and validate — the config-file twin of the `custom:` grammar.
 /// Returns the applied `key=value` pairs so the caller can fold them
 /// into the run label (the label must describe what actually runs).
 fn apply_spec_cfg(spec: &mut MethodSpec, cfg: &Config) -> Result<Vec<String>> {
     let mut applied = Vec::new();
-    for key in ["sync", "trigger", "penalty", "outer", "staleness", "shard", "warmup"] {
+    for key in [
+        "sync", "trigger", "penalty", "outer", "staleness", "shard", "warmup", "payload",
+    ] {
         let Some(v) = cfg.get(&format!("train.{key}")) else {
             continue;
         };

@@ -204,7 +204,11 @@ impl Manifest {
 /// Version of the on-disk run-state checkpoint format. Bump on any
 /// layout change; `RunManifest::from_json` rejects mismatches loudly
 /// instead of misreading old files.
-pub const RUN_STATE_VERSION: u32 = 1;
+///
+/// History: 1 — initial format; 2 — `sync_residuals` F32 section (the
+/// quantized payload axis's error-feedback buffers) after
+/// `outer_momentum`, count 0 for `payload=f32`.
+pub const RUN_STATE_VERSION: u32 = 2;
 
 /// Magic prefix of a run-state checkpoint file.
 pub const RUN_STATE_MAGIC: &[u8; 8] = b"EDITCKPT";

@@ -84,7 +84,12 @@ impl StepModel {
     /// the next round's compute.)
     pub fn sync_exposed(&self, spec: &MethodSpec) -> f64 {
         let group = self.mesh.sync_group(0);
-        let shard_bytes = self.param_bytes / self.mesh.shard;
+        // Pseudo-gradient exchanges travel at the payload wire width
+        // (spec.payload); for f32 this reduces to `param_bytes` exactly,
+        // keeping the historical pricing bitwise. The warmup/DDP
+        // gradient all-reduce (inner_step_exposed) always stays f32.
+        let wire = spec.payload.wire_bytes(self.param_bytes / 4);
+        let shard_bytes = wire / self.mesh.shard;
         let ar = self.cost.time(CollOp::AllReduce, shard_bytes, &group);
         if !spec.is_local_sgd() {
             // No periodic sync at all (pure DDP baseline).
@@ -293,6 +298,24 @@ mod tests {
             let rs_ag = m.layerwise_exposed_ops(&modules, true);
             assert_eq!(ar.to_bits(), rs_ag.to_bits());
         }
+    }
+
+    #[test]
+    fn quantized_payload_shrinks_flat_sync_pricing() {
+        // int8 payload carries ~1/3.8 the bytes of f32, so the exposed
+        // flat all-reduce must shrink accordingly; f32 payload must
+        // price bitwise like the historical param_bytes expression.
+        let m = model();
+        let f = Method::DiLoCo.spec();
+        let mut q = f;
+        q.payload = crate::tensor::PayloadKind::Int8;
+        let tf = m.sync_exposed(&f);
+        let tq = m.sync_exposed(&q);
+        assert!(tq < tf, "int8 {tq} vs f32 {tf}");
+        let group = m.mesh.sync_group(0);
+        let legacy =
+            m.cost.time(CollOp::AllReduce, m.param_bytes / m.mesh.shard, &group);
+        assert_eq!(tf.to_bits(), legacy.to_bits());
     }
 
     #[test]

@@ -36,6 +36,65 @@
 /// two NEON f64x2 registers).
 pub const LANES: usize = 4;
 
+/// Elements per quantization chunk: each chunk of the pseudo-gradient
+/// carries one f32 scale on the wire. 64 is a multiple of [`LANES`]
+/// (the per-chunk norm accumulation keeps the global lane schedule) and
+/// small enough that per-chunk ranges track local gradient magnitude.
+pub const QUANT_CHUNK: usize = 64;
+
+/// Wire encoding of a synchronized pseudo-gradient payload — the
+/// `MethodSpec` payload axis (`payload=f32|int8|bit1`). `F32` is the
+/// uncompressed historical path (bit-for-bit; no quantization code
+/// runs); the compressed kinds quantize per [`QUANT_CHUNK`] chunk with
+/// an error-feedback residual maintained by the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PayloadKind {
+    /// Raw f32 payload (4 bytes/element, no scales, no residuals).
+    F32,
+    /// Symmetric int8: per-chunk scale = max|v|/127, deterministic
+    /// round-to-nearest codes in [-127, 127].
+    Int8,
+    /// Sign bit + per-chunk mean-|v| magnitude (1-bit SGD style).
+    Bit1,
+}
+
+impl PayloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadKind::F32 => "f32",
+            PayloadKind::Int8 => "int8",
+            PayloadKind::Bit1 => "bit1",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "f32" | "full" => PayloadKind::F32,
+            "int8" | "i8" => PayloadKind::Int8,
+            "bit1" | "1bit" | "sign" => PayloadKind::Bit1,
+            _ => return None,
+        })
+    }
+
+    /// Does this payload run the quantize/dequantize + error-feedback
+    /// machinery at all? `F32` bypasses it completely (bitwise contract
+    /// with pre-payload-axis behavior).
+    pub fn quantized(self) -> bool {
+        !matches!(self, PayloadKind::F32)
+    }
+
+    /// Bytes on the wire for `elems` f32 elements: codes plus one f32
+    /// scale per [`QUANT_CHUNK`] chunk. `F32` is exactly `elems * 4`,
+    /// so cost-model call sites stay bit-identical on the default path.
+    pub fn wire_bytes(self, elems: usize) -> usize {
+        match self {
+            PayloadKind::F32 => elems * 4,
+            PayloadKind::Int8 => elems + elems.div_ceil(QUANT_CHUNK) * 4,
+            PayloadKind::Bit1 => elems.div_ceil(8) + elems.div_ceil(QUANT_CHUNK) * 4,
+        }
+    }
+}
+
 /// Fold the lane accumulators in a fixed tree order. Every reduction in
 /// this module uses this exact order, which is what makes the fused
 /// `*_sq` results bitwise equal to their two-pass kernel counterparts.
@@ -292,10 +351,127 @@ pub fn weighted_sum_sq_strided(
     fold_lanes(acc)
 }
 
+/// One int8 chunk (≤ [`QUANT_CHUNK`] elems): `x` holds the
+/// residual-corrected value v on entry; on exit `x` holds the
+/// dequantized value d = round(v/scale)·scale and `r` the new residual
+/// v − d. Scale is max|v|/127; an all-zero chunk passes v through
+/// untouched (d = v, r = 0) so signed zeros survive.
+#[inline]
+fn qdq_chunk_int8(x: &mut [f32], r: &mut [f32]) {
+    let mut mx = 0.0f32;
+    for &v in x.iter() {
+        mx = mx.max(v.abs());
+    }
+    if mx == 0.0 {
+        r.fill(0.0);
+        return;
+    }
+    let scale = mx / 127.0;
+    let inv = 1.0 / scale;
+    for (xi, ri) in x.iter_mut().zip(r.iter_mut()) {
+        let v = *xi;
+        let q = (v * inv).round().clamp(-127.0, 127.0);
+        let d = q * scale;
+        *ri = v - d;
+        *xi = d;
+    }
+}
+
+/// One 1-bit chunk: d = sign(v)·mean|v| (mean accumulated in f64),
+/// residual update as in [`qdq_chunk_int8`].
+#[inline]
+fn qdq_chunk_bit1(x: &mut [f32], r: &mut [f32]) {
+    let mut sum = 0.0f64;
+    for &v in x.iter() {
+        sum += v.abs() as f64;
+    }
+    let scale = (sum / x.len() as f64) as f32;
+    for (xi, ri) in x.iter_mut().zip(r.iter_mut()) {
+        let v = *xi;
+        let d = if v.is_sign_positive() { scale } else { -scale };
+        *ri = v - d;
+        *xi = d;
+    }
+}
+
+/// Fused error-feedback quantize→dequantize, in place: per chunk,
+/// v = x + residual, then x ← dequant(quant(v)) and residual ← v − d.
+/// `F32` is the identity (x and residual untouched). Exactly the
+/// arithmetic of [`sub_qdq_ef_sq_norm_into`] when `x` already holds the
+/// raw pseudo-gradient, and of [`reference::quant_dequant_ef`].
+pub fn quant_dequant_ef(kind: PayloadKind, x: &mut [f32], residual: &mut [f32]) {
+    if !kind.quantized() {
+        return;
+    }
+    assert_eq!(x.len(), residual.len());
+    for (xc, rc) in x.chunks_mut(QUANT_CHUNK).zip(residual.chunks_mut(QUANT_CHUNK)) {
+        for (xi, &ri) in xc.iter_mut().zip(rc.iter()) {
+            *xi += ri;
+        }
+        match kind {
+            PayloadKind::Int8 => qdq_chunk_int8(xc, rc),
+            PayloadKind::Bit1 => qdq_chunk_bit1(xc, rc),
+            PayloadKind::F32 => unreachable!(),
+        }
+    }
+}
+
+/// The quantized-payload pseudo-gradient sweep: out = qdq(a − b +
+/// residual) per [`QUANT_CHUNK`] chunk, residual updated in place,
+/// returning ‖out‖² with the shared [`LANES`] schedule (bitwise equal
+/// to [`sq_norm`]`(out)` — `QUANT_CHUNK % LANES == 0`, so per-chunk
+/// accumulation preserves the global lane assignment). `F32` falls
+/// through to [`sub_sq_norm_into`] untouched — the compressed path adds
+/// zero work to the default payload.
+pub fn sub_qdq_ef_sq_norm_into(
+    kind: PayloadKind,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    residual: &mut [f32],
+) -> f64 {
+    if !kind.quantized() {
+        return sub_sq_norm_into(out, a, b);
+    }
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    assert_eq!(out.len(), residual.len());
+    let mut acc = [0.0f64; LANES];
+    let n = out.len();
+    let mut pos = 0;
+    while pos < n {
+        let end = (pos + QUANT_CHUNK).min(n);
+        let oc = &mut out[pos..end];
+        let rc = &mut residual[pos..end];
+        for (i, o) in oc.iter_mut().enumerate() {
+            *o = (a[pos + i] - b[pos + i]) + rc[i];
+        }
+        match kind {
+            PayloadKind::Int8 => qdq_chunk_int8(oc, rc),
+            PayloadKind::Bit1 => qdq_chunk_bit1(oc, rc),
+            PayloadKind::F32 => unreachable!(),
+        }
+        let mut c = oc.chunks_exact(LANES);
+        for blk in &mut c {
+            for i in 0..LANES {
+                let v = blk[i] as f64;
+                acc[i] += v * v;
+            }
+        }
+        for (i, &xi) in c.remainder().iter().enumerate() {
+            let v = xi as f64;
+            acc[i] += v * v;
+        }
+        pos = end;
+    }
+    fold_lanes(acc)
+}
+
 /// The original single-pass scalar implementations, kept verbatim as the
 /// testing oracle: `tests/kernels_fused.rs` asserts every fused kernel
 /// against these across remainder-lane-exercising lengths.
 pub mod reference {
+    use super::{PayloadKind, QUANT_CHUNK};
     /// y += alpha * x
     pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
         debug_assert_eq!(y.len(), x.len());
@@ -346,6 +522,58 @@ pub mod reference {
         for (row, &w) in rows.iter().zip(weights) {
             if w != 0.0 {
                 axpy(out, w, row);
+            }
+        }
+    }
+
+    /// Naive error-feedback quantize→dequantize: plain multi-pass
+    /// per-chunk loops with the same formulas as the fused kernel
+    /// (scale = max|v|/127 for int8, sign·mean|v| for bit1; v = x +
+    /// residual; residual ← v − d). The fused op is asserted bitwise
+    /// against this.
+    pub fn quant_dequant_ef(kind: PayloadKind, x: &mut [f32], residual: &mut [f32]) {
+        if !kind.quantized() {
+            return;
+        }
+        debug_assert_eq!(x.len(), residual.len());
+        for (xc, rc) in x.chunks_mut(QUANT_CHUNK).zip(residual.chunks_mut(QUANT_CHUNK)) {
+            // v = x + r
+            for (xi, &ri) in xc.iter_mut().zip(rc.iter()) {
+                *xi += ri;
+            }
+            match kind {
+                PayloadKind::Int8 => {
+                    let mut mx = 0.0f32;
+                    for &v in xc.iter() {
+                        mx = mx.max(v.abs());
+                    }
+                    if mx == 0.0 {
+                        rc.fill(0.0);
+                        continue;
+                    }
+                    let scale = mx / 127.0;
+                    let inv = 1.0 / scale;
+                    for (xi, ri) in xc.iter_mut().zip(rc.iter_mut()) {
+                        let v = *xi;
+                        let d = (v * inv).round().clamp(-127.0, 127.0) * scale;
+                        *ri = v - d;
+                        *xi = d;
+                    }
+                }
+                PayloadKind::Bit1 => {
+                    let mut sum = 0.0f64;
+                    for &v in xc.iter() {
+                        sum += v.abs() as f64;
+                    }
+                    let scale = (sum / xc.len() as f64) as f32;
+                    for (xi, ri) in xc.iter_mut().zip(rc.iter_mut()) {
+                        let v = *xi;
+                        let d = if v.is_sign_positive() { scale } else { -scale };
+                        *ri = v - d;
+                        *xi = d;
+                    }
+                }
+                PayloadKind::F32 => unreachable!(),
             }
         }
     }
@@ -495,5 +723,130 @@ mod tests {
         let x = vec![1e-3f32; 10_000_000];
         let got = sq_norm(&x);
         assert!((got - 10.0).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn payload_wire_bytes_and_names() {
+        for (kind, name) in [
+            (PayloadKind::F32, "f32"),
+            (PayloadKind::Int8, "int8"),
+            (PayloadKind::Bit1, "bit1"),
+        ] {
+            assert_eq!(kind.name(), name);
+            assert_eq!(PayloadKind::parse(name), Some(kind));
+        }
+        assert_eq!(PayloadKind::parse("f16"), None);
+        // F32 is exactly the historical elems*4 expression.
+        assert_eq!(PayloadKind::F32.wire_bytes(1000), 4000);
+        // Int8: 1 byte/elem + one f32 scale per chunk.
+        assert_eq!(PayloadKind::Int8.wire_bytes(QUANT_CHUNK), QUANT_CHUNK + 4);
+        assert_eq!(PayloadKind::Int8.wire_bytes(QUANT_CHUNK + 1), QUANT_CHUNK + 1 + 8);
+        // Bit1: 1 bit/elem + scales.
+        assert_eq!(PayloadKind::Bit1.wire_bytes(QUANT_CHUNK), QUANT_CHUNK / 8 + 4);
+        assert_eq!(PayloadKind::Bit1.wire_bytes(0), 0);
+        // The headline ratio: int8 compresses f32 by ~3.8x at scale
+        // (4 bytes -> 1 + 4/QUANT_CHUNK = 1.0625 bytes per element).
+        let elems = 1 << 20;
+        let ratio = PayloadKind::F32.wire_bytes(elems) as f64
+            / PayloadKind::Int8.wire_bytes(elems) as f64;
+        assert!(ratio >= 3.5, "{ratio}");
+    }
+
+    #[test]
+    fn qdq_fused_bitwise_matches_reference_and_bounds() {
+        for kind in [PayloadKind::Int8, PayloadKind::Bit1] {
+            for n in lens() {
+                let a = vec_pattern(n, 50);
+                let b = vec_pattern(n, 51);
+                let mut r_f = vec_pattern(n, 52);
+                for x in r_f.iter_mut() {
+                    *x *= 1e-3; // residual-sized
+                }
+                let mut r_r = r_f.clone();
+                let mut out = vec![0.0f32; n];
+                let sq = sub_qdq_ef_sq_norm_into(kind, &mut out, &a, &b, &mut r_f);
+                // Reference: explicit sub, then the naive qdq.
+                let mut out_r = vec![0.0f32; n];
+                reference::sub(&mut out_r, &a, &b);
+                reference::quant_dequant_ef(kind, &mut out_r, &mut r_r);
+                assert_eq!(out, out_r, "{kind:?} n={n}");
+                assert_eq!(r_f, r_r, "{kind:?} n={n} residuals");
+                // Norm shares the global lane schedule.
+                assert_eq!(sq.to_bits(), sq_norm(&out).to_bits(), "{kind:?} n={n}");
+                // And the in-place variant agrees when fed the raw sub.
+                let mut x2 = vec![0.0f32; n];
+                sub(&mut x2, &a, &b);
+                let mut r2 = r_f.clone();
+                // Start from the same pre-round residual.
+                r2.copy_from_slice(&{
+                    let mut r0 = vec_pattern(n, 52);
+                    for x in r0.iter_mut() {
+                        *x *= 1e-3;
+                    }
+                    r0
+                });
+                quant_dequant_ef(kind, &mut x2, &mut r2);
+                assert_eq!(x2, out, "{kind:?} n={n} in-place variant");
+                assert_eq!(r2, r_f, "{kind:?} n={n} in-place residuals");
+            }
+        }
+    }
+
+    #[test]
+    fn qdq_error_feedback_identity_per_element() {
+        // d + r reconstructs v to f32 rounding: the residual IS the
+        // quantization error, so nothing is lost across rounds.
+        let n = 3 * QUANT_CHUNK + 7;
+        for kind in [PayloadKind::Int8, PayloadKind::Bit1] {
+            let v = vec_pattern(n, 60);
+            let mut x = v.clone();
+            let mut r = vec![0.0f32; n];
+            quant_dequant_ef(kind, &mut x, &mut r);
+            for i in 0..n {
+                // r was computed as fl(v - d); adding d back must be exact
+                // or within one ulp of v.
+                let rec = x[i] + r[i];
+                let err = (rec - v[i]).abs();
+                assert!(err <= v[i].abs() * 1e-6 + 1e-12, "{kind:?} i={i}: {rec} vs {}", v[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn qdq_int8_per_chunk_error_bound() {
+        // |d - v| <= scale/2 per element, scale = chunk max|v|/127.
+        let n = 4 * QUANT_CHUNK + 19;
+        let v = vec_pattern(n, 70);
+        let mut x = v.clone();
+        let mut r = vec![0.0f32; n];
+        quant_dequant_ef(PayloadKind::Int8, &mut x, &mut r);
+        for (ci, chunk) in v.chunks(QUANT_CHUNK).enumerate() {
+            let mx = chunk.iter().fold(0.0f32, |m, &y| m.max(y.abs()));
+            let half_step = mx / 127.0 / 2.0;
+            for (i, &vi) in chunk.iter().enumerate() {
+                let d = x[ci * QUANT_CHUNK + i];
+                assert!(
+                    (d - vi).abs() <= half_step * (1.0 + 1e-5) + 1e-12,
+                    "chunk {ci} elem {i}: |{d} - {vi}| > {half_step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qdq_f32_is_identity_and_zero_chunks_pass_through() {
+        let mut x = vec_pattern(100, 80);
+        let orig = x.clone();
+        let mut r = vec![0.5f32; 100];
+        quant_dequant_ef(PayloadKind::F32, &mut x, &mut r);
+        assert_eq!(x, orig);
+        assert_eq!(r, vec![0.5f32; 100]);
+        // All-zero chunk: values pass through, residual zeroed.
+        let mut z = vec![0.0f32; QUANT_CHUNK];
+        z[3] = -0.0;
+        let mut rz = vec![0.0f32; QUANT_CHUNK];
+        quant_dequant_ef(PayloadKind::Int8, &mut z, &mut rz);
+        assert_eq!(z[3].to_bits(), (-0.0f32).to_bits());
+        assert!(rz.iter().all(|&x| x == 0.0));
     }
 }

@@ -17,6 +17,7 @@ pub mod kernels;
 pub mod shard;
 pub mod table;
 
+pub use kernels::{PayloadKind, QUANT_CHUNK};
 pub use shard::{ShardSpec, TableShards};
 pub use table::{ModuleTable, TensorEntry};
 

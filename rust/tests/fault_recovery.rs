@@ -35,11 +35,22 @@ fn tmp(name: &str) -> PathBuf {
 /// Synthetic-stub trainer with the fault surface under direct control
 /// (the `scheduler_determinism` recipe + a fault plan).
 fn trainer(method: Method, plan: FaultPlan, tweak: impl FnOnce(&mut TrainConfig)) -> Trainer {
+    trainer_spec(method.spec(), method.name(), plan, tweak)
+}
+
+/// [`trainer`] for an arbitrary strategy descriptor (the payload-axis
+/// tests go through the `custom:` grammar).
+fn trainer_spec(
+    spec: edit_train::coordinator::MethodSpec,
+    label: &str,
+    plan: FaultPlan,
+    tweak: impl FnOnce(&mut TrainConfig),
+) -> Trainer {
     let manifest = Manifest::synthetic("fault-rec", 3, 128, 64, 64, 2, 8);
     let vocab = manifest.model.vocab_size;
     let engine = Engine::synthetic(manifest);
     let corpus = Corpus::new(vocab, 17, Quality::clean());
-    let mut cfg = TrainConfig::from_spec(method.spec(), method.name(), MeshSpec::new(2, 4), 48);
+    let mut cfg = TrainConfig::from_spec(spec, label, MeshSpec::new(2, 4), 48);
     cfg.tau = 4;
     cfg.t_warm = 0;
     cfg.eval_every_syncs = 2;
@@ -281,6 +292,68 @@ fn checkpoint_cadence_writes_round_files() {
         c.checkpoint_dir = None;
     });
     assert!(bad.run().is_err());
+}
+
+#[test]
+fn kill_restore_carries_error_feedback_residuals() {
+    // `payload=int8`: the error-feedback residual buffers are live
+    // state — a restore that zeroed them would diverge from the
+    // uninterrupted run at the very next sync, because every subsequent
+    // quantization would miss the accumulated correction. Kill at
+    // round 3 with residuals in flight (asserted nonzero), restore into
+    // a fresh trainer, finish: bitwise, on both sync layouts, with a
+    // crash+rejoin schedule active.
+    let (spec, _) = edit_train::coordinator::MethodSpec::parse("custom:base=edit,payload=int8")
+        .unwrap();
+    for shard in [true, false] {
+        let build = || {
+            trainer_spec(
+                spec,
+                "edit-int8",
+                FaultPlan::parse("crash@3:1,join@5:1", 17, 4).unwrap(),
+                |c| c.shard_outer = shard,
+            )
+        };
+        // The kill point genuinely has residuals in flight.
+        let mut probe = build();
+        while probe.rounds() < 3 {
+            probe.run_round().unwrap();
+        }
+        let mut in_flight = Vec::new();
+        probe.scratch().export_residuals_into(&mut in_flight);
+        assert!(
+            in_flight.iter().any(|&r| r != 0.0),
+            "shard={shard}: no residual in flight at the kill point — the test is vacuous"
+        );
+
+        let ckpt = tmp(&format!("int8-residuals-{shard}.bin"));
+        let (ta, tb) = kill_restore_with(build, 3, &ckpt);
+        assert_bitwise(&ta, &tb, &format!("int8 payload shard={shard}"));
+        assert!(ta.summary().crashes >= 1, "the schedule must actually fire");
+        // And the residual buffers themselves landed bitwise equal.
+        let (mut res_a, mut res_b) = (Vec::new(), Vec::new());
+        ta.scratch().export_residuals_into(&mut res_a);
+        tb.scratch().export_residuals_into(&mut res_b);
+        assert!(!res_a.is_empty());
+        assert_eq!(res_a, res_b, "shard={shard}: residuals diverged");
+    }
+
+    // Strategy mismatch: an int8 checkpoint carries residuals a
+    // payload=f32 run has no slot for — rejected, not silently dropped.
+    let ckpt = tmp("int8-into-f32.bin");
+    let mut a = trainer_spec(
+        spec,
+        "edit-int8",
+        FaultPlan::default(),
+        |_| {},
+    );
+    while a.rounds() < 2 {
+        a.run_round().unwrap();
+    }
+    a.save_checkpoint(&ckpt).unwrap();
+    let mut b = trainer(Method::Edit, FaultPlan::default(), |_| {});
+    let err = b.restore_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("sync_residuals"), "unexpected error: {err}");
 }
 
 #[test]

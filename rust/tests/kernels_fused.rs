@@ -6,7 +6,7 @@
 
 use edit_train::collectives::{group, ThreadComm};
 use edit_train::tensor::kernels::{self, reference, LANES};
-use edit_train::tensor::ShardSpec;
+use edit_train::tensor::{PayloadKind, ShardSpec, QUANT_CHUNK};
 use edit_train::testing::{check, Gen};
 
 /// Remainder-lane-exercising lengths plus a random bulk size.
@@ -129,6 +129,98 @@ fn prop_fused_weighted_sum_matches_reference() {
         let sq_s = kernels::weighted_sum_sq_strided(&mut out_s, &flat, stride, 0, &weights);
         assert_eq!(out_s, out, "strided output (n={n})");
         assert_eq!(sq_s.to_bits(), sq.to_bits(), "strided norm (n={n})");
+    });
+}
+
+#[test]
+fn prop_quant_dequant_fused_matches_reference_and_bounds_error() {
+    check("quant-dequant-roundtrip", 60, |g| {
+        let n = edge_len(g);
+        let x0 = g.vec_f32(n, 5.0);
+        let r0 = g.vec_f32(n, 0.05);
+        for kind in [PayloadKind::F32, PayloadKind::Int8, PayloadKind::Bit1] {
+            let (mut x1, mut r1) = (x0.clone(), r0.clone());
+            let (mut x2, mut r2) = (x0.clone(), r0.clone());
+            kernels::quant_dequant_ef(kind, &mut x1, &mut r1);
+            reference::quant_dequant_ef(kind, &mut x2, &mut r2);
+            assert_eq!(x1, x2, "{kind:?} dequant n={n}");
+            assert_eq!(r1, r2, "{kind:?} residual n={n}");
+            if kind == PayloadKind::F32 {
+                // The identity payload: both buffers untouched.
+                assert_eq!(x1, x0, "n={n}");
+                assert_eq!(r1, r0, "n={n}");
+                continue;
+            }
+            // v in the kernel's own op order (one f32 add per element).
+            let v: Vec<f32> = x0.iter().zip(&r0).map(|(&a, &b)| a + b).collect();
+            // The residual is exactly fl(v − d): nothing of v is lost
+            // beyond the one subtraction — the error-feedback invariant.
+            for i in 0..n {
+                assert_eq!(
+                    r1[i].to_bits(),
+                    (v[i] - x1[i]).to_bits(),
+                    "{kind:?} residual identity i={i} n={n}"
+                );
+            }
+            if kind == PayloadKind::Int8 {
+                // Round-trip error per element is at most half a
+                // quantization step of its chunk (plus f32 rounding).
+                for (c, vc) in v.chunks(QUANT_CHUNK).enumerate() {
+                    let mx = vc.iter().fold(0.0f32, |m, &t| m.max(t.abs()));
+                    let tol = (mx / 127.0) as f64 * 0.5 * 1.001 + 1e-9;
+                    for (i, &vi) in vc.iter().enumerate() {
+                        let d = x1[c * QUANT_CHUNK + i] as f64;
+                        let err = (vi as f64 - d).abs();
+                        assert!(
+                            err <= tol,
+                            "int8 chunk {c} elem {i} n={n}: err {err} > {tol}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_error_feedback_sum_tracks_uncompressed_over_rounds() {
+    // T quantized rounds with error feedback: the telescope
+    // Σ_t d_t + r_T = Σ_t g_t is exact in real arithmetic (r_0 = 0, each
+    // round folds its own quantization error into the next payload), so
+    // the residual-corrected sum of what was actually sent must track
+    // the uncompressed sum within f32 rounding noise — ~2 roundings per
+    // element per round, far below one uncorrected quantization step.
+    check("ef-tracking", 20, |g| {
+        let n = edge_len(g);
+        let t_rounds = g.usize(2, 10);
+        for kind in [PayloadKind::Int8, PayloadKind::Bit1] {
+            let mut residual = vec![0.0f32; n];
+            let mut sum_true = vec![0.0f64; n]; // Σ g_t
+            let mut sum_sent = vec![0.0f64; n]; // Σ d_t
+            let mut vmax = 0.0f64;
+            for _ in 0..t_rounds {
+                let mut x = g.vec_f32(n, 1.0);
+                for i in 0..n {
+                    sum_true[i] += x[i] as f64;
+                    vmax = vmax.max((x[i] as f64 + residual[i] as f64).abs());
+                }
+                kernels::quant_dequant_ef(kind, &mut x, &mut residual);
+                for i in 0..n {
+                    sum_sent[i] += x[i] as f64;
+                    vmax = vmax.max((x[i] as f64).abs());
+                }
+            }
+            let tol = 1e-5 * (1.0 + vmax) * t_rounds as f64;
+            for i in 0..n {
+                let corrected = sum_sent[i] + residual[i] as f64;
+                let err = (sum_true[i] - corrected).abs();
+                assert!(
+                    err <= tol,
+                    "{kind:?} i={i} T={t_rounds} n={n}: |{} - {corrected}| = {err} > {tol}",
+                    sum_true[i]
+                );
+            }
+        }
     });
 }
 

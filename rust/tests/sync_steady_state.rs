@@ -22,7 +22,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use edit_train::collectives::{CostModel, Topology};
-use edit_train::coordinator::{MeshSpec, Method, TrainConfig, Trainer};
+use edit_train::coordinator::{MeshSpec, Method, MethodSpec, TrainConfig, Trainer};
 use edit_train::data::{Corpus, Quality};
 use edit_train::runtime::{Engine, Manifest};
 
@@ -54,17 +54,36 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-fn trainer(method: Method, shard_outer: bool) -> Trainer {
+fn trainer_spec(spec: MethodSpec, label: &str, shard_outer: bool) -> Trainer {
     let manifest = Manifest::synthetic("alloc-test", 3, 96, 40, 64, 2, 8);
     let vocab = manifest.model.vocab_size;
     let engine = Engine::synthetic(manifest);
     let corpus = Corpus::new(vocab, 11, Quality::clean());
-    let mut cfg = TrainConfig::paper_default(method, MeshSpec::new(2, 3), 10_000);
+    let mut cfg = TrainConfig::from_spec(spec, label, MeshSpec::new(2, 3), 10_000);
     cfg.tau = 4;
-    cfg.t_warm = if method.spec().warmup { 2 } else { 0 };
+    cfg.t_warm = if spec.warmup { 2 } else { 0 };
     cfg.eval_every_syncs = 0;
     cfg.shard_outer = shard_outer;
     Trainer::new(engine, corpus, cfg, CostModel::new(Topology::a100())).unwrap()
+}
+
+fn trainer(method: Method, shard_outer: bool) -> Trainer {
+    trainer_spec(method.spec(), method.name(), shard_outer)
+}
+
+/// Measure two 6-round windows, taking the min: a genuine per-round
+/// allocation shows up in both; one-off ambient noise (test harness
+/// bookkeeping) cannot fail the assertion.
+fn min_window_allocs(t: &mut Trainer) -> usize {
+    let mut allocs = usize::MAX;
+    for _attempt in 0..2 {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..6 {
+            t.run_round().unwrap();
+        }
+        allocs = allocs.min(ALLOCS.load(Ordering::SeqCst) - before);
+    }
+    allocs
 }
 
 #[test]
@@ -92,17 +111,7 @@ fn trainer_rounds_allocation_free_in_steady_state() {
         for _ in 0..4 {
             t.run_round().unwrap();
         }
-        // Two measured windows, taking the min: a genuine per-round
-        // allocation shows up in both; one-off ambient noise (test
-        // harness bookkeeping) cannot fail the assertion.
-        let mut allocs = usize::MAX;
-        for _attempt in 0..2 {
-            let before = ALLOCS.load(Ordering::SeqCst);
-            for _ in 0..6 {
-                t.run_round().unwrap();
-            }
-            allocs = allocs.min(ALLOCS.load(Ordering::SeqCst) - before);
-        }
+        let allocs = min_window_allocs(&mut t);
         assert_eq!(
             allocs,
             0,
@@ -124,5 +133,23 @@ fn trainer_rounds_allocation_free_in_steady_state() {
                 t.syncs
             );
         }
+    }
+
+    // Compressed sync payload (`payload=int8`): the error-feedback
+    // residual buffers live in the scratch arena and the
+    // quantize→dequantize sweep runs in place, so steady-state rounds
+    // must stay allocation-free on both sync layouts too.
+    for shard_outer in [true, false] {
+        let (spec, _) = MethodSpec::parse("custom:base=edit,payload=int8").unwrap();
+        let mut t = trainer_spec(spec, "edit-int8", shard_outer);
+        for _ in 0..4 {
+            t.run_round().unwrap();
+        }
+        let allocs = min_window_allocs(&mut t);
+        assert_eq!(
+            allocs, 0,
+            "edit payload=int8 (shard_outer={shard_outer}): {allocs} heap allocations in 6 steady-state rounds"
+        );
+        assert!(t.syncs >= 8, "edit payload=int8: {} syncs", t.syncs);
     }
 }
