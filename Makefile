@@ -7,8 +7,8 @@
 verify:
 	bash scripts/verify.sh
 
-# Build + test only (no straggler smoke, no fmt/clippy) — the fast CI
-# leg and the pre-push sanity loop.
+# Build + test + rustdoc gate only (no smokes, no fmt/clippy) — the
+# fast CI leg and the pre-push sanity loop.
 verify-quick:
 	bash scripts/verify.sh --quick
 

@@ -1,0 +1,298 @@
+//! Backend-generic distributed EDiT sync driver.
+//!
+//! The trainer's own sync path simulates its cluster in-process (the
+//! scratch-arena pipeline priced by the α-β model); *this* module runs
+//! the same outer-round shape — inner SGD steps, reduce-scatter of the
+//! pseudo-gradients, Nesterov outer update on the owned shard,
+//! all-gather of the anchor — over any [`Collective`] backend, with
+//! every stochastic draw stateless in `(seed, round, step, rank)`.
+//! That makes it the equivalence probe for transports: the same
+//! `DriverConfig` must produce a **bitwise identical final anchor**
+//! whether the ranks are OS threads sharing a `ThreadComm` or OS
+//! processes speaking sockets through the rendezvous hub
+//! (`edit-train worker --join` vs `--local`; asserted by
+//! `tests/socket_backend.rs` and `scripts/smoke_multiproc.sh`).
+//!
+//! # Membership degrade
+//!
+//! A rank that dies mid-run shrinks the group, mirroring the trainer's
+//! eviction policy:
+//!
+//!  * reductions silently fold the live ranks (the backends' contract);
+//!  * the all-gather is the detection point — a dead shard owner fails
+//!    `PeerFailed`, the survivors zero its shard entry and retry, and
+//!    the dead rank's region keeps its pre-round anchor values (every
+//!    survivor holds the same full anchor, so the skip is consistent);
+//!  * from the next round boundary, shards are rebuilt over the
+//!    survivors, restoring full coverage.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use crate::collectives::{Collective, CommError, CommResult, RetryPolicy, ThreadComm};
+use crate::coordinator::outer::{OuterOpt, OuterOptKind};
+use crate::tensor::{kernels, ShardSpec};
+use crate::util::prng::{mix, Rng};
+
+/// Which wire representation the pseudo-gradient reduce-scatter uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DriverPayload {
+    /// Full-precision f32 payloads.
+    #[default]
+    F32,
+    /// int8 codes + per-chunk scales (the `payload=int8` lane).
+    Int8,
+}
+
+impl DriverPayload {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(DriverPayload::F32),
+            "int8" => Some(DriverPayload::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// One distributed run's knobs. Everything that feeds a draw is here,
+/// so two workers constructed from equal configs are bitwise twins.
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    /// Flat parameter count.
+    pub params: usize,
+    /// Outer rounds to run.
+    pub rounds: usize,
+    /// Inner SGD steps per round.
+    pub inner_steps: usize,
+    /// Master seed; every draw derives from it statelessly.
+    pub seed: u64,
+    /// Inner-loop learning rate.
+    pub inner_lr: f32,
+    /// Outer optimizer (paper default: Nesterov 0.8/0.85).
+    pub outer: OuterOptKind,
+    /// Pseudo-gradient wire representation.
+    pub payload: DriverPayload,
+    /// Per-collective retry/backoff policy.
+    pub retry: RetryPolicy,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        Self {
+            // Odd on purpose: uneven shards and a quant-chunk remainder.
+            params: 1000,
+            rounds: 3,
+            inner_steps: 4,
+            seed: 42,
+            inner_lr: 0.05,
+            outer: OuterOptKind::paper_nesterov(),
+            payload: DriverPayload::F32,
+            retry: RetryPolicy {
+                max_attempts: 5,
+                base_backoff: Duration::from_millis(20),
+                timeout: Duration::from_secs(5),
+            },
+        }
+    }
+}
+
+/// What a worker ends with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriverOutcome {
+    /// The final synchronized anchor (identical across live ranks).
+    pub anchor: Vec<f32>,
+    /// FNV-1a over the anchor's raw f32 bits — the value the launcher
+    /// prints and the smoke scripts diff.
+    pub digest: u64,
+    /// Rounds completed.
+    pub rounds_done: usize,
+    /// Ranks this worker observed dying, in detection order.
+    pub evictions: Vec<usize>,
+}
+
+/// FNV-1a over the IEEE-754 bit patterns: any single-bit anchor
+/// divergence between backends changes the printed digest.
+pub fn anchor_digest(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Contiguous shard table over the live ranks (ascending), dead ranks
+/// pinned to `(0, 0)`. All ranks derive it from the same dead-set, so
+/// the tables agree without communication.
+pub fn build_shards(total: usize, world: usize, dead: &BTreeSet<usize>) -> Vec<(usize, usize)> {
+    let live: Vec<usize> = (0..world).filter(|r| !dead.contains(r)).collect();
+    let spec = ShardSpec::new(total, live.len().max(1));
+    let mut out = vec![(0usize, 0usize); world];
+    for (i, &r) in live.iter().enumerate() {
+        out[r] = spec.range(i);
+    }
+    out
+}
+
+/// The shared initial anchor: same for every rank by construction.
+fn init_anchor(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(mix(seed, 0xA17C_0000_0000_0001));
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// The rank's deterministic pseudo-gradient for one inner step.
+fn grad_into(g: &mut [f32], seed: u64, rank: usize, round: usize, step: usize) {
+    let stream =
+        ((round as u64) << 40) ^ ((step as u64) << 20) ^ (rank as u64) ^ 0x6772_6164_0000_0000;
+    let mut rng = Rng::new(mix(seed, stream));
+    for x in g.iter_mut() {
+        *x = rng.normal_f32() * 0.1;
+    }
+}
+
+/// Run one worker's rounds over `comm`. Generic over the backend —
+/// this is the function both `edit-train worker --join` (SocketComm)
+/// and `--local` (ThreadComm threads) execute.
+pub fn run_worker<C: Collective + ?Sized>(
+    comm: &C,
+    cfg: &DriverConfig,
+) -> CommResult<DriverOutcome> {
+    let world = comm.size();
+    let rank = comm.rank();
+    let n = cfg.params;
+    let mut dead: BTreeSet<usize> = BTreeSet::new();
+    let mut evictions: Vec<usize> = Vec::new();
+    let mut anchor = init_anchor(n, cfg.seed);
+    let mut theta = anchor.clone();
+    let mut delta = vec![0.0f32; n];
+    let mut grad = vec![0.0f32; n];
+    let mut outer = OuterOpt::new(cfg.outer, n);
+
+    for round in 0..cfg.rounds {
+        let mut shards = build_shards(n, world, &dead);
+        cfg.retry.run(|t| comm.try_barrier(t))?;
+
+        // Inner loop: τ local SGD steps on deterministic gradients.
+        for step in 0..cfg.inner_steps {
+            grad_into(&mut grad, cfg.seed, rank, round, step);
+            kernels::axpy(&mut theta, -cfg.inner_lr, &grad);
+        }
+        // Pseudo-gradient Δ = θ_{t,τ} − θ_t (inner progress).
+        for i in 0..n {
+            delta[i] = theta[i] - anchor[i];
+        }
+
+        // Reduce-scatter the pseudo-gradients: own region ends with the
+        // live-group mean. A rank dying here degrades silently.
+        cfg.retry.run(|t| match cfg.payload {
+            DriverPayload::F32 => comm.try_reduce_scatter_mean(&mut delta, &shards, t),
+            DriverPayload::Int8 => comm.try_reduce_scatter_mean_q8(&mut delta, &shards, t),
+        })?;
+
+        // Outer update on the owned shard only (ZeRO-1 style).
+        let (off, len) = shards[rank];
+        outer.apply_range_scaled(&mut anchor, &delta[off..off + len], off, 1.0);
+
+        // All-gather the updated anchor — the membership detection
+        // point: a dead owner fails PeerFailed, the survivors evict it
+        // and retry with its shard zeroed (its region keeps the
+        // pre-round anchor on every survivor — consistent by identity).
+        loop {
+            match cfg.retry.run(|t| comm.try_all_gather(&mut anchor, &shards, t)) {
+                Ok(()) => break,
+                Err(CommError::PeerFailed { rank: victim }) => {
+                    if dead.insert(victim) {
+                        evictions.push(victim);
+                    }
+                    shards[victim] = (0, 0);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        // Inner restart from the synchronized anchor.
+        theta.copy_from_slice(&anchor);
+    }
+
+    let digest = anchor_digest(&anchor);
+    Ok(DriverOutcome { anchor, digest, rounds_done: cfg.rounds, evictions })
+}
+
+/// Run a `world`-rank group on OS threads over a shared [`ThreadComm`]
+/// — the in-process reference the socket path is diffed against.
+pub fn run_local_group(world: usize, cfg: &DriverConfig) -> CommResult<Vec<DriverOutcome>> {
+    let comms = ThreadComm::group(world);
+    let mut out = Vec::with_capacity(world);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .iter()
+            .map(|c| s.spawn(move || run_worker(c, cfg)))
+            .collect();
+        for h in handles {
+            out.push(h.join().expect("worker thread panicked"));
+        }
+    });
+    out.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_group_ranks_agree_and_runs_reproduce() {
+        let cfg = DriverConfig { params: 257, rounds: 3, ..Default::default() };
+        for world in [1usize, 2, 3] {
+            let a = run_local_group(world, &cfg).unwrap();
+            for o in &a[1..] {
+                assert_eq!(o.anchor, a[0].anchor, "world={world}");
+            }
+            let b = run_local_group(world, &cfg).unwrap();
+            assert_eq!(a[0].digest, b[0].digest, "world={world}");
+            assert!(a[0].evictions.is_empty());
+        }
+        // Different worlds genuinely shard differently but still sync:
+        // the digest must be a function of (seed, world).
+        let w2 = run_local_group(2, &cfg).unwrap();
+        let w3 = run_local_group(3, &cfg).unwrap();
+        assert_ne!(w2[0].digest, w3[0].digest);
+    }
+
+    #[test]
+    fn int8_payload_differs_but_is_deterministic() {
+        let f32cfg = DriverConfig { params: 300, ..Default::default() };
+        let q8cfg = DriverConfig { payload: DriverPayload::Int8, ..f32cfg.clone() };
+        let a = run_local_group(2, &f32cfg).unwrap();
+        let b = run_local_group(2, &q8cfg).unwrap();
+        let c = run_local_group(2, &q8cfg).unwrap();
+        assert_ne!(a[0].digest, b[0].digest, "quantization must be observable");
+        assert_eq!(b[0].digest, c[0].digest);
+        assert_eq!(b[0].anchor, b[1].anchor);
+    }
+
+    #[test]
+    fn dead_rank_is_evicted_and_survivors_agree() {
+        // Rank 2 never shows up; a monitor marks it failed while the
+        // survivors block on the first barrier — the driver must evict
+        // at the all-gather and finish over the live pair.
+        let cfg = DriverConfig { params: 101, rounds: 3, ..Default::default() };
+        let comms = ThreadComm::group(3);
+        let (c0, c1, c2) = (&comms[0], &comms[1], &comms[2]);
+        let cfg = &cfg;
+        let (a, b) = std::thread::scope(|s| {
+            let h0 = s.spawn(move || run_worker(c0, cfg));
+            let h1 = s.spawn(move || run_worker(c1, cfg));
+            let m = s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                c2.mark_failed(2);
+            });
+            m.join().unwrap();
+            (h0.join().unwrap().unwrap(), h1.join().unwrap().unwrap())
+        });
+        assert_eq!(a.anchor, b.anchor);
+        assert_eq!(a.evictions, vec![2]);
+        assert_eq!(b.evictions, vec![2]);
+    }
+}

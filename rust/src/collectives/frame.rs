@@ -1,0 +1,475 @@
+//! Length-prefixed, versioned wire frames for the socket transport.
+//!
+//! This module is the byte-level half of the transport; the normative
+//! spec (grammar, handshake sequence, fold-order contract) lives in
+//! `docs/WIRE_PROTOCOL.md` and the implementation cites it per section.
+//!
+//! Every message on a transport connection is one **frame**
+//! (WIRE_PROTOCOL.md §2):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic            b"EDTF"
+//!      4     4  protocol version u32 LE (PROTOCOL_VERSION)
+//!      8     1  frame type       u8 (FrameKind)
+//!      9     4  sender rank      u32 LE (RANK_UNASSIGNED before Welcome)
+//!     13     8  generation       u64 LE (membership epoch)
+//!     21     4  payload length   u32 LE
+//!     25     …  payload          frame-type-specific (§3)
+//! ```
+//!
+//! Version negotiation is strict equality: the rendezvous service
+//! answers a `Hello` whose version field differs from its own with an
+//! `Error(VersionMismatch)` frame and closes the connection (§4.1).
+//! Frames are read with [`read_frame`], which validates magic and
+//! bounds the payload length before allocating.
+//!
+//! Integers and floats are little-endian throughout; f32 payloads are
+//! raw IEEE-754 bit patterns, so a vector survives the wire bitwise.
+
+use std::io::{self, Read, Write};
+
+/// Frame magic: "EDiT Frame".
+pub const MAGIC: [u8; 4] = *b"EDTF";
+/// Protocol version spoken by this build (strict-equality negotiation).
+pub const PROTOCOL_VERSION: u32 = 1;
+/// Sender rank before the Welcome assignment.
+pub const RANK_UNASSIGNED: u32 = u32::MAX;
+/// Upper bound on a frame payload (1 GiB) — rejects corrupt lengths
+/// before they become allocations.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 25;
+
+/// Frame discriminants (WIRE_PROTOCOL.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Client → hub: join request (empty payload; the header's version
+    /// field is the negotiation).
+    Hello = 1,
+    /// Hub → client: rank assignment (payload: rank u32, world u32).
+    Welcome = 2,
+    /// Client → hub: one collective contribution (payload: op header +
+    /// operand bytes).
+    Contribute = 3,
+    /// Hub → client: the completed collective's result for this rank
+    /// (payload: seq u64, live-mask u64, data).
+    Result = 4,
+    /// Either direction: a failed operation (payload: seq u64, code u8,
+    /// rank u32, message).
+    Error = 5,
+    /// Client → hub: liveness beacon (empty payload).
+    Heartbeat = 6,
+    /// Client → hub: graceful leave after the last collective (empty).
+    Goodbye = 7,
+    /// Hub → client: the service is tearing down (empty).
+    Shutdown = 8,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Welcome,
+            3 => FrameKind::Contribute,
+            4 => FrameKind::Result,
+            5 => FrameKind::Error,
+            6 => FrameKind::Heartbeat,
+            7 => FrameKind::Goodbye,
+            8 => FrameKind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// Collective op codes inside a Contribute payload (WIRE_PROTOCOL.md §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpCode {
+    Barrier = 0,
+    AllReduceMean = 1,
+    AllGather = 2,
+    ReduceScatterMean = 3,
+    ReduceScatterSum = 4,
+    ReduceScatterWeighted = 5,
+    ReduceScatterMeanQ8 = 6,
+    Broadcast = 7,
+}
+
+impl OpCode {
+    pub fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            0 => OpCode::Barrier,
+            1 => OpCode::AllReduceMean,
+            2 => OpCode::AllGather,
+            3 => OpCode::ReduceScatterMean,
+            4 => OpCode::ReduceScatterSum,
+            5 => OpCode::ReduceScatterWeighted,
+            6 => OpCode::ReduceScatterMeanQ8,
+            7 => OpCode::Broadcast,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCode::Barrier => "barrier",
+            OpCode::AllReduceMean => "all_reduce_mean",
+            OpCode::AllGather => "all_gather",
+            OpCode::ReduceScatterMean => "reduce_scatter_mean",
+            OpCode::ReduceScatterSum => "reduce_scatter_sum",
+            OpCode::ReduceScatterWeighted => "reduce_scatter_weighted",
+            OpCode::ReduceScatterMeanQ8 => "reduce_scatter_mean_q8",
+            OpCode::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// Error codes inside an Error payload (WIRE_PROTOCOL.md §3.5). They
+/// map one-to-one onto the in-process `CommError` taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// The rendezvous window elapsed without a full live quorum;
+    /// retryable (`CommError::Timeout`).
+    Timeout = 0,
+    /// A rank the op cannot complete without is dead; deterministic
+    /// (`CommError::PeerFailed`).
+    PeerFailed = 1,
+    /// The service is tearing down; terminal (`CommError::Shutdown`).
+    Shutdown = 2,
+    /// The peer violated the protocol (op/seq/meta mismatch); terminal.
+    Protocol = 3,
+    /// Hello carried a different PROTOCOL_VERSION; terminal.
+    VersionMismatch = 4,
+}
+
+impl ErrorCode {
+    pub fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            0 => ErrorCode::Timeout,
+            1 => ErrorCode::PeerFailed,
+            2 => ErrorCode::Shutdown,
+            3 => ErrorCode::Protocol,
+            4 => ErrorCode::VersionMismatch,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame (header + raw payload bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub rank: u32,
+    pub generation: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, rank: u32, generation: u64, payload: Vec<u8>) -> Self {
+        Self { kind, rank, generation, payload }
+    }
+
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+}
+
+/// Serialize `frame` onto `w` (single buffered write: header + payload).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + frame.payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    buf.push(frame.kind as u8);
+    buf.extend_from_slice(&frame.rank.to_le_bytes());
+    buf.extend_from_slice(&frame.generation.to_le_bytes());
+    buf.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&frame.payload);
+    w.write_all(&buf)
+}
+
+/// Read and validate one frame. Fails with `InvalidData` on bad magic,
+/// an unknown frame type, an oversized payload, or (by default) a
+/// protocol-version mismatch; the rendezvous service reads the raw
+/// version via [`read_frame_negotiating`] instead so it can answer a
+/// mismatched Hello with `Error(VersionMismatch)`.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let (version, frame) = read_frame_negotiating(r)?;
+    if version != PROTOCOL_VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("protocol version mismatch: got {version}, want {PROTOCOL_VERSION}"),
+        ));
+    }
+    Ok(frame)
+}
+
+/// [`read_frame`] variant that surfaces the peer's version instead of
+/// rejecting a mismatch, so the callee can negotiate (§4.1).
+pub fn read_frame_negotiating(r: &mut impl Read) -> io::Result<(u32, Frame)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    if header[0..4] != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame magic"));
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    let kind = FrameKind::from_u8(header[8]).ok_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidData, format!("unknown frame type {}", header[8]))
+    })?;
+    let rank = u32::from_le_bytes(header[9..13].try_into().unwrap());
+    let generation = u64::from_le_bytes(header[13..21].try_into().unwrap());
+    let len = u32::from_le_bytes(header[21..25].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame payload length {len} exceeds MAX_PAYLOAD"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((version, Frame { kind, rank, generation, payload }))
+}
+
+// ---------------------------------------------------------------------------
+// Payload codec helpers
+// ---------------------------------------------------------------------------
+
+/// Append-only payload writer (thin sugar over `Vec<u8>`).
+#[derive(Default)]
+pub struct PayloadWriter {
+    pub buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    /// f32 slice as raw IEEE-754 bits, prefixed with its element count.
+    pub fn f32s(&mut self, xs: &[f32]) -> &mut Self {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+    /// i8 slice, prefixed with its element count.
+    pub fn i8s(&mut self, xs: &[i8]) -> &mut Self {
+        self.u32(xs.len() as u32);
+        self.buf.extend(xs.iter().map(|&c| c as u8));
+        self
+    }
+    /// Shard table: count, then (offset, len) pairs as u64s.
+    pub fn shards(&mut self, shards: &[(usize, usize)]) -> &mut Self {
+        self.u32(shards.len() as u32);
+        for &(off, len) in shards {
+            self.u64(off as u64).u64(len as u64);
+        }
+        self
+    }
+    /// Length-prefixed UTF-8 string (u16 length; truncated if longer).
+    pub fn text(&mut self, s: &str) -> &mut Self {
+        let bytes = s.as_bytes();
+        let n = bytes.len().min(u16::MAX as usize);
+        self.buf.extend_from_slice(&(n as u16).to_le_bytes());
+        self.buf.extend_from_slice(&bytes[..n]);
+        self
+    }
+    pub fn finish(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+/// Cursor-style payload reader; every accessor bounds-checks and fails
+/// with `InvalidData` instead of panicking on truncated input.
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "truncated frame payload"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    /// Like [`Self::f32s`] but decodes into `out` (cleared first).
+    pub fn f32s_into(&mut self, out: &mut Vec<f32>) -> io::Result<()> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        out.clear();
+        out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+        Ok(())
+    }
+    pub fn i8s(&mut self) -> io::Result<Vec<i8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+    pub fn shards(&mut self) -> io::Result<Vec<(usize, usize)>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let off = self.u64()? as usize;
+            let len = self.u64()? as usize;
+            out.push((off, len));
+        }
+        Ok(out)
+    }
+    pub fn text(&mut self) -> io::Result<String> {
+        let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Incremental frame assembler for timeout-polled sockets.
+///
+/// `read_exact` under a read timeout can fail *mid-frame* after
+/// consuming part of the header, losing the frame boundary. This
+/// assembler only ever appends whatever one `read()` returns and parses
+/// complete frames off the front, so a timeout between bytes never
+/// desynchronizes the stream.
+#[derive(Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+    chunk: Vec<u8>,
+}
+
+impl FrameBuffer {
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), chunk: vec![0u8; 64 * 1024] }
+    }
+
+    /// Parse one complete frame off the front of the buffer, if present.
+    /// Returns the peer's protocol version alongside the frame (callers
+    /// negotiate; see [`read_frame_negotiating`]).
+    pub fn poll(&mut self) -> io::Result<Option<(u32, Frame)>> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        if self.buf[0..4] != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame magic"));
+        }
+        let len = u32::from_le_bytes(self.buf[21..25].try_into().unwrap()) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "oversized frame payload"));
+        }
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let frame_bytes: Vec<u8> = self.buf.drain(..HEADER_LEN + len).collect();
+        read_frame_negotiating(&mut frame_bytes.as_slice()).map(Some)
+    }
+
+    /// Append whatever one `read()` call yields. Returns the byte count
+    /// (0 = EOF); timeout errors (`WouldBlock`/`TimedOut`) pass through
+    /// for the caller's idle handling.
+    pub fn fill_from(&mut self, r: &mut impl Read) -> io::Result<usize> {
+        let n = r.read(&mut self.chunk)?;
+        self.buf.extend_from_slice(&self.chunk[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut p = PayloadWriter::default();
+        p.u8(7).u64(42).f32s(&[1.5, -0.0, f32::MIN_POSITIVE]).shards(&[(0, 3), (3, 2)]);
+        let frame = Frame::new(FrameKind::Contribute, 2, 9, p.finish());
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &frame).unwrap();
+        assert_eq!(wire.len(), frame.wire_len());
+        let got = read_frame(&mut wire.as_slice()).unwrap();
+        assert_eq!(got, frame);
+        let mut r = PayloadReader::new(&got.payload);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), 42);
+        let xs = r.f32s().unwrap();
+        // Bitwise: -0.0 must survive the wire as -0.0.
+        assert_eq!(xs[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.shards().unwrap(), vec![(0, 3), (3, 2)]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let frame = Frame::new(FrameKind::Hello, RANK_UNASSIGNED, 0, Vec::new());
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &frame).unwrap();
+        wire[0] = b'X';
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_rejected_but_negotiable() {
+        let frame = Frame::new(FrameKind::Hello, RANK_UNASSIGNED, 0, Vec::new());
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &frame).unwrap();
+        wire[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+        let (v, f) = read_frame_negotiating(&mut wire.as_slice()).unwrap();
+        assert_eq!(v, 99);
+        assert_eq!(f.kind, FrameKind::Hello);
+    }
+
+    #[test]
+    fn truncated_payload_errors_cleanly() {
+        let mut p = PayloadWriter::default();
+        p.f32s(&[1.0, 2.0]);
+        let payload = p.finish();
+        let mut r = PayloadReader::new(&payload[..5]);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAGIC);
+        wire.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        wire.push(FrameKind::Hello as u8);
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&0u64.to_le_bytes());
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+    }
+}

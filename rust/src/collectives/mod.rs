@@ -69,14 +69,65 @@
 //! rank order** (means divide by the live count) — the same membership
 //! semantics the trainer's sync paths apply when a replica crashes.
 
+//!
+//! # Backends
+//!
+//! Two implementations of [`Collective`] exist, bitwise
+//! interchangeable at matched rank count (asserted by the
+//! cross-backend suite in `tests/socket_backend.rs`):
+//!
+//!  * [`ThreadComm`] — in-process, one handle per OS thread; the
+//!    default and the test substrate.
+//!  * [`SocketComm`] — one handle per OS **process**, speaking the
+//!    framed TCP protocol of [`frame`] (spec: `docs/WIRE_PROTOCOL.md`)
+//!    to the [`rendezvous`] hub, which assigns ranks, counts
+//!    membership generations, and performs the ascending-live-rank
+//!    fold itself. Launched via `edit-train rendezvous --bind` +
+//!    `edit-train worker --join` (see [`driver`]).
+
 use std::time::Duration;
 
 pub mod cost;
+pub mod driver;
+pub mod frame;
 pub mod group;
+pub mod rendezvous;
+pub mod socket;
 pub mod thread;
 
 pub use cost::{CollOp, CommStats, CostModel, Topology};
+pub use rendezvous::{Rendezvous, RendezvousConfig, RendezvousReport};
+pub use socket::{ConnectOpts, SocketComm, WireStats};
 pub use thread::ThreadComm;
+
+/// Which transport executes the fallible collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommBackend {
+    /// In-process rendezvous over OS threads ([`ThreadComm`]).
+    #[default]
+    Thread,
+    /// Framed TCP to a rendezvous hub ([`SocketComm`]); requires the
+    /// multi-process launcher (`edit-train worker --join <addr>`).
+    Socket,
+}
+
+impl CommBackend {
+    /// Parse a config/CLI value (`thread` | `socket`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "thread" => Some(CommBackend::Thread),
+            "socket" => Some(CommBackend::Socket),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CommBackend::Thread => "thread",
+            CommBackend::Socket => "socket",
+        }
+    }
+}
 
 /// Why a fallible collective did not complete.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -157,10 +208,88 @@ impl RetryPolicy {
 
 /// The fallible collective surface: every op takes a rendezvous timeout
 /// and reports failure instead of blocking forever on a dead peer.
-/// Degraded-group semantics (live-rank folds, live-count means) are
-/// part of the contract — see the module docs.
+///
+/// # Contract
+///
+/// **Determinism.** Reductions fold contributions over the **live ranks
+/// in ascending rank order** from a zero-initialized accumulator; means
+/// divide by the live count, after the fold. Two backends given the
+/// same inputs at the same live membership must produce bitwise
+/// identical f32 results — this is what makes [`ThreadComm`] (threads)
+/// and [`SocketComm`] (processes) interchangeable, and it is asserted,
+/// not assumed (`tests/socket_backend.rs`).
+///
+/// **Membership degrade.** A dead rank shrinks the group instead of
+/// wedging it: reductions skip its contribution and means divide by the
+/// live count. Only *structurally required* ranks fail an op — a dead
+/// broadcast root or a dead all-gather shard owner (with a non-empty
+/// shard) yields [`CommError::PeerFailed`], because no fold can
+/// reconstruct bytes only that rank held. A sole survivor's collective
+/// degenerates to a no-op (its contribution is the reduction).
+///
+/// **Retry classification.** [`CommError::Timeout`] is possibly
+/// transient and the only variant worth retrying; [`RetryPolicy::run`]
+/// encodes that loop. `PeerFailed` is deterministic (callers degrade
+/// membership — recompute shards over the survivors — rather than
+/// retry), and `Shutdown` is terminal.
+///
+/// # Example
+///
+/// A 2-rank mean all-reduce, each rank on its own thread:
+///
+/// ```
+/// use edit_train::collectives::{Collective, ThreadComm};
+/// use std::time::Duration;
+///
+/// let comms = ThreadComm::group(2);
+/// let t = Duration::from_secs(5);
+/// std::thread::scope(|s| {
+///     for comm in &comms {
+///         s.spawn(move || {
+///             let mut buf = vec![(comm.rank() + 1) as f32; 4];
+///             comm.try_all_reduce_mean(&mut buf, t).unwrap();
+///             assert_eq!(buf, vec![1.5; 4]); // mean of 1.0 and 2.0
+///         });
+///     }
+/// });
+/// ```
+///
+/// Degraded membership — the dead rank is skipped, the mean is over
+/// the survivors, and a dead broadcast root fails deterministically:
+///
+/// ```
+/// use edit_train::collectives::{Collective, CommError, ThreadComm};
+/// use std::time::Duration;
+///
+/// let comms = ThreadComm::group(2);
+/// comms[0].mark_failed(1);
+/// let t = Duration::from_millis(50);
+///
+/// let mut buf = vec![3.0f32; 4];
+/// comms[0].try_all_reduce_mean(&mut buf, t).unwrap();
+/// assert_eq!(buf, vec![3.0; 4]); // sole survivor: its own mean
+///
+/// assert_eq!(
+///     comms[0].try_broadcast(&mut buf, 1, t),
+///     Err(CommError::PeerFailed { rank: 1 }),
+/// );
+/// ```
+///
+/// Wrapping an op in the retry loop:
+///
+/// ```
+/// use edit_train::collectives::{Collective, RetryPolicy, ThreadComm};
+///
+/// let comms = ThreadComm::group(1);
+/// let policy = RetryPolicy::default();
+/// let mut buf = vec![1.0f32; 8];
+/// policy.run(|t| comms[0].try_all_reduce_mean(&mut buf, t)).unwrap();
+/// ```
 pub trait Collective {
+    /// This handle's rank in `0..size()`.
     fn rank(&self) -> usize;
+    /// Configured group size (including dead ranks — membership only
+    /// ever degrades from here).
     fn size(&self) -> usize;
     /// Rendezvous with every live rank.
     fn try_barrier(&self, timeout: Duration) -> CommResult<()>;
@@ -177,6 +306,33 @@ pub trait Collective {
     ) -> CommResult<()>;
     /// Reduce-scatter (mean) over the live ranks into this rank's shard.
     fn try_reduce_scatter_mean(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()>;
+    /// Reduce-scatter (sum) over the live ranks into this rank's shard —
+    /// the mean fold without the final live-count scale.
+    fn try_reduce_scatter_sum(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()>;
+    /// Weighted reduce-scatter: this rank's shard ends with
+    /// `Σ_j weights[j]·x_j` over the live ranks (zero-weight ranks
+    /// skipped) — the EDiT softmax-weighted combine as a collective.
+    fn try_reduce_scatter_weighted(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommResult<()>;
+    /// Reduce-scatter (mean) over int8-quantized payloads (the
+    /// `payload=int8` wire lane): contributions travel as codes +
+    /// per-chunk scales and are dequantized before the fold.
+    fn try_reduce_scatter_mean_q8(
         &self,
         full: &mut [f32],
         shards: &[(usize, usize)],

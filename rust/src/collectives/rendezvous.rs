@@ -1,0 +1,830 @@
+//! Rendezvous + membership service for the socket transport.
+//!
+//! The hub is the socket counterpart of [`super::thread`]'s condvar
+//! gate: workers connect, a `Hello`/`Welcome` exchange assigns ranks in
+//! arrival order (WIRE_PROTOCOL.md §4.1), and every collective is a
+//! `Contribute` → `Result` round trip through the hub, which performs
+//! the rank-0..n fold itself. Hub-side reduction is what makes the
+//! fold-order contract trivial to uphold over a network: contributions
+//! are folded over the **live ranks in ascending rank order** with a
+//! zero-initialized accumulator, exactly the degraded-group semantics of
+//! `ThreadComm`'s fallible surface, so socket and in-process backends
+//! stay bitwise interchangeable.
+//!
+//! # Membership, generations, and the failure taxonomy
+//!
+//! Liveness is generation-counted: every eviction or graceful leave
+//! bumps the membership epoch, and every hub frame carries the current
+//! generation plus a live-rank bitmask (world ≤ 64). Dead peers are
+//! detected two ways, both mapping onto the in-process
+//! `CommError` taxonomy (timeout-then-evict, PR 5's policy):
+//!
+//!  * **connection loss** — a reader hitting EOF/reset evicts the rank
+//!    immediately; a pending op either completes over the survivors or
+//!    resolves `PeerFailed` if the dead rank was structurally required
+//!    (broadcast root, all-gather shard owner).
+//!  * **silence** — when a pending op exceeds the op window, live
+//!    non-contributors whose heartbeat is stale get evicted; everyone
+//!    else receives a retryable `Timeout` error frame and re-contributes
+//!    (the wire mirror of `RetryPolicy`).
+//!
+//! # Duplicate contributions
+//!
+//! A client whose local timeout fires just before the result lands will
+//! retry the same sequence number. The hub caches the last resolved
+//! op's per-rank response frames and replays them on a duplicate
+//! `Contribute`, so client-side retries are idempotent (§4.3).
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::collectives::frame::{
+    write_frame, ErrorCode, Frame, FrameBuffer, FrameKind, OpCode, PayloadReader, PayloadWriter,
+    PROTOCOL_VERSION, RANK_UNASSIGNED,
+};
+use crate::tensor::{kernels, QUANT_CHUNK};
+
+/// Hub tuning knobs. Defaults suit loopback tests; real deployments
+/// stretch the windows.
+#[derive(Debug, Clone, Copy)]
+pub struct RendezvousConfig {
+    /// Ranks expected to join before collectives begin.
+    pub world: usize,
+    /// Join window: how long `bind` waits for `world` Hellos.
+    pub accept_timeout: Duration,
+    /// Quorum window per collective before Timeout frames go out.
+    pub op_timeout: Duration,
+    /// Heartbeat staleness beyond which a silent, op-blocking rank is
+    /// evicted (must exceed the client heartbeat interval).
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for RendezvousConfig {
+    fn default() -> Self {
+        Self {
+            world: 2,
+            accept_timeout: Duration::from_secs(30),
+            op_timeout: Duration::from_secs(2),
+            heartbeat_timeout: Duration::from_secs(3),
+        }
+    }
+}
+
+/// What the service did, returned by [`Rendezvous::wait`].
+#[derive(Debug, Clone, Default)]
+pub struct RendezvousReport {
+    /// Ranks that completed the handshake.
+    pub joined: usize,
+    /// Final membership generation (0 = no membership change ever).
+    pub generations: u64,
+    /// Ranks evicted as dead peers, in eviction order.
+    pub evicted: Vec<usize>,
+    /// Collectives resolved successfully.
+    pub ops_done: u64,
+}
+
+/// Handle to a running hub. Dropping it shuts the service down.
+pub struct Rendezvous {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<RendezvousReport>>,
+}
+
+impl Rendezvous {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve one `world`-rank
+    /// group in a background thread.
+    pub fn bind(addr: &str, cfg: RendezvousConfig) -> io::Result<Rendezvous> {
+        assert!(cfg.world >= 1, "rendezvous world must be at least 1");
+        assert!(cfg.world <= 64, "live-mask is a u64: world must be <= 64");
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("edit-rendezvous".into())
+            .spawn(move || serve(listener, cfg, flag))?;
+        Ok(Rendezvous { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the service to tear down: live peers receive `Shutdown`
+    /// frames, pending ops resolve with `Shutdown` errors.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the service exits (all ranks done, or shutdown).
+    pub fn wait(&mut self) -> RendezvousReport {
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => RendezvousReport::default(),
+        }
+    }
+}
+
+impl Drop for Rendezvous {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hub internals
+// ---------------------------------------------------------------------------
+
+/// One contribution's decoded operands. A plain bag rather than a
+/// per-op enum: only the fields the op reads are filled.
+#[derive(Default, Clone)]
+struct Contrib {
+    shards: Vec<(usize, usize)>,
+    weights: Vec<f32>,
+    root: u32,
+    data: Vec<f32>,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    total_len: usize,
+}
+
+struct Pending {
+    seq: u64,
+    op: OpCode,
+    started: Instant,
+    contribs: Vec<Option<Contrib>>,
+}
+
+/// Cached per-rank responses of the last resolved op, replayed on
+/// duplicate contributions (client retried after a local timeout).
+struct Completed {
+    seq: u64,
+    frames: Vec<Option<Frame>>,
+}
+
+struct HubState {
+    alive: Vec<bool>,
+    done: Vec<bool>,
+    last_seen: Vec<Instant>,
+    generation: u64,
+    evicted: Vec<usize>,
+    pending: Option<Pending>,
+    completed: Option<Completed>,
+    ops_done: u64,
+    shutdown: bool,
+}
+
+struct Peer {
+    writer: Mutex<TcpStream>,
+}
+
+struct Hub {
+    cfg: RendezvousConfig,
+    peers: Vec<Peer>,
+    state: Mutex<HubState>,
+}
+
+impl HubState {
+    fn live_ranks(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&r| self.alive[r]).collect()
+    }
+
+    fn live_mask(&self) -> u64 {
+        self.alive
+            .iter()
+            .enumerate()
+            .fold(0u64, |m, (r, &a)| if a { m | (1u64 << r) } else { m })
+    }
+
+    fn all_finished(&self) -> bool {
+        (0..self.alive.len()).all(|r| self.done[r] || !self.alive[r])
+    }
+}
+
+fn send_to(hub: &Hub, rank: usize, frame: &Frame) {
+    // Write failures surface as the reader thread's EOF → evict; no
+    // point double-reporting here.
+    if let Ok(mut w) = hub.peers[rank].writer.lock() {
+        let _ = write_frame(&mut *w, frame);
+    }
+}
+
+fn error_frame(generation: u64, seq: u64, code: ErrorCode, rank: u32, msg: &str) -> Frame {
+    let mut p = PayloadWriter::default();
+    p.u64(seq).u8(code as u8).u32(rank).text(msg);
+    Frame::new(FrameKind::Error, RANK_UNASSIGNED, generation, p.finish())
+}
+
+fn result_frame(generation: u64, seq: u64, live_mask: u64, data: &[f32]) -> Frame {
+    let mut p = PayloadWriter::default();
+    p.u64(seq).u64(live_mask).f32s(data);
+    Frame::new(FrameKind::Result, RANK_UNASSIGNED, generation, p.finish())
+}
+
+/// Decode a Contribute payload into `(seq, op, operands)`.
+fn parse_contribute(payload: &[u8]) -> io::Result<(u64, OpCode, Contrib)> {
+    let mut r = PayloadReader::new(payload);
+    let op = OpCode::from_u8(r.u8()?)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "unknown op code"))?;
+    let seq = r.u64()?;
+    let mut c = Contrib::default();
+    match op {
+        OpCode::Barrier => {}
+        OpCode::AllReduceMean => c.data = r.f32s()?,
+        OpCode::AllGather | OpCode::ReduceScatterMean | OpCode::ReduceScatterSum => {
+            c.shards = r.shards()?;
+            c.data = r.f32s()?;
+        }
+        OpCode::ReduceScatterWeighted => {
+            c.shards = r.shards()?;
+            c.weights = r.f32s()?;
+            c.data = r.f32s()?;
+        }
+        OpCode::ReduceScatterMeanQ8 => {
+            c.shards = r.shards()?;
+            c.total_len = r.u32()? as usize;
+            c.codes = r.i8s()?;
+            c.scales = r.f32s()?;
+        }
+        OpCode::Broadcast => {
+            c.root = r.u32()?;
+            if r.u8()? != 0 {
+                c.data = r.f32s()?;
+            }
+        }
+    }
+    Ok((seq, op, c))
+}
+
+fn shard_extent(shards: &[(usize, usize)]) -> usize {
+    shards.iter().map(|&(o, l)| o + l).max().unwrap_or(0)
+}
+
+/// Structural validation of one contribution (shape only — the hub
+/// never judges values). Returns a protocol complaint on violation.
+fn validate_contrib(
+    op: OpCode,
+    rank: usize,
+    world: usize,
+    c: &Contrib,
+    meta: Option<&Contrib>,
+) -> Result<(), String> {
+    if !c.shards.is_empty() && c.shards.len() != world {
+        return Err(format!("shard table has {} entries, world is {world}", c.shards.len()));
+    }
+    match op {
+        OpCode::Barrier => {}
+        OpCode::AllReduceMean => {
+            if let Some(m) = meta {
+                if c.data.len() != m.data.len() {
+                    return Err("all_reduce operand length mismatch across ranks".into());
+                }
+            }
+        }
+        OpCode::AllGather => {
+            let (_, len) = c.shards.get(rank).copied().unwrap_or((0, 0));
+            if c.data.len() != len {
+                return Err(format!("all_gather shard payload is {} elems, own shard is {len}", c.data.len()));
+            }
+        }
+        OpCode::ReduceScatterMean | OpCode::ReduceScatterSum | OpCode::ReduceScatterWeighted => {
+            if c.data.len() < shard_extent(&c.shards) {
+                return Err("reduce_scatter operand shorter than shard extent".into());
+            }
+            if op == OpCode::ReduceScatterWeighted && c.weights.len() != world {
+                return Err(format!("weight table has {} entries, world is {world}", c.weights.len()));
+            }
+        }
+        OpCode::ReduceScatterMeanQ8 => {
+            if c.codes.len() != c.total_len
+                || c.scales.len() != c.total_len.div_ceil(QUANT_CHUNK)
+                || c.total_len < shard_extent(&c.shards)
+            {
+                return Err("q8 payload shape inconsistent".into());
+            }
+        }
+        OpCode::Broadcast => {
+            if rank as u32 == c.root && c.data.is_empty() {
+                return Err("broadcast root sent no payload".into());
+            }
+        }
+    }
+    if let Some(m) = meta {
+        if c.shards != m.shards {
+            return Err("shard tables differ across ranks".into());
+        }
+        if c.weights.len() != m.weights.len()
+            || c.weights.iter().zip(&m.weights).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err("weight tables differ across ranks".into());
+        }
+        if op == OpCode::Broadcast && c.root != m.root {
+            return Err("broadcast roots differ across ranks".into());
+        }
+    }
+    Ok(())
+}
+
+/// Evict `rank` (connection loss or op-blocking silence): membership
+/// epoch bumps, its pending contribution is dropped (a reduction never
+/// folds a dead rank, even one that contributed before dying — the same
+/// fold-time liveness check as `ThreadComm`), and the pending op is
+/// re-examined.
+fn evict(hub: &Hub, st: &mut HubState, rank: usize) {
+    if !st.alive[rank] {
+        return;
+    }
+    st.alive[rank] = false;
+    st.generation += 1;
+    st.evicted.push(rank);
+    if let Some(p) = st.pending.as_mut() {
+        p.contribs[rank] = None;
+    }
+    try_complete(hub, st);
+}
+
+/// Graceful leave: membership shrinks without counting as a failure.
+fn leave(hub: &Hub, st: &mut HubState, rank: usize) {
+    if st.done[rank] {
+        return;
+    }
+    st.done[rank] = true;
+    if st.alive[rank] {
+        st.alive[rank] = false;
+        st.generation += 1;
+    }
+    if let Some(p) = st.pending.as_mut() {
+        p.contribs[rank] = None;
+    }
+    try_complete(hub, st);
+}
+
+/// Resolve the pending op if it can be: `PeerFailed` when a
+/// structurally required rank is dead, the fold + `Result` frames when
+/// every live rank has contributed, otherwise keep waiting.
+fn try_complete(hub: &Hub, st: &mut HubState) {
+    let Some(p) = st.pending.as_ref() else { return };
+    let Some(meta) = p.contribs.iter().flatten().next() else {
+        // Every contributor died; survivors will recreate the op.
+        st.pending = None;
+        return;
+    };
+
+    // Structural impossibility first — mirrors the order of
+    // `ThreadComm`'s checks (dead owners fail even for a sole survivor).
+    let victim = match p.op {
+        OpCode::AllGather => meta
+            .shards
+            .iter()
+            .enumerate()
+            .find(|&(r, &(_, len))| len > 0 && !st.alive[r])
+            .map(|(r, _)| r),
+        OpCode::Broadcast => {
+            let root = meta.root as usize;
+            (!st.alive.get(root).copied().unwrap_or(false)).then_some(root)
+        }
+        _ => None,
+    };
+    if let Some(victim) = victim {
+        let seq = p.seq;
+        let op = p.op;
+        let frame =
+            error_frame(st.generation, seq, ErrorCode::PeerFailed, victim as u32, op.name());
+        let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
+        for r in st.live_ranks() {
+            send_to(hub, r, &frame);
+            frames[r] = Some(frame.clone());
+        }
+        st.completed = Some(Completed { seq, frames });
+        st.pending = None;
+        return;
+    }
+
+    let live = st.live_ranks();
+    if live.iter().any(|&r| p.contribs[r].is_none()) {
+        return;
+    }
+    let p = st.pending.take().unwrap();
+    let results = fold(&p, &live);
+    let mask = st.live_mask();
+    let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
+    for (&r, data) in live.iter().zip(&results) {
+        let frame = result_frame(st.generation, p.seq, mask, data);
+        send_to(hub, r, &frame);
+        frames[r] = Some(frame);
+    }
+    st.completed = Some(Completed { seq: p.seq, frames });
+    st.ops_done += 1;
+}
+
+/// The hub-side fold: zero-seeded, ascending live rank order — the
+/// fold-order contract of WIRE_PROTOCOL.md §5. Returns one result
+/// vector per live rank (empty = "leave your buffer untouched", the
+/// sole-survivor answer for every op except the weighted fold, which is
+/// a real computation even alone).
+fn fold(p: &Pending, live: &[usize]) -> Vec<Vec<f32>> {
+    let contrib = |r: usize| p.contribs[r].as_ref().unwrap();
+    let meta = contrib(live[0]);
+    if live.len() <= 1 && p.op != OpCode::ReduceScatterWeighted {
+        return vec![Vec::new(); live.len()];
+    }
+    let inv = 1.0 / live.len() as f32;
+    match p.op {
+        OpCode::Barrier => vec![Vec::new(); live.len()],
+        OpCode::AllReduceMean => {
+            let mut out = vec![0.0f32; meta.data.len()];
+            for &r in live {
+                kernels::add(&mut out, &contrib(r).data);
+            }
+            kernels::scale(&mut out, inv);
+            vec![out; live.len()]
+        }
+        OpCode::AllGather => {
+            let mut out = vec![0.0f32; shard_extent(&meta.shards)];
+            for (owner, &(off, len)) in meta.shards.iter().enumerate() {
+                if len > 0 {
+                    out[off..off + len].copy_from_slice(&contrib(owner).data);
+                }
+            }
+            vec![out; live.len()]
+        }
+        OpCode::ReduceScatterMean | OpCode::ReduceScatterSum => live
+            .iter()
+            .map(|&dst| {
+                let (off, len) = meta.shards[dst];
+                let mut out = vec![0.0f32; len];
+                for &r in live {
+                    kernels::add(&mut out, &contrib(r).data[off..off + len]);
+                }
+                if p.op == OpCode::ReduceScatterMean {
+                    kernels::scale(&mut out, inv);
+                }
+                out
+            })
+            .collect(),
+        OpCode::ReduceScatterWeighted => live
+            .iter()
+            .map(|&dst| {
+                let (off, len) = meta.shards[dst];
+                let mut out = vec![0.0f32; len];
+                for &r in live {
+                    let w = meta.weights[r];
+                    if w != 0.0 {
+                        kernels::axpy(&mut out, w, &contrib(r).data[off..off + len]);
+                    }
+                }
+                out
+            })
+            .collect(),
+        OpCode::ReduceScatterMeanQ8 => live
+            .iter()
+            .map(|&dst| {
+                let (off, len) = meta.shards[dst];
+                let mut out = vec![0.0f32; len];
+                for &r in live {
+                    let c = contrib(r);
+                    for (j, o) in out.iter_mut().enumerate() {
+                        let i = off + j;
+                        *o += c.codes[i] as f32 * c.scales[i / QUANT_CHUNK];
+                    }
+                }
+                kernels::scale(&mut out, inv);
+                out
+            })
+            .collect(),
+        OpCode::Broadcast => {
+            let root = meta.root as usize;
+            let data = contrib(root).data.clone();
+            live.iter()
+                .map(|&r| if r == root { Vec::new() } else { data.clone() })
+                .collect()
+        }
+    }
+}
+
+fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
+    let parsed = parse_contribute(payload);
+    let mut st = hub.state.lock().unwrap();
+    st.last_seen[rank] = Instant::now();
+    let generation = st.generation;
+    if !st.alive[rank] {
+        // An evicted-but-connected rank learns its fate from the answer.
+        let seq = parsed.map(|(s, _, _)| s).unwrap_or(0);
+        send_to(hub, rank, &error_frame(generation, seq, ErrorCode::PeerFailed, rank as u32, "evicted"));
+        return;
+    }
+    let (seq, op, contrib) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            send_to(hub, rank, &error_frame(generation, 0, ErrorCode::Protocol, rank as u32, &e.to_string()));
+            return;
+        }
+    };
+    let world = hub.cfg.world;
+    if let Some(p) = st.pending.as_ref() {
+        if seq != p.seq || op != p.op {
+            let msg = format!(
+                "out-of-step contribution: got {}#{seq}, pending {}#{}",
+                op.name(),
+                p.op.name(),
+                p.seq
+            );
+            send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+            return;
+        }
+        let meta = p.contribs.iter().flatten().next().cloned();
+        if let Err(msg) = validate_contrib(op, rank, world, &contrib, meta.as_ref()) {
+            send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+            return;
+        }
+        st.pending.as_mut().unwrap().contribs[rank] = Some(contrib);
+    } else {
+        if let Some(c) = st.completed.as_ref() {
+            if c.seq == seq {
+                // Duplicate after a client-side timeout: replay.
+                if let Some(frame) = c.frames[rank].clone() {
+                    send_to(hub, rank, &frame);
+                }
+                return;
+            }
+        }
+        if let Err(msg) = validate_contrib(op, rank, world, &contrib, None) {
+            send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+            return;
+        }
+        let mut contribs: Vec<Option<Contrib>> = vec![None; world];
+        contribs[rank] = Some(contrib);
+        st.pending = Some(Pending { seq, op, started: Instant::now(), contribs });
+    }
+    try_complete(hub, &mut st);
+}
+
+/// Per-connection reader: drains frames, updates liveness, feeds
+/// contributions to the hub. EOF or a stream error evicts the rank.
+fn reader_loop(hub: &Hub, rank: usize, stream: &TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+    let mut fb = FrameBuffer::new();
+    let mut src = stream;
+    loop {
+        match fb.poll() {
+            Ok(Some((_v, frame))) => {
+                match frame.kind {
+                    FrameKind::Heartbeat => {
+                        hub.state.lock().unwrap().last_seen[rank] = Instant::now();
+                    }
+                    FrameKind::Contribute => on_contribute(hub, rank, &frame.payload),
+                    FrameKind::Goodbye => {
+                        leave(hub, &mut hub.state.lock().unwrap(), rank);
+                        return;
+                    }
+                    _ => {
+                        let st = hub.state.lock().unwrap();
+                        let f = error_frame(
+                            st.generation,
+                            0,
+                            ErrorCode::Protocol,
+                            rank as u32,
+                            "unexpected frame kind",
+                        );
+                        drop(st);
+                        send_to(hub, rank, &f);
+                    }
+                }
+                continue;
+            }
+            Ok(None) => {}
+            Err(_) => {
+                evict(hub, &mut hub.state.lock().unwrap(), rank);
+                return;
+            }
+        }
+        match fb.fill_from(&mut src) {
+            Ok(0) => {
+                let mut st = hub.state.lock().unwrap();
+                if !st.done[rank] {
+                    evict(hub, &mut st, rank);
+                }
+                return;
+            }
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                let st = hub.state.lock().unwrap();
+                if st.shutdown || st.all_finished() {
+                    return;
+                }
+            }
+            Err(_) => {
+                evict(hub, &mut hub.state.lock().unwrap(), rank);
+                return;
+            }
+        }
+    }
+}
+
+/// Read exactly one frame within `deadline` (handshake only — after the
+/// Welcome, reads go through `FrameBuffer` polling).
+fn read_handshake_frame(stream: &TcpStream, deadline: Instant) -> io::Result<(u32, Frame)> {
+    let mut fb = FrameBuffer::new();
+    let mut src = stream;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    loop {
+        if let Some(v) = fb.poll()? {
+            return Ok(v);
+        }
+        if Instant::now() >= deadline {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "handshake timed out"));
+        }
+        match fb.fill_from(&mut src) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed")),
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) -> RendezvousReport {
+    // Phase 1: collect `world` handshakes (WIRE_PROTOCOL.md §4.1).
+    let _ = listener.set_nonblocking(true);
+    let join_deadline = Instant::now() + cfg.accept_timeout;
+    let mut streams: Vec<TcpStream> = Vec::with_capacity(cfg.world);
+    while streams.len() < cfg.world {
+        if stop.load(Ordering::SeqCst) || Instant::now() >= join_deadline {
+            for s in &streams {
+                let mut w = s;
+                let _ = write_frame(
+                    &mut w,
+                    &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, 0, Vec::new()),
+                );
+            }
+            return RendezvousReport { joined: streams.len(), ..Default::default() };
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let deadline = Instant::now() + Duration::from_secs(5);
+                match read_handshake_frame(&stream, deadline) {
+                    Ok((version, hello)) => {
+                        let mut w = &stream;
+                        if version != PROTOCOL_VERSION {
+                            let _ = write_frame(
+                                &mut w,
+                                &error_frame(
+                                    0,
+                                    0,
+                                    ErrorCode::VersionMismatch,
+                                    RANK_UNASSIGNED,
+                                    &format!("hub speaks v{PROTOCOL_VERSION}, client spoke v{version}"),
+                                ),
+                            );
+                            continue;
+                        }
+                        if hello.kind != FrameKind::Hello {
+                            let _ = write_frame(
+                                &mut w,
+                                &error_frame(0, 0, ErrorCode::Protocol, RANK_UNASSIGNED, "expected Hello"),
+                            );
+                            continue;
+                        }
+                        let rank = streams.len() as u32;
+                        let mut p = PayloadWriter::default();
+                        p.u32(rank).u32(cfg.world as u32);
+                        if write_frame(
+                            &mut w,
+                            &Frame::new(FrameKind::Welcome, rank, 0, p.finish()),
+                        )
+                        .is_ok()
+                        {
+                            streams.push(stream);
+                        }
+                    }
+                    Err(_) => continue,
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+
+    // Phase 2: serve collectives until every rank leaves or dies.
+    let now = Instant::now();
+    let hub = Arc::new(Hub {
+        cfg,
+        peers: streams
+            .iter()
+            .map(|s| Peer { writer: Mutex::new(s.try_clone().expect("tcp clone")) })
+            .collect(),
+        state: Mutex::new(HubState {
+            alive: vec![true; cfg.world],
+            done: vec![false; cfg.world],
+            last_seen: vec![now; cfg.world],
+            generation: 0,
+            evicted: Vec::new(),
+            pending: None,
+            completed: None,
+            ops_done: 0,
+            shutdown: false,
+        }),
+    });
+
+    let mut readers = Vec::with_capacity(cfg.world);
+    for (rank, stream) in streams.into_iter().enumerate() {
+        let hub = Arc::clone(&hub);
+        readers.push(
+            std::thread::Builder::new()
+                .name(format!("edit-hub-r{rank}"))
+                .spawn(move || reader_loop(&hub, rank, &stream))
+                .expect("spawn hub reader"),
+        );
+    }
+
+    // Monitor loop: op-window timeouts and heartbeat-stale evictions.
+    loop {
+        std::thread::sleep(Duration::from_millis(10));
+        let mut st = hub.state.lock().unwrap();
+        if stop.load(Ordering::SeqCst) {
+            st.shutdown = true;
+            let generation = st.generation;
+            if let Some(p) = st.pending.take() {
+                for (r, c) in p.contribs.iter().enumerate() {
+                    if c.is_some() && st.alive[r] {
+                        send_to(&hub, r, &error_frame(generation, p.seq, ErrorCode::Shutdown, r as u32, "hub shutdown"));
+                    }
+                }
+            }
+            for r in st.live_ranks() {
+                send_to(&hub, r, &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, generation, Vec::new()));
+            }
+            break;
+        }
+        if st.all_finished() {
+            st.shutdown = true;
+            break;
+        }
+        let timed_out = st
+            .pending
+            .as_ref()
+            .is_some_and(|p| p.started.elapsed() >= hub.cfg.op_timeout);
+        if timed_out {
+            // Evict op-blocking ranks that also stopped heartbeating
+            // (a killed -STOP process, a hard hang) — timeout-then-evict.
+            let stale: Vec<usize> = {
+                let p = st.pending.as_ref().unwrap();
+                st.live_ranks()
+                    .into_iter()
+                    .filter(|&r| {
+                        p.contribs[r].is_none()
+                            && st.last_seen[r].elapsed() >= hub.cfg.heartbeat_timeout
+                    })
+                    .collect()
+            };
+            for r in stale {
+                evict(&hub, &mut st, r);
+            }
+            // Still blocked on live, heartbeating ranks: tell the
+            // contributors to retry (maps onto RetryPolicy).
+            if let Some(p) = st.pending.as_ref() {
+                if p.started.elapsed() >= hub.cfg.op_timeout {
+                    let generation = st.generation;
+                    let seq = p.seq;
+                    let name = p.op.name();
+                    let contributed: Vec<usize> = st
+                        .live_ranks()
+                        .into_iter()
+                        .filter(|&r| p.contribs[r].is_some())
+                        .collect();
+                    for r in contributed {
+                        send_to(
+                            &hub,
+                            r,
+                            &error_frame(generation, seq, ErrorCode::Timeout, RANK_UNASSIGNED, name),
+                        );
+                    }
+                    st.pending = None;
+                }
+            }
+        }
+    }
+    drop(hub.state.lock().map(|mut st| st.shutdown = true));
+
+    for h in readers {
+        let _ = h.join();
+    }
+    let st = hub.state.lock().unwrap();
+    RendezvousReport {
+        joined: hub.cfg.world,
+        generations: st.generation,
+        evicted: st.evicted.clone(),
+        ops_done: st.ops_done,
+    }
+}

@@ -1,0 +1,587 @@
+//! `SocketComm` — the TCP socket backend of the [`Collective`] trait.
+//!
+//! One handle per OS process, speaking the framed protocol of
+//! [`super::frame`] (normative spec: `docs/WIRE_PROTOCOL.md`) to the
+//! [`super::rendezvous`] hub, which performs the rank-0..n fold. From
+//! the caller's perspective this is a drop-in for `ThreadComm`'s
+//! fallible surface: same trait, same `CommError` taxonomy, same
+//! degraded-membership semantics, and — the property the cross-backend
+//! suite asserts — bitwise-identical reduction results at matched rank
+//! count, because f32 payloads travel as raw IEEE-754 bits and the hub
+//! folds in the same ascending-live-rank order with the same kernels.
+//!
+//! # Sequencing and retries (WIRE_PROTOCOL.md §4.2–§4.3)
+//!
+//! Collectives are lockstep: every rank issues the same op with the
+//! same sequence number. The client advances its sequence counter on
+//! success and on deterministic failure (`PeerFailed`), but **not** on
+//! `Timeout` — a `RetryPolicy` retry re-contributes the same sequence
+//! number, and the hub deduplicates (replaying the cached result if the
+//! op completed while the client was giving up). Stale frames for an
+//! older sequence number are dropped on read.
+//!
+//! # Liveness
+//!
+//! A background thread heartbeats over the shared writer at
+//! `heartbeat_interval`, so a worker busy in a long inner-step loop is
+//! never mistaken for dead; only a killed or wedged process goes
+//! silent and gets evicted by the hub (timeout-then-evict).
+
+use std::cell::{Cell, RefCell};
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::collectives::frame::{
+    write_frame, ErrorCode, Frame, FrameBuffer, FrameKind, OpCode, PayloadReader, PayloadWriter,
+    RANK_UNASSIGNED,
+};
+use crate::collectives::{group, Collective, CommError, CommResult};
+
+/// Client connection knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ConnectOpts {
+    /// Window for TCP connect + the Hello/Welcome handshake (also the
+    /// retry window while the hub is still binding).
+    pub connect_timeout: Duration,
+    /// Liveness beacon period (must undercut the hub's
+    /// `heartbeat_timeout` by a healthy margin).
+    pub heartbeat_interval: Duration,
+}
+
+impl Default for ConnectOpts {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(10),
+            heartbeat_interval: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Bytes/frames this handle moved for collective ops (heartbeats
+/// excluded — they belong to liveness, not payload accounting). The
+/// int8-payload wire-ratio gate measures real `tx_bytes` deltas here.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub tx_frames: u64,
+    pub rx_frames: u64,
+}
+
+struct OpOutcome {
+    data: Vec<f32>,
+}
+
+/// Socket-backed [`Collective`] handle; see the module docs.
+pub struct SocketComm {
+    rank: usize,
+    world: usize,
+    stream: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    seq: Cell<u64>,
+    generation: Cell<u64>,
+    live_mask: Cell<u64>,
+    closed: Cell<bool>,
+    stats: Cell<WireStats>,
+    fb: RefCell<FrameBuffer>,
+    qcodes: RefCell<Vec<i8>>,
+    qscales: RefCell<Vec<f32>>,
+    hb_stop: Arc<AtomicBool>,
+    hb: Option<JoinHandle<()>>,
+}
+
+impl SocketComm {
+    /// Connect to a rendezvous hub and complete the Hello/Welcome rank
+    /// assignment. Retries refused connections until `connect_timeout`
+    /// elapses, so workers may race the hub's bind.
+    pub fn connect(addr: &str, opts: ConnectOpts) -> io::Result<SocketComm> {
+        let deadline = Instant::now() + opts.connect_timeout;
+        let stream = loop {
+            match try_connect(addr, Duration::from_millis(500)) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        {
+            let mut w = &stream;
+            write_frame(&mut w, &Frame::new(FrameKind::Hello, RANK_UNASSIGNED, 0, Vec::new()))?;
+        }
+        let welcome = read_one_frame(&stream, deadline)?;
+        let (rank, world) = match welcome.kind {
+            FrameKind::Welcome => {
+                let mut r = PayloadReader::new(&welcome.payload);
+                (r.u32()? as usize, r.u32()? as usize)
+            }
+            FrameKind::Error => {
+                let mut r = PayloadReader::new(&welcome.payload);
+                let _seq = r.u64()?;
+                let _code = r.u8()?;
+                let _rank = r.u32()?;
+                let msg = r.text().unwrap_or_default();
+                return Err(io::Error::new(io::ErrorKind::ConnectionRefused, msg));
+            }
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("expected Welcome, got {other:?}"),
+                ))
+            }
+        };
+
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb = {
+            let writer = Arc::clone(&writer);
+            let stop = Arc::clone(&hb_stop);
+            let interval = opts.heartbeat_interval;
+            let rank32 = rank as u32;
+            std::thread::Builder::new()
+                .name(format!("edit-hb-r{rank}"))
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(interval);
+                        let Ok(mut w) = writer.lock() else { break };
+                        let frame = Frame::new(FrameKind::Heartbeat, rank32, 0, Vec::new());
+                        if write_frame(&mut *w, &frame).is_err() {
+                            break;
+                        }
+                    }
+                })?
+        };
+
+        let mask = if world >= 64 { u64::MAX } else { (1u64 << world) - 1 };
+        Ok(SocketComm {
+            rank,
+            world,
+            stream,
+            writer,
+            seq: Cell::new(0),
+            generation: Cell::new(0),
+            live_mask: Cell::new(mask),
+            closed: Cell::new(false),
+            stats: Cell::new(WireStats::default()),
+            fb: RefCell::new(FrameBuffer::new()),
+            qcodes: RefCell::new(Vec::new()),
+            qscales: RefCell::new(Vec::new()),
+            hb_stop,
+            hb: None,
+        }
+        .with_heartbeat(hb))
+    }
+
+    fn with_heartbeat(mut self, hb: JoinHandle<()>) -> Self {
+        self.hb = Some(hb);
+        self
+    }
+
+    /// Membership generation from the last hub frame seen.
+    pub fn generation(&self) -> u64 {
+        self.generation.get()
+    }
+
+    /// Live-rank bitmask from the last completed collective.
+    pub fn live_mask(&self) -> u64 {
+        self.live_mask.get()
+    }
+
+    /// Live rank count per the last completed collective.
+    pub fn live_ranks(&self) -> usize {
+        self.live_mask.get().count_ones() as usize
+    }
+
+    /// Bytes/frames moved for collective ops so far.
+    pub fn wire_stats(&self) -> WireStats {
+        self.stats.get()
+    }
+
+    /// Graceful leave: sends Goodbye, stops the heartbeat. Further ops
+    /// return [`CommError::Shutdown`].
+    pub fn close(&mut self) {
+        if !self.closed.get() {
+            if let Ok(mut w) = self.writer.lock() {
+                let frame =
+                    Frame::new(FrameKind::Goodbye, self.rank as u32, self.generation.get(), Vec::new());
+                let _ = write_frame(&mut *w, &frame);
+            }
+            self.closed.set(true);
+        }
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.hb.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Die abruptly: sever the TCP stream with **no** Goodbye and stop
+    /// heartbeating — from the hub's side this is indistinguishable
+    /// from a SIGKILLed worker process (reader EOF → immediate evict).
+    /// Exists so in-process tests can exercise the crash path; a
+    /// graceful exit is [`Self::close`].
+    pub fn kill(&mut self) {
+        self.closed.set(true);
+        self.hb_stop.store(true, Ordering::SeqCst);
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.hb.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn begin(&self, op: OpCode) -> PayloadWriter {
+        let mut p = PayloadWriter::default();
+        p.u8(op as u8).u64(self.seq.get());
+        p
+    }
+
+    fn bump_stats(&self, tx: usize, rx: usize) {
+        let mut s = self.stats.get();
+        if tx > 0 {
+            s.tx_bytes += tx as u64;
+            s.tx_frames += 1;
+        }
+        if rx > 0 {
+            s.rx_bytes += rx as u64;
+            s.rx_frames += 1;
+        }
+        self.stats.set(s);
+    }
+
+    fn terminal(&self) -> CommError {
+        self.closed.set(true);
+        CommError::Shutdown
+    }
+
+    /// One Contribute → Result round trip; the heart of every op.
+    fn op_round(&self, op: OpCode, payload: Vec<u8>, timeout: Duration) -> CommResult<OpOutcome> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        let seq = self.seq.get();
+        let frame = Frame::new(FrameKind::Contribute, self.rank as u32, self.generation.get(), payload);
+        {
+            let Ok(mut w) = self.writer.lock() else { return Err(self.terminal()) };
+            if write_frame(&mut *w, &frame).is_err() {
+                return Err(self.terminal());
+            }
+        }
+        self.bump_stats(frame.wire_len(), 0);
+
+        let deadline = Instant::now() + timeout;
+        let mut fb = self.fb.borrow_mut();
+        loop {
+            match fb.poll() {
+                Ok(Some((_v, reply))) => {
+                    self.bump_stats(0, reply.wire_len());
+                    self.generation.set(reply.generation);
+                    match reply.kind {
+                        FrameKind::Result => {
+                            let parsed = (|| -> io::Result<(u64, u64, Vec<f32>)> {
+                                let mut r = PayloadReader::new(&reply.payload);
+                                Ok((r.u64()?, r.u64()?, r.f32s()?))
+                            })();
+                            let Ok((rseq, mask, data)) = parsed else {
+                                return Err(self.terminal());
+                            };
+                            if rseq != seq {
+                                continue; // stale result from a prior attempt
+                            }
+                            self.live_mask.set(mask);
+                            self.seq.set(seq + 1);
+                            return Ok(OpOutcome { data });
+                        }
+                        FrameKind::Error => {
+                            let parsed = (|| -> io::Result<(u64, u8, u32)> {
+                                let mut r = PayloadReader::new(&reply.payload);
+                                Ok((r.u64()?, r.u8()?, r.u32()?))
+                            })();
+                            let Ok((eseq, code, erank)) = parsed else {
+                                return Err(self.terminal());
+                            };
+                            match ErrorCode::from_u8(code) {
+                                Some(ErrorCode::Timeout) if eseq == seq => {
+                                    return Err(CommError::Timeout { op: op.name(), waited: timeout });
+                                }
+                                Some(ErrorCode::PeerFailed) if eseq == seq => {
+                                    if erank as usize == self.rank {
+                                        // The hub evicted *us*; terminal.
+                                        return Err(self.terminal());
+                                    }
+                                    self.seq.set(seq + 1);
+                                    return Err(CommError::PeerFailed { rank: erank as usize });
+                                }
+                                Some(ErrorCode::Timeout) | Some(ErrorCode::PeerFailed) => continue,
+                                _ => return Err(self.terminal()),
+                            }
+                        }
+                        FrameKind::Shutdown => return Err(self.terminal()),
+                        _ => continue,
+                    }
+                }
+                Ok(None) => {}
+                Err(_) => return Err(self.terminal()),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CommError::Timeout { op: op.name(), waited: timeout });
+            }
+            let poll = (deadline - now).min(Duration::from_millis(50));
+            let _ = self.stream.set_read_timeout(Some(poll.max(Duration::from_millis(1))));
+            match fb.fill_from(&mut (&self.stream)) {
+                Ok(0) => return Err(self.terminal()),
+                Ok(_) => {}
+                Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+                Err(_) => return Err(self.terminal()),
+            }
+        }
+    }
+
+    /// Copy a result region, failing terminally on a length mismatch
+    /// (protocol corruption, not a membership event).
+    fn expect_len(&self, data: &[f32], want: usize) -> CommResult<()> {
+        if data.len() == want {
+            Ok(())
+        } else {
+            Err(self.terminal())
+        }
+    }
+}
+
+impl Drop for SocketComm {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn try_connect(addr: &str, per_addr: Duration) -> io::Result<TcpStream> {
+    let mut last = io::Error::new(io::ErrorKind::AddrNotAvailable, format!("no addresses for {addr}"));
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, per_addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Blocking single-frame read with a deadline (handshake path).
+fn read_one_frame(stream: &TcpStream, deadline: Instant) -> io::Result<Frame> {
+    let mut fb = FrameBuffer::new();
+    let mut src = stream;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    loop {
+        if let Some((_v, f)) = fb.poll()? {
+            return Ok(f);
+        }
+        if Instant::now() >= deadline {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "handshake read timed out"));
+        }
+        match fb.fill_from(&mut src) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "hub closed")),
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+impl Collective for SocketComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.world
+    }
+
+    fn try_barrier(&self, timeout: Duration) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let payload = self.begin(OpCode::Barrier).finish();
+        self.op_round(OpCode::Barrier, payload, timeout).map(|_| ())
+    }
+
+    fn try_all_reduce_mean(&self, buf: &mut [f32], timeout: Duration) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let mut p = self.begin(OpCode::AllReduceMean);
+        p.f32s(buf);
+        let out = self.op_round(OpCode::AllReduceMean, p.finish(), timeout)?;
+        if out.data.is_empty() {
+            return Ok(()); // sole survivor: own contribution is the mean
+        }
+        self.expect_len(&out.data, buf.len())?;
+        buf.copy_from_slice(&out.data);
+        Ok(())
+    }
+
+    fn try_all_gather(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let (off, len) = shards[self.rank];
+        let mut p = self.begin(OpCode::AllGather);
+        p.shards(shards).f32s(&full[off..off + len]);
+        let out = self.op_round(OpCode::AllGather, p.finish(), timeout)?;
+        if out.data.is_empty() {
+            return Ok(());
+        }
+        for &(o, l) in shards {
+            if o + l > out.data.len() {
+                return Err(self.terminal());
+            }
+            full[o..o + l].copy_from_slice(&out.data[o..o + l]);
+        }
+        Ok(())
+    }
+
+    fn try_reduce_scatter_mean(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.rs_f32(OpCode::ReduceScatterMean, full, shards, timeout)
+    }
+
+    fn try_reduce_scatter_sum(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.rs_f32(OpCode::ReduceScatterSum, full, shards, timeout)
+    }
+
+    fn try_reduce_scatter_weighted(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        let (off, len) = shards[self.rank];
+        if self.world == 1 {
+            // Degenerate group: the reference's zero-init single fold.
+            let w = weights[0];
+            for x in full[off..off + len].iter_mut() {
+                let mut acc = 0.0f32;
+                if w != 0.0 {
+                    acc += w * *x;
+                }
+                *x = acc;
+            }
+            return Ok(());
+        }
+        let mut p = self.begin(OpCode::ReduceScatterWeighted);
+        p.shards(shards).f32s(weights).f32s(full);
+        let out = self.op_round(OpCode::ReduceScatterWeighted, p.finish(), timeout)?;
+        self.expect_len(&out.data, len)?;
+        full[off..off + len].copy_from_slice(&out.data);
+        Ok(())
+    }
+
+    fn try_reduce_scatter_mean_q8(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let (off, len) = shards[self.rank];
+        let mut p = self.begin(OpCode::ReduceScatterMeanQ8);
+        {
+            let mut codes = self.qcodes.borrow_mut();
+            let mut scales = self.qscales.borrow_mut();
+            group::quantize_int8_into(full, &mut codes, &mut scales);
+            p.shards(shards).u32(full.len() as u32).i8s(&codes).f32s(&scales);
+        }
+        let out = self.op_round(OpCode::ReduceScatterMeanQ8, p.finish(), timeout)?;
+        if out.data.is_empty() {
+            return Ok(());
+        }
+        self.expect_len(&out.data, len)?;
+        full[off..off + len].copy_from_slice(&out.data);
+        Ok(())
+    }
+
+    fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let mut p = self.begin(OpCode::Broadcast);
+        p.u32(root as u32);
+        if self.rank == root {
+            p.u8(1).f32s(buf);
+        } else {
+            p.u8(0);
+        }
+        let out = self.op_round(OpCode::Broadcast, p.finish(), timeout)?;
+        if self.rank != root && !out.data.is_empty() {
+            self.expect_len(&out.data, buf.len())?;
+            buf.copy_from_slice(&out.data);
+        }
+        Ok(())
+    }
+}
+
+impl SocketComm {
+    fn rs_f32(
+        &self,
+        op: OpCode,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let (off, len) = shards[self.rank];
+        let mut p = self.begin(op);
+        p.shards(shards).f32s(full);
+        let out = self.op_round(op, p.finish(), timeout)?;
+        if out.data.is_empty() {
+            return Ok(()); // sole survivor: region untouched
+        }
+        self.expect_len(&out.data, len)?;
+        full[off..off + len].copy_from_slice(&out.data);
+        Ok(())
+    }
+}

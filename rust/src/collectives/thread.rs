@@ -475,6 +475,99 @@ impl ThreadComm {
         self.try_rendezvous("reduce_scatter_mean.exit", timeout)
     }
 
+    fn try_reduce_scatter_sum_impl(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        if self.live_ranks() <= 1 {
+            // Sole survivor: the live-group sum is its own contribution.
+            return Ok(());
+        }
+        self.stage(full);
+        self.try_rendezvous("reduce_scatter_sum", timeout)?;
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for r in 0..self.inner.n {
+            if self.is_failed(r) {
+                continue;
+            }
+            let sr = self.inner.staging[r].read().unwrap();
+            kernels::add(&mut full[off..off + len], &sr[off..off + len]);
+        }
+        self.try_rendezvous("reduce_scatter_sum.exit", timeout)
+    }
+
+    fn try_reduce_scatter_weighted_impl(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        debug_assert_eq!(self.inner.n, weights.len());
+        if self.live_ranks() <= 1 {
+            // Unlike sum/mean, w·x is a real computation even alone:
+            // reproduce the reference's zero-init single fold.
+            let (off, len) = shards[self.rank];
+            let w = weights[self.rank];
+            for x in full[off..off + len].iter_mut() {
+                let mut acc = 0.0f32;
+                if w != 0.0 {
+                    acc += w * *x;
+                }
+                *x = acc;
+            }
+            return Ok(());
+        }
+        self.stage(full);
+        self.try_rendezvous("reduce_scatter_weighted", timeout)?;
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for (r, &w) in weights.iter().enumerate() {
+            if w != 0.0 && !self.is_failed(r) {
+                let sr = self.inner.staging[r].read().unwrap();
+                kernels::axpy(&mut full[off..off + len], w, &sr[off..off + len]);
+            }
+        }
+        self.try_rendezvous("reduce_scatter_weighted.exit", timeout)
+    }
+
+    fn try_reduce_scatter_mean_q8_impl(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        check_shutdown(&self.inner)?;
+        if self.live_ranks() <= 1 {
+            return Ok(());
+        }
+        {
+            let mut slot = self.inner.qslots[self.rank].write().unwrap();
+            let QSlot { codes, scales } = &mut *slot;
+            group::quantize_int8_into(full, codes, scales);
+        }
+        self.try_rendezvous("reduce_scatter_mean_q8", timeout)?;
+        let inv = 1.0 / self.live_ranks() as f32;
+        let (off, len) = shards[self.rank];
+        full[off..off + len].fill(0.0);
+        for r in 0..self.inner.n {
+            if self.is_failed(r) {
+                continue;
+            }
+            let sr = self.inner.qslots[r].read().unwrap();
+            for i in off..off + len {
+                full[i] += sr.codes[i] as f32 * sr.scales[i / QUANT_CHUNK];
+            }
+        }
+        kernels::scale(&mut full[off..off + len], inv);
+        self.try_rendezvous("reduce_scatter_mean_q8.exit", timeout)
+    }
+
     fn try_broadcast_impl(
         &self,
         buf: &mut [f32],
@@ -542,6 +635,34 @@ impl Collective for ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         self.try_reduce_scatter_mean_impl(full, shards, timeout)
+    }
+
+    fn try_reduce_scatter_sum(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.try_reduce_scatter_sum_impl(full, shards, timeout)
+    }
+
+    fn try_reduce_scatter_weighted(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.try_reduce_scatter_weighted_impl(full, shards, weights, timeout)
+    }
+
+    fn try_reduce_scatter_mean_q8(
+        &self,
+        full: &mut [f32],
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommResult<()> {
+        self.try_reduce_scatter_mean_q8_impl(full, shards, timeout)
     }
 
     fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()> {

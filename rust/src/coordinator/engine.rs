@@ -6,10 +6,10 @@
 //!  * [`clock`]  — the deterministic discrete-event scheduler (min-heap
 //!                 on per-replica simulated clocks, stable tie-break by
 //!                 replica index, bitwise-equal clocks coalesce);
-//!  * [`worker`] — the per-replica lane state machine (fill batch →
+//!  * `worker`   — the per-replica lane state machine (fill batch →
 //!                 inner step → straggler lag → sync eligibility), with
 //!                 optional parallel worker threads;
-//!  * [`sync`]   — the two synchronization paths: barrier sync for the
+//!  * `sync`     — the two synchronization paths: barrier sync for the
 //!                 step-synced methods and per-replica **anchor sync**
 //!                 for A-EDiT (no global barrier), plus the precomputed
 //!                 `CommPlan` with layer-wise overlap accounting.
@@ -174,6 +174,14 @@ pub struct TrainConfig {
     pub checkpoint_every: u64,
     /// Directory for periodic checkpoints (`ckpt-round-NNNNNN.bin`).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Collective transport. The single-process trainer simulates its
+    /// cluster in-process and only accepts
+    /// [`CommBackend::Thread`](crate::collectives::CommBackend::Thread);
+    /// `CommBackend::Socket` selects the multi-process deployment,
+    /// which runs one `edit-train worker --join <addr>` process per
+    /// rank against an `edit-train rendezvous` hub instead of this
+    /// entrypoint (`Trainer::new` rejects it with that pointer).
+    pub backend: crate::collectives::CommBackend,
 }
 
 impl TrainConfig {
@@ -223,6 +231,7 @@ impl TrainConfig {
             evict_timeout: 2.0 * 0.5,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            backend: crate::collectives::CommBackend::Thread,
             spec,
         }
     }
@@ -382,6 +391,12 @@ impl Trainer {
             cfg.fault_plan.is_empty() || (cfg.spec.is_local_sgd() && cfg.spec.layerwise()),
             "fault plan requires a layer-wise local-SGD strategy (edit / a-edit / palsgd): \
              the flat uniform-averaging sync has no membership-aware combine to degrade to"
+        );
+        anyhow::ensure!(
+            cfg.backend == crate::collectives::CommBackend::Thread,
+            "backend=socket selects the multi-process deployment: start a hub with \
+             `edit-train rendezvous --bind <addr> --world N` and one \
+             `edit-train worker --join <addr>` process per rank instead of `train`"
         );
         let init = engine.init_params()?;
         let n = init.len();

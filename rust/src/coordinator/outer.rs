@@ -86,7 +86,7 @@ impl OuterOpt {
     }
 
     /// [`Self::apply_range`] with the clip factor β fused in: each
-    /// element applies β·delta[i] (one rounding for the scale, then the
+    /// element applies `β·delta[i]` (one rounding for the scale, then the
     /// update — bitwise identical to scaling the delta first). The sync
     /// pipeline uses this so gradient clipping costs no extra pass over
     /// the combined pseudo gradient.

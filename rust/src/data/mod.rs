@@ -31,7 +31,7 @@ const SMOOTHING: f64 = 0.05;
 #[derive(Debug, Clone)]
 pub struct Language {
     vocab: usize,
-    /// successors[t] = candidate next tokens after t.
+    /// `successors[t]` = candidate next tokens after t.
     successors: Vec<[u32; SUCCESSORS]>,
     /// Cumulative Zipf weights shared by all tokens.
     cum_weights: [f64; SUCCESSORS],

@@ -7,6 +7,8 @@
 //!   simulate   cluster simulator: --exp table2|fig5|fig9|measured
 //!   ablation   Fig. 7 pseudo-gradient-penalty ablation
 //!   elastic    Fig. 6c elastic schedules; lr-sweep = Fig. 6a/b
+//!   rendezvous multi-process hub: rank assignment + socket collectives
+//!   worker     one EDiT driver rank: --join a hub, or --local N threads
 //!   probe      evaluate a trained run's probe PPLs (Table 1 style)
 //!   info       print artifact manifest / platform info
 //!
@@ -40,7 +42,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: edit-train <train|sweep|simulate|ablation|elastic|chaos|probe|info> [options]
+    "usage: edit-train <train|sweep|simulate|ablation|elastic|chaos|rendezvous|worker|probe|info> [options]
   common: --artifacts DIR --results DIR --model test|petite|tiny|mini
           --mesh MxN --steps N --tau N --seed N --config FILE --set k=v,...
   train:    --method baseline|pls|diloco|co2|co2*|edit|a-edit|palsgd
@@ -60,6 +62,13 @@ fn usage() -> &'static str {
   elastic:  --exp fig6ab|fig6c --phase-steps N --lr X
   chaos:    --seeds N --pairs N (seeded fault schedules; kill/restore
             bitwise replay -> results/fault_recovery.csv)
+  rendezvous: --bind ADDR --world N [--op-timeout-ms MS --hb-timeout-ms MS
+            --join-timeout-ms MS] (hub for the socket backend; prints the
+            bound address, serves N workers, prints a membership report)
+  worker:   --join ADDR (connect a rank to a rendezvous hub) or --local N
+            (reference run on N in-process threads); --params N --rounds N
+            --inner-steps N --seed N --payload f32|int8 — both paths print
+            digest=0x... lines that must match bitwise at equal configs
   info:     [--model NAME]"
 }
 
@@ -118,6 +127,8 @@ fn run(args: &Args) -> Result<()> {
         Some("ablation") => convergence::fig7(&opts),
         Some("elastic") => cmd_elastic(args, &cfg, &opts),
         Some("chaos") => chaos::run_chaos(&opts, args.u64("seeds", 2), args.usize("pairs", 2)),
+        Some("rendezvous") => cmd_rendezvous(args),
+        Some("worker") => cmd_worker(args),
         Some("probe") => cmd_probe(args, &opts),
         Some("info") => cmd_info(&opts),
         _ => {
@@ -236,6 +247,12 @@ fn cmd_train(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
     }
     tc.evict_timeout = args.f64("evict-timeout", tc.evict_timeout);
     tc.checkpoint_every = args.u64("checkpoint-every", 0);
+    // backend=socket is rejected by Trainer::new with a pointer to the
+    // `rendezvous`/`worker` subcommands; parsing it here keeps the
+    // config surface honest (`train.backend` / `--backend`).
+    let backend = args.str("backend", &cfg.str("train.backend", "thread"));
+    tc.backend = edit_train::collectives::CommBackend::parse(&backend)
+        .ok_or_else(|| anyhow::anyhow!("--backend: expected thread|socket, got '{backend}'"))?;
     tc.checkpoint_dir = args
         .opt("checkpoint-dir")
         .map(std::path::PathBuf::from)
@@ -374,6 +391,88 @@ fn cmd_elastic(args: &Args, cfg: &Config, opts: &ExpOpts) -> Result<()> {
         ),
         other => anyhow::bail!("unknown elastic exp '{other}'"),
     }
+}
+
+/// Hub for the multi-process socket backend: binds, prints the chosen
+/// address (port 0 OK — scripts parse the printed line), serves `world`
+/// workers through their collective rounds, then reports membership.
+fn cmd_rendezvous(args: &Args) -> Result<()> {
+    use edit_train::collectives::{Rendezvous, RendezvousConfig};
+    use std::time::Duration;
+    let d = RendezvousConfig::default();
+    let rcfg = RendezvousConfig {
+        world: args.usize("world", d.world),
+        op_timeout: Duration::from_millis(
+            args.u64("op-timeout-ms", d.op_timeout.as_millis() as u64),
+        ),
+        heartbeat_timeout: Duration::from_millis(
+            args.u64("hb-timeout-ms", d.heartbeat_timeout.as_millis() as u64),
+        ),
+        accept_timeout: Duration::from_millis(
+            args.u64("join-timeout-ms", d.accept_timeout.as_millis() as u64),
+        ),
+    };
+    let bind = args.str("bind", "127.0.0.1:0");
+    let world = rcfg.world;
+    let mut hub = Rendezvous::bind(&bind, rcfg)?;
+    // The exact line scripts/smoke_multiproc.sh greps for the address.
+    println!("rendezvous listening on {} world={world}", hub.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    let report = hub.wait();
+    println!(
+        "rendezvous done: joined={} generations={} evicted={:?} ops={}",
+        report.joined, report.generations, report.evicted, report.ops_done,
+    );
+    Ok(())
+}
+
+/// One EDiT driver rank. `--join ADDR` speaks the socket backend to a
+/// rendezvous hub; `--local N` runs the same rounds on N in-process
+/// threads over a ThreadComm — the bitwise reference. Both print the
+/// anchor digest; at equal configs the lines must match exactly.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use edit_train::collectives::driver::{
+        run_local_group, run_worker, DriverConfig, DriverPayload,
+    };
+    use edit_train::collectives::{Collective, ConnectOpts, SocketComm};
+    let payload = args.str("payload", "f32");
+    let d = DriverConfig::default();
+    let dcfg = DriverConfig {
+        params: args.usize("params", d.params),
+        rounds: args.usize("rounds", d.rounds),
+        inner_steps: args.usize("inner-steps", d.inner_steps),
+        seed: args.u64("seed", d.seed),
+        inner_lr: args.f64("inner-lr", d.inner_lr as f64) as f32,
+        payload: DriverPayload::parse(&payload)
+            .ok_or_else(|| anyhow::anyhow!("--payload: expected f32|int8, got '{payload}'"))?,
+        ..d
+    };
+
+    if let Some(addr) = args.opt("join") {
+        let mut comm = SocketComm::connect(addr, ConnectOpts::default())
+            .map_err(|e| anyhow::anyhow!("join {addr}: {e}"))?;
+        let (rank, world) = (comm.rank(), comm.size());
+        eprintln!("worker rank={rank} world={world} joined {addr}");
+        let out = run_worker(&comm, &dcfg)?;
+        let stats = comm.wire_stats();
+        comm.close();
+        println!(
+            "worker rank={rank} world={world} rounds={} digest={:#018x} evicted={:?} \
+             tx_bytes={} rx_bytes={}",
+            out.rounds_done, out.digest, out.evictions, stats.tx_bytes, stats.rx_bytes,
+        );
+    } else {
+        let world = args.usize("local", 2);
+        let outs = run_local_group(world, &dcfg)?;
+        for (rank, out) in outs.iter().enumerate() {
+            println!(
+                "worker rank={rank} world={world} rounds={} digest={:#018x} evicted={:?}",
+                out.rounds_done, out.digest, out.evictions,
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_probe(args: &Args, opts: &ExpOpts) -> Result<()> {

@@ -261,7 +261,7 @@ pub fn sub_sq_norm_into(out: &mut [f32], a: &[f32], b: &[f32]) -> f64 {
     fold_lanes(acc)
 }
 
-/// Fused weighted combine: out = Σ_j weights[j]·rows[j], returning
+/// Fused weighted combine: `out = Σ_j weights[j]·rows[j]`, returning
 /// ‖out‖² from the same sweep. Zero-weight rows are skipped, and the
 /// per-element accumulation runs in ascending row order — bitwise equal
 /// to `reference::weighted_sum_into` (and the norm to `sq_norm(out)`).
@@ -515,7 +515,7 @@ pub mod reference {
         acc
     }
 
-    /// out = Σ_j weights[j]·rows[j], skipping zero weights.
+    /// `out = Σ_j weights[j]·rows[j]`, skipping zero weights.
     pub fn weighted_sum_into(out: &mut [f32], rows: &[&[f32]], weights: &[f32]) {
         debug_assert_eq!(rows.len(), weights.len());
         out.fill(0.0);

@@ -60,7 +60,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     kernels::dot(a, b)
 }
 
-/// out = sum_i weights[i] * rows[i]; rows must share a common length.
+/// `out = sum_i weights[i] * rows[i]`; rows must share a common length.
 /// Norm-free variant — callers that also need ‖out‖² should use the
 /// fused [`kernels::weighted_sum_sq_into`] instead of re-reducing.
 pub fn weighted_sum_into(out: &mut [f32], rows: &[&[f32]], weights: &[f32]) {

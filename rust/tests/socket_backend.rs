@@ -1,0 +1,276 @@
+//! Cross-backend equivalence suite: `SocketComm` (loopback TCP through
+//! a rendezvous hub) against `ThreadComm` (in-process condvar gate).
+//!
+//! The claim under test is the fold-order contract of
+//! `docs/WIRE_PROTOCOL.md` §5: at matched rank count and matched live
+//! membership, every collective produces **bitwise identical** f32
+//! results on both backends — including uneven shard remainders, the
+//! 1-rank degenerate group, the int8 payload lane, and the crash path
+//! (a worker severing TCP mid-run must be evicted exactly like a rank
+//! marked failed in-process).
+
+use std::time::Duration;
+
+use edit_train::collectives::driver::{
+    run_local_group, run_worker, DriverConfig, DriverPayload,
+};
+use edit_train::collectives::{
+    Collective, ConnectOpts, Rendezvous, RendezvousConfig, SocketComm, ThreadComm,
+};
+use edit_train::tensor::{ShardSpec, QUANT_CHUNK};
+
+const T: Duration = Duration::from_secs(10);
+
+/// Magnitude-staggered values: f32 addition order is observable, so any
+/// fold-order deviation between backends changes bits.
+fn staggered(rank: usize, len: usize, salt: f32) -> Vec<f32> {
+    (0..len)
+        .map(|i| [1e7f32, 3.0, -1e7, 0.011][rank % 4] * salt + (i as f32) * 0.125 - salt)
+        .collect()
+}
+
+fn shard_table(len: usize, world: usize) -> Vec<(usize, usize)> {
+    let spec = ShardSpec::new(len, world);
+    (0..world).map(|r| spec.range(r)).collect()
+}
+
+/// Run one closure per rank over a loopback socket group, returning the
+/// per-rank results indexed by the **assigned** rank (arrival order).
+fn run_socket_group<T2, F>(world: usize, f: F) -> Vec<T2>
+where
+    T2: Send,
+    F: Fn(&mut SocketComm) -> T2 + Sync,
+{
+    let hub = Rendezvous::bind(
+        "127.0.0.1:0",
+        RendezvousConfig { world, ..Default::default() },
+    )
+    .expect("bind rendezvous");
+    let addr = hub.addr().to_string();
+    let mut out: Vec<Option<T2>> = (0..world).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let addr = addr.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let mut comm =
+                        SocketComm::connect(&addr, ConnectOpts::default()).expect("join hub");
+                    let rank = comm.rank();
+                    let v = f(&mut comm);
+                    comm.close();
+                    (rank, v)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, v) = h.join().expect("socket worker panicked");
+            out[rank] = Some(v);
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run one closure per rank over an in-process `ThreadComm` group.
+fn run_thread_group<T2, F>(world: usize, f: F) -> Vec<T2>
+where
+    T2: Send,
+    F: Fn(&ThreadComm) -> T2 + Sync,
+{
+    let comms = ThreadComm::group(world);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .iter()
+            .map(|c| {
+                let f = &f;
+                s.spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("thread worker panicked")).collect()
+    })
+}
+
+/// The full op sequence at one (world, len): every collective the trait
+/// offers, with rank-dependent staggered inputs. Returns the buffer
+/// after each op, in order — the value the backends must agree on.
+fn exercise<C: Collective + ?Sized>(c: &C, len: usize) -> Vec<Vec<f32>> {
+    let world = c.size();
+    let rank = c.rank();
+    let shards = shard_table(len, world);
+    let weights: Vec<f32> =
+        (0..world).map(|r| if r == 1 { 0.0 } else { 0.3 + r as f32 * 0.21 }).collect();
+    let mut outs = Vec::new();
+
+    c.try_barrier(T).unwrap();
+
+    let mut buf = staggered(rank, len, 1.0);
+    c.try_all_reduce_mean(&mut buf, T).unwrap();
+    outs.push(buf);
+
+    let mut buf = staggered(rank, len, 2.0);
+    c.try_reduce_scatter_mean(&mut buf, &shards, T).unwrap();
+    outs.push(buf);
+
+    let mut buf = staggered(rank, len, 3.0);
+    c.try_reduce_scatter_sum(&mut buf, &shards, T).unwrap();
+    outs.push(buf);
+
+    let mut buf = staggered(rank, len, 4.0);
+    c.try_reduce_scatter_weighted(&mut buf, &shards, &weights, T).unwrap();
+    outs.push(buf);
+
+    let mut buf = staggered(rank, len, 5.0);
+    c.try_reduce_scatter_mean_q8(&mut buf, &shards, T).unwrap();
+    outs.push(buf);
+
+    let mut buf = staggered(rank, len, 6.0);
+    c.try_all_gather(&mut buf, &shards, T).unwrap();
+    outs.push(buf);
+
+    let mut buf = staggered(rank, len, 7.0);
+    let root = world.min(2) - 1;
+    c.try_broadcast(&mut buf, root, T).unwrap();
+    outs.push(buf);
+
+    outs
+}
+
+#[test]
+fn all_ops_bitwise_identical_across_backends() {
+    // Lengths chosen for uneven shard remainders (len % world != 0),
+    // empty tail shards (len < world), and a quant-chunk remainder.
+    for world in [1usize, 2, 3] {
+        for len in [1usize, 5, QUANT_CHUNK + 7, 130] {
+            let thread = run_thread_group(world, |c| exercise(c, len));
+            let socket = run_socket_group(world, |c: &mut SocketComm| exercise(&*c, len));
+            for rank in 0..world {
+                for (i, (a, b)) in thread[rank].iter().zip(&socket[rank]).enumerate() {
+                    let bits_a: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                    let bits_b: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(
+                        bits_a, bits_b,
+                        "world={world} len={len} rank={rank} op#{i} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn driver_digest_matches_across_backends() {
+    // The acceptance property: a 2-process EDiT run over loopback
+    // sockets ends at the exact anchor of the in-process reference —
+    // for both wire payload lanes. params=257 gives uneven shards and
+    // a quant-chunk remainder.
+    for payload in [DriverPayload::F32, DriverPayload::Int8] {
+        let cfg = DriverConfig { params: 257, rounds: 3, payload, ..Default::default() };
+        let local = run_local_group(2, &cfg).unwrap();
+        let socket = run_socket_group(2, |c: &mut SocketComm| run_worker(&*c, &cfg).unwrap());
+        assert_eq!(socket[0].anchor, socket[1].anchor, "{payload:?}: ranks disagree");
+        assert_eq!(socket[0].digest, local[0].digest, "{payload:?}: backend digests differ");
+        assert_eq!(socket[0].anchor, local[0].anchor, "{payload:?}: backend anchors differ");
+    }
+}
+
+#[test]
+fn killed_worker_is_evicted_and_fault_path_is_backend_invariant() {
+    // Rank 2 completes one round, then dies — abruptly (severed TCP, no
+    // Goodbye) on the socket backend, via mark_failed in-process. The
+    // survivors must detect the death at the next all-gather, evict, and
+    // finish over the live pair with identical anchors on BOTH backends.
+    let full = DriverConfig { params: 101, rounds: 3, ..Default::default() };
+    let one = DriverConfig { rounds: 1, ..full.clone() };
+
+    let comms = ThreadComm::group(3);
+    let (c0, c1, c2) = (&comms[0], &comms[1], &comms[2]);
+    let (f, o) = (&full, &one);
+    let (t0, t1) = std::thread::scope(|s| {
+        let h0 = s.spawn(move || run_worker(c0, f).unwrap());
+        let h1 = s.spawn(move || run_worker(c1, f).unwrap());
+        let h2 = s.spawn(move || {
+            run_worker(c2, o).unwrap();
+            c2.mark_failed(2);
+        });
+        h2.join().unwrap();
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    assert_eq!(t0.evictions, vec![2]);
+    assert_eq!(t1.evictions, vec![2]);
+    assert_eq!(t0.anchor, t1.anchor);
+
+    let outs = run_socket_group(3, |c: &mut SocketComm| {
+        if c.rank() == 2 {
+            let out = run_worker(&*c, o).unwrap();
+            c.kill();
+            out
+        } else {
+            run_worker(&*c, f).unwrap()
+        }
+    });
+    assert_eq!(outs[0].evictions, vec![2]);
+    assert_eq!(outs[1].evictions, vec![2]);
+    assert_eq!(outs[0].anchor, outs[1].anchor);
+    assert_eq!(
+        outs[0].digest, t0.digest,
+        "crash-eviction numerics must not depend on the transport"
+    );
+}
+
+#[test]
+fn int8_payload_keeps_wire_ratio_on_real_frames() {
+    // The compression gate, measured on actual Contribute frames (op
+    // payload + header + shard table — not a theoretical count): the
+    // f32 lane must cost >= 3.5x the int8 lane's tx bytes.
+    let n = 4096usize;
+    let ratios = run_socket_group(2, |c: &mut SocketComm| {
+        let shards = shard_table(n, c.size());
+        let mut buf = staggered(c.rank(), n, 1.0);
+        let s0 = c.wire_stats();
+        c.try_reduce_scatter_mean(&mut buf, &shards, T).unwrap();
+        let s1 = c.wire_stats();
+        c.try_reduce_scatter_mean_q8(&mut buf, &shards, T).unwrap();
+        let s2 = c.wire_stats();
+        ((s1.tx_bytes - s0.tx_bytes) as f64, (s2.tx_bytes - s1.tx_bytes) as f64)
+    });
+    for (rank, &(f32_tx, q8_tx)) in ratios.iter().enumerate() {
+        let ratio = f32_tx / q8_tx;
+        assert!(
+            ratio >= 3.5,
+            "rank {rank}: f32 {f32_tx} B vs int8 {q8_tx} B = {ratio:.2}x < 3.5x"
+        );
+    }
+}
+
+#[test]
+fn worker_timeout_after_hub_death_is_clean() {
+    // A worker whose hub disappears mid-op must fail with a CommError,
+    // not hang or panic.
+    let hub = Rendezvous::bind(
+        "127.0.0.1:0",
+        RendezvousConfig { world: 2, ..Default::default() },
+    )
+    .unwrap();
+    let addr = hub.addr().to_string();
+    std::thread::scope(|s| {
+        let h: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let comm = SocketComm::connect(&addr, ConnectOpts::default()).unwrap();
+                    comm.try_barrier(T).unwrap();
+                    comm
+                })
+            })
+            .collect();
+        let comms: Vec<SocketComm> = h.into_iter().map(|h| h.join().unwrap()).collect();
+        hub.shutdown();
+        for comm in &comms {
+            let mut buf = vec![1.0f32; 8];
+            assert!(
+                comm.try_all_reduce_mean(&mut buf, Duration::from_secs(5)).is_err(),
+                "op against a dead hub must fail"
+            );
+        }
+    });
+}

@@ -1,19 +1,25 @@
 #!/usr/bin/env bash
 # One-command verification gate (also `make verify`):
 #   tier-1:  cargo build --release && cargo test -q
+#   docs:    RUSTDOCFLAGS=-D warnings cargo doc --no-deps (broken
+#            intra-doc links and bad doc syntax fail the gate)
 #   smoke:   fig5-trainer straggler cross-validation (real trainer)
 #   chaos:   seeded fault schedules, kill-at-midpoint + restore must
 #            replay bitwise (writes results/fault_recovery.csv)
+#   multiproc: scripts/smoke_multiproc.sh — rendezvous hub + 2 real
+#            worker processes over loopback TCP, final anchor digest
+#            diffed bitwise against the in-process ThreadComm reference
 #   hygiene: cargo fmt --check, cargo clippy -D warnings (skipped with a
 #            notice when the components are not installed — CI installs
 #            them explicitly so the skips never trigger there)
 #
 # Flags:
 #   --quick  build (incl. --examples, so example targets can't bit-rot)
-#            + test only (no straggler smoke, no fmt/clippy) — the fast
-#            CI leg and the pre-push sanity loop.
+#            + test + doc gate only (no smokes, no fmt/clippy) — the
+#            fast CI leg and the pre-push sanity loop.
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR=$(cd "$(dirname "$0")" && pwd)
+cd "$SCRIPT_DIR/../rust"
 
 QUICK=0
 for arg in "$@"; do
@@ -31,6 +37,12 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+# Rustdoc gate: the Collective trait contract, the wire-protocol frame
+# docs, and their intra-doc links are load-bearing documentation —
+# breaking them breaks the gate, in both CI legs.
+echo '== RUSTDOCFLAGS="-D warnings" cargo doc --no-deps =='
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 if [[ "$QUICK" == 1 ]]; then
     # Example targets are part of the quick gate so they can't bit-rot
@@ -66,6 +78,13 @@ echo "== straggler smoke (real trainer, async A-EDiT path) =="
 # the per-run rows land in results/fault_recovery.csv (a CI artifact).
 echo "== chaos smoke (fault injection + kill/restore bitwise replay) =="
 "$BIN" chaos --steps 32 --tau 4 --seeds 2 --pairs 2
+
+# Multi-process smoke: rendezvous hub + two real `edit-train worker`
+# processes over loopback TCP; their final anchor digests must be
+# bitwise identical to the in-process ThreadComm reference, on both
+# wire payload lanes (f32 and int8).
+echo "== multi-process smoke (socket backend, 2 workers over loopback) =="
+"$SCRIPT_DIR/smoke_multiproc.sh"
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
