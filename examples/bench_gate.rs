@@ -1,20 +1,29 @@
-//! CI perf gate: diff the machine-readable bench snapshot
-//! (`results/bench_summary.json`, written by `cargo bench --bench
-//! hotpath`) against the committed baseline (`BENCH_BASELINE.json` at
-//! the repo root) and exit non-zero on regression.
+//! CI perf gate: diff the machine-readable bench snapshots
+//! (`results/bench_summary.json` from `cargo bench --bench hotpath`,
+//! `results/bench_collectives.json` from `--bench collectives`) against
+//! the committed baseline (`BENCH_BASELINE.json` at the repo root) and
+//! exit non-zero on regression.
 //!
-//! The baseline is a list of gates, each a dotted path into the summary
+//! The baseline is a list of gates, each a dotted path into a summary
 //! plus a band:
 //!
 //!  * `exact` — the value must match exactly (schema version pins);
 //!  * `min` + optional `tolerance` — the value must be at least
-//!    `min * (1 - tolerance)`. Timing-derived gates carry wide
-//!    tolerances (shared CI runners); deterministic gates — the
-//!    bytes-on-wire reduction comes straight from the comm-plan byte
-//!    accounting — carry none.
+//!    `min * (1 - tolerance)`;
+//!  * `max` + optional `tolerance` — the value must be at most
+//!    `max * (1 + tolerance)`; a gate may carry both `min` and `max`
+//!    (a band — used for the measured-vs-analytic cross-validation
+//!    ratios, where drifting high is as wrong as drifting low).
 //!
-//! A gate whose path is missing from the summary **fails**: silently
-//! dropping a tracked metric is itself a regression.
+//! Timing-derived gates carry wide tolerances (shared CI runners);
+//! deterministic gates — the bytes-on-wire reduction comes straight
+//! from the comm-plan byte accounting — carry none.
+//!
+//! A gate reads from the default summary unless it names a `file`
+//! (path relative to the working directory, e.g.
+//! `results/bench_collectives.json`). A gate whose path is missing
+//! from its summary **fails**: silently dropping a tracked metric is
+//! itself a regression.
 //!
 //! Paths default to the CI layout (`cd rust && cargo run --release
 //! --example bench_gate`); override with `EDIT_BENCH_SUMMARY` /
@@ -22,6 +31,7 @@
 
 use anyhow::Context;
 use edit_train::util::json::Json;
+use std::collections::HashMap;
 
 fn main() -> anyhow::Result<()> {
     let summary_path = std::env::var("EDIT_BENCH_SUMMARY")
@@ -29,11 +39,6 @@ fn main() -> anyhow::Result<()> {
     let baseline_path = std::env::var("EDIT_BENCH_BASELINE")
         .unwrap_or_else(|_| "../BENCH_BASELINE.json".to_string());
 
-    let summary = Json::parse(
-        &std::fs::read_to_string(&summary_path)
-            .with_context(|| format!("reading {summary_path} (run the hotpath bench first)"))?,
-    )
-    .with_context(|| format!("parsing {summary_path}"))?;
     let baseline = Json::parse(
         &std::fs::read_to_string(&baseline_path)
             .with_context(|| format!("reading {baseline_path}"))?,
@@ -45,21 +50,40 @@ fn main() -> anyhow::Result<()> {
         .and_then(Json::as_arr)
         .context("baseline has no 'gates' array")?;
 
+    // Summaries are loaded lazily and cached: most gates read the
+    // hotpath summary, a few read the collectives one.
+    let mut cache: HashMap<String, Option<Json>> = HashMap::new();
     let mut failures = 0usize;
     for gate in gates {
         let path = gate
             .at(&["path"])
             .and_then(Json::as_str)
             .context("gate entry missing 'path'")?;
+        let file = gate
+            .at(&["file"])
+            .and_then(Json::as_str)
+            .unwrap_or(&summary_path)
+            .to_string();
+        let summary = cache.entry(file.clone()).or_insert_with(|| {
+            std::fs::read_to_string(&file)
+                .ok()
+                .and_then(|s| Json::parse(&s).ok())
+        });
+        let Some(summary) = summary else {
+            println!("FAIL {path}: cannot read/parse {file} (run the benches first)");
+            failures += 1;
+            continue;
+        };
         let keys: Vec<&str> = path.split('.').collect();
         let value = match summary.at(&keys).and_then(Json::as_f64) {
             Some(v) => v,
             None => {
-                println!("FAIL {path}: missing from {summary_path}");
+                println!("FAIL {path}: missing from {file}");
                 failures += 1;
                 continue;
             }
         };
+        let tol = gate.at(&["tolerance"]).and_then(Json::as_f64).unwrap_or(0.0);
         if let Some(exact) = gate.at(&["exact"]).and_then(Json::as_f64) {
             if value != exact {
                 println!("FAIL {path}: {value} != required {exact}");
@@ -67,18 +91,38 @@ fn main() -> anyhow::Result<()> {
             } else {
                 println!("ok   {path}: {value} (exact)");
             }
-        } else if let Some(min) = gate.at(&["min"]).and_then(Json::as_f64) {
-            let tol = gate.at(&["tolerance"]).and_then(Json::as_f64).unwrap_or(0.0);
+            continue;
+        }
+        let min = gate.at(&["min"]).and_then(Json::as_f64);
+        let max = gate.at(&["max"]).and_then(Json::as_f64);
+        if min.is_none() && max.is_none() {
+            println!("FAIL {path}: gate has none of 'exact', 'min', 'max'");
+            failures += 1;
+            continue;
+        }
+        let mut bad = false;
+        if let Some(min) = min {
             let floor = min * (1.0 - tol);
             if value < floor {
-                println!("FAIL {path}: {value:.4} < floor {floor:.4} (baseline {min}, tolerance {tol})");
-                failures += 1;
-            } else {
-                println!("ok   {path}: {value:.4} >= floor {floor:.4}");
+                println!(
+                    "FAIL {path}: {value:.4} < floor {floor:.4} (baseline {min}, tolerance {tol})"
+                );
+                bad = true;
             }
-        } else {
-            println!("FAIL {path}: gate has neither 'exact' nor 'min'");
+        }
+        if let Some(max) = max {
+            let ceil = max * (1.0 + tol);
+            if value > ceil {
+                println!(
+                    "FAIL {path}: {value:.4} > ceiling {ceil:.4} (baseline {max}, tolerance {tol})"
+                );
+                bad = true;
+            }
+        }
+        if bad {
             failures += 1;
+        } else {
+            println!("ok   {path}: {value:.4} within band");
         }
     }
 

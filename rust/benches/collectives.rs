@@ -1,12 +1,126 @@
 //! Collective-substrate micro benches: sequential reference vs the
 //! striped threaded rendezvous across sizes (the L3 hot-loop
-//! primitives). GB/s is the logical payload (n ranks × len × 4 bytes).
+//! primitives), plus the nonblocking issue/compute pipeline over a
+//! modeled link. GB/s is the logical payload (n ranks × len × 4 bytes).
+//!
+//! Writes `results/bench_collectives.json` with the pipelined-vs-
+//! blocking round medians; the CI bench gate diffs it alongside the
+//! hotpath summary (see `examples/bench_gate.rs`).
 
-use edit_train::bench::Bencher;
-use edit_train::collectives::{group, ThreadComm};
-use edit_train::tensor::ShardSpec;
+use edit_train::bench::{Bencher, Stats};
+use edit_train::collectives::{group, Collective, ThreadComm};
+use edit_train::tensor::{kernels, ShardSpec};
+use std::time::Duration;
+
+/// Blocking vs pipelined module sweep over a latency-shaped link: each
+/// of `modules` iterations pays one reduce-scatter plus one compute
+/// chunk. The blocking schedule runs them back to back; the pipelined
+/// one issues the collective through the nonblocking window and runs
+/// the compute chunk before waiting, so the modeled 500 µs wire latency
+/// hides behind it.
+fn pipelined_benches(b: &mut Bencher) -> (Stats, Stats, Stats) {
+    let n = 2usize;
+    let modules = 6usize;
+    let len = 1usize << 14;
+    let link = Duration::from_micros(500);
+    let timeout = Duration::from_secs(10);
+    let bytes = (n * modules * len * 4) as u64;
+    let spec = ShardSpec::new(len, n);
+    let shards: Vec<_> = (0..n).map(|r| spec.range(r)).collect();
+    // Compute chunk comparable to the link latency (memory-bound sweep).
+    let x: Vec<f32> = (0..(1usize << 17)).map(|i| (i % 13) as f32).collect();
+
+    let blocking = b.bench_gbs(
+        &format!("pipelined rs blocking  n={n} m={modules} (500µs link)"),
+        bytes,
+        || {
+            let comms = ThreadComm::group_with_link_delay(n, link);
+            std::thread::scope(|s| {
+                for c in comms {
+                    let (sh, xs) = (&shards, &x);
+                    s.spawn(move || {
+                        let mut acc = 0.0f64;
+                        for _ in 0..modules {
+                            let mut buf = vec![c.rank() as f32; len];
+                            c.try_reduce_scatter_mean(&mut buf, sh, timeout).unwrap();
+                            acc += kernels::sq_norm(xs);
+                        }
+                        std::hint::black_box(acc);
+                    });
+                }
+            });
+        },
+    );
+    let run_overlapped = |b: &mut Bencher, name: String, q8: bool| {
+        b.bench_gbs(&name, bytes, || {
+            let comms = ThreadComm::group_with_link_delay(n, link);
+            std::thread::scope(|s| {
+                for c in comms {
+                    let (sh, xs) = (&shards, &x);
+                    s.spawn(move || {
+                        let mut acc = 0.0f64;
+                        let mut pending = None;
+                        for _ in 0..modules {
+                            let buf = vec![c.rank() as f32; len];
+                            let h = if q8 {
+                                c.start_reduce_scatter_mean_q8(buf, sh, timeout)
+                            } else {
+                                c.start_reduce_scatter_mean(buf, sh, timeout)
+                            };
+                            acc += kernels::sq_norm(xs);
+                            if let Some(p) = pending.take() {
+                                std::hint::black_box(c.wait_handle(p).unwrap());
+                            }
+                            pending = Some(h);
+                        }
+                        if let Some(p) = pending.take() {
+                            std::hint::black_box(c.wait_handle(p).unwrap());
+                        }
+                        std::hint::black_box(acc);
+                    });
+                }
+            });
+        })
+    };
+    let overlapped = run_overlapped(
+        b,
+        format!("pipelined rs overlapped n={n} m={modules} (500µs link)"),
+        false,
+    );
+    let overlapped_q8 = run_overlapped(
+        b,
+        format!("pipelined rs overlapped q8 n={n} m={modules} (500µs link)"),
+        true,
+    );
+    println!(
+        "pipelined round speedup (overlapped vs blocking): {:.2}x",
+        blocking.median / overlapped.median
+    );
+    (blocking, overlapped, overlapped_q8)
+}
+
+fn write_summary_json(blocking: &Stats, overlapped: &Stats, q8: &Stats) -> anyhow::Result<()> {
+    use edit_train::util::json::{Json, Obj};
+    let mut p = Obj::new();
+    p.insert("blocking_median_s", blocking.median);
+    p.insert("overlapped_median_s", overlapped.median);
+    p.insert("overlapped_q8_median_s", q8.median);
+    p.insert("speedup", blocking.median / overlapped.median);
+    let mut root = Obj::new();
+    root.insert("schema", 1i64);
+    root.insert("bench", "collectives");
+    root.insert("fast_mode", std::env::var("EDIT_BENCH_FAST").is_ok());
+    root.insert("pipelined_reduce_scatter", p);
+    std::fs::write(
+        "results/bench_collectives.json",
+        Json::Obj(root).to_string_pretty(),
+    )?;
+    println!("summary -> results/bench_collectives.json");
+    Ok(())
+}
 
 fn main() {
+    std::fs::create_dir_all("results").ok();
     let mut b = Bencher::new();
     println!("== collectives ==");
     for &len in &[1usize << 10, 1 << 14, 1 << 18] {
@@ -79,5 +193,7 @@ fn main() {
             });
         });
     }
+    let (blocking, overlapped, q8) = pipelined_benches(&mut b);
     b.write_csv("results/bench_collectives.csv").unwrap();
+    write_summary_json(&blocking, &overlapped, &q8).unwrap();
 }

@@ -1,15 +1,19 @@
 //! Hot-path micro benches — the numbers the §Perf pass tracks.
 //!
-//! Four sections, from kernel to full round:
+//! Six sections, from kernel to full round:
 //!  1. fused kernel GB/s vs the naive reference ops (always runs);
 //!  2. one full EDiT sync round over a synthetic 1M-param module table:
 //!     the fused `SyncScratch` pipeline vs the historical
 //!     collect-then-scatter reference shape (always runs; this is the
 //!     acceptance-criteria "edit outer round" speedup);
-//!  3. the engine step path over built artifacts (PJRT with
+//!  3. pure-Rust penalty combine at module shape (always runs);
+//!  4. the engine step path over built artifacts (PJRT with
 //!     `--features pjrt`, the deterministic stub otherwise; skips
 //!     without `make artifacts`);
-//!  4. full `Trainer::run_round` EDiT rounds on the synthetic stub
+//!  5. blocking vs overlapped layer-wise driver rounds over a modeled
+//!     1 ms link — the measured exposed-sync fraction, cross-validated
+//!     against `StepModel::layerwise_exposed_ops` (always runs);
+//!  6. full `Trainer::run_round` EDiT rounds on the synthetic stub
 //!     engine (default build only — no artifacts needed).
 
 use edit_train::bench::Bencher;
@@ -213,6 +217,165 @@ fn engine_benches(b: &mut Bencher) {
     });
 }
 
+/// Pure-Rust penalty combine at module shape — always runs (the HLO
+/// variant in `engine_benches` needs built artifacts), so the penalty
+/// row lands in the gated summary on every CI run.
+fn penalty_benches(b: &mut Bencher) {
+    use edit_train::coordinator::penalty;
+
+    println!("-- penalty combine (pure rust, module shape) --");
+    let p = 1usize << 17;
+    let w = 4usize;
+    let deltas: Vec<Vec<f32>> = (0..w)
+        .map(|j| (0..p).map(|i| ((i * (j + 2)) % 191) as f32 / 191.0 - 0.5).collect())
+        .collect();
+    let refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+    let norms: Vec<f64> = deltas.iter().map(|d| tensor::norm(d)).collect();
+    let cfg = PenaltyConfig::default();
+    // Traffic: read every replica row once, write the combined module.
+    let bytes = ((w + 1) * p * 4) as u64;
+    b.bench_gbs(&format!("penalty combine pure rust (w={w}, p={p})"), bytes, || {
+        std::hint::black_box(penalty::combine(&refs, &norms, &cfg));
+    });
+}
+
+/// Run a `world`-rank driver group on OS threads over a latency-shaped
+/// in-process link (`ThreadComm::group_with_link_delay`): every data
+/// collective sleeps `link` before completing, so the blocking schedule
+/// pays it inline while the overlapped schedule hides it behind the
+/// next module's inner steps.
+fn run_driver_group(
+    world: usize,
+    link: std::time::Duration,
+    cfg: &edit_train::collectives::driver::DriverConfig,
+) -> Vec<edit_train::collectives::driver::DriverOutcome> {
+    use edit_train::collectives::driver::run_worker;
+    use edit_train::collectives::ThreadComm;
+
+    let comms = ThreadComm::group_with_link_delay(world, link);
+    let mut out = Vec::with_capacity(world);
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            comms.iter().map(|c| s.spawn(move || run_worker(c, cfg))).collect();
+        for h in handles {
+            out.push(
+                h.join()
+                    .expect("driver bench worker panicked")
+                    .expect("driver bench round failed"),
+            );
+        }
+    });
+    out
+}
+
+/// Aggregate exposed-sync fraction across ranks: total time blocked in
+/// collective calls over total wall clock.
+fn exposed_fraction(outs: &[edit_train::collectives::driver::DriverOutcome]) -> f64 {
+    let wait: f64 = outs.iter().map(|o| o.sync_wait.as_secs_f64()).sum();
+    let elapsed: f64 = outs.iter().map(|o| o.elapsed.as_secs_f64()).sum();
+    wait / elapsed.max(f64::MIN_POSITIVE)
+}
+
+/// Blocking vs overlapped layer-wise EDiT rounds end to end, on the
+/// multi-module driver over a 1 ms modeled link. Three runs of the
+/// identical workload: world=1 (collectives are local no-ops — isolates
+/// the compute term), world=2 blocking, world=2 overlapped. The
+/// digests of the blocking and overlapped runs must match bitwise; the
+/// wall-clock gap is the measured overlap win, and the measured
+/// exposed-sync fraction is cross-validated against the same
+/// `StepModel::layerwise_exposed_ops` pipeline-stall model the trainer's
+/// `CommPlan` prices (`exposed_sync_fraction.model_agreement`).
+fn driver_overlap_benches(b: &mut Bencher) -> edit_train::util::json::Obj {
+    use edit_train::collectives::driver::{DriverConfig, DriverPayload};
+    use edit_train::collectives::{CostModel, Topology};
+    use edit_train::coordinator::MeshSpec;
+    use edit_train::simulator::stepmodel::StepModel;
+    use edit_train::tensor::ShardSpec;
+    use edit_train::util::json::Obj;
+    use std::time::Duration;
+
+    println!("-- layer-wise driver rounds: blocking vs overlapped (1ms modeled link) --");
+    let world = 2usize;
+    let link = Duration::from_millis(1);
+    let cfg = DriverConfig {
+        params: 1 << 18,
+        rounds: 4,
+        inner_steps: 12,
+        modules: 4,
+        payload: DriverPayload::F32,
+        overlap: false,
+        ..Default::default()
+    };
+    let rounds = cfg.rounds as f64;
+
+    let (solo, _) = b.once("driver rounds x4 modules, world=1 (compute only)", || {
+        run_driver_group(1, Duration::ZERO, &cfg)
+    });
+    let compute_round = solo[0].elapsed.as_secs_f64() / rounds;
+
+    let (blocking, _) = b.once("driver rounds x4 modules blocking (2 ranks, 1ms link)", || {
+        run_driver_group(world, link, &cfg)
+    });
+    let over_cfg = DriverConfig { overlap: true, ..cfg.clone() };
+    let (overlapped, _) =
+        b.once("driver rounds x4 modules overlapped (2 ranks, 1ms link)", || {
+            run_driver_group(world, link, &over_cfg)
+        });
+
+    // The whole point: the overlapped schedule is a reordering, not a
+    // different computation.
+    assert_eq!(
+        blocking[0].digest, overlapped[0].digest,
+        "overlapped driver schedule diverged from blocking"
+    );
+    for o in blocking.iter().chain(&overlapped) {
+        assert_eq!(o.digest, blocking[0].digest, "ranks disagree");
+    }
+
+    let round_max = |outs: &[edit_train::collectives::driver::DriverOutcome]| {
+        outs.iter().map(|o| o.elapsed.as_secs_f64()).fold(0.0f64, f64::max) / rounds
+    };
+    let (blk_s, ovl_s) = (round_max(&blocking), round_max(&overlapped));
+    let (blk_frac, ovl_frac) = (exposed_fraction(&blocking), exposed_fraction(&overlapped));
+
+    // Analytic mirror of the bench link: pure latency (sleep `link` per
+    // data op, bytes effectively free), one shard lane per rank, the
+    // measured world=1 round as the hideable compute term.
+    let mspec = ShardSpec::new(cfg.params, cfg.modules);
+    let module_bytes: Vec<usize> =
+        (0..cfg.modules).map(|m| mspec.range(m).1 * 4).collect();
+    let model = StepModel {
+        mesh: MeshSpec::new(1, world),
+        cost: CostModel::new(Topology::flat(
+            1e15,
+            link.as_secs_f64() / (world as f64 - 1.0),
+        )),
+        param_bytes: cfg.params * 4,
+        compute: compute_round,
+        cpu_offload: false,
+    };
+    let analytic_exposed = model.layerwise_exposed_ops(&module_bytes, true);
+    let analytic_frac = analytic_exposed / (analytic_exposed + compute_round);
+    let speedup = blk_s / ovl_s.max(f64::MIN_POSITIVE);
+    let agreement = ovl_frac / analytic_frac.max(f64::MIN_POSITIVE);
+    println!(
+        "exposed sync fraction: blocking {blk_frac:.3}, overlapped {ovl_frac:.3}, \
+         analytic {analytic_frac:.3} (agreement {agreement:.2}); round speedup {speedup:.2}x"
+    );
+
+    let mut o = Obj::new();
+    o.insert("blocking", blk_frac);
+    o.insert("overlapped", ovl_frac);
+    o.insert("hidden_fraction", 1.0 - ovl_frac / blk_frac.max(f64::MIN_POSITIVE));
+    o.insert("analytic_exposed_fraction", analytic_frac);
+    o.insert("model_agreement", agreement);
+    o.insert("overlap_speedup", speedup);
+    o.insert("blocking_round_s", blk_s);
+    o.insert("overlapped_round_s", ovl_s);
+    o.insert("compute_round_s", compute_round);
+    o
+}
+
 /// Full EDiT rounds (τ inner steps × replicas + fused sync) through the
 /// Trainer on the synthetic stub engine — no artifacts required.
 #[cfg(not(feature = "pjrt"))]
@@ -324,14 +487,21 @@ fn write_summary_json(
     fused_s: f64,
     naive_s: f64,
     wire: Option<(f64, f64)>,
+    overlap: edit_train::util::json::Obj,
 ) -> anyhow::Result<()> {
     use edit_train::util::json::{Json, Obj};
     let mut kernels = Obj::new();
     let mut rounds = Obj::new();
+    let mut penalty = Obj::new();
     for s in b.results() {
         if s.name.starts_with("kernel ") {
             if let Some(gbs) = s.gb_per_s() {
                 kernels.insert(s.name.clone(), gbs);
+            }
+        }
+        if s.name.starts_with("penalty ") {
+            if let Some(gbs) = s.gb_per_s() {
+                penalty.insert(s.name.clone(), gbs);
             }
         }
         if s.name.starts_with("edit round e2e") {
@@ -347,8 +517,10 @@ fn write_summary_json(
     root.insert("bench", "hotpath");
     root.insert("fast_mode", std::env::var("EDIT_BENCH_FAST").is_ok());
     root.insert("kernel_gb_per_s", kernels);
+    root.insert("penalty_gb_per_s", penalty);
     root.insert("edit_outer_round", outer);
     root.insert("e2e_round_seconds", rounds);
+    root.insert("exposed_sync_fraction", overlap);
     if let Some((f32_b, int8_b)) = wire {
         let mut w = Obj::new();
         w.insert("f32_bytes_per_round", f32_b);
@@ -367,10 +539,12 @@ fn main() {
     println!("== hotpath ==");
     kernel_benches(&mut b);
     let (fused_s, naive_s) = sync_round_benches(&mut b);
+    penalty_benches(&mut b);
     engine_benches(&mut b);
+    let overlap = driver_overlap_benches(&mut b);
     #[cfg(not(feature = "pjrt"))]
     trainer_round_benches(&mut b);
     let wire = sync_bytes_benches();
     b.write_csv("results/bench_hotpath.csv").unwrap();
-    write_summary_json(&b, fused_s, naive_s, wire).unwrap();
+    write_summary_json(&b, fused_s, naive_s, wire, overlap).unwrap();
 }

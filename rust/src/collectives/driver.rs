@@ -27,9 +27,9 @@
 //!    survivors, restoring full coverage.
 
 use std::collections::BTreeSet;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::collectives::{Collective, CommError, CommResult, RetryPolicy, ThreadComm};
+use crate::collectives::{Collective, CommError, CommHandle, CommResult, RetryPolicy, ThreadComm};
 use crate::coordinator::outer::{OuterOpt, OuterOptKind};
 use crate::tensor::{kernels, ShardSpec};
 use crate::util::prng::{mix, Rng};
@@ -74,6 +74,14 @@ pub struct DriverConfig {
     pub payload: DriverPayload,
     /// Per-collective retry/backoff policy.
     pub retry: RetryPolicy,
+    /// Contiguous module count the parameter vector is split into; the
+    /// round syncs module-by-module (EDiT's layer-wise shape). `1`
+    /// reproduces the pre-module digests exactly.
+    pub modules: usize,
+    /// Issue module `m`'s collectives nonblocking and overlap them with
+    /// module `m+1`'s inner compute. Bitwise identical to the blocking
+    /// schedule at equal `modules`.
+    pub overlap: bool,
 }
 
 impl Default for DriverConfig {
@@ -92,6 +100,8 @@ impl Default for DriverConfig {
                 base_backoff: Duration::from_millis(20),
                 timeout: Duration::from_secs(5),
             },
+            modules: 1,
+            overlap: false,
         }
     }
 }
@@ -108,6 +118,13 @@ pub struct DriverOutcome {
     pub rounds_done: usize,
     /// Ranks this worker observed dying, in detection order.
     pub evictions: Vec<usize>,
+    /// Wall clock over all rounds (barrier to final gather).
+    pub elapsed: Duration,
+    /// Portion of `elapsed` spent blocked inside collective calls —
+    /// issue backpressure, waits, and retries. `sync_wait / elapsed` is
+    /// the measured exposed-sync fraction the bench gate compares to
+    /// `StepModel::layerwise_exposed`.
+    pub sync_wait: Duration,
 }
 
 /// FNV-1a over the IEEE-754 bit patterns: any single-bit anchor
@@ -142,13 +159,115 @@ fn init_anchor(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
 }
 
-/// The rank's deterministic pseudo-gradient for one inner step.
-fn grad_into(g: &mut [f32], seed: u64, rank: usize, round: usize, step: usize) {
-    let stream =
-        ((round as u64) << 40) ^ ((step as u64) << 20) ^ (rank as u64) ^ 0x6772_6164_0000_0000;
+/// The rank's deterministic pseudo-gradient for one inner step of one
+/// module. The module term is zero for `m = 0`, so a single-module run
+/// draws exactly the historical stream.
+fn grad_into(g: &mut [f32], seed: u64, rank: usize, round: usize, step: usize, module: usize) {
+    let stream = ((round as u64) << 40)
+        ^ ((step as u64) << 20)
+        ^ ((module as u64) << 12)
+        ^ (rank as u64)
+        ^ 0x6772_6164_0000_0000;
     let mut rng = Rng::new(mix(seed, stream));
     for x in g.iter_mut() {
         *x = rng.normal_f32() * 0.1;
+    }
+}
+
+/// Mutable per-worker round state threaded through the module schedule.
+struct RoundState {
+    rank: usize,
+    anchor: Vec<f32>,
+    theta: Vec<f32>,
+    delta: Vec<f32>,
+    grad: Vec<f32>,
+    outer: OuterOpt,
+    dead: BTreeSet<usize>,
+    evictions: Vec<usize>,
+    sync_wait: Duration,
+}
+
+impl RoundState {
+    /// τ local SGD steps on module `m`'s slice, then the pseudo-gradient
+    /// Δ_m = θ_{t,τ} − θ_t for that slice.
+    fn compute_module(&mut self, cfg: &DriverConfig, round: usize, (moff, mlen): (usize, usize), m: usize) {
+        let grad = &mut self.grad[moff..moff + mlen];
+        let theta = &mut self.theta[moff..moff + mlen];
+        for step in 0..cfg.inner_steps {
+            grad_into(grad, cfg.seed, self.rank, round, step, m);
+            kernels::axpy(theta, -cfg.inner_lr, grad);
+        }
+        for i in moff..moff + mlen {
+            self.delta[i] = self.theta[i] - self.anchor[i];
+        }
+    }
+
+    /// Outer update on the owned shard of module `m` (ZeRO-1 style).
+    /// `folded` is the module-local delta slice whose own-shard region
+    /// holds the live-group mean.
+    fn outer_update(&mut self, moff: usize, folded: &[f32], shards_m: &[(usize, usize)]) {
+        let (loff, llen) = shards_m[self.rank];
+        self.outer.apply_range_scaled(
+            &mut self.anchor,
+            &folded[loff..loff + llen],
+            moff + loff,
+            1.0,
+        );
+    }
+
+    /// Same update reading the fold result in place from `self.delta`
+    /// (the blocking schedule's zero-copy path).
+    fn outer_update_in_place(&mut self, moff: usize, shards_m: &[(usize, usize)]) {
+        let (loff, llen) = shards_m[self.rank];
+        let at = moff + loff;
+        self.outer.apply_range_scaled(&mut self.anchor, &self.delta[at..at + llen], at, 1.0);
+    }
+
+    /// Evict `victim` (first detection records it) and drop its shard
+    /// from this module's table so the retry skips its region.
+    fn evict(&mut self, victim: usize, shards_m: &mut [(usize, usize)]) {
+        if self.dead.insert(victim) {
+            self.evictions.push(victim);
+        }
+        shards_m[victim] = (0, 0);
+    }
+
+    /// All-gather module `m`'s anchor slice — the membership detection
+    /// point: a dead owner fails `PeerFailed`, the survivors evict it
+    /// and retry with its shard zeroed (its region keeps the pre-round
+    /// anchor on every survivor — consistent by identity).
+    fn gather_module<C: Collective + ?Sized>(
+        &mut self,
+        comm: &C,
+        cfg: &DriverConfig,
+        (moff, mlen): (usize, usize),
+        shards_m: &mut [(usize, usize)],
+    ) -> CommResult<()> {
+        let t0 = Instant::now();
+        let r = loop {
+            let slice = &mut self.anchor[moff..moff + mlen];
+            match cfg.retry.run(|t| comm.try_all_gather(slice, shards_m, t)) {
+                Ok(()) => break Ok(()),
+                Err(CommError::PeerFailed { rank: victim }) => self.evict(victim, shards_m),
+                Err(e) => break Err(e),
+            }
+        };
+        self.sync_wait += t0.elapsed();
+        r
+    }
+}
+
+/// Issue module `m`'s pseudo-gradient reduce-scatter nonblocking.
+fn issue_rs<C: Collective + ?Sized>(
+    comm: &C,
+    cfg: &DriverConfig,
+    delta_m: &[f32],
+    shards_m: &[(usize, usize)],
+) -> CommHandle {
+    let t = cfg.retry.timeout;
+    match cfg.payload {
+        DriverPayload::F32 => comm.start_reduce_scatter_mean(delta_m.to_vec(), shards_m, t),
+        DriverPayload::Int8 => comm.start_reduce_scatter_mean_q8(delta_m.to_vec(), shards_m, t),
     }
 }
 
@@ -162,62 +281,166 @@ pub fn run_worker<C: Collective + ?Sized>(
     let world = comm.size();
     let rank = comm.rank();
     let n = cfg.params;
-    let mut dead: BTreeSet<usize> = BTreeSet::new();
-    let mut evictions: Vec<usize> = Vec::new();
-    let mut anchor = init_anchor(n, cfg.seed);
-    let mut theta = anchor.clone();
-    let mut delta = vec![0.0f32; n];
-    let mut grad = vec![0.0f32; n];
-    let mut outer = OuterOpt::new(cfg.outer, n);
+    let modules = cfg.modules.max(1);
+    let mspec = ShardSpec::new(n, modules);
+    let mut st = RoundState {
+        rank,
+        anchor: init_anchor(n, cfg.seed),
+        theta: Vec::new(),
+        delta: vec![0.0f32; n],
+        grad: vec![0.0f32; n],
+        outer: OuterOpt::new(cfg.outer, n),
+        dead: BTreeSet::new(),
+        evictions: Vec::new(),
+        sync_wait: Duration::ZERO,
+    };
+    st.theta = st.anchor.clone();
+    let started = Instant::now();
 
     for round in 0..cfg.rounds {
-        let mut shards = build_shards(n, world, &dead);
+        // Per-module shard tables (module-local offsets). All ranks
+        // derive them from the same dead-set, so they agree.
+        let mut shards: Vec<Vec<(usize, usize)>> =
+            (0..modules).map(|m| build_shards(mspec.range(m).1, world, &st.dead)).collect();
         cfg.retry.run(|t| comm.try_barrier(t))?;
 
-        // Inner loop: τ local SGD steps on deterministic gradients.
-        for step in 0..cfg.inner_steps {
-            grad_into(&mut grad, cfg.seed, rank, round, step);
-            kernels::axpy(&mut theta, -cfg.inner_lr, &grad);
-        }
-        // Pseudo-gradient Δ = θ_{t,τ} − θ_t (inner progress).
-        for i in 0..n {
-            delta[i] = theta[i] - anchor[i];
-        }
+        if cfg.overlap {
+            overlapped_round(comm, cfg, &mut st, &mspec, &mut shards, round)?;
+        } else {
+            for m in 0..modules {
+                let (moff, mlen) = mspec.range(m);
+                st.compute_module(cfg, round, (moff, mlen), m);
 
-        // Reduce-scatter the pseudo-gradients: own region ends with the
-        // live-group mean. A rank dying here degrades silently.
-        cfg.retry.run(|t| match cfg.payload {
-            DriverPayload::F32 => comm.try_reduce_scatter_mean(&mut delta, &shards, t),
-            DriverPayload::Int8 => comm.try_reduce_scatter_mean_q8(&mut delta, &shards, t),
-        })?;
-
-        // Outer update on the owned shard only (ZeRO-1 style).
-        let (off, len) = shards[rank];
-        outer.apply_range_scaled(&mut anchor, &delta[off..off + len], off, 1.0);
-
-        // All-gather the updated anchor — the membership detection
-        // point: a dead owner fails PeerFailed, the survivors evict it
-        // and retry with its shard zeroed (its region keeps the
-        // pre-round anchor on every survivor — consistent by identity).
-        loop {
-            match cfg.retry.run(|t| comm.try_all_gather(&mut anchor, &shards, t)) {
-                Ok(()) => break,
-                Err(CommError::PeerFailed { rank: victim }) => {
-                    if dead.insert(victim) {
-                        evictions.push(victim);
+                // Reduce-scatter module m's pseudo-gradients: own region
+                // ends with the live-group mean. A rank dying here
+                // degrades silently.
+                let t0 = Instant::now();
+                cfg.retry.run(|t| {
+                    let slice = &mut st.delta[moff..moff + mlen];
+                    match cfg.payload {
+                        DriverPayload::F32 => comm.try_reduce_scatter_mean(slice, &shards[m], t),
+                        DriverPayload::Int8 => {
+                            comm.try_reduce_scatter_mean_q8(slice, &shards[m], t)
+                        }
                     }
-                    shards[victim] = (0, 0);
-                }
-                Err(e) => return Err(e),
+                })?;
+                st.sync_wait += t0.elapsed();
+
+                st.outer_update_in_place(moff, &shards[m]);
+                st.gather_module(comm, cfg, (moff, mlen), &mut shards[m])?;
             }
         }
 
         // Inner restart from the synchronized anchor.
-        theta.copy_from_slice(&anchor);
+        st.theta.copy_from_slice(&st.anchor);
     }
 
-    let digest = anchor_digest(&anchor);
-    Ok(DriverOutcome { anchor, digest, rounds_done: cfg.rounds, evictions })
+    let digest = anchor_digest(&st.anchor);
+    Ok(DriverOutcome {
+        anchor: st.anchor,
+        digest,
+        rounds_done: cfg.rounds,
+        evictions: st.evictions,
+        elapsed: started.elapsed(),
+        sync_wait: st.sync_wait,
+    })
+}
+
+/// The overlapped module schedule: issue module `m`'s reduce-scatter,
+/// compute module `m+1` while it folds, and wait only at each
+/// dependency point. At most three ops are in flight (`rs_{m}`,
+/// `ag_{m-1}`, `ag_{m-2}`), inside the backends' `PIPELINE_WINDOW`.
+/// Fold order and membership semantics match the blocking schedule, so
+/// the result is bitwise identical.
+fn overlapped_round<C: Collective + ?Sized>(
+    comm: &C,
+    cfg: &DriverConfig,
+    st: &mut RoundState,
+    mspec: &ShardSpec,
+    shards: &mut [Vec<(usize, usize)>],
+    round: usize,
+) -> CommResult<()> {
+    let modules = shards.len();
+    let mut rs_h: Vec<Option<CommHandle>> = (0..modules).map(|_| None).collect();
+    let mut ag_h: Vec<Option<CommHandle>> = (0..modules).map(|_| None).collect();
+
+    // Wait for module m's reduce-scatter, apply the outer update on the
+    // owned shard, and immediately issue module m's all-gather.
+    fn fold_and_gather<C: Collective + ?Sized>(
+        comm: &C,
+        cfg: &DriverConfig,
+        st: &mut RoundState,
+        mspec: &ShardSpec,
+        shards: &[Vec<(usize, usize)>],
+        m: usize,
+        rs: CommHandle,
+    ) -> CommResult<CommHandle> {
+        let (moff, mlen) = mspec.range(m);
+        let t0 = Instant::now();
+        let folded = comm.wait_handle(rs)?;
+        st.sync_wait += t0.elapsed();
+        st.outer_update(moff, &folded, &shards[m]);
+        Ok(comm.start_all_gather(
+            st.anchor[moff..moff + mlen].to_vec(),
+            &shards[m],
+            cfg.retry.timeout,
+        ))
+    }
+
+    // Complete module m's all-gather; on PeerFailed fall back to the
+    // blocking evict/zero-shard/retry loop (the anchor slice is still
+    // intact — the gather operated on a copy).
+    fn finish_gather<C: Collective + ?Sized>(
+        comm: &C,
+        cfg: &DriverConfig,
+        st: &mut RoundState,
+        mspec: &ShardSpec,
+        shards_m: &mut [(usize, usize)],
+        m: usize,
+        ag: CommHandle,
+    ) -> CommResult<()> {
+        let (moff, mlen) = mspec.range(m);
+        let t0 = Instant::now();
+        match comm.wait_handle(ag) {
+            Ok(buf) => {
+                st.anchor[moff..moff + mlen].copy_from_slice(&buf);
+                st.sync_wait += t0.elapsed();
+                Ok(())
+            }
+            Err(CommError::PeerFailed { rank: victim }) => {
+                st.sync_wait += t0.elapsed();
+                st.evict(victim, shards_m);
+                st.gather_module(comm, cfg, (moff, mlen), shards_m)
+            }
+            Err(e) => {
+                st.sync_wait += t0.elapsed();
+                Err(e)
+            }
+        }
+    }
+
+    for m in 0..modules {
+        st.compute_module(cfg, round, mspec.range(m), m);
+        let (moff, mlen) = mspec.range(m);
+        rs_h[m] = Some(issue_rs(comm, cfg, &st.delta[moff..moff + mlen], &shards[m]));
+        if m >= 1 {
+            let rs = rs_h[m - 1].take().expect("rs handle issued last iteration");
+            ag_h[m - 1] = Some(fold_and_gather(comm, cfg, st, mspec, shards, m - 1, rs)?);
+        }
+        if m >= 2 {
+            let ag = ag_h[m - 2].take().expect("ag handle issued last iteration");
+            finish_gather(comm, cfg, st, mspec, &mut shards[m - 2], m - 2, ag)?;
+        }
+    }
+    // Drain the tail: rs_{M-1} → ag_{M-1}, then the last two gathers.
+    let rs = rs_h[modules - 1].take().expect("tail rs handle");
+    ag_h[modules - 1] = Some(fold_and_gather(comm, cfg, st, mspec, shards, modules - 1, rs)?);
+    for m in modules.saturating_sub(2)..modules {
+        if let Some(ag) = ag_h[m].take() {
+            finish_gather(comm, cfg, st, mspec, &mut shards[m], m, ag)?;
+        }
+    }
+    Ok(())
 }
 
 /// Run a `world`-rank group on OS threads over a shared [`ThreadComm`]
@@ -273,11 +496,75 @@ mod tests {
     }
 
     #[test]
+    fn overlapped_schedule_is_bitwise_identical() {
+        for payload in [DriverPayload::F32, DriverPayload::Int8] {
+            for modules in [1usize, 3, 4] {
+                let blocking =
+                    DriverConfig { params: 257, modules, payload, ..Default::default() };
+                let overlapped = DriverConfig { overlap: true, ..blocking.clone() };
+                for world in [1usize, 2, 3] {
+                    let a = run_local_group(world, &blocking).unwrap();
+                    let b = run_local_group(world, &overlapped).unwrap();
+                    assert_eq!(
+                        a[0].digest, b[0].digest,
+                        "overlap changed the result: world={world} modules={modules} payload={payload:?}"
+                    );
+                    assert_eq!(a[0].anchor, b[0].anchor);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_module_layout_preserves_legacy_stream() {
+        // modules=1 must draw the historical gradient stream: splitting
+        // into modules only changes results when modules > 1.
+        let legacy = DriverConfig { params: 300, ..Default::default() };
+        let single = DriverConfig { modules: 1, ..legacy.clone() };
+        let multi = DriverConfig { modules: 4, ..legacy.clone() };
+        let a = run_local_group(2, &legacy).unwrap();
+        let b = run_local_group(2, &single).unwrap();
+        let c = run_local_group(2, &multi).unwrap();
+        assert_eq!(a[0].digest, b[0].digest);
+        assert_ne!(a[0].digest, c[0].digest, "module split must be observable");
+    }
+
+    #[test]
     fn dead_rank_is_evicted_and_survivors_agree() {
         // Rank 2 never shows up; a monitor marks it failed while the
         // survivors block on the first barrier — the driver must evict
         // at the all-gather and finish over the live pair.
         let cfg = DriverConfig { params: 101, rounds: 3, ..Default::default() };
+        let comms = ThreadComm::group(3);
+        let (c0, c1, c2) = (&comms[0], &comms[1], &comms[2]);
+        let cfg = &cfg;
+        let (a, b) = std::thread::scope(|s| {
+            let h0 = s.spawn(move || run_worker(c0, cfg));
+            let h1 = s.spawn(move || run_worker(c1, cfg));
+            let m = s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                c2.mark_failed(2);
+            });
+            m.join().unwrap();
+            (h0.join().unwrap().unwrap(), h1.join().unwrap().unwrap())
+        });
+        assert_eq!(a.anchor, b.anchor);
+        assert_eq!(a.evictions, vec![2]);
+        assert_eq!(b.evictions, vec![2]);
+    }
+
+    #[test]
+    fn dead_rank_is_evicted_under_overlap() {
+        // Same scenario with in-flight handles: the PeerFailed surfaces
+        // at a gather wait and the fallback evict/retry loop must leave
+        // the survivors in agreement.
+        let cfg = DriverConfig {
+            params: 101,
+            rounds: 3,
+            modules: 4,
+            overlap: true,
+            ..Default::default()
+        };
         let comms = ThreadComm::group(3);
         let (c0, c1, c2) = (&comms[0], &comms[1], &comms[2]);
         let cfg = &cfg;

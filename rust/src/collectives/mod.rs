@@ -158,6 +158,62 @@ impl std::error::Error for CommError {}
 
 pub type CommResult<T> = Result<T, CommError>;
 
+/// Upper bound on nonblocking ops a caller may hold in flight per
+/// communicator before `start_*` blocks (backpressure, not an error).
+/// Sized for the layer-wise pipeline's steady state: one reduce-scatter
+/// being folded, one all-gather draining, one of each being issued.
+pub const PIPELINE_WINDOW: usize = 4;
+
+/// Where a [`CommHandle`]'s result will come from. Internal: callers
+/// only ever move the opaque handle back into [`Collective::wait_handle`].
+pub(crate) enum HandleState {
+    /// Op already ran to completion at issue time (the default
+    /// blocking fallback any backend gets for free).
+    Ready(CommResult<Vec<f32>>),
+    /// Op is executing on a [`ThreadComm`] comm worker; the result
+    /// arrives on this per-op reply channel.
+    Thread(std::sync::mpsc::Receiver<CommResult<Vec<f32>>>),
+    /// Op is in flight on a [`SocketComm`] pipeline under this wire
+    /// sequence number; completion requires draining frames through the
+    /// owning communicator (`wait_handle` is overridden there).
+    Socket(u64),
+}
+
+/// An in-flight nonblocking collective: issued by a `start_*` op,
+/// completed by [`Collective::wait_handle`] (or the
+/// [`CommHandle::wait`] sugar) on the **same** communicator that issued
+/// it. The contribution buffer travels by value — ownership moves into
+/// the handle at issue and comes back out of `wait`, so no aliasing is
+/// possible while the op is in flight.
+///
+/// Dropping a handle without waiting is safe: the op still completes on
+/// the backend (membership, sequence numbers and fold state stay
+/// consistent — pinned by `tests/nonblocking.rs`), only the result is
+/// discarded.
+pub struct CommHandle {
+    pub(crate) state: Option<HandleState>,
+}
+
+impl CommHandle {
+    pub(crate) fn ready(result: CommResult<Vec<f32>>) -> Self {
+        CommHandle { state: Some(HandleState::Ready(result)) }
+    }
+
+    pub(crate) fn thread(rx: std::sync::mpsc::Receiver<CommResult<Vec<f32>>>) -> Self {
+        CommHandle { state: Some(HandleState::Thread(rx)) }
+    }
+
+    pub(crate) fn socket(seq: u64) -> Self {
+        CommHandle { state: Some(HandleState::Socket(seq)) }
+    }
+
+    /// Complete the op and take back the buffer:
+    /// `handle.wait(&comm)` ≡ `comm.wait_handle(handle)`.
+    pub fn wait<C: Collective + ?Sized>(self, comm: &C) -> CommResult<Vec<f32>> {
+        comm.wait_handle(self)
+    }
+}
+
 /// Bounded retry/backoff policy for the fallible surface: up to
 /// `max_attempts` tries, exponential backoff between them, each attempt
 /// given `timeout` to rendezvous. Only [`CommError::Timeout`] is
@@ -340,6 +396,85 @@ pub trait Collective {
     ) -> CommResult<()>;
     /// Broadcast from `root`; fails with `PeerFailed` if the root is dead.
     fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()>;
+
+    // --- Nonblocking issue/complete surface -----------------------------
+    //
+    // `start_*` takes the contribution buffer **by value** and returns a
+    // [`CommHandle`]; [`Collective::wait_handle`] completes the op and
+    // returns the buffer with the fold applied (exactly what the
+    // matching `try_*` would have left in place — bitwise). Ops complete
+    // in issue order; at most [`PIPELINE_WINDOW`] may be in flight per
+    // communicator (`start_*` applies backpressure past that). The
+    // default implementations run the blocking op at issue time, so any
+    // backend is correct for free; [`ThreadComm`] and [`SocketComm`]
+    // override them with genuinely asynchronous execution.
+
+    /// Nonblocking [`Collective::try_all_reduce_mean`].
+    fn start_all_reduce_mean(&self, mut buf: Vec<f32>, timeout: Duration) -> CommHandle {
+        let r = self.try_all_reduce_mean(&mut buf, timeout).map(|()| buf);
+        CommHandle::ready(r)
+    }
+
+    /// Nonblocking [`Collective::try_reduce_scatter_mean`].
+    fn start_reduce_scatter_mean(
+        &self,
+        mut full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        let r = self.try_reduce_scatter_mean(&mut full, shards, timeout).map(|()| full);
+        CommHandle::ready(r)
+    }
+
+    /// Nonblocking [`Collective::try_reduce_scatter_mean_q8`].
+    fn start_reduce_scatter_mean_q8(
+        &self,
+        mut full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        let r = self.try_reduce_scatter_mean_q8(&mut full, shards, timeout).map(|()| full);
+        CommHandle::ready(r)
+    }
+
+    /// Nonblocking [`Collective::try_reduce_scatter_weighted`].
+    fn start_reduce_scatter_weighted(
+        &self,
+        mut full: Vec<f32>,
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommHandle {
+        let r = self
+            .try_reduce_scatter_weighted(&mut full, shards, weights, timeout)
+            .map(|()| full);
+        CommHandle::ready(r)
+    }
+
+    /// Nonblocking [`Collective::try_all_gather`].
+    fn start_all_gather(
+        &self,
+        mut full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        let r = self.try_all_gather(&mut full, shards, timeout).map(|()| full);
+        CommHandle::ready(r)
+    }
+
+    /// Complete a handle issued by this communicator's `start_*` ops and
+    /// return the buffer. Handles must be waited on the communicator
+    /// that issued them.
+    fn wait_handle(&self, mut handle: CommHandle) -> CommResult<Vec<f32>> {
+        match handle.state.take() {
+            Some(HandleState::Ready(r)) => r,
+            Some(HandleState::Thread(rx)) => rx.recv().unwrap_or(Err(CommError::Shutdown)),
+            Some(HandleState::Socket(_)) => {
+                panic!("socket CommHandle waited on a backend that did not issue it")
+            }
+            None => Err(CommError::Shutdown),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -28,13 +28,20 @@
 //!    else receives a retryable `Timeout` error frame and re-contributes
 //!    (the wire mirror of `RetryPolicy`).
 //!
-//! # Duplicate contributions
+//! # Pipelined ops and duplicate contributions
 //!
-//! A client whose local timeout fires just before the result lands will
-//! retry the same sequence number. The hub caches the last resolved
-//! op's per-rank response frames and replays them on a duplicate
-//! `Contribute`, so client-side retries are idempotent (§4.3).
+//! The hub accepts a bounded **window** of in-flight ops (§4.2): a
+//! pipelined client contributes seq k+1 (and beyond) before seq k has
+//! resolved. Contributions are filed by sequence number; ops complete
+//! strictly in sequence order (only the head of the window can fold),
+//! and only the head is on the op-timeout clock. A client whose local
+//! timeout fires just before the result lands will retry the same
+//! sequence number: the hub caches the last resolved ops' per-rank
+//! response frames and replays them on a duplicate `Contribute`, so
+//! client-side retries stay idempotent with multiple ops in flight
+//! (§4.3).
 
+use std::collections::VecDeque;
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -163,12 +170,19 @@ struct Pending {
     contribs: Vec<Option<Contrib>>,
 }
 
-/// Cached per-rank responses of the last resolved op, replayed on
-/// duplicate contributions (client retried after a local timeout).
+/// Cached per-rank responses of a resolved op, replayed on duplicate
+/// contributions (client retried after a local timeout).
 struct Completed {
     seq: u64,
     frames: Vec<Option<Frame>>,
 }
+
+/// How many ops the hub accepts concurrently (WIRE_PROTOCOL.md §4.2):
+/// pipelined clients keep at most [`crate::collectives::PIPELINE_WINDOW`]
+/// in flight; the hub window is wider so a retried (recreated) op plus a
+/// full client window still fit. The replay cache keeps this many
+/// resolved ops too.
+const HUB_WINDOW: usize = 8;
 
 struct HubState {
     alive: Vec<bool>,
@@ -176,8 +190,17 @@ struct HubState {
     last_seen: Vec<Instant>,
     generation: u64,
     evicted: Vec<usize>,
-    pending: Option<Pending>,
-    completed: Option<Completed>,
+    /// In-flight ops, ascending by seq. Only the **front** may resolve
+    /// (completion is strictly in sequence order) and only the front is
+    /// subject to the op-timeout window.
+    pending: VecDeque<Pending>,
+    /// Replay cache of the last [`HUB_WINDOW`] resolved ops.
+    completed: VecDeque<Completed>,
+    /// The sequence number the next *new* op must carry. A contribution
+    /// below this that matches neither a pending nor a cached op is a
+    /// retry of a timed-out op and recreates it; above is a protocol
+    /// violation (the client skipped a sequence number).
+    next_new_seq: u64,
     ops_done: u64,
     shutdown: bool,
 }
@@ -345,7 +368,7 @@ fn evict(hub: &Hub, st: &mut HubState, rank: usize) {
     st.alive[rank] = false;
     st.generation += 1;
     st.evicted.push(rank);
-    if let Some(p) = st.pending.as_mut() {
+    for p in st.pending.iter_mut() {
         p.contribs[rank] = None;
     }
     try_complete(hub, st);
@@ -361,68 +384,92 @@ fn leave(hub: &Hub, st: &mut HubState, rank: usize) {
         st.alive[rank] = false;
         st.generation += 1;
     }
-    if let Some(p) = st.pending.as_mut() {
+    for p in st.pending.iter_mut() {
         p.contribs[rank] = None;
     }
     try_complete(hub, st);
 }
 
-/// Resolve the pending op if it can be: `PeerFailed` when a
-/// structurally required rank is dead, the fold + `Result` frames when
-/// every live rank has contributed, otherwise keep waiting.
+/// Cache a resolved op's frames for duplicate replay, evicting the
+/// oldest beyond [`HUB_WINDOW`].
+fn cache_completed(st: &mut HubState, done: Completed) {
+    st.completed.push_back(done);
+    while st.completed.len() > HUB_WINDOW {
+        st.completed.pop_front();
+    }
+}
+
+/// Pop the resolved front op and restart the next head's op-timeout
+/// clock (a queued op's window counts from when it reaches the head of
+/// the line, not from its first contribution).
+fn pop_front_pending(st: &mut HubState) -> Pending {
+    let p = st.pending.pop_front().expect("pop on empty pending window");
+    if let Some(next) = st.pending.front_mut() {
+        next.started = Instant::now();
+    }
+    p
+}
+
+/// Resolve as many ops as possible, strictly from the **front** of the
+/// pending window (completion order == sequence order, whatever order
+/// contributions arrived in): `PeerFailed` when a structurally required
+/// rank is dead, the fold + `Result` frames when every live rank has
+/// contributed, otherwise stop — later ops wait behind the head.
 fn try_complete(hub: &Hub, st: &mut HubState) {
-    let Some(p) = st.pending.as_ref() else { return };
-    let Some(meta) = p.contribs.iter().flatten().next() else {
-        // Every contributor died; survivors will recreate the op.
-        st.pending = None;
-        return;
-    };
+    loop {
+        let Some(p) = st.pending.front() else { return };
+        let Some(meta) = p.contribs.iter().flatten().next() else {
+            // Every contributor died; survivors will recreate the op.
+            pop_front_pending(st);
+            continue;
+        };
 
-    // Structural impossibility first — mirrors the order of
-    // `ThreadComm`'s checks (dead owners fail even for a sole survivor).
-    let victim = match p.op {
-        OpCode::AllGather => meta
-            .shards
-            .iter()
-            .enumerate()
-            .find(|&(r, &(_, len))| len > 0 && !st.alive[r])
-            .map(|(r, _)| r),
-        OpCode::Broadcast => {
-            let root = meta.root as usize;
-            (!st.alive.get(root).copied().unwrap_or(false)).then_some(root)
+        // Structural impossibility first — mirrors the order of
+        // `ThreadComm`'s checks (dead owners fail even for a sole survivor).
+        let victim = match p.op {
+            OpCode::AllGather => meta
+                .shards
+                .iter()
+                .enumerate()
+                .find(|&(r, &(_, len))| len > 0 && !st.alive[r])
+                .map(|(r, _)| r),
+            OpCode::Broadcast => {
+                let root = meta.root as usize;
+                (!st.alive.get(root).copied().unwrap_or(false)).then_some(root)
+            }
+            _ => None,
+        };
+        if let Some(victim) = victim {
+            let seq = p.seq;
+            let op = p.op;
+            let frame =
+                error_frame(st.generation, seq, ErrorCode::PeerFailed, victim as u32, op.name());
+            let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
+            for r in st.live_ranks() {
+                send_to(hub, r, &frame);
+                frames[r] = Some(frame.clone());
+            }
+            cache_completed(st, Completed { seq, frames });
+            pop_front_pending(st);
+            continue;
         }
-        _ => None,
-    };
-    if let Some(victim) = victim {
-        let seq = p.seq;
-        let op = p.op;
-        let frame =
-            error_frame(st.generation, seq, ErrorCode::PeerFailed, victim as u32, op.name());
+
+        let live = st.live_ranks();
+        if live.iter().any(|&r| p.contribs[r].is_none()) {
+            return;
+        }
+        let p = pop_front_pending(st);
+        let results = fold(&p, &live);
+        let mask = st.live_mask();
         let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
-        for r in st.live_ranks() {
+        for (&r, data) in live.iter().zip(&results) {
+            let frame = result_frame(st.generation, p.seq, mask, data);
             send_to(hub, r, &frame);
-            frames[r] = Some(frame.clone());
+            frames[r] = Some(frame);
         }
-        st.completed = Some(Completed { seq, frames });
-        st.pending = None;
-        return;
+        cache_completed(st, Completed { seq: p.seq, frames });
+        st.ops_done += 1;
     }
-
-    let live = st.live_ranks();
-    if live.iter().any(|&r| p.contribs[r].is_none()) {
-        return;
-    }
-    let p = st.pending.take().unwrap();
-    let results = fold(&p, &live);
-    let mask = st.live_mask();
-    let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
-    for (&r, data) in live.iter().zip(&results) {
-        let frame = result_frame(st.generation, p.seq, mask, data);
-        send_to(hub, r, &frame);
-        frames[r] = Some(frame);
-    }
-    st.completed = Some(Completed { seq: p.seq, frames });
-    st.ops_done += 1;
 }
 
 /// The hub-side fold: zero-seeded, ascending live rank order — the
@@ -529,8 +576,18 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
         }
     };
     let world = hub.cfg.world;
-    if let Some(p) = st.pending.as_ref() {
-        if seq != p.seq || op != p.op {
+    // Duplicate of a resolved op (client retried after a local
+    // timeout): replay the cached response.
+    if let Some(c) = st.completed.iter().find(|c| c.seq == seq) {
+        if let Some(frame) = c.frames[rank].clone() {
+            send_to(hub, rank, &frame);
+        }
+        return;
+    }
+    if let Some(idx) = st.pending.iter().position(|p| p.seq == seq) {
+        // Joins an op already opened by a peer.
+        let p = &st.pending[idx];
+        if op != p.op {
             let msg = format!(
                 "out-of-step contribution: got {}#{seq}, pending {}#{}",
                 op.name(),
@@ -545,16 +602,17 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
             send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
             return;
         }
-        st.pending.as_mut().unwrap().contribs[rank] = Some(contrib);
-    } else {
-        if let Some(c) = st.completed.as_ref() {
-            if c.seq == seq {
-                // Duplicate after a client-side timeout: replay.
-                if let Some(frame) = c.frames[rank].clone() {
-                    send_to(hub, rank, &frame);
-                }
-                return;
-            }
+        st.pending[idx].contribs[rank] = Some(contrib);
+    } else if seq == st.next_new_seq || seq < st.next_new_seq {
+        // `seq == next_new_seq`: opens the next op in the pipeline.
+        // `seq < next_new_seq` (matching nothing above): a retry of an
+        // op the hub timed out and dropped — recreate it so same-seq
+        // retries stay idempotent with multiple ops in flight; it is
+        // inserted in sequence order, since completion is front-first.
+        if st.pending.len() >= HUB_WINDOW {
+            let msg = format!("pipeline window exceeded ({HUB_WINDOW} ops in flight)");
+            send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+            return;
         }
         if let Err(msg) = validate_contrib(op, rank, world, &contrib, None) {
             send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
@@ -562,7 +620,21 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
         }
         let mut contribs: Vec<Option<Contrib>> = vec![None; world];
         contribs[rank] = Some(contrib);
-        st.pending = Some(Pending { seq, op, started: Instant::now(), contribs });
+        let entry = Pending { seq, op, started: Instant::now(), contribs };
+        let at = st.pending.iter().position(|p| p.seq > seq).unwrap_or(st.pending.len());
+        st.pending.insert(at, entry);
+        if seq == st.next_new_seq {
+            st.next_new_seq = seq + 1;
+        }
+    } else {
+        // A gap: the client skipped a sequence number.
+        let msg = format!(
+            "out-of-window contribution: got {}#{seq}, next new seq is {}",
+            op.name(),
+            st.next_new_seq
+        );
+        send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+        return;
     }
     try_complete(hub, &mut st);
 }
@@ -730,8 +802,9 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
             last_seen: vec![now; cfg.world],
             generation: 0,
             evicted: Vec::new(),
-            pending: None,
-            completed: None,
+            pending: VecDeque::new(),
+            completed: VecDeque::new(),
+            next_new_seq: 0,
             ops_done: 0,
             shutdown: false,
         }),
@@ -755,7 +828,7 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
         if stop.load(Ordering::SeqCst) {
             st.shutdown = true;
             let generation = st.generation;
-            if let Some(p) = st.pending.take() {
+            for p in std::mem::take(&mut st.pending) {
                 for (r, c) in p.contribs.iter().enumerate() {
                     if c.is_some() && st.alive[r] {
                         send_to(&hub, r, &error_frame(generation, p.seq, ErrorCode::Shutdown, r as u32, "hub shutdown"));
@@ -771,15 +844,18 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
             st.shutdown = true;
             break;
         }
+        // Only the head of the pending window is on the op-timeout
+        // clock — queued ops start their window when they reach the
+        // head (see `pop_front_pending`).
         let timed_out = st
             .pending
-            .as_ref()
+            .front()
             .is_some_and(|p| p.started.elapsed() >= hub.cfg.op_timeout);
         if timed_out {
             // Evict op-blocking ranks that also stopped heartbeating
             // (a killed -STOP process, a hard hang) — timeout-then-evict.
             let stale: Vec<usize> = {
-                let p = st.pending.as_ref().unwrap();
+                let p = st.pending.front().unwrap();
                 st.live_ranks()
                     .into_iter()
                     .filter(|&r| {
@@ -792,8 +868,9 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
                 evict(&hub, &mut st, r);
             }
             // Still blocked on live, heartbeating ranks: tell the
-            // contributors to retry (maps onto RetryPolicy).
-            if let Some(p) = st.pending.as_ref() {
+            // contributors to retry (maps onto RetryPolicy; a pipelined
+            // client re-sends the same seq, which recreates the op).
+            if let Some(p) = st.pending.front() {
                 if p.started.elapsed() >= hub.cfg.op_timeout {
                     let generation = st.generation;
                     let seq = p.seq;
@@ -810,7 +887,7 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
                             &error_frame(generation, seq, ErrorCode::Timeout, RANK_UNASSIGNED, name),
                         );
                     }
-                    st.pending = None;
+                    pop_front_pending(&mut st);
                 }
             }
         }

@@ -20,6 +20,21 @@
 //! op completed while the client was giving up). Stale frames for an
 //! older sequence number are dropped on read.
 //!
+//! # Pipelined nonblocking ops (WIRE_PROTOCOL.md §4.2)
+//!
+//! The `start_*` methods issue a Contribute immediately and return a
+//! [`CommHandle`]; up to [`PIPELINE_WINDOW`] ops may be in flight, each
+//! at its own sequence number, and the hub folds them strictly in
+//! sequence order. Draining is cooperative: waiting on any handle also
+//! files Results/Errors that arrive for *other* in-flight sequence
+//! numbers, and answers hub-side `Timeout` nudges by re-sending the
+//! cached Contribute payload at the same seq. A blocking `try_*` op
+//! first flushes the pipeline, so mixed use keeps the lockstep
+//! invariant. One deliberate divergence from the blocking path: a
+//! *client-side* wait timeout abandons the in-flight op (the hub still
+//! completes it for the peers) — retrying means issuing a fresh op at a
+//! new sequence number, not re-contributing the old one.
+//!
 //! # Liveness
 //!
 //! A background thread heartbeats over the shared writer at
@@ -28,6 +43,7 @@
 //! silent and gets evicted by the hub (timeout-then-evict).
 
 use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
 use std::io;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -39,7 +55,9 @@ use crate::collectives::frame::{
     write_frame, ErrorCode, Frame, FrameBuffer, FrameKind, OpCode, PayloadReader, PayloadWriter,
     RANK_UNASSIGNED,
 };
-use crate::collectives::{group, Collective, CommError, CommResult};
+use crate::collectives::{
+    group, Collective, CommError, CommHandle, CommResult, HandleState, PIPELINE_WINDOW,
+};
 
 /// Client connection knobs.
 #[derive(Debug, Clone, Copy)]
@@ -76,6 +94,47 @@ struct OpOutcome {
     data: Vec<f32>,
 }
 
+/// How a pipelined op's result is applied to its buffer at resolution.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PipeKind {
+    /// Result replaces the whole buffer (empty = sole survivor, keep).
+    AllReduceMean,
+    /// Result replaces this rank's shard region (empty = keep).
+    ReduceScatter,
+    /// Result carries the concatenation; every shard region is copied.
+    AllGather,
+}
+
+/// One nonblocking op in flight on the wire (WIRE_PROTOCOL.md §4.2).
+struct InflightOp {
+    seq: u64,
+    op: OpCode,
+    kind: PipeKind,
+    /// Encoded Contribute payload, kept so a hub-side `Timeout` error
+    /// can be answered by re-sending the **same** sequence number (the
+    /// hub recreates the dropped op — §4.3 replay with a window).
+    payload: Vec<u8>,
+    /// Caller's buffer, owned while in flight; the hub's result is
+    /// applied here and the buffer returns through `wait_handle`.
+    buf: Vec<f32>,
+    shards: Vec<(usize, usize)>,
+    timeout: Duration,
+    /// Filled when the hub's Result/Error frame for this seq lands —
+    /// possibly while draining on behalf of a *different* handle.
+    result: Option<CommResult<()>>,
+}
+
+#[derive(Default)]
+struct Pipeline {
+    ops: VecDeque<InflightOp>,
+}
+
+impl Pipeline {
+    fn unresolved(&self) -> usize {
+        self.ops.iter().filter(|o| o.result.is_none()).count()
+    }
+}
+
 /// Socket-backed [`Collective`] handle; see the module docs.
 pub struct SocketComm {
     rank: usize,
@@ -90,6 +149,7 @@ pub struct SocketComm {
     fb: RefCell<FrameBuffer>,
     qcodes: RefCell<Vec<i8>>,
     qscales: RefCell<Vec<f32>>,
+    pipeline: RefCell<Pipeline>,
     hb_stop: Arc<AtomicBool>,
     hb: Option<JoinHandle<()>>,
 }
@@ -173,6 +233,7 @@ impl SocketComm {
             fb: RefCell::new(FrameBuffer::new()),
             qcodes: RefCell::new(Vec::new()),
             qscales: RefCell::new(Vec::new()),
+            pipeline: RefCell::new(Pipeline::default()),
             hb_stop,
             hb: None,
         }
@@ -264,6 +325,10 @@ impl SocketComm {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
+        // Blocking ops run strictly after every pipelined op: the poll
+        // loop below matches only its own seq and would drop pipelined
+        // results as stale.
+        self.flush_pipeline(timeout)?;
         let seq = self.seq.get();
         let frame = Frame::new(FrameKind::Contribute, self.rank as u32, self.generation.get(), payload);
         {
@@ -350,6 +415,254 @@ impl SocketComm {
             Ok(())
         } else {
             Err(self.terminal())
+        }
+    }
+
+    // --- pipelined nonblocking surface (WIRE_PROTOCOL.md §4.2) ------------
+
+    /// Send one Contribute frame carrying `payload` (first send and
+    /// same-seq re-sends share this path).
+    fn send_contribute(&self, payload: &[u8]) -> CommResult<()> {
+        let frame = Frame::new(
+            FrameKind::Contribute,
+            self.rank as u32,
+            self.generation.get(),
+            payload.to_vec(),
+        );
+        {
+            let Ok(mut w) = self.writer.lock() else { return Err(self.terminal()) };
+            if write_frame(&mut *w, &frame).is_err() {
+                return Err(self.terminal());
+            }
+        }
+        self.bump_stats(frame.wire_len(), 0);
+        Ok(())
+    }
+
+    /// Apply a Result frame's data to an in-flight op's buffer. Empty
+    /// data = sole survivor: the buffer already holds the answer.
+    fn apply_pipeline_result(&self, entry: &mut InflightOp, data: &[f32]) -> CommResult<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        match entry.kind {
+            PipeKind::AllReduceMean => {
+                self.expect_len(data, entry.buf.len())?;
+                entry.buf.copy_from_slice(data);
+            }
+            PipeKind::ReduceScatter => {
+                let (off, len) = entry.shards[self.rank];
+                self.expect_len(data, len)?;
+                entry.buf[off..off + len].copy_from_slice(data);
+            }
+            PipeKind::AllGather => {
+                for &(o, l) in &entry.shards {
+                    if o + l > data.len() {
+                        return Err(self.terminal());
+                    }
+                    entry.buf[o..o + l].copy_from_slice(&data[o..o + l]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain hub frames against the pipeline until `done` holds or
+    /// `timeout` passes. Results/errors land on whichever in-flight op
+    /// their seq names (not just the one being waited on); hub-side
+    /// `Timeout` errors for an unresolved op re-send its contribution at
+    /// the same seq.
+    fn pump_until(
+        &self,
+        opname: &'static str,
+        timeout: Duration,
+        done: impl Fn(&Pipeline) -> bool,
+    ) -> CommResult<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if done(&self.pipeline.borrow()) {
+                return Ok(());
+            }
+            if self.closed.get() {
+                return Err(CommError::Shutdown);
+            }
+            let polled = self.fb.borrow_mut().poll();
+            match polled {
+                Ok(Some((_v, reply))) => {
+                    self.bump_stats(0, reply.wire_len());
+                    self.generation.set(reply.generation);
+                    match reply.kind {
+                        FrameKind::Result => {
+                            let parsed = (|| -> io::Result<(u64, u64, Vec<f32>)> {
+                                let mut r = PayloadReader::new(&reply.payload);
+                                Ok((r.u64()?, r.u64()?, r.f32s()?))
+                            })();
+                            let Ok((rseq, mask, data)) = parsed else {
+                                return Err(self.terminal());
+                            };
+                            let mut pl = self.pipeline.borrow_mut();
+                            if let Some(entry) =
+                                pl.ops.iter_mut().find(|o| o.seq == rseq && o.result.is_none())
+                            {
+                                self.live_mask.set(mask);
+                                let applied = self.apply_pipeline_result(entry, &data);
+                                entry.result = Some(applied);
+                            }
+                            // Unknown seq: a replay for an op some prior
+                            // attempt already resolved — drop it.
+                        }
+                        FrameKind::Error => {
+                            let parsed = (|| -> io::Result<(u64, u8, u32)> {
+                                let mut r = PayloadReader::new(&reply.payload);
+                                Ok((r.u64()?, r.u8()?, r.u32()?))
+                            })();
+                            let Ok((eseq, code, erank)) = parsed else {
+                                return Err(self.terminal());
+                            };
+                            match ErrorCode::from_u8(code) {
+                                Some(ErrorCode::Timeout) => {
+                                    let payload = self
+                                        .pipeline
+                                        .borrow()
+                                        .ops
+                                        .iter()
+                                        .find(|o| o.seq == eseq && o.result.is_none())
+                                        .map(|o| o.payload.clone());
+                                    if let Some(p) = payload {
+                                        self.send_contribute(&p)?;
+                                    }
+                                }
+                                Some(ErrorCode::PeerFailed) => {
+                                    if erank as usize == self.rank {
+                                        // The hub evicted *us*; terminal.
+                                        return Err(self.terminal());
+                                    }
+                                    let mut pl = self.pipeline.borrow_mut();
+                                    if let Some(entry) = pl
+                                        .ops
+                                        .iter_mut()
+                                        .find(|o| o.seq == eseq && o.result.is_none())
+                                    {
+                                        entry.result = Some(Err(CommError::PeerFailed {
+                                            rank: erank as usize,
+                                        }));
+                                    }
+                                }
+                                _ => return Err(self.terminal()),
+                            }
+                        }
+                        FrameKind::Shutdown => return Err(self.terminal()),
+                        _ => {}
+                    }
+                    continue;
+                }
+                Ok(None) => {}
+                Err(_) => return Err(self.terminal()),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CommError::Timeout { op: opname, waited: timeout });
+            }
+            let poll = (deadline - now).min(Duration::from_millis(50));
+            let _ = self.stream.set_read_timeout(Some(poll.max(Duration::from_millis(1))));
+            let filled = self.fb.borrow_mut().fill_from(&mut (&self.stream));
+            match filled {
+                Ok(0) => return Err(self.terminal()),
+                Ok(_) => {}
+                Err(e)
+                    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+                Err(_) => return Err(self.terminal()),
+            }
+        }
+    }
+
+    /// Resolve every in-flight pipelined op (results stay stashed on
+    /// their entries for later `wait_handle` calls).
+    fn flush_pipeline(&self, timeout: Duration) -> CommResult<()> {
+        if self.pipeline.borrow().unresolved() == 0 {
+            return Ok(());
+        }
+        self.pump_until("pipeline.flush", timeout, |pl| pl.unresolved() == 0)
+    }
+
+    /// Issue one pipelined op: free a window slot if needed, encode the
+    /// Contribute at the current seq, send, advance the seq. `encode`
+    /// writes the op-specific payload after the `(op, seq)` header.
+    fn start_pipelined(
+        &self,
+        op: OpCode,
+        kind: PipeKind,
+        buf: Vec<f32>,
+        shards: Vec<(usize, usize)>,
+        timeout: Duration,
+        encode: impl FnOnce(&mut PayloadWriter, &[f32], &[(usize, usize)]),
+    ) -> CommHandle {
+        if self.closed.get() {
+            return CommHandle::ready(Err(CommError::Shutdown));
+        }
+        if self.world == 1 {
+            // Degenerate group: the op is a no-op on the wire (weighted
+            // is special-cased by its caller before reaching here).
+            return CommHandle::ready(Ok(buf));
+        }
+        // Backpressure: at most PIPELINE_WINDOW unresolved ops.
+        if let Err(e) = self.pump_until(op.name(), timeout, |pl| pl.unresolved() < PIPELINE_WINDOW)
+        {
+            return CommHandle::ready(Err(e));
+        }
+        // Garbage-collect long-resolved entries whose handles were
+        // dropped without a wait (the op itself completed; only the
+        // result pickup was abandoned).
+        {
+            let mut pl = self.pipeline.borrow_mut();
+            let cur = self.seq.get();
+            pl.ops.retain(|o| o.result.is_none() || o.seq + 64 > cur);
+        }
+        let mut p = self.begin(op);
+        encode(&mut p, &buf, &shards);
+        let payload = p.finish();
+        if let Err(e) = self.send_contribute(&payload) {
+            return CommHandle::ready(Err(e));
+        }
+        let seq = self.seq.get();
+        self.seq.set(seq + 1);
+        self.pipeline.borrow_mut().ops.push_back(InflightOp {
+            seq,
+            op,
+            kind,
+            payload,
+            buf,
+            shards,
+            timeout,
+            result: None,
+        });
+        CommHandle::socket(seq)
+    }
+
+    /// Complete the pipelined op issued at `seq` and hand its buffer
+    /// back. A client-side timeout abandons the op (the hub still
+    /// completes it for the peers); retrying means issuing a fresh op.
+    fn wait_seq(&self, seq: u64) -> CommResult<Vec<f32>> {
+        let (opname, timeout) = {
+            let pl = self.pipeline.borrow();
+            match pl.ops.iter().find(|o| o.seq == seq) {
+                Some(o) => (o.op.name(), o.timeout),
+                // Unknown handle: pruned after a drop, or foreign.
+                None => return Err(CommError::Shutdown),
+            }
+        };
+        let pumped = self.pump_until(opname, timeout, |pl| {
+            pl.ops.iter().find(|o| o.seq == seq).is_none_or(|o| o.result.is_some())
+        });
+        let mut pl = self.pipeline.borrow_mut();
+        let Some(idx) = pl.ops.iter().position(|o| o.seq == seq) else {
+            return Err(pumped.err().unwrap_or(CommError::Shutdown));
+        };
+        let entry = pl.ops.remove(idx).expect("indexed inflight op");
+        match entry.result {
+            Some(Ok(())) => Ok(entry.buf),
+            Some(Err(e)) => Err(e),
+            None => Err(pumped.err().unwrap_or(CommError::Shutdown)),
         }
     }
 }
@@ -556,6 +869,125 @@ impl Collective for SocketComm {
             buf.copy_from_slice(&out.data);
         }
         Ok(())
+    }
+
+    fn start_all_reduce_mean(&self, buf: Vec<f32>, timeout: Duration) -> CommHandle {
+        self.start_pipelined(
+            OpCode::AllReduceMean,
+            PipeKind::AllReduceMean,
+            buf,
+            Vec::new(),
+            timeout,
+            |p, full, _| {
+                p.f32s(full);
+            },
+        )
+    }
+
+    fn start_reduce_scatter_mean(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        self.start_pipelined(
+            OpCode::ReduceScatterMean,
+            PipeKind::ReduceScatter,
+            full,
+            shards.to_vec(),
+            timeout,
+            |p, full, shards| {
+                p.shards(shards).f32s(full);
+            },
+        )
+    }
+
+    fn start_reduce_scatter_mean_q8(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        self.start_pipelined(
+            OpCode::ReduceScatterMeanQ8,
+            PipeKind::ReduceScatter,
+            full,
+            shards.to_vec(),
+            timeout,
+            |p, full, shards| {
+                let mut codes = self.qcodes.borrow_mut();
+                let mut scales = self.qscales.borrow_mut();
+                group::quantize_int8_into(full, &mut codes, &mut scales);
+                p.shards(shards).u32(full.len() as u32).i8s(&codes).f32s(&scales);
+            },
+        )
+    }
+
+    fn start_reduce_scatter_weighted(
+        &self,
+        mut full: Vec<f32>,
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommHandle {
+        if self.closed.get() {
+            return CommHandle::ready(Err(CommError::Shutdown));
+        }
+        if self.world == 1 {
+            // Degenerate group: the reference's zero-init single fold —
+            // a real computation even alone, unlike the other ops.
+            let (off, len) = shards[self.rank];
+            let w = weights[0];
+            for x in full[off..off + len].iter_mut() {
+                let mut acc = 0.0f32;
+                if w != 0.0 {
+                    acc += w * *x;
+                }
+                *x = acc;
+            }
+            return CommHandle::ready(Ok(full));
+        }
+        let weights = weights.to_vec();
+        self.start_pipelined(
+            OpCode::ReduceScatterWeighted,
+            PipeKind::ReduceScatter,
+            full,
+            shards.to_vec(),
+            timeout,
+            move |p, full, shards| {
+                p.shards(shards).f32s(&weights).f32s(full);
+            },
+        )
+    }
+
+    fn start_all_gather(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        self.start_pipelined(
+            OpCode::AllGather,
+            PipeKind::AllGather,
+            full,
+            shards.to_vec(),
+            timeout,
+            |p, full, shards| {
+                let (off, len) = shards[self.rank];
+                p.shards(shards).f32s(&full[off..off + len]);
+            },
+        )
+    }
+
+    fn wait_handle(&self, mut handle: CommHandle) -> CommResult<Vec<f32>> {
+        match handle.state.take() {
+            Some(HandleState::Ready(r)) => r,
+            Some(HandleState::Socket(seq)) => self.wait_seq(seq),
+            Some(HandleState::Thread(_)) => {
+                panic!("thread CommHandle waited on a socket backend")
+            }
+            None => Err(CommError::Shutdown),
+        }
     }
 }
 

@@ -38,10 +38,10 @@
 //! (fault handling is not the hot path).
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Barrier, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::collectives::{group, Collective, CommError, CommResult};
+use crate::collectives::{group, Collective, CommError, CommHandle, CommResult, PIPELINE_WINDOW};
 use crate::tensor::{kernels, ShardSpec, QUANT_CHUNK};
 
 /// Generation-counted rendezvous state (sense-reversing: waiters key on
@@ -75,17 +75,88 @@ struct Inner {
     shutdown: AtomicBool,
     gate: Mutex<Gate>,
     cv: Condvar,
+    /// Modeled per-op wire latency (zero by default): every fallible
+    /// data op sleeps this long at issue before staging. With the
+    /// blocking surface the sleep lands on the caller; with the
+    /// nonblocking surface it lands on the comm worker, where it
+    /// overlaps caller compute — the latency-hiding the overlap benches
+    /// measure (this box has one core, so the win must come from
+    /// hiding waits, not parallel arithmetic).
+    link_delay: Duration,
+}
+
+/// A nonblocking op queued to the comm worker. Buffers travel by value;
+/// the result goes back on the per-op reply channel (dropping the
+/// receiver — a dropped [`CommHandle`] — just discards the result; the
+/// op itself still completes, keeping rendezvous state consistent).
+enum Job {
+    AllReduceMean {
+        buf: Vec<f32>,
+        timeout: Duration,
+        reply: mpsc::Sender<CommResult<Vec<f32>>>,
+    },
+    ReduceScatterMean {
+        full: Vec<f32>,
+        shards: Vec<(usize, usize)>,
+        timeout: Duration,
+        reply: mpsc::Sender<CommResult<Vec<f32>>>,
+    },
+    ReduceScatterMeanQ8 {
+        full: Vec<f32>,
+        shards: Vec<(usize, usize)>,
+        timeout: Duration,
+        reply: mpsc::Sender<CommResult<Vec<f32>>>,
+    },
+    ReduceScatterWeighted {
+        full: Vec<f32>,
+        shards: Vec<(usize, usize)>,
+        weights: Vec<f32>,
+        timeout: Duration,
+        reply: mpsc::Sender<CommResult<Vec<f32>>>,
+    },
+    AllGather {
+        full: Vec<f32>,
+        shards: Vec<(usize, usize)>,
+        timeout: Duration,
+        reply: mpsc::Sender<CommResult<Vec<f32>>>,
+    },
+    /// Rendezvous-free sync point: the worker replies once every job
+    /// queued before this one has completed.
+    Flush { reply: mpsc::Sender<()> },
+}
+
+/// Lazily spawned comm worker executing this rank's `start_*` ops in
+/// issue order on a dedicated thread.
+struct Worker {
+    tx: mpsc::SyncSender<Job>,
+    join: std::thread::JoinHandle<()>,
+    /// Jobs enqueued since the last flush — lets blocking ops skip the
+    /// flush round-trip when the worker is idle.
+    dirty: bool,
 }
 
 /// Per-rank handle; clone-free — create one set via [`ThreadComm::group`].
 pub struct ThreadComm {
     rank: usize,
     inner: Arc<Inner>,
+    /// This rank's comm worker (nonblocking surface); `None` until the
+    /// first `start_*` op, and always `None` on the worker's own
+    /// duplicate handle (the worker runs the blocking impls directly).
+    worker: Mutex<Option<Worker>>,
 }
 
 impl ThreadComm {
     /// Create handles for an `n`-rank group.
     pub fn group(n: usize) -> Vec<ThreadComm> {
+        Self::group_with_link_delay(n, Duration::ZERO)
+    }
+
+    /// [`Self::group`] with a modeled per-op wire latency: every
+    /// fallible data op (not the barrier) sleeps `link_delay` at issue.
+    /// Bench substrate for overlap measurements — the sleep stands in
+    /// for time on the wire, which the nonblocking surface can hide
+    /// behind caller compute and the blocking surface cannot.
+    pub fn group_with_link_delay(n: usize, link_delay: Duration) -> Vec<ThreadComm> {
         let inner = Arc::new(Inner {
             n,
             staging: (0..n).map(|_| RwLock::new(Vec::new())).collect(),
@@ -96,8 +167,11 @@ impl ThreadComm {
             shutdown: AtomicBool::new(false),
             gate: Mutex::new(Gate { arrived: 0, generation: 0 }),
             cv: Condvar::new(),
+            link_delay,
         });
-        (0..n).map(|rank| ThreadComm { rank, inner: Arc::clone(&inner) }).collect()
+        (0..n)
+            .map(|rank| ThreadComm { rank, inner: Arc::clone(&inner), worker: Mutex::new(None) })
+            .collect()
     }
 
     pub fn rank(&self) -> usize {
@@ -400,6 +474,7 @@ impl ThreadComm {
 
     fn try_all_reduce_mean_impl(&self, buf: &mut [f32], timeout: Duration) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         if self.live_ranks() <= 1 {
             // Sole survivor: the live-group mean is its own contribution.
             return Ok(());
@@ -427,6 +502,7 @@ impl ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         // Every shard owner must be alive — a dead rank's shard cannot
         // be reconstructed by the survivors. Deterministic failure.
         for (r, &(_, len)) in shards.iter().enumerate() {
@@ -456,6 +532,7 @@ impl ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         if self.live_ranks() <= 1 {
             return Ok(());
         }
@@ -482,6 +559,7 @@ impl ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         if self.live_ranks() <= 1 {
             // Sole survivor: the live-group sum is its own contribution.
             return Ok(());
@@ -508,6 +586,7 @@ impl ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         debug_assert_eq!(self.inner.n, weights.len());
         if self.live_ranks() <= 1 {
             // Unlike sum/mean, w·x is a real computation even alone:
@@ -543,6 +622,7 @@ impl ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         if self.live_ranks() <= 1 {
             return Ok(());
         }
@@ -575,6 +655,7 @@ impl ThreadComm {
         timeout: Duration,
     ) -> CommResult<()> {
         check_shutdown(&self.inner)?;
+        self.sleep_link_delay();
         if self.is_failed(root) {
             // The payload only exists on the root. Deterministic failure.
             return Err(CommError::PeerFailed { rank: root });
@@ -591,6 +672,117 @@ impl ThreadComm {
             buf.copy_from_slice(&slot);
         }
         self.try_rendezvous("broadcast.exit", timeout)
+    }
+
+    // --- nonblocking surface (comm worker) --------------------------------
+
+    /// Model the wire: sleep `link_delay` at op issue (no-op by default).
+    fn sleep_link_delay(&self) {
+        if !self.inner.link_delay.is_zero() {
+            std::thread::sleep(self.inner.link_delay);
+        }
+    }
+
+    /// Hand out the comm-worker job queue, spawning the worker on first
+    /// use. The worker holds a duplicate handle at this rank (same
+    /// `Inner`, no worker of its own) and executes the blocking impls
+    /// in issue order, so nonblocking ops are sequenced exactly like a
+    /// caller that waited — only on another thread.
+    fn worker_tx(&self) -> mpsc::SyncSender<Job> {
+        let mut guard = self.worker.lock().unwrap();
+        if guard.is_none() {
+            let (tx, rx) = mpsc::sync_channel::<Job>(PIPELINE_WINDOW);
+            let peer = ThreadComm {
+                rank: self.rank,
+                inner: Arc::clone(&self.inner),
+                worker: Mutex::new(None),
+            };
+            let join = std::thread::spawn(move || worker_loop(peer, rx));
+            *guard = Some(Worker { tx, join, dirty: false });
+        }
+        let worker = guard.as_mut().unwrap();
+        worker.dirty = true;
+        worker.tx.clone()
+    }
+
+    /// Drain the comm worker before a blocking op: two threads of the
+    /// same rank must never rendezvous concurrently (the gate counts
+    /// arrivals per rank-agnostic quorum, so a blocking op racing the
+    /// worker's queued op would corrupt the count). Skipped when the
+    /// worker is idle or was never spawned.
+    fn flush_worker(&self) {
+        let tx = {
+            let mut guard = self.worker.lock().unwrap();
+            match guard.as_mut() {
+                Some(worker) if worker.dirty => {
+                    worker.dirty = false;
+                    worker.tx.clone()
+                }
+                _ => return,
+            }
+        };
+        let (reply, rx) = mpsc::channel();
+        if tx.send(Job::Flush { reply }).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+
+    fn issue(&self, job: Job) -> Option<CommHandle> {
+        // Reply channel is embedded in `job`; a send failure means the
+        // worker died (shutdown) — surface that through the handle.
+        match self.worker_tx().send(job) {
+            Ok(()) => None,
+            Err(_) => Some(CommHandle::ready(Err(CommError::Shutdown))),
+        }
+    }
+}
+
+/// Comm-worker main loop: execute jobs in issue order; a failed reply
+/// send (dropped [`CommHandle`]) discards the result but never the op.
+fn worker_loop(comm: ThreadComm, rx: mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::AllReduceMean { mut buf, timeout, reply } => {
+                let r = comm.try_all_reduce_mean_impl(&mut buf, timeout).map(|()| buf);
+                let _ = reply.send(r);
+            }
+            Job::ReduceScatterMean { mut full, shards, timeout, reply } => {
+                let r =
+                    comm.try_reduce_scatter_mean_impl(&mut full, &shards, timeout).map(|()| full);
+                let _ = reply.send(r);
+            }
+            Job::ReduceScatterMeanQ8 { mut full, shards, timeout, reply } => {
+                let r = comm
+                    .try_reduce_scatter_mean_q8_impl(&mut full, &shards, timeout)
+                    .map(|()| full);
+                let _ = reply.send(r);
+            }
+            Job::ReduceScatterWeighted { mut full, shards, weights, timeout, reply } => {
+                let r = comm
+                    .try_reduce_scatter_weighted_impl(&mut full, &shards, &weights, timeout)
+                    .map(|()| full);
+                let _ = reply.send(r);
+            }
+            Job::AllGather { mut full, shards, timeout, reply } => {
+                let r = comm.try_all_gather_impl(&mut full, &shards, timeout).map(|()| full);
+                let _ = reply.send(r);
+            }
+            Job::Flush { reply } => {
+                let _ = reply.send(());
+            }
+        }
+    }
+}
+
+impl Drop for ThreadComm {
+    fn drop(&mut self) {
+        // Disconnect the job queue and join the worker; queued ops run
+        // to completion first (bounded by their own timeouts), so no
+        // peer is left waiting on a rendezvous this rank had entered.
+        if let Some(worker) = self.worker.get_mut().unwrap().take() {
+            drop(worker.tx);
+            let _ = worker.join.join();
+        }
     }
 }
 
@@ -611,11 +803,16 @@ impl Collective for ThreadComm {
         self.inner.n
     }
 
+    // Blocking ops flush the comm worker first: a rank must never have
+    // two threads inside the rendezvous gate at once.
+
     fn try_barrier(&self, timeout: Duration) -> CommResult<()> {
+        self.flush_worker();
         self.try_barrier_impl(timeout)
     }
 
     fn try_all_reduce_mean(&self, buf: &mut [f32], timeout: Duration) -> CommResult<()> {
+        self.flush_worker();
         self.try_all_reduce_mean_impl(buf, timeout)
     }
 
@@ -625,6 +822,7 @@ impl Collective for ThreadComm {
         shards: &[(usize, usize)],
         timeout: Duration,
     ) -> CommResult<()> {
+        self.flush_worker();
         self.try_all_gather_impl(full, shards, timeout)
     }
 
@@ -634,6 +832,7 @@ impl Collective for ThreadComm {
         shards: &[(usize, usize)],
         timeout: Duration,
     ) -> CommResult<()> {
+        self.flush_worker();
         self.try_reduce_scatter_mean_impl(full, shards, timeout)
     }
 
@@ -643,6 +842,7 @@ impl Collective for ThreadComm {
         shards: &[(usize, usize)],
         timeout: Duration,
     ) -> CommResult<()> {
+        self.flush_worker();
         self.try_reduce_scatter_sum_impl(full, shards, timeout)
     }
 
@@ -653,6 +853,7 @@ impl Collective for ThreadComm {
         weights: &[f32],
         timeout: Duration,
     ) -> CommResult<()> {
+        self.flush_worker();
         self.try_reduce_scatter_weighted_impl(full, shards, weights, timeout)
     }
 
@@ -662,11 +863,88 @@ impl Collective for ThreadComm {
         shards: &[(usize, usize)],
         timeout: Duration,
     ) -> CommResult<()> {
+        self.flush_worker();
         self.try_reduce_scatter_mean_q8_impl(full, shards, timeout)
     }
 
     fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()> {
+        self.flush_worker();
         self.try_broadcast_impl(buf, root, timeout)
+    }
+
+    // Nonblocking ops queue to the comm worker and return immediately;
+    // results are bitwise what the blocking op would have produced,
+    // because the worker runs the very same impls in issue order.
+
+    fn start_all_reduce_mean(&self, buf: Vec<f32>, timeout: Duration) -> CommHandle {
+        let (reply, rx) = mpsc::channel();
+        match self.issue(Job::AllReduceMean { buf, timeout, reply }) {
+            Some(failed) => failed,
+            None => CommHandle::thread(rx),
+        }
+    }
+
+    fn start_reduce_scatter_mean(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        let (reply, rx) = mpsc::channel();
+        let job = Job::ReduceScatterMean { full, shards: shards.to_vec(), timeout, reply };
+        match self.issue(job) {
+            Some(failed) => failed,
+            None => CommHandle::thread(rx),
+        }
+    }
+
+    fn start_reduce_scatter_mean_q8(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        let (reply, rx) = mpsc::channel();
+        let job = Job::ReduceScatterMeanQ8 { full, shards: shards.to_vec(), timeout, reply };
+        match self.issue(job) {
+            Some(failed) => failed,
+            None => CommHandle::thread(rx),
+        }
+    }
+
+    fn start_reduce_scatter_weighted(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        weights: &[f32],
+        timeout: Duration,
+    ) -> CommHandle {
+        let (reply, rx) = mpsc::channel();
+        let job = Job::ReduceScatterWeighted {
+            full,
+            shards: shards.to_vec(),
+            weights: weights.to_vec(),
+            timeout,
+            reply,
+        };
+        match self.issue(job) {
+            Some(failed) => failed,
+            None => CommHandle::thread(rx),
+        }
+    }
+
+    fn start_all_gather(
+        &self,
+        full: Vec<f32>,
+        shards: &[(usize, usize)],
+        timeout: Duration,
+    ) -> CommHandle {
+        let (reply, rx) = mpsc::channel();
+        let job = Job::AllGather { full, shards: shards.to_vec(), timeout, reply };
+        match self.issue(job) {
+            Some(failed) => failed,
+            None => CommHandle::thread(rx),
+        }
     }
 }
 

@@ -158,6 +158,17 @@ pub struct TrainConfig {
     /// for layer-wise strategies with N > 1 (a single replica keeps the
     /// full-matrix path — there is nothing to shard across).
     pub shard_outer: bool,
+    /// Software-pipeline the layer-wise sync sweep: module `m`'s
+    /// combine/apply/adopt completes while module `m+1` is loaded and
+    /// screened, through double-buffered
+    /// [`ModuleLane`](crate::coordinator::scratch::ModuleLane)s
+    /// (full-matrix path) or the per-module shard combine (sharded
+    /// path). This is the trainer-side twin of the driver's nonblocking
+    /// issue/wait schedule; results are bitwise identical to the
+    /// sequential sweep on every preset × payload × shard combination
+    /// (tests/scheduler_determinism.rs). Default on; turn off to force
+    /// the historical strictly-sequential order.
+    pub overlap_sync: bool,
     /// Deterministic fault schedule (crash / hang / rejoin events keyed
     /// on the local-round counter; see [`crate::fault`]). Empty by
     /// default — the harness is compiled in but completely inactive, so
@@ -225,6 +236,7 @@ impl TrainConfig {
             // (bitwise identical numerics, full-matrix memory). Flat
             // strategies never engage it regardless.
             shard_outer: spec.shard_outer_state,
+            overlap_sync: true,
             fault_plan: crate::fault::FaultPlan::default(),
             // Two step-times of grace before a straggling member is
             // declared dead at a barrier.

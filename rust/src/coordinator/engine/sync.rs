@@ -48,10 +48,23 @@
 //! behind the forward compute of the modules pipelined after it, so the
 //! exposed residual is the pipeline stall (first module fully exposed),
 //! not the full serial communication time.
+//!
+//! Overlap execution (`TrainConfig::overlap_sync`, default on): both
+//! implementations additionally *run* the priced schedule — module m's
+//! completion half (combine → β → apply → adopt) executes one module
+//! behind the issue half (load → screen → weights), double-buffered
+//! through [`ModuleLane`]s on the full-matrix path and via the
+//! per-module shard combine on the sharded path. The reorder only
+//! commutes data-disjoint work, so results are bitwise identical to the
+//! strictly sequential sweep; the real nonblocking collectives behind
+//! the same schedule live in `collectives::driver` (`start_*` /
+//! `CommHandle`), where the measured `exposed_sync_fraction` bench row
+//! cross-validates this plan's analytic `sync_exposed`.
 
 use anyhow::Result;
 
 use crate::collectives::CollOp;
+use crate::coordinator::scratch::ModuleLane;
 use crate::coordinator::spec::MethodSpec;
 use crate::metrics::TimelineEvent;
 use crate::simulator::stepmodel::StepModel;
@@ -354,6 +367,14 @@ fn layerwise_sync(t: &mut Trainer, members: &[usize]) -> Result<u64> {
 fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
     t.detector.set_config(t.cfg.spec.penalty);
     let threads = t.cfg.worker_threads;
+    let num_modules = t.table.num_modules();
+    // Overlapped schedule: module m's shard combine + β issue while the
+    // scalar control plane is already screening module m+1 — the
+    // trainer-side twin of the driver's issue/wait pipeline. The
+    // per-part combine kernels and the β folds are unchanged and the
+    // phases touch disjoint state, so results stay bitwise identical to
+    // the strict phase order (tests/scheduler_determinism.rs).
+    let overlap = t.cfg.overlap_sync && num_modules > 1;
     // Phase 1: reduce-scatter the members' pseudo-gradients into the
     // owned shard lanes (per-range norm partials recorded).
     {
@@ -364,7 +385,7 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
     // Phase 2 (scalar control plane, module order): range-order norm
     // fold → anomaly screen → scalar-norm exchange → softmax weights.
     let mut rollbacks = 0u64;
-    for module in 0..t.table.num_modules() {
+    for module in 0..num_modules {
         t.scratch.shard_fold_norms(module);
         if t.debug_norms {
             eprintln!(
@@ -387,21 +408,20 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
         if !ok {
             rollbacks += 1;
         }
+        if overlap && module >= 1 {
+            shard_combine_and_beta(t, module - 1);
+        }
     }
-    // Phase 3: shard-local weighted combine.
-    t.scratch.shard_combine(threads);
-    // Phase 4: clip-β per module from the range-order partial fold.
-    for module in 0..t.table.num_modules() {
-        if t.scratch.shard_rollback(module) {
-            continue;
+    if overlap {
+        // Drain the pipeline tail.
+        shard_combine_and_beta(t, num_modules - 1);
+    } else {
+        // Phase 3: shard-local weighted combine.
+        t.scratch.shard_combine(threads);
+        // Phase 4: clip-β per module from the range-order partial fold.
+        for module in 0..num_modules {
+            shard_combine_beta_only(t, module);
         }
-        let module_sq = t.scratch.shard_module_sq(module);
-        let mut beta = 1.0f64;
-        if t.cfg.spec.penalty.gradient_clip {
-            let norm = module_sq.sqrt();
-            beta = (t.cfg.spec.penalty.phi / (norm + t.cfg.spec.penalty.eps)).min(1.0);
-        }
-        t.scratch.shard_set_beta(module, beta as f32);
     }
     // Phase 5: shard-local outer apply over disjoint anchor/momentum
     // slices, then the all-gather adoption — each member adopts the
@@ -416,43 +436,44 @@ fn layerwise_sync_sharded(t: &mut Trainer, members: &[usize]) -> Result<u64> {
     Ok(rollbacks)
 }
 
+/// Module `m`'s clip-β from the range-order combined-norm fold
+/// (phase 4 of the sharded pipeline). Rolled-back modules keep their
+/// previous β — the apply skips them anyway.
+fn shard_combine_beta_only(t: &mut Trainer, m: usize) {
+    if t.scratch.shard_rollback(m) {
+        return;
+    }
+    let module_sq = t.scratch.shard_module_sq(m);
+    let mut beta = 1.0f64;
+    if t.cfg.spec.penalty.gradient_clip {
+        let norm = module_sq.sqrt();
+        beta = (t.cfg.spec.penalty.phi / (norm + t.cfg.spec.penalty.eps)).min(1.0);
+    }
+    t.scratch.shard_set_beta(m, beta as f32);
+}
+
+/// Overlapped-schedule completion for one module: shard-local combine of
+/// exactly its parts, then the β fold — issued one module behind the
+/// scalar control plane.
+fn shard_combine_and_beta(t: &mut Trainer, m: usize) {
+    t.scratch.shard_combine_module(m);
+    shard_combine_beta_only(t, m);
+}
+
 /// Full-matrix reference implementation of the layer-wise sync (the
 /// historical sequential per-module sweep; `shard_outer = false`).
 fn layerwise_sync_reference(t: &mut Trainer, members: &[usize]) -> Result<u64> {
     t.detector.set_config(t.cfg.spec.penalty);
+    if t.cfg.overlap_sync && t.table.num_modules() > 1 {
+        return layerwise_sync_reference_overlapped(t, members);
+    }
     let mut rollbacks = 0u64;
     // Module ranges partition the flat vector and each apply only
     // touches its own module, so computing Δ lazily per module from the
     // in-place-updated anchor is exact — and so is adopting the anchor
     // back into member parameters module by module.
     for module in 0..t.table.num_modules() {
-        {
-            let replicas = &t.replicas;
-            t.scratch.load_module_subset(
-                module,
-                members,
-                |j| replicas[j].params.as_slice(),
-                &t.anchor,
-            );
-        }
-        if t.debug_norms {
-            eprintln!(
-                "sync {} module {module} members {members:?}: norms {:?}",
-                t.syncs,
-                t.scratch.norms()
-            );
-        }
-        {
-            let (norms, screened) = t.scratch.screen_buffers();
-            t.detector
-                .screen_subset_into(module, members, norms, screened);
-        }
-        // Scalar norm exchange in every member's shard group (cheap).
-        for &j in members {
-            let (bytes, secs) = t.plan.scalar_sync[j];
-            t.comm.record(bytes, secs);
-        }
-        if !t.scratch.compute_weights(t.cfg.spec.penalty.weighted_averaging) {
+        if !screen_and_weigh(t, module, members) {
             rollbacks += 1;
             // θ stays at the anchor for this module (rollback); members
             // still re-adopt it, discarding their local divergence.
@@ -472,6 +493,89 @@ fn layerwise_sync_reference(t: &mut Trainer, members: &[usize]) -> Result<u64> {
         adopt_module(t, module, members);
     }
     Ok(rollbacks)
+}
+
+/// Overlapped (software-pipelined) full-matrix sweep: the issue half of
+/// module `m` (load → screen → weights → stage into a [`ModuleLane`])
+/// runs while module `m-1`'s completion half (combine → β → outer apply
+/// → adopt) is still outstanding, double-buffered across two lanes.
+///
+/// Bitwise-identical to the sequential sweep: the lane replays the same
+/// kernel calls in the same order on staged copies of the same values,
+/// and the deferred writes (anchor module `m-1`, member params module
+/// `m-1`) are disjoint from the deferred reads (params/anchor module
+/// `m`) because module ranges partition the flat vector. The detector
+/// screen and the comm charges stay strictly in module order on the
+/// issue side.
+fn layerwise_sync_reference_overlapped(t: &mut Trainer, members: &[usize]) -> Result<u64> {
+    let num_modules = t.table.num_modules();
+    let mut rollbacks = 0u64;
+    let mut lanes = t.scratch.take_overlap_lanes();
+    for module in 0..num_modules {
+        let ok = screen_and_weigh(t, module, members);
+        if !ok {
+            rollbacks += 1;
+        }
+        t.scratch
+            .stage_module_lane(&mut lanes[module % 2], module, members.len(), !ok);
+        if module >= 1 {
+            complete_lane(t, &mut lanes[(module - 1) % 2], members);
+        }
+    }
+    // Drain the pipeline tail.
+    complete_lane(t, &mut lanes[(num_modules - 1) % 2], members);
+    t.scratch.put_overlap_lanes(lanes);
+    Ok(rollbacks)
+}
+
+/// The issue half of one module's full-matrix sweep: load the members'
+/// pseudo-gradients, anomaly-screen the norms, charge the scalar
+/// exchange, and compute the combine weights. Returns `false` when the
+/// module rolls back (every member anomalous).
+fn screen_and_weigh(t: &mut Trainer, module: usize, members: &[usize]) -> bool {
+    {
+        let replicas = &t.replicas;
+        t.scratch.load_module_subset(
+            module,
+            members,
+            |j| replicas[j].params.as_slice(),
+            &t.anchor,
+        );
+    }
+    if t.debug_norms {
+        eprintln!(
+            "sync {} module {module} members {members:?}: norms {:?}",
+            t.syncs,
+            t.scratch.norms()
+        );
+    }
+    {
+        let (norms, screened) = t.scratch.screen_buffers();
+        t.detector
+            .screen_subset_into(module, members, norms, screened);
+    }
+    // Scalar norm exchange in every member's shard group (cheap).
+    for &j in members {
+        let (bytes, secs) = t.plan.scalar_sync[j];
+        t.comm.record(bytes, secs);
+    }
+    t.scratch.compute_weights(t.cfg.spec.penalty.weighted_averaging)
+}
+
+/// The completion half of one staged module: weighted combine, clip-β,
+/// outer apply, and member adoption — all from the lane's detached
+/// copies, one module behind the issue side.
+fn complete_lane(t: &mut Trainer, lane: &mut ModuleLane, members: &[usize]) {
+    if !lane.rolled_back {
+        lane.combine();
+        let mut beta = 1.0f64;
+        if t.cfg.spec.penalty.gradient_clip {
+            let norm = lane.sq.sqrt();
+            beta = (t.cfg.spec.penalty.phi / (norm + t.cfg.spec.penalty.eps)).min(1.0);
+        }
+        lane.apply(&mut t.outer, &mut t.anchor, beta as f32);
+    }
+    adopt_module(t, lane.module, members);
 }
 
 /// Copy the anchor's module slices into each member's parameters — the

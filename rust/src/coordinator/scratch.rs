@@ -157,6 +157,66 @@ where
     }
 }
 
+/// One module's staged sync state for the overlapped (software-
+/// pipelined) full-matrix sweep: a compact member-major copy of the
+/// module's Δ rows plus the committed weights, detached from the shared
+/// arena so the arena can load module `m+1` while this module's
+/// combine/apply completes. Two lanes double-buffer the pipeline;
+/// buffers are reused across rounds (steady-state zero-allocation once
+/// each lane has seen its largest module).
+#[derive(Debug, Default)]
+pub struct ModuleLane {
+    /// Module staged in this lane.
+    pub(crate) module: usize,
+    /// Module length (sum of range lens; row stride of `deltas`).
+    mlen: usize,
+    /// Member-compacted Δ rows over the module (row i = member i).
+    deltas: Vec<f32>,
+    /// Committed softmax combine weights (len = member count).
+    weights: Vec<f32>,
+    /// Weighted-combine output, module-contiguous.
+    combined: Vec<f32>,
+    /// (flat offset, len) of the module's ranges, in flat order.
+    ranges: Vec<(usize, usize)>,
+    /// Combined squared norm (set by [`Self::combine`]).
+    pub(crate) sq: f64,
+    /// Module was rolled back (all members anomalous): skip combine and
+    /// apply, members just re-adopt the unchanged anchor.
+    pub(crate) rolled_back: bool,
+}
+
+impl ModuleLane {
+    /// Weighted combine over the staged rows — per range, the same
+    /// kernel call sequence (and therefore the same f64 association) as
+    /// [`SyncScratch::combine_module`], just with module-local offsets
+    /// into the compact copy.
+    pub(crate) fn combine(&mut self) {
+        let mut cursor = 0usize;
+        let mut sq = 0.0f64;
+        for &(_, len) in &self.ranges {
+            sq += kernels::weighted_sum_sq_strided(
+                &mut self.combined[cursor..cursor + len],
+                &self.deltas,
+                self.mlen,
+                cursor,
+                &self.weights,
+            );
+            cursor += len;
+        }
+        self.sq = sq;
+    }
+
+    /// Outer-optimizer apply of the staged combine — the
+    /// [`SyncScratch::apply_module`] sweep reading from the lane.
+    pub(crate) fn apply(&self, outer: &mut OuterOpt, anchor: &mut [f32], beta: f32) {
+        let mut cursor = 0usize;
+        for &(offset, len) in &self.ranges {
+            outer.apply_range_scaled(anchor, &self.combined[cursor..cursor + len], offset, beta);
+            cursor += len;
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct SyncScratch {
     /// Row-major pseudo-gradient matrix: row j at `[j*params, (j+1)*params)`.
@@ -191,6 +251,10 @@ pub struct SyncScratch {
     /// ZeRO-1-style shard lanes (`TrainConfig::shard_outer`); `None`
     /// runs the historical full-matrix path.
     shards: Option<ShardState>,
+    /// Double-buffered [`ModuleLane`]s for the overlapped full-matrix
+    /// sweep, parked here between syncs so their buffers are reused
+    /// (empty until the first overlapped sync takes them).
+    overlap_lanes: Vec<ModuleLane>,
 }
 
 impl SyncScratch {
@@ -218,6 +282,7 @@ impl SyncScratch {
             payload: PayloadKind::F32,
             residuals: Vec::new(),
             shards: None,
+            overlap_lanes: Vec::new(),
         }
     }
 
@@ -559,6 +624,65 @@ impl SyncScratch {
         }
     }
 
+    /// Detach the double-buffered overlap lanes (first call creates the
+    /// two empty lanes; afterwards their buffers persist across syncs).
+    /// Taking them out of `self` lets the caller mutate a lane while the
+    /// arena loads the next module — return them with
+    /// [`Self::put_overlap_lanes`] when the sweep finishes.
+    pub fn take_overlap_lanes(&mut self) -> Vec<ModuleLane> {
+        let mut lanes = std::mem::take(&mut self.overlap_lanes);
+        while lanes.len() < 2 {
+            lanes.push(ModuleLane::default());
+        }
+        lanes
+    }
+
+    /// Park the overlap lanes back in the arena for reuse.
+    pub fn put_overlap_lanes(&mut self, lanes: Vec<ModuleLane>) {
+        self.overlap_lanes = lanes;
+    }
+
+    /// Stage module `m`'s sync state into `lane`: a compact member-major
+    /// copy of the Δ rows over the module's ranges plus the committed
+    /// weights. Call after [`Self::load_module_subset`] and
+    /// [`Self::compute_weights`] for `m` — the arena is free to load the
+    /// next module afterwards. A rolled-back module stages only the
+    /// flag and ranges (the combine/apply are skipped; members re-adopt
+    /// the unchanged anchor).
+    pub fn stage_module_lane(
+        &self,
+        lane: &mut ModuleLane,
+        m: usize,
+        members: usize,
+        rolled_back: bool,
+    ) {
+        let ranges = &self.module_ranges[m];
+        let mlen: usize = ranges.iter().map(|r| r.len).sum();
+        lane.module = m;
+        lane.mlen = mlen;
+        lane.sq = 0.0;
+        lane.rolled_back = rolled_back;
+        lane.ranges.clear();
+        lane.ranges.extend(ranges.iter().map(|r| (r.offset, r.len)));
+        if rolled_back {
+            return;
+        }
+        lane.weights.clear();
+        lane.weights.extend_from_slice(&self.weights[..members]);
+        lane.combined.resize(mlen, 0.0);
+        lane.deltas.resize(members * mlen, 0.0);
+        for i in 0..members {
+            let src = i * self.params;
+            let dst = i * mlen;
+            let mut cursor = 0usize;
+            for r in ranges {
+                lane.deltas[dst + cursor..dst + cursor + r.len]
+                    .copy_from_slice(&self.deltas[src + r.offset..src + r.offset + r.len]);
+                cursor += r.len;
+            }
+        }
+    }
+
     /// Uniform mean of the Δ rows into the internal mean buffer.
     pub fn mean_deltas(&mut self) -> &[f32] {
         let w = 1.0 / self.replicas as f32;
@@ -718,6 +842,38 @@ impl SyncScratch {
                 );
             }
         });
+    }
+
+    /// Single-module variant of [`Self::shard_combine`] for the
+    /// overlapped sweep: combine exactly module `m`'s parts (same kernel
+    /// call per part, so bitwise identical — parts are data-disjoint and
+    /// the per-part fold is self-contained). No-op for a rolled-back
+    /// module, matching the full-phase skip.
+    pub fn shard_combine_module(&mut self, m: usize) {
+        let replicas = self.replicas;
+        let st = self.shards.as_mut().expect("sharding not enabled");
+        if st.rollback[m] {
+            return;
+        }
+        let members = st.members;
+        let ShardState { lanes, weights_mat, module_slots, .. } = st;
+        let w = &weights_mat[m * replicas..m * replicas + members];
+        for &(lane, slot) in &module_slots[m] {
+            let lane = &mut lanes[lane as usize];
+            let slot = slot as usize;
+            let (local, len) = {
+                let p = &lane.parts[slot];
+                debug_assert_eq!(p.module, m);
+                (p.local, p.len)
+            };
+            lane.combine_sq[slot] = kernels::weighted_sum_sq_strided(
+                &mut lane.combined[local..local + len],
+                &lane.deltas,
+                lane.len,
+                local,
+                w,
+            );
+        }
     }
 
     /// Phase 4a: module `m`'s combined squared norm, folded from the

@@ -67,8 +67,10 @@ fn usage() -> &'static str {
             bound address, serves N workers, prints a membership report)
   worker:   --join ADDR (connect a rank to a rendezvous hub) or --local N
             (reference run on N in-process threads); --params N --rounds N
-            --inner-steps N --seed N --payload f32|int8 — both paths print
-            digest=0x... lines that must match bitwise at equal configs
+            --inner-steps N --seed N --payload f32|int8 --modules N
+            --overlap (nonblocking layer-wise schedule, bitwise equal to
+            blocking) — both paths print digest=0x... lines that must
+            match bitwise at equal configs
   info:     [--model NAME]"
 }
 
@@ -446,6 +448,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         inner_lr: args.f64("inner-lr", d.inner_lr as f64) as f32,
         payload: DriverPayload::parse(&payload)
             .ok_or_else(|| anyhow::anyhow!("--payload: expected f32|int8, got '{payload}'"))?,
+        modules: args.usize("modules", d.modules).max(1),
+        overlap: args.flag("overlap"),
         ..d
     };
 

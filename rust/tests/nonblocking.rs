@@ -1,0 +1,201 @@
+//! Nonblocking collective semantics (`start_*` / `CommHandle` /
+//! `wait_handle`) on both backends:
+//!
+//!  * issue/wait round-trips produce the exact blocking results, in
+//!    issue order, past the `PIPELINE_WINDOW` backpressure bound;
+//!  * a `CommHandle` dropped without `wait()` must not deadlock the
+//!    comm worker, leak an in-flight slot, or poison the next round —
+//!    on `ThreadComm` the worker's reply send just fails; on
+//!    `SocketComm` the abandoned op stays in the pipeline until its
+//!    result frame arrives and is garbage-collected after resolution
+//!    (`docs/WIRE_PROTOCOL.md` §4.2);
+//!  * the overlapped multi-module driver schedule ends at the bitwise
+//!    digest of the blocking schedule on BOTH transports, for both wire
+//!    payload lanes.
+
+use std::time::Duration;
+
+use edit_train::collectives::driver::{run_local_group, run_worker, DriverConfig, DriverPayload};
+use edit_train::collectives::{
+    Collective, ConnectOpts, Rendezvous, RendezvousConfig, SocketComm, ThreadComm,
+    PIPELINE_WINDOW,
+};
+
+const T: Duration = Duration::from_secs(10);
+
+/// Run one closure per rank over a loopback socket group, returning the
+/// per-rank results indexed by the assigned rank.
+fn run_socket_group<T2, F>(world: usize, f: F) -> Vec<T2>
+where
+    T2: Send,
+    F: Fn(&mut SocketComm) -> T2 + Sync,
+{
+    let hub = Rendezvous::bind(
+        "127.0.0.1:0",
+        RendezvousConfig { world, ..Default::default() },
+    )
+    .expect("bind rendezvous");
+    let addr = hub.addr().to_string();
+    let mut out: Vec<Option<T2>> = (0..world).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let addr = addr.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let mut comm =
+                        SocketComm::connect(&addr, ConnectOpts::default()).expect("join hub");
+                    let rank = comm.rank();
+                    let v = f(&mut comm);
+                    comm.close();
+                    (rank, v)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, v) = h.join().expect("socket worker panicked");
+            out[rank] = Some(v);
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run one closure per rank over an in-process `ThreadComm` group.
+fn run_thread_group<T2, F>(world: usize, f: F) -> Vec<T2>
+where
+    T2: Send,
+    F: Fn(&ThreadComm) -> T2 + Sync,
+{
+    let comms = ThreadComm::group(world);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .iter()
+            .map(|c| {
+                let f = &f;
+                s.spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("thread worker panicked")).collect()
+    })
+}
+
+/// Issue `ops` all-reduces through the nonblocking window (twice the
+/// backpressure bound), then wait them in issue order; every result
+/// must equal the blocking mean for its salt. Exercises queue-full
+/// backpressure on both backends.
+fn window_sweep<C: Collective + ?Sized>(c: &C, len: usize, ops: usize) -> Vec<Vec<f32>> {
+    let world = c.size();
+    c.try_barrier(T).unwrap();
+    let handles: Vec<_> = (0..ops)
+        .map(|i| {
+            let buf = vec![c.rank() as f32 + i as f32; len];
+            c.start_all_reduce_mean(buf, T)
+        })
+        .collect();
+    let expected_base = (0..world).map(|r| r as f32).sum::<f32>() / world as f32;
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| {
+            let out = c.wait_handle(h).unwrap();
+            assert_eq!(out.len(), len, "op {i}: length");
+            for &x in &out {
+                assert_eq!(
+                    x.to_bits(),
+                    (expected_base + i as f32).to_bits(),
+                    "op {i}: wrong mean"
+                );
+            }
+            out
+        })
+        .collect()
+}
+
+#[test]
+fn window_backpressure_completes_in_issue_order_on_both_backends() {
+    let ops = 2 * PIPELINE_WINDOW + 1;
+    for world in [1usize, 2, 3] {
+        let thread = run_thread_group(world, |c| window_sweep(c, 37, ops));
+        let socket = run_socket_group(world, |c: &mut SocketComm| window_sweep(&*c, 37, ops));
+        for rank in 0..world {
+            assert_eq!(thread[rank], socket[rank], "world={world} rank={rank}");
+        }
+    }
+}
+
+/// Issue, drop without waiting, then keep using the group: the dropped
+/// op still ran collectively (every rank issued it), the next blocking
+/// op must flush it through and return correct bits, and a full driver
+/// round afterwards must complete with clean membership.
+fn drop_and_continue<C: Collective + ?Sized>(c: &C, cfg: &DriverConfig) -> (Vec<f32>, u64) {
+    let world = c.size();
+    c.try_barrier(T).unwrap();
+    // Drop one mid-flight handle...
+    drop(c.start_all_reduce_mean(vec![c.rank() as f32; 29], T));
+    // ...and one of a pair, waiting only the second.
+    let _first = c.start_all_reduce_mean(vec![c.rank() as f32 * 2.0; 29], T);
+    let second = c.start_all_reduce_mean(vec![c.rank() as f32 + 10.0; 29], T);
+    let out = c.wait_handle(second).unwrap();
+    drop(_first);
+    let expected = (0..world).map(|r| r as f32 + 10.0).sum::<f32>() / world as f32;
+    for &x in &out {
+        assert_eq!(x.to_bits(), expected.to_bits(), "post-drop op corrupted");
+    }
+    // A blocking op right after the drops: both backends flush the
+    // pipeline first, so this is the slot-leak / deadlock probe.
+    let mut buf = vec![c.rank() as f32; 17];
+    c.try_all_reduce_mean(&mut buf, T).unwrap();
+    // And an entire driver round on the same comm: membership stays
+    // clean (no spurious evictions from the abandoned op).
+    let outcome = run_worker(c, cfg).unwrap();
+    assert!(outcome.evictions.is_empty(), "dropped handle poisoned membership");
+    (buf, outcome.digest)
+}
+
+#[test]
+fn dropped_handle_neither_deadlocks_nor_leaks_a_slot() {
+    let cfg = DriverConfig { params: 193, rounds: 2, ..Default::default() };
+    for world in [2usize, 3] {
+        let thread = run_thread_group(world, |c| drop_and_continue(c, &cfg));
+        let socket =
+            run_socket_group(world, |c: &mut SocketComm| drop_and_continue(&*c, &cfg));
+        for rank in 0..world {
+            assert_eq!(thread[rank].0, socket[rank].0, "world={world} rank={rank}");
+            assert_eq!(thread[rank].1, socket[rank].1, "world={world} rank={rank} digest");
+        }
+        // Sanity: the post-drop driver run matches a fresh group's.
+        let fresh = run_local_group(world, &cfg).unwrap();
+        assert_eq!(thread[0].1, fresh[0].digest, "world={world}");
+    }
+}
+
+#[test]
+fn overlapped_driver_schedule_matches_blocking_on_both_backends() {
+    // The end-to-end tentpole property over the real wire: a 4-module
+    // overlapped EDiT run (pipelined frames in flight while the next
+    // module computes) ends at the exact blocking digest, per payload
+    // lane. params=257 gives uneven module and rank shards plus a
+    // quant-chunk remainder.
+    for payload in [DriverPayload::F32, DriverPayload::Int8] {
+        let blocking = DriverConfig {
+            params: 257,
+            rounds: 3,
+            modules: 4,
+            payload,
+            overlap: false,
+            ..Default::default()
+        };
+        let overlapped = DriverConfig { overlap: true, ..blocking.clone() };
+        let reference = run_local_group(2, &blocking).unwrap();
+        let local = run_local_group(2, &overlapped).unwrap();
+        assert_eq!(local[0].digest, reference[0].digest, "{payload:?}: thread backend");
+        let socket = run_socket_group(2, |c: &mut SocketComm| {
+            run_worker(&*c, &overlapped).unwrap()
+        });
+        assert_eq!(socket[0].anchor, socket[1].anchor, "{payload:?}: ranks disagree");
+        assert_eq!(
+            socket[0].digest, reference[0].digest,
+            "{payload:?}: socket overlapped diverged from blocking reference"
+        );
+    }
+}

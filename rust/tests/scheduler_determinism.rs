@@ -13,6 +13,8 @@
 //!  * under a consistent ~2× straggler, A-EDiT's anchor syncs beat
 //!    EDiT's barriered wall-clock by ≥1.5× and workers stop sharing a
 //!    post-sync clock (the ISSUE's acceptance criteria);
+//!  * overlapped layer-wise sync (`overlap_sync`) on vs off ⇒ bitwise-
+//!    identical runs across preset × payload × shard × thread count;
 //!  * CO2's staleness queue flushes at end of run (regression for the
 //!    historical silent drop);
 //!  * elastic rescale drains the event state mid-schedule, survives
@@ -290,6 +292,42 @@ fn shard_outer_on_off_bitwise_identical() {
             assert_bitwise_equal(&on, &off);
             assert!(on.scratch().sharded(), "{method:?}: sharding must engage");
             assert!(!off.scratch().sharded());
+        }
+    }
+}
+
+#[test]
+fn overlap_sync_on_off_bitwise_identical() {
+    // The nonblocking-sync acceptance criterion: the overlapped
+    // layer-wise schedule (double-buffered `ModuleLane`s on the
+    // full-matrix path, per-module combine interleaved into the scalar
+    // sweep on the sharded path) must reproduce the blocking sweep
+    // BITWISE on every preset × payload × shard × worker-thread
+    // combination — it is a reordering of the same kernel calls, not a
+    // different computation. A random straggler fragments the A-EDiT /
+    // PALSGD event groups so partial member sets are covered too.
+    use edit_train::coordinator::MethodSpec;
+    for method in [Method::Edit, Method::AEdit, Method::Palsgd] {
+        for payload in ["", ",payload=int8"] {
+            for shard in [false, true] {
+                for threads in [1usize, 3] {
+                    let descriptor = format!("custom:base={}{payload}", method.name());
+                    let (spec, label) = MethodSpec::parse(&descriptor).unwrap();
+                    let run = |overlap: bool| {
+                        let mut t = trainer_from_spec(spec, &label, |c| {
+                            c.overlap_sync = overlap;
+                            c.shard_outer = shard;
+                            c.worker_threads = threads;
+                            c.straggler = Straggler::Random { lag: 0.7 };
+                        });
+                        t.run().unwrap();
+                        t
+                    };
+                    let on = run(true);
+                    let off = run(false);
+                    assert_bitwise_equal(&on, &off);
+                }
+            }
         }
     }
 }

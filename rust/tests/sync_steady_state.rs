@@ -152,4 +152,30 @@ fn trainer_rounds_allocation_free_in_steady_state() {
         );
         assert!(t.syncs >= 8, "edit payload=int8: {} syncs", t.syncs);
     }
+
+    // Overlapped layer-wise sync (`overlap_sync`, default on): the
+    // full-matrix path pipelines through two double-buffered
+    // `ModuleLane`s and the sharded path interleaves the per-module
+    // combine into the scalar sweep. The lanes are owned by
+    // `SyncScratch` (`take_overlap_lanes`/`put_overlap_lanes`) and
+    // their buffers are recycled with clear/extend/resize, so steady
+    // state must stay allocation-free with the pipeline engaged — and
+    // with it disabled (the blocking reference sweep kept as the
+    // bitwise twin must not regress either).
+    for shard_outer in [true, false] {
+        for overlap in [true, false] {
+            let (spec, _) = MethodSpec::parse("custom:base=edit").unwrap();
+            let mut t = trainer_spec(spec, "edit-overlap", shard_outer);
+            t.cfg.overlap_sync = overlap;
+            for _ in 0..4 {
+                t.run_round().unwrap();
+            }
+            let allocs = min_window_allocs(&mut t);
+            assert_eq!(
+                allocs, 0,
+                "edit overlap_sync={overlap} (shard_outer={shard_outer}): {allocs} heap allocations in 6 steady-state rounds"
+            );
+            assert!(t.syncs >= 8, "edit overlap_sync={overlap}: {} syncs", t.syncs);
+        }
+    }
 }

@@ -6,7 +6,11 @@
 # The digests must be BITWISE identical — this is the acceptance
 # property of the fold-order contract (docs/WIRE_PROTOCOL.md §5) checked
 # on actual processes and actual sockets, not threads. Runs both wire
-# payload lanes (f32 and int8).
+# payload lanes (f32 and int8), each in two modes: the blocking
+# single-module schedule, and the overlapped 4-module schedule
+# (--modules 4 --overlap — pipelined Contribute frames in flight while
+# the next module computes, WIRE_PROTOCOL.md §4.2) diffed against the
+# BLOCKING single-process reference at the same module layout.
 #
 # Usage: scripts/smoke_multiproc.sh  (expects rust/target/release built;
 # override the binary with BIN=path).
@@ -31,8 +35,19 @@ trap cleanup EXIT
 
 fail=0
 for payload in f32 int8; do
-    out="$WORKDIR/$payload"
+for mode in blocking overlapped; do
+    out="$WORKDIR/$payload-$mode"
     mkdir -p "$out"
+    # Worker args per mode. The overlapped leg runs the 4-module
+    # nonblocking schedule over the socket (pipelined frames); the
+    # local reference deliberately stays BLOCKING at the same module
+    # layout — the overlapped schedule must reproduce its digest.
+    wargs=(--payload "$payload")
+    largs=(--payload "$payload")
+    if [[ "$mode" == overlapped ]]; then
+        wargs+=(--modules 4 --overlap)
+        largs+=(--modules 4)
+    fi
 
     # Hub on an ephemeral port; parse the address it prints.
     "$BIN" rendezvous --bind 127.0.0.1:0 --world 2 >"$out/hub.log" 2>&1 &
@@ -43,52 +58,53 @@ for payload in f32 int8; do
         addr=$(sed -n 's/^rendezvous listening on \([^ ]*\).*/\1/p' "$out/hub.log" | head -n1)
         [[ -n "$addr" ]] && break
         if ! kill -0 "$hub_pid" 2>/dev/null; then
-            echo "smoke_multiproc: hub died before binding ($payload)" >&2
+            echo "smoke_multiproc: hub died before binding ($payload/$mode)" >&2
             cat "$out/hub.log" >&2
             exit 1
         fi
         sleep 0.05
     done
     if [[ -z "$addr" ]]; then
-        echo "smoke_multiproc: hub never printed its address ($payload)" >&2
+        echo "smoke_multiproc: hub never printed its address ($payload/$mode)" >&2
         exit 1
     fi
 
     # Two real worker processes against the hub.
-    "$BIN" worker --join "$addr" --payload "$payload" >"$out/w0.log" 2>&1 &
+    "$BIN" worker --join "$addr" "${wargs[@]}" >"$out/w0.log" 2>&1 &
     w0=$!
     PIDS+=("$w0")
-    "$BIN" worker --join "$addr" --payload "$payload" >"$out/w1.log" 2>&1 &
+    "$BIN" worker --join "$addr" "${wargs[@]}" >"$out/w1.log" 2>&1 &
     w1=$!
     PIDS+=("$w1")
     for pid in "$w0" "$w1" "$hub_pid"; do
         if ! wait "$pid"; then
-            echo "smoke_multiproc: pid $pid exited non-zero ($payload)" >&2
+            echo "smoke_multiproc: pid $pid exited non-zero ($payload/$mode)" >&2
             tail -v -n +1 "$out"/*.log >&2
             exit 1
         fi
     done
 
-    # In-process ThreadComm reference at the same config.
-    "$BIN" worker --local 2 --payload "$payload" >"$out/local.log" 2>&1
+    # In-process ThreadComm reference (blocking) at the same config.
+    "$BIN" worker --local 2 "${largs[@]}" >"$out/local.log" 2>&1
 
     sock0=$(grep -o 'digest=0x[0-9a-f]*' "$out/w0.log" | head -n1)
     sock1=$(grep -o 'digest=0x[0-9a-f]*' "$out/w1.log" | head -n1)
     ref=$(grep -o 'digest=0x[0-9a-f]*' "$out/local.log" | sort -u)
     if [[ -z "$sock0" || -z "$sock1" || -z "$ref" ]]; then
-        echo "smoke_multiproc: missing digest line ($payload)" >&2
+        echo "smoke_multiproc: missing digest line ($payload/$mode)" >&2
         tail -v -n +1 "$out"/*.log >&2
         exit 1
     fi
     if [[ $(wc -l <<<"$ref") -ne 1 ]]; then
-        echo "smoke_multiproc: local ranks disagree ($payload): $ref" >&2
+        echo "smoke_multiproc: local ranks disagree ($payload/$mode): $ref" >&2
         fail=1
     elif [[ "$sock0" != "$ref" || "$sock1" != "$ref" ]]; then
-        echo "smoke_multiproc: $payload digests diverge: sock0=$sock0 sock1=$sock1 local=$ref" >&2
+        echo "smoke_multiproc: $payload/$mode digests diverge: sock0=$sock0 sock1=$sock1 local=$ref" >&2
         fail=1
     else
-        echo "smoke_multiproc: $payload OK — 2-process socket run == in-process reference ($ref)"
+        echo "smoke_multiproc: $payload/$mode OK — 2-process socket run == blocking in-process reference ($ref)"
     fi
+done
 done
 
 if [[ "$fail" -ne 0 ]]; then
