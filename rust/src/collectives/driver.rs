@@ -27,10 +27,14 @@
 //!    survivors, restoring full coverage.
 
 use std::collections::BTreeSet;
+use std::io;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use crate::collectives::frame::{PayloadReader, PayloadWriter};
 use crate::collectives::{Collective, CommError, CommHandle, CommResult, RetryPolicy, ThreadComm};
 use crate::coordinator::outer::{OuterOpt, OuterOptKind};
+use crate::fault::{FaultKind, FaultPlan};
 use crate::tensor::{kernels, ShardSpec};
 use crate::util::prng::{mix, Rng};
 
@@ -82,6 +86,19 @@ pub struct DriverConfig {
     /// module `m+1`'s inner compute. Bitwise identical to the blocking
     /// schedule at equal `modules`.
     pub overlap: bool,
+    /// Wire-level chaos schedule: the `FaultKind::is_net` events keyed
+    /// to this rank are injected at the top of their round (link drops,
+    /// delays, partitions). Pure schedule — an empty plan is the
+    /// fast path, and injection never feeds a stochastic draw, so the
+    /// final anchor is unchanged by the plan (that is the whole point:
+    /// chaos runs must digest-match clean ones).
+    pub net_plan: FaultPlan,
+    /// Write a [`WorkerCheckpoint`] every `k` completed rounds
+    /// (`0` = never). Requires `checkpoint_dir`.
+    pub checkpoint_every: usize,
+    /// Directory for per-rank checkpoint files
+    /// (`ckpt-rank{r}-round{k}.bin`).
+    pub checkpoint_dir: Option<PathBuf>,
 }
 
 impl Default for DriverConfig {
@@ -102,6 +119,9 @@ impl Default for DriverConfig {
             },
             modules: 1,
             overlap: false,
+            net_plan: FaultPlan::default(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         }
     }
 }
@@ -151,6 +171,156 @@ pub fn build_shards(total: usize, world: usize, dead: &BTreeSet<usize>) -> Vec<(
         out[r] = spec.range(i);
     }
     out
+}
+
+/// Dead-set ⇄ bitmask (ranks are `< 64` everywhere in this codebase).
+fn dead_mask(dead: &BTreeSet<usize>) -> u64 {
+    dead.iter().fold(0u64, |m, &r| m | (1u64 << (r as u32 & 63)))
+}
+
+fn unpack_dead(mask: u64) -> BTreeSet<usize> {
+    (0..64usize).filter(|&r| mask & (1u64 << r) != 0).collect()
+}
+
+/// Split a 64-bit mask into three ≤22-bit chunks, each exact in an f32
+/// (22 < 24 mantissa bits), so membership can ride a broadcast of f32s
+/// without rounding. Inverse of [`f32s_to_mask`].
+fn mask_to_f32s(mask: u64) -> [f32; 3] {
+    [
+        (mask & 0x3F_FFFF) as f32,
+        ((mask >> 22) & 0x3F_FFFF) as f32,
+        (mask >> 44) as f32,
+    ]
+}
+
+fn f32s_to_mask(xs: &[f32]) -> u64 {
+    (xs[0] as u64) | ((xs[1] as u64) << 22) | ((xs[2] as u64) << 44)
+}
+
+const CKPT_MAGIC: &[u8; 8] = b"EDTWCKPT";
+const CKPT_VERSION: u8 = 1;
+
+/// One rank's round-boundary state, enough to rejoin a socket run
+/// bitwise: the synchronized anchor, the outer-optimizer momentum, the
+/// agreed dead-set, and every config field that feeds a draw. Written
+/// at round boundaries only — anchors are identical across live ranks
+/// there, so a restore is equivalent to the rank never having left.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerCheckpoint {
+    pub seed: u64,
+    pub params: usize,
+    pub world: usize,
+    pub rank: usize,
+    pub modules: usize,
+    pub inner_steps: usize,
+    pub inner_lr: f32,
+    pub payload: DriverPayload,
+    /// Next round to execute (rounds `0..round` are complete).
+    pub round: usize,
+    /// Dead-rank bitmask at the checkpointed boundary.
+    pub dead: u64,
+    pub anchor: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+impl WorkerCheckpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 4 * (self.anchor.len() + self.momentum.len()));
+        out.extend_from_slice(CKPT_MAGIC);
+        out.push(CKPT_VERSION);
+        let mut w = PayloadWriter::default();
+        w.u64(self.seed)
+            .u32(self.params as u32)
+            .u32(self.world as u32)
+            .u32(self.rank as u32)
+            .u32(self.modules as u32)
+            .u32(self.inner_steps as u32)
+            .u32(self.inner_lr.to_bits())
+            .u8(match self.payload {
+                DriverPayload::F32 => 0,
+                DriverPayload::Int8 => 1,
+            })
+            .u32(self.round as u32)
+            .u64(self.dead)
+            .f32s(&self.anchor)
+            .f32s(&self.momentum);
+        out.extend_from_slice(&w.finish());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> io::Result<Self> {
+        let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m.to_string());
+        if bytes.len() < 9 || &bytes[..8] != CKPT_MAGIC {
+            return Err(bad("not a worker checkpoint (bad magic)"));
+        }
+        if bytes[8] != CKPT_VERSION {
+            return Err(bad("unsupported checkpoint version"));
+        }
+        let mut r = PayloadReader::new(&bytes[9..]);
+        let seed = r.u64()?;
+        let params = r.u32()? as usize;
+        let world = r.u32()? as usize;
+        let rank = r.u32()? as usize;
+        let modules = r.u32()? as usize;
+        let inner_steps = r.u32()? as usize;
+        let inner_lr = f32::from_bits(r.u32()?);
+        let payload = match r.u8()? {
+            0 => DriverPayload::F32,
+            1 => DriverPayload::Int8,
+            _ => return Err(bad("unknown payload tag")),
+        };
+        let round = r.u32()? as usize;
+        let dead = r.u64()?;
+        let anchor = r.f32s()?;
+        let momentum = r.f32s()?;
+        if anchor.len() != params {
+            return Err(bad("anchor length disagrees with params"));
+        }
+        if r.remaining() != 0 {
+            return Err(bad("trailing bytes after checkpoint payload"));
+        }
+        Ok(Self {
+            seed,
+            params,
+            world,
+            rank,
+            modules,
+            inner_steps,
+            inner_lr,
+            payload,
+            round,
+            dead,
+            anchor,
+            momentum,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.encode())
+    }
+
+    pub fn load(path: &Path) -> io::Result<Self> {
+        Self::decode(&std::fs::read(path)?)
+    }
+
+    /// Reject a restore whose config would diverge from the run it is
+    /// rejoining — every field that feeds a draw must match bitwise.
+    pub fn validate(&self, cfg: &DriverConfig, rank: usize, world: usize) -> Result<(), String> {
+        let check = |ok: bool, what: &str| if ok { Ok(()) } else { Err(format!("checkpoint mismatch: {what}")) };
+        check(self.seed == cfg.seed, "seed")?;
+        check(self.params == cfg.params, "params")?;
+        check(self.modules == cfg.modules.max(1), "modules")?;
+        check(self.inner_steps == cfg.inner_steps, "inner_steps")?;
+        check(self.inner_lr.to_bits() == cfg.inner_lr.to_bits(), "inner_lr")?;
+        check(self.payload == cfg.payload, "payload")?;
+        check(self.rank == rank, "rank")?;
+        check(self.world == world, "world")?;
+        check(self.round <= cfg.rounds, "round past configured horizon")?;
+        check(self.anchor.len() == self.params, "anchor length")?;
+        let want_m = OuterOpt::new(cfg.outer, cfg.params).momentum.len();
+        check(self.momentum.len() == want_m, "momentum length")?;
+        Ok(())
+    }
 }
 
 /// The shared initial anchor: same for every rank by construction.
@@ -278,7 +448,28 @@ pub fn run_worker<C: Collective + ?Sized>(
     comm: &C,
     cfg: &DriverConfig,
 ) -> CommResult<DriverOutcome> {
-    let world = comm.size();
+    run_worker_resumed(comm, cfg, None)
+}
+
+/// [`run_worker`] with two entry variants beyond the fresh start:
+///
+///  * `resume = Some(ck)` — restart from a round-boundary checkpoint:
+///    anchor/momentum/dead-set come from `ck` and execution begins at
+///    `ck.round`. Caller is responsible for [`WorkerCheckpoint::validate`].
+///  * `comm.late_joiner()` — this rank was admitted mid-run. It cannot
+///    know the group's round, so after its first barrier it adopts
+///    `(round, dead, anchor)` from a rank-0-rooted broadcast and
+///    participates from the next boundary. Existing ranks detect the
+///    admission as `comm.size()` growth after a barrier and feed the
+///    same broadcast; join-free runs never issue it, keeping their
+///    collective schedule (and digests) bitwise unchanged. Rank 0 must
+///    be alive at admission (it roots the state transfer).
+pub fn run_worker_resumed<C: Collective + ?Sized>(
+    comm: &C,
+    cfg: &DriverConfig,
+    resume: Option<&WorkerCheckpoint>,
+) -> CommResult<DriverOutcome> {
+    let mut world = comm.size();
     let rank = comm.rank();
     let n = cfg.params;
     let modules = cfg.modules.max(1);
@@ -294,15 +485,75 @@ pub fn run_worker<C: Collective + ?Sized>(
         evictions: Vec::new(),
         sync_wait: Duration::ZERO,
     };
+    let mut round = 0usize;
+    if let Some(ck) = resume {
+        st.anchor.copy_from_slice(&ck.anchor);
+        st.outer.momentum.clear();
+        st.outer.momentum.extend_from_slice(&ck.momentum);
+        st.dead = unpack_dead(ck.dead);
+        round = ck.round;
+    }
     st.theta = st.anchor.clone();
+    let mut adopting = resume.is_none() && comm.late_joiner();
+    let mut rounds_done = 0usize;
     let started = Instant::now();
 
-    for round in 0..cfg.rounds {
+    while adopting || round < cfg.rounds {
+        // Wire-level chaos scheduled for (round, rank): severed links
+        // exercise reconnect-with-replay, delays stretch the round so
+        // grace/admission windows get hit deterministically. None of it
+        // feeds a draw — a chaos run must digest-match a clean one.
+        if !adopting {
+            for ev in cfg.net_plan.net_events_at(round as u64, rank) {
+                match ev.kind {
+                    FaultKind::NetDrop => comm.drop_link(),
+                    FaultKind::NetDelay { ms } => std::thread::sleep(Duration::from_millis(ms)),
+                    FaultKind::Partition { secs } => {
+                        comm.drop_link();
+                        std::thread::sleep(Duration::from_secs_f64(secs));
+                    }
+                    _ => {}
+                }
+            }
+        }
+
         // Per-module shard tables (module-local offsets). All ranks
         // derive them from the same dead-set, so they agree.
         let mut shards: Vec<Vec<(usize, usize)>> =
             (0..modules).map(|m| build_shards(mspec.range(m).1, world, &st.dead)).collect();
+        let tb = Instant::now();
         cfg.retry.run(|t| comm.try_barrier(t))?;
+        st.sync_wait += tb.elapsed();
+
+        if adopting || comm.size() > world {
+            // Join sync: a fixed-layout broadcast carries the round
+            // counter, the dead-mask (three exact-in-f32 chunks), and
+            // the anchor from rank 0 to the joiner. Established ranks
+            // already hold identical copies, so the broadcast cannot
+            // change their state.
+            let mut state = vec![0.0f32; 4 + n];
+            if !adopting && rank == 0 {
+                state[0] = round as f32;
+                state[1..4].copy_from_slice(&mask_to_f32s(dead_mask(&st.dead)));
+                state[4..].copy_from_slice(&st.anchor);
+            }
+            let tj = Instant::now();
+            cfg.retry.run(|t| comm.try_broadcast(&mut state, 0, t))?;
+            st.sync_wait += tj.elapsed();
+            if adopting {
+                round = state[0] as usize;
+                st.dead = unpack_dead(f32s_to_mask(&state[1..4]));
+                st.anchor.copy_from_slice(&state[4..]);
+                st.theta.copy_from_slice(&st.anchor);
+                adopting = false;
+                if round >= cfg.rounds {
+                    break;
+                }
+            }
+            world = comm.size();
+            shards =
+                (0..modules).map(|m| build_shards(mspec.range(m).1, world, &st.dead)).collect();
+        }
 
         if cfg.overlap {
             overlapped_round(comm, cfg, &mut st, &mspec, &mut shards, round)?;
@@ -333,13 +584,41 @@ pub fn run_worker<C: Collective + ?Sized>(
 
         // Inner restart from the synchronized anchor.
         st.theta.copy_from_slice(&st.anchor);
+        round += 1;
+        rounds_done += 1;
+
+        // Round-boundary checkpoint: anchors agree across live ranks
+        // here, so the file alone is enough to rejoin bitwise. An IO
+        // failure degrades the checkpoint, never the run.
+        if cfg.checkpoint_every > 0 && round % cfg.checkpoint_every == 0 {
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let ck = WorkerCheckpoint {
+                    seed: cfg.seed,
+                    params: n,
+                    world,
+                    rank,
+                    modules,
+                    inner_steps: cfg.inner_steps,
+                    inner_lr: cfg.inner_lr,
+                    payload: cfg.payload,
+                    round,
+                    dead: dead_mask(&st.dead),
+                    anchor: st.anchor.clone(),
+                    momentum: st.outer.momentum.clone(),
+                };
+                let path = dir.join(format!("ckpt-rank{rank}-round{round}.bin"));
+                if let Err(e) = ck.save(&path) {
+                    eprintln!("warn: checkpoint write failed ({}): {e}", path.display());
+                }
+            }
+        }
     }
 
     let digest = anchor_digest(&st.anchor);
     Ok(DriverOutcome {
         anchor: st.anchor,
         digest,
-        rounds_done: cfg.rounds,
+        rounds_done,
         evictions: st.evictions,
         elapsed: started.elapsed(),
         sync_wait: st.sync_wait,
@@ -581,5 +860,110 @@ mod tests {
         assert_eq!(a.anchor, b.anchor);
         assert_eq!(a.evictions, vec![2]);
         assert_eq!(b.evictions, vec![2]);
+    }
+
+    #[test]
+    fn dead_mask_f32_chunks_are_exact() {
+        for mask in [0u64, 1, 0b101, 0x3F_FFFF, u64::MAX, 0xDEAD_BEEF_CAFE_0123] {
+            assert_eq!(f32s_to_mask(&mask_to_f32s(mask)), mask);
+        }
+    }
+
+    #[test]
+    fn net_plan_injection_does_not_change_digest() {
+        // Chaos is schedule-only: a ThreadComm run (where drop_link is
+        // a no-op and delays just sleep) must digest-match clean.
+        let clean = DriverConfig { params: 64, rounds: 2, ..Default::default() };
+        let plan = crate::fault::FaultPlan::parse("netdrop@0:1,netdelay@1:0:5", 0, 2).unwrap();
+        let chaotic = DriverConfig { net_plan: plan, ..clean.clone() };
+        let a = run_local_group(2, &clean).unwrap();
+        let b = run_local_group(2, &chaotic).unwrap();
+        assert_eq!(a[0].digest, b[0].digest);
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrips_and_validate_rejects_mismatches() {
+        let ck = WorkerCheckpoint {
+            seed: 7,
+            params: 5,
+            world: 3,
+            rank: 1,
+            modules: 2,
+            inner_steps: 4,
+            inner_lr: 0.05,
+            payload: DriverPayload::Int8,
+            round: 2,
+            dead: 0b100,
+            anchor: vec![1.0, -2.5, 0.0, 3.25, f32::from_bits(0x7f80_0001)],
+            momentum: vec![0.5, -0.5, 0.25, 0.0, 9.0],
+        };
+        // The anchor carries a NaN bit pattern on purpose: compare the
+        // encodings, which are bit-transparent, not the floats.
+        let back = WorkerCheckpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.encode(), ck.encode());
+        assert_eq!(back.round, 2);
+        assert_eq!(back.dead, 0b100);
+        assert!(WorkerCheckpoint::decode(&ck.encode()[..10]).is_err(), "truncated");
+        assert!(WorkerCheckpoint::decode(b"NOTACKPT\x01rest").is_err(), "bad magic");
+
+        let cfg = DriverConfig {
+            seed: 7,
+            params: 5,
+            rounds: 4,
+            modules: 2,
+            inner_steps: 4,
+            inner_lr: 0.05,
+            payload: DriverPayload::Int8,
+            ..Default::default()
+        };
+        assert!(ck.validate(&cfg, 1, 3).is_ok());
+        assert!(ck.validate(&cfg, 0, 3).is_err(), "wrong rank");
+        assert!(ck.validate(&cfg, 1, 2).is_err(), "wrong world");
+        let other_seed = DriverConfig { seed: 8, ..cfg.clone() };
+        assert!(ck.validate(&other_seed, 1, 3).is_err(), "wrong seed");
+        let short = DriverConfig { rounds: 1, ..cfg.clone() };
+        assert!(ck.validate(&short, 1, 3).is_err(), "round past horizon");
+    }
+
+    #[test]
+    fn checkpoint_restore_matches_uninterrupted_run() {
+        let dir = std::env::temp_dir().join(format!("edit-driver-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let clean = DriverConfig { params: 120, rounds: 5, ..Default::default() };
+        let reference = run_local_group(2, &clean).unwrap();
+
+        // Phase 1: stop after round 3, leaving per-rank checkpoints.
+        let phase1 = DriverConfig {
+            rounds: 3,
+            checkpoint_every: 3,
+            checkpoint_dir: Some(dir.clone()),
+            ..clean.clone()
+        };
+        run_local_group(2, &phase1).unwrap();
+
+        // Phase 2: restore each rank and run the remaining rounds.
+        let cks: Vec<WorkerCheckpoint> = (0..2)
+            .map(|r| {
+                WorkerCheckpoint::load(&dir.join(format!("ckpt-rank{r}-round3.bin"))).unwrap()
+            })
+            .collect();
+        for (r, ck) in cks.iter().enumerate() {
+            ck.validate(&clean, r, 2).unwrap();
+            assert_eq!(ck.round, 3);
+        }
+        let comms = ThreadComm::group(2);
+        let cfg = &clean;
+        let outs: Vec<DriverOutcome> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .zip(&cks)
+                .map(|(c, ck)| s.spawn(move || run_worker_resumed(c, cfg, Some(ck)).unwrap()))
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(outs[0].digest, reference[0].digest, "restore must replay bitwise");
+        assert_eq!(outs[0].anchor, outs[1].anchor);
+        assert_eq!(outs[0].rounds_done, 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

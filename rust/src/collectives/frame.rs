@@ -32,7 +32,9 @@ use std::io::{self, Read, Write};
 /// Frame magic: "EDiT Frame".
 pub const MAGIC: [u8; 4] = *b"EDTF";
 /// Protocol version spoken by this build (strict-equality negotiation).
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2 added the reconnect/late-join handshake payloads on Hello and
+/// Welcome (WIRE_PROTOCOL.md §6).
+pub const PROTOCOL_VERSION: u32 = 2;
 /// Sender rank before the Welcome assignment.
 pub const RANK_UNASSIGNED: u32 = u32::MAX;
 /// Upper bound on a frame payload (1 GiB) — rejects corrupt lengths
@@ -45,10 +47,13 @@ pub const HEADER_LEN: usize = 25;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum FrameKind {
-    /// Client → hub: join request (empty payload; the header's version
-    /// field is the negotiation).
+    /// Client → hub: join request. Empty payload = fresh join; a
+    /// reconnecting worker sends `{rank u32, generation u64, last_seq
+    /// u64}` instead (§6.1). The header's version field is the
+    /// negotiation.
     Hello = 1,
-    /// Hub → client: rank assignment (payload: rank u32, world u32).
+    /// Hub → client: rank assignment (payload: rank u32, world u32,
+    /// start_seq u64 — nonzero only for a mid-run joiner, §6.3).
     Welcome = 2,
     /// Client → hub: one collective contribution (payload: op header +
     /// operand bytes).
@@ -340,6 +345,11 @@ impl<'a> PayloadReader<'a> {
     }
     pub fn shards(&mut self) -> io::Result<Vec<(usize, usize)>> {
         let n = self.u32()? as usize;
+        // Bound the allocation by the bytes actually present: a corrupt
+        // count must fail as truncation, not reserve n*16 bytes.
+        if n.checked_mul(16).is_none_or(|b| b > self.remaining()) {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "truncated frame payload"));
+        }
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let off = self.u64()? as usize;
@@ -403,6 +413,13 @@ impl FrameBuffer {
         let n = r.read(&mut self.chunk)?;
         self.buf.extend_from_slice(&self.chunk[..n]);
         Ok(n)
+    }
+
+    /// Discard any partially assembled bytes. A reconnecting client
+    /// must call this when it swaps streams: the tail of the old
+    /// connection is not a frame prefix on the new one (§6.1).
+    pub fn clear(&mut self) {
+        self.buf.clear();
     }
 }
 

@@ -397,6 +397,22 @@ pub trait Collective {
     /// Broadcast from `root`; fails with `PeerFailed` if the root is dead.
     fn try_broadcast(&self, buf: &mut [f32], root: usize, timeout: Duration) -> CommResult<()>;
 
+    /// Chaos hook: sever this handle's transport link once, without
+    /// closing the communicator. The socket backend shuts its TCP
+    /// stream down and recovers via the reconnect-with-replay path on
+    /// the next op (docs/WIRE_PROTOCOL.md §6); in-process backends have
+    /// no link to drop, so the default is a no-op. Deterministic fault
+    /// plans (`FaultKind::NetDrop` / `Partition`) are injected through
+    /// this hook by the collective driver.
+    fn drop_link(&self) {}
+
+    /// True when this handle was admitted to a group mid-run (a wire
+    /// late join, §6.3) and must adopt the group's round counter and
+    /// anchor before training. Only [`SocketComm`] can return true.
+    fn late_joiner(&self) -> bool {
+        false
+    }
+
     // --- Nonblocking issue/complete surface -----------------------------
     //
     // `start_*` takes the contribution buffer **by value** and returns a

@@ -13,20 +13,36 @@
 //!
 //! # Membership, generations, and the failure taxonomy
 //!
-//! Liveness is generation-counted: every eviction or graceful leave
-//! bumps the membership epoch, and every hub frame carries the current
-//! generation plus a live-rank bitmask (world ≤ 64). Dead peers are
-//! detected two ways, both mapping onto the in-process
-//! `CommError` taxonomy (timeout-then-evict, PR 5's policy):
+//! Liveness is generation-counted: every eviction, graceful leave, or
+//! mid-run admission bumps the membership epoch, and every hub frame
+//! carries the current generation plus a live-rank bitmask (world ≤
+//! 64). Dead peers are detected two ways, both mapping onto the
+//! in-process `CommError` taxonomy (timeout-then-evict, PR 5's policy):
 //!
-//!  * **connection loss** — a reader hitting EOF/reset evicts the rank
-//!    immediately; a pending op either completes over the survivors or
-//!    resolves `PeerFailed` if the dead rank was structurally required
-//!    (broadcast root, all-gather shard owner).
+//!  * **connection loss** — a reader hitting EOF/reset marks the rank
+//!    *disconnected* and starts a reconnect grace window of
+//!    `heartbeat_timeout` (§6.2). A rank that redials and re-Hellos in
+//!    time reattaches with no membership event at all; one that does
+//!    not is evicted, and a pending op either completes over the
+//!    survivors or resolves `PeerFailed` if the dead rank was
+//!    structurally required (broadcast root, all-gather shard owner).
 //!  * **silence** — when a pending op exceeds the op window, live
 //!    non-contributors whose heartbeat is stale get evicted; everyone
 //!    else receives a retryable `Timeout` error frame and re-contributes
 //!    (the wire mirror of `RetryPolicy`).
+//!
+//! # Reconnect, replay, and late join (WIRE_PROTOCOL.md §6)
+//!
+//! The listener stays open after the initial group forms. A dial that
+//! re-Hellos with `{rank, generation, last_seq}` is a **reconnect**:
+//! the hub swaps the rank's writer, re-Welcomes it, and relies on §4.3
+//! same-seq idempotency to absorb whatever the client re-sends. A dial
+//! that Hellos with an empty payload is a **late join**: it waits in
+//! the lobby until the next *new* `Barrier` op opens, at which point it
+//! is admitted as the next rank, participates in that very barrier
+//! (its `Welcome` carries the barrier's seq as `start_seq`), and the
+//! generation bumps. Ops opened before a rank joined neither wait for
+//! nor answer it — completion is filtered by each rank's join seq.
 //!
 //! # Pipelined ops and duplicate contributions
 //!
@@ -39,7 +55,9 @@
 //! sequence number: the hub caches the last resolved ops' per-rank
 //! response frames and replays them on a duplicate `Contribute`, so
 //! client-side retries stay idempotent with multiple ops in flight
-//! (§4.3).
+//! (§4.3). Reconnect replay (§6.2) is the same machinery: a rejoining
+//! client re-sends its unresolved contributions at their original
+//! sequence numbers and the hub files or replays each one.
 
 use std::collections::VecDeque;
 use std::io;
@@ -66,7 +84,9 @@ pub struct RendezvousConfig {
     /// Quorum window per collective before Timeout frames go out.
     pub op_timeout: Duration,
     /// Heartbeat staleness beyond which a silent, op-blocking rank is
-    /// evicted (must exceed the client heartbeat interval).
+    /// evicted (must exceed the client heartbeat interval). Doubles as
+    /// the reconnect grace window: a disconnected rank that has not
+    /// re-Helloed within this span is declared dead (§6.2).
     pub heartbeat_timeout: Duration,
 }
 
@@ -84,7 +104,8 @@ impl Default for RendezvousConfig {
 /// What the service did, returned by [`Rendezvous::wait`].
 #[derive(Debug, Clone, Default)]
 pub struct RendezvousReport {
-    /// Ranks that completed the handshake.
+    /// Ranks that completed a handshake (initial group + late joiners;
+    /// reconnects do not recount).
     pub joined: usize,
     /// Final membership generation (0 = no membership change ever).
     pub generations: u64,
@@ -167,11 +188,15 @@ struct Pending {
     seq: u64,
     op: OpCode,
     started: Instant,
+    /// Indexed by rank; its length snapshots the member count at the
+    /// op's seq (ranks admitted later never appear — see
+    /// [`HubState::participants`]).
     contribs: Vec<Option<Contrib>>,
 }
 
 /// Cached per-rank responses of a resolved op, replayed on duplicate
-/// contributions (client retried after a local timeout).
+/// contributions (client retried after a local timeout, or re-sent its
+/// window after a reconnect — §6.2).
 struct Completed {
     seq: u64,
     frames: Vec<Option<Frame>>,
@@ -187,6 +212,20 @@ const HUB_WINDOW: usize = 8;
 struct HubState {
     alive: Vec<bool>,
     done: Vec<bool>,
+    /// Whether the rank's TCP link is currently attached. A rank can be
+    /// alive but disconnected (inside the reconnect grace window).
+    connected: Vec<bool>,
+    /// Bumped on every reconnect; readers carry the epoch they were
+    /// spawned at so a superseded reader's EOF cannot disturb the rank
+    /// that already reattached.
+    conn_epoch: Vec<u64>,
+    /// Seq of the first op each rank participates in: 0 for founding
+    /// members, the admission barrier's seq for late joiners (§6.3).
+    /// Nondecreasing in rank order — admission order is seq order.
+    joined_at: Vec<u64>,
+    /// When the rank's link was last lost (meaningful while
+    /// `!connected`): the reconnect grace clock.
+    disconnected_at: Vec<Instant>,
     last_seen: Vec<Instant>,
     generation: u64,
     evicted: Vec<usize>,
@@ -202,7 +241,12 @@ struct HubState {
     /// violation (the client skipped a sequence number).
     next_new_seq: u64,
     ops_done: u64,
+    /// Handshakes completed (initial + late joins), for the report.
+    joined: usize,
     shutdown: bool,
+    /// Fresh-join dials waiting for the next new Barrier to open
+    /// (§6.3); their Welcome is deferred until admission.
+    lobby: Vec<TcpStream>,
 }
 
 struct Peer {
@@ -211,8 +255,11 @@ struct Peer {
 
 struct Hub {
     cfg: RendezvousConfig,
-    peers: Vec<Peer>,
+    /// One writer per rank; swapped on reconnect, grown on admission.
+    peers: Mutex<Vec<Arc<Peer>>>,
     state: Mutex<HubState>,
+    /// Reader threads (one per live link), joined at teardown.
+    readers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl HubState {
@@ -230,14 +277,38 @@ impl HubState {
     fn all_finished(&self) -> bool {
         (0..self.alive.len()).all(|r| self.done[r] || !self.alive[r])
     }
+
+    /// Live ranks that belong to op `p`: admitted at or before its seq.
+    /// Always a prefix of the rank space (`joined_at` is nondecreasing),
+    /// so every returned rank indexes `p.contribs`.
+    fn participants(&self, p: &Pending) -> Vec<usize> {
+        (0..self.alive.len())
+            .filter(|&r| self.alive[r] && self.joined_at[r] <= p.seq)
+            .collect()
+    }
+
+    /// Member count at sequence number `seq` (alive or dead): the world
+    /// size ops at that seq were shaped for.
+    fn members_at(&self, seq: u64) -> usize {
+        (0..self.alive.len()).filter(|&r| self.joined_at[r] <= seq).count()
+    }
 }
 
 fn send_to(hub: &Hub, rank: usize, frame: &Frame) {
-    // Write failures surface as the reader thread's EOF → evict; no
-    // point double-reporting here.
-    if let Ok(mut w) = hub.peers[rank].writer.lock() {
-        let _ = write_frame(&mut *w, frame);
+    // Write failures surface as the reader thread's EOF → reconnect
+    // grace; no point double-reporting here.
+    let peer = hub.peers.lock().ok().and_then(|ps| ps.get(rank).cloned());
+    if let Some(peer) = peer {
+        if let Ok(mut w) = peer.writer.lock() {
+            let _ = write_frame(&mut *w, frame);
+        }
     }
+}
+
+/// One-shot reply on a not-yet-registered stream (handshake paths).
+fn reply(stream: &TcpStream, frame: &Frame) {
+    let mut w = stream;
+    let _ = write_frame(&mut w, frame);
 }
 
 fn error_frame(generation: u64, seq: u64, code: ErrorCode, rank: u32, msg: &str) -> Frame {
@@ -250,6 +321,13 @@ fn result_frame(generation: u64, seq: u64, live_mask: u64, data: &[f32]) -> Fram
     let mut p = PayloadWriter::default();
     p.u64(seq).u64(live_mask).f32s(data);
     Frame::new(FrameKind::Result, RANK_UNASSIGNED, generation, p.finish())
+}
+
+/// Welcome payload (§3.2/§6.3): `{rank, world, start_seq}`.
+fn welcome_frame(generation: u64, rank: usize, world: usize, start_seq: u64) -> Frame {
+    let mut p = PayloadWriter::default();
+    p.u32(rank as u32).u32(world as u32).u64(start_seq);
+    Frame::new(FrameKind::Welcome, rank as u32, generation, p.finish())
 }
 
 /// Decode a Contribute payload into `(seq, op, operands)`.
@@ -292,7 +370,8 @@ fn shard_extent(shards: &[(usize, usize)]) -> usize {
 }
 
 /// Structural validation of one contribution (shape only — the hub
-/// never judges values). Returns a protocol complaint on violation.
+/// never judges values). `world` is the member count at the op's seq.
+/// Returns a protocol complaint on violation.
 fn validate_contrib(
     op: OpCode,
     rank: usize,
@@ -356,11 +435,12 @@ fn validate_contrib(
     Ok(())
 }
 
-/// Evict `rank` (connection loss or op-blocking silence): membership
-/// epoch bumps, its pending contribution is dropped (a reduction never
-/// folds a dead rank, even one that contributed before dying — the same
-/// fold-time liveness check as `ThreadComm`), and the pending op is
-/// re-examined.
+/// Evict `rank` (reconnect grace expired, or op-blocking silence):
+/// membership epoch bumps, its pending contribution is dropped (a
+/// reduction never folds a dead rank, even one that contributed before
+/// dying — the same fold-time liveness check as `ThreadComm`), and the
+/// pending window is drained front-first, so every op the dead rank had
+/// pipelined resolves deterministically for the survivors.
 fn evict(hub: &Hub, st: &mut HubState, rank: usize) {
     if !st.alive[rank] {
         return;
@@ -369,7 +449,9 @@ fn evict(hub: &Hub, st: &mut HubState, rank: usize) {
     st.generation += 1;
     st.evicted.push(rank);
     for p in st.pending.iter_mut() {
-        p.contribs[rank] = None;
+        if let Some(c) = p.contribs.get_mut(rank) {
+            *c = None;
+        }
     }
     try_complete(hub, st);
 }
@@ -385,9 +467,28 @@ fn leave(hub: &Hub, st: &mut HubState, rank: usize) {
         st.generation += 1;
     }
     for p in st.pending.iter_mut() {
-        p.contribs[rank] = None;
+        if let Some(c) = p.contribs.get_mut(rank) {
+            *c = None;
+        }
     }
     try_complete(hub, st);
+}
+
+/// Reader-side link loss at `epoch`: start the reconnect grace clock
+/// (`hard = false`, EOF/reset) or evict outright (`hard = true`, a
+/// protocol-corrupt stream). A superseded epoch is a no-op — the rank
+/// already reattached and a newer reader owns it.
+fn link_failed(hub: &Hub, rank: usize, epoch: u64, hard: bool) {
+    let mut st = hub.state.lock().unwrap();
+    if st.conn_epoch[rank] != epoch {
+        return;
+    }
+    if hard {
+        evict(hub, &mut st, rank);
+    } else if st.connected[rank] {
+        st.connected[rank] = false;
+        st.disconnected_at[rank] = Instant::now();
+    }
 }
 
 /// Cache a resolved op's frames for duplicate replay, evicting the
@@ -413,7 +514,8 @@ fn pop_front_pending(st: &mut HubState) -> Pending {
 /// Resolve as many ops as possible, strictly from the **front** of the
 /// pending window (completion order == sequence order, whatever order
 /// contributions arrived in): `PeerFailed` when a structurally required
-/// rank is dead, the fold + `Result` frames when every live rank has
+/// rank is dead, the fold + `Result` frames when every live
+/// *participant* (rank admitted at or before the op's seq) has
 /// contributed, otherwise stop — later ops wait behind the head.
 fn try_complete(hub: &Hub, st: &mut HubState) {
     loop {
@@ -431,7 +533,7 @@ fn try_complete(hub: &Hub, st: &mut HubState) {
                 .shards
                 .iter()
                 .enumerate()
-                .find(|&(r, &(_, len))| len > 0 && !st.alive[r])
+                .find(|&(r, &(_, len))| len > 0 && !st.alive.get(r).copied().unwrap_or(false))
                 .map(|(r, _)| r),
             OpCode::Broadcast => {
                 let root = meta.root as usize;
@@ -442,10 +544,11 @@ fn try_complete(hub: &Hub, st: &mut HubState) {
         if let Some(victim) = victim {
             let seq = p.seq;
             let op = p.op;
+            let party = st.participants(p);
             let frame =
                 error_frame(st.generation, seq, ErrorCode::PeerFailed, victim as u32, op.name());
-            let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
-            for r in st.live_ranks() {
+            let mut frames: Vec<Option<Frame>> = vec![None; st.alive.len()];
+            for r in party {
                 send_to(hub, r, &frame);
                 frames[r] = Some(frame.clone());
             }
@@ -454,15 +557,15 @@ fn try_complete(hub: &Hub, st: &mut HubState) {
             continue;
         }
 
-        let live = st.live_ranks();
-        if live.iter().any(|&r| p.contribs[r].is_none()) {
+        let party = st.participants(p);
+        if party.iter().any(|&r| p.contribs[r].is_none()) {
             return;
         }
         let p = pop_front_pending(st);
-        let results = fold(&p, &live);
+        let results = fold(&p, &party);
         let mask = st.live_mask();
-        let mut frames: Vec<Option<Frame>> = vec![None; hub.cfg.world];
-        for (&r, data) in live.iter().zip(&results) {
+        let mut frames: Vec<Option<Frame>> = vec![None; st.alive.len()];
+        for (&r, data) in party.iter().zip(&results) {
             let frame = result_frame(st.generation, p.seq, mask, data);
             send_to(hub, r, &frame);
             frames[r] = Some(frame);
@@ -474,9 +577,9 @@ fn try_complete(hub: &Hub, st: &mut HubState) {
 
 /// The hub-side fold: zero-seeded, ascending live rank order — the
 /// fold-order contract of WIRE_PROTOCOL.md §5. Returns one result
-/// vector per live rank (empty = "leave your buffer untouched", the
-/// sole-survivor answer for every op except the weighted fold, which is
-/// a real computation even alone).
+/// vector per live participant (empty = "leave your buffer untouched",
+/// the sole-survivor answer for every op except the weighted fold,
+/// which is a real computation even alone).
 fn fold(p: &Pending, live: &[usize]) -> Vec<Vec<f32>> {
     let contrib = |r: usize| p.contribs[r].as_ref().unwrap();
     let meta = contrib(live[0]);
@@ -557,11 +660,44 @@ fn fold(p: &Pending, live: &[usize]) -> Vec<Vec<f32>> {
     }
 }
 
-fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
+/// Admit every lobby entry onto the newly opened barrier at
+/// `barrier_seq` (§6.3): each joiner becomes the next rank, bumps the
+/// generation, joins the barrier's contribution table, and receives a
+/// Welcome whose `start_seq` is the barrier's seq — its first
+/// contribution lands on the very op that admitted it.
+fn admit_lobby(hub: &Arc<Hub>, st: &mut HubState, barrier_seq: u64) {
+    for stream in std::mem::take(&mut st.lobby) {
+        let rank = st.alive.len();
+        let Ok(wclone) = stream.try_clone() else { continue };
+        st.alive.push(true);
+        st.done.push(false);
+        st.connected.push(true);
+        st.conn_epoch.push(0);
+        st.joined_at.push(barrier_seq);
+        st.disconnected_at.push(Instant::now());
+        st.last_seen.push(Instant::now());
+        st.generation += 1;
+        st.joined += 1;
+        if let Some(p) = st.pending.iter_mut().find(|p| p.seq == barrier_seq) {
+            p.contribs.push(None);
+        }
+        if let Ok(mut peers) = hub.peers.lock() {
+            peers.push(Arc::new(Peer { writer: Mutex::new(wclone) }));
+        }
+        send_to(hub, rank, &welcome_frame(st.generation, rank, st.alive.len(), barrier_seq));
+        spawn_reader(hub, rank, stream, 0);
+    }
+}
+
+fn on_contribute(hub: &Arc<Hub>, rank: usize, payload: &[u8]) {
     let parsed = parse_contribute(payload);
     let mut st = hub.state.lock().unwrap();
     st.last_seen[rank] = Instant::now();
     let generation = st.generation;
+    if st.shutdown {
+        send_to(hub, rank, &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, generation, Vec::new()));
+        return;
+    }
     if !st.alive[rank] {
         // An evicted-but-connected rank learns its fate from the answer.
         let seq = parsed.map(|(s, _, _)| s).unwrap_or(0);
@@ -575,11 +711,11 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
             return;
         }
     };
-    let world = hub.cfg.world;
-    // Duplicate of a resolved op (client retried after a local
-    // timeout): replay the cached response.
+    // Duplicate of a resolved op (client retried after a local timeout,
+    // or replayed its window after a reconnect): replay the cached
+    // response.
     if let Some(c) = st.completed.iter().find(|c| c.seq == seq) {
-        if let Some(frame) = c.frames[rank].clone() {
+        if let Some(frame) = c.frames.get(rank).and_then(|f| f.clone()) {
             send_to(hub, rank, &frame);
         }
         return;
@@ -594,6 +730,13 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
                 p.op.name(),
                 p.seq
             );
+            send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+            return;
+        }
+        let world = p.contribs.len();
+        if rank >= world {
+            // The op predates this rank's admission; it has no seat.
+            let msg = format!("contribution to {}#{seq}, opened before rank {rank} joined", op.name());
             send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
             return;
         }
@@ -614,6 +757,12 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
             send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
             return;
         }
+        let world = st.members_at(seq);
+        if rank >= world {
+            let msg = format!("contribution to {}#{seq}, opened before rank {rank} joined", op.name());
+            send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
+            return;
+        }
         if let Err(msg) = validate_contrib(op, rank, world, &contrib, None) {
             send_to(hub, rank, &error_frame(generation, seq, ErrorCode::Protocol, rank as u32, &msg));
             return;
@@ -623,8 +772,15 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
         let entry = Pending { seq, op, started: Instant::now(), contribs };
         let at = st.pending.iter().position(|p| p.seq > seq).unwrap_or(st.pending.len());
         st.pending.insert(at, entry);
-        if seq == st.next_new_seq {
+        let fresh = seq == st.next_new_seq;
+        if fresh {
             st.next_new_seq = seq + 1;
+        }
+        // A *new* barrier is the admission point for lobby joiners
+        // (§6.3) — a membership change can only land on a round
+        // boundary, which the trainer marks with a barrier.
+        if fresh && op == OpCode::Barrier && !st.lobby.is_empty() {
+            admit_lobby(hub, &mut st, seq);
         }
     } else {
         // A gap: the client skipped a sequence number.
@@ -640,8 +796,9 @@ fn on_contribute(hub: &Hub, rank: usize, payload: &[u8]) {
 }
 
 /// Per-connection reader: drains frames, updates liveness, feeds
-/// contributions to the hub. EOF or a stream error evicts the rank.
-fn reader_loop(hub: &Hub, rank: usize, stream: &TcpStream) {
+/// contributions to the hub. EOF or a stream reset starts the reconnect
+/// grace clock (§6.2); only a protocol-corrupt stream evicts outright.
+fn reader_loop(hub: &Arc<Hub>, rank: usize, stream: &TcpStream, epoch: u64) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
     let mut fb = FrameBuffer::new();
     let mut src = stream;
@@ -674,15 +831,15 @@ fn reader_loop(hub: &Hub, rank: usize, stream: &TcpStream) {
             }
             Ok(None) => {}
             Err(_) => {
-                evict(hub, &mut hub.state.lock().unwrap(), rank);
+                link_failed(hub, rank, epoch, true);
                 return;
             }
         }
         match fb.fill_from(&mut src) {
             Ok(0) => {
-                let mut st = hub.state.lock().unwrap();
-                if !st.done[rank] {
-                    evict(hub, &mut st, rank);
+                let gone = hub.state.lock().unwrap().done[rank];
+                if !gone {
+                    link_failed(hub, rank, epoch, false);
                 }
                 return;
             }
@@ -694,10 +851,20 @@ fn reader_loop(hub: &Hub, rank: usize, stream: &TcpStream) {
                 }
             }
             Err(_) => {
-                evict(hub, &mut hub.state.lock().unwrap(), rank);
+                link_failed(hub, rank, epoch, false);
                 return;
             }
         }
+    }
+}
+
+fn spawn_reader(hub: &Arc<Hub>, rank: usize, stream: TcpStream, epoch: u64) {
+    let hub2 = Arc::clone(hub);
+    if let Ok(h) = std::thread::Builder::new()
+        .name(format!("edit-hub-r{rank}"))
+        .spawn(move || reader_loop(&hub2, rank, &stream, epoch))
+    {
+        hub.readers.lock().unwrap().push(h);
     }
 }
 
@@ -723,6 +890,99 @@ fn read_handshake_frame(stream: &TcpStream, deadline: Instant) -> io::Result<(u3
     }
 }
 
+/// Phase-2 handshake (§6): a dial after the initial group formed is
+/// either a reconnect (non-empty Hello payload: `{rank, generation,
+/// last_seq}`) or a fresh late join (empty payload → lobby).
+fn handshake_phase2(hub: &Arc<Hub>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let Ok((version, hello)) = read_handshake_frame(&stream, deadline) else { return };
+    if version != PROTOCOL_VERSION {
+        reply(
+            &stream,
+            &error_frame(
+                0,
+                0,
+                ErrorCode::VersionMismatch,
+                RANK_UNASSIGNED,
+                &format!("hub speaks v{PROTOCOL_VERSION}, client spoke v{version}"),
+            ),
+        );
+        return;
+    }
+    if hello.kind != FrameKind::Hello {
+        reply(&stream, &error_frame(0, 0, ErrorCode::Protocol, RANK_UNASSIGNED, "expected Hello"));
+        return;
+    }
+    if hello.payload.is_empty() {
+        // Fresh late join (§6.3): wait in the lobby for the next new
+        // barrier; the Welcome is deferred to admission.
+        let mut st = hub.state.lock().unwrap();
+        if st.shutdown {
+            let g = st.generation;
+            drop(st);
+            reply(&stream, &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, g, Vec::new()));
+            return;
+        }
+        if st.alive.len() + st.lobby.len() >= 64 {
+            let g = st.generation;
+            drop(st);
+            reply(
+                &stream,
+                &error_frame(g, 0, ErrorCode::Protocol, RANK_UNASSIGNED, "membership full (64 ranks)"),
+            );
+            return;
+        }
+        st.lobby.push(stream);
+        return;
+    }
+    // Reconnect (§6.2).
+    let parsed = (|| -> io::Result<(usize, u64, u64)> {
+        let mut r = PayloadReader::new(&hello.payload);
+        Ok((r.u32()? as usize, r.u64()?, r.u64()?))
+    })();
+    let Ok((rank, _generation, _last_seq)) = parsed else {
+        reply(&stream, &error_frame(0, 0, ErrorCode::Protocol, RANK_UNASSIGNED, "malformed reconnect Hello"));
+        return;
+    };
+    let mut st = hub.state.lock().unwrap();
+    if st.shutdown {
+        let g = st.generation;
+        drop(st);
+        reply(&stream, &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, g, Vec::new()));
+        return;
+    }
+    if rank >= st.alive.len() {
+        let g = st.generation;
+        drop(st);
+        reply(&stream, &error_frame(g, 0, ErrorCode::Protocol, rank as u32, "reconnect for unknown rank"));
+        return;
+    }
+    if !st.alive[rank] || st.done[rank] {
+        // The grace window expired (or the rank already left): the
+        // explicit rejection the client treats as terminal.
+        let g = st.generation;
+        drop(st);
+        reply(&stream, &error_frame(g, 0, ErrorCode::PeerFailed, rank as u32, "evicted"));
+        return;
+    }
+    let Ok(wclone) = stream.try_clone() else { return };
+    st.conn_epoch[rank] += 1;
+    let epoch = st.conn_epoch[rank];
+    st.connected[rank] = true;
+    st.last_seen[rank] = Instant::now();
+    st.disconnected_at[rank] = Instant::now();
+    let g = st.generation;
+    let world = st.alive.len();
+    let start_seq = st.joined_at[rank];
+    if let Ok(mut peers) = hub.peers.lock() {
+        peers[rank] = Arc::new(Peer { writer: Mutex::new(wclone) });
+    }
+    drop(st);
+    reply(&stream, &welcome_frame(g, rank, world, start_seq));
+    spawn_reader(hub, rank, stream, epoch);
+}
+
 fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) -> RendezvousReport {
     // Phase 1: collect `world` handshakes (WIRE_PROTOCOL.md §4.1).
     let _ = listener.set_nonblocking(true);
@@ -731,11 +991,7 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
     while streams.len() < cfg.world {
         if stop.load(Ordering::SeqCst) || Instant::now() >= join_deadline {
             for s in &streams {
-                let mut w = s;
-                let _ = write_frame(
-                    &mut w,
-                    &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, 0, Vec::new()),
-                );
+                reply(s, &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, 0, Vec::new()));
             }
             return RendezvousReport { joined: streams.len(), ..Default::default() };
         }
@@ -745,10 +1001,9 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
                 let deadline = Instant::now() + Duration::from_secs(5);
                 match read_handshake_frame(&stream, deadline) {
                     Ok((version, hello)) => {
-                        let mut w = &stream;
                         if version != PROTOCOL_VERSION {
-                            let _ = write_frame(
-                                &mut w,
+                            reply(
+                                &stream,
                                 &error_frame(
                                     0,
                                     0,
@@ -760,21 +1015,12 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
                             continue;
                         }
                         if hello.kind != FrameKind::Hello {
-                            let _ = write_frame(
-                                &mut w,
-                                &error_frame(0, 0, ErrorCode::Protocol, RANK_UNASSIGNED, "expected Hello"),
-                            );
+                            reply(&stream, &error_frame(0, 0, ErrorCode::Protocol, RANK_UNASSIGNED, "expected Hello"));
                             continue;
                         }
-                        let rank = streams.len() as u32;
-                        let mut p = PayloadWriter::default();
-                        p.u32(rank).u32(cfg.world as u32);
-                        if write_frame(
-                            &mut w,
-                            &Frame::new(FrameKind::Welcome, rank, 0, p.finish()),
-                        )
-                        .is_ok()
-                        {
+                        let rank = streams.len();
+                        let mut w = &stream;
+                        if write_frame(&mut w, &welcome_frame(0, rank, cfg.world, 0)).is_ok() {
                             streams.push(stream);
                         }
                     }
@@ -792,13 +1038,19 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
     let now = Instant::now();
     let hub = Arc::new(Hub {
         cfg,
-        peers: streams
-            .iter()
-            .map(|s| Peer { writer: Mutex::new(s.try_clone().expect("tcp clone")) })
-            .collect(),
+        peers: Mutex::new(
+            streams
+                .iter()
+                .map(|s| Arc::new(Peer { writer: Mutex::new(s.try_clone().expect("tcp clone")) }))
+                .collect(),
+        ),
         state: Mutex::new(HubState {
             alive: vec![true; cfg.world],
             done: vec![false; cfg.world],
+            connected: vec![true; cfg.world],
+            conn_epoch: vec![0; cfg.world],
+            joined_at: vec![0; cfg.world],
+            disconnected_at: vec![now; cfg.world],
             last_seen: vec![now; cfg.world],
             generation: 0,
             evicted: Vec::new(),
@@ -806,24 +1058,30 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
             completed: VecDeque::new(),
             next_new_seq: 0,
             ops_done: 0,
+            joined: cfg.world,
             shutdown: false,
+            lobby: Vec::new(),
         }),
+        readers: Mutex::new(Vec::new()),
     });
 
-    let mut readers = Vec::with_capacity(cfg.world);
     for (rank, stream) in streams.into_iter().enumerate() {
-        let hub = Arc::clone(&hub);
-        readers.push(
-            std::thread::Builder::new()
-                .name(format!("edit-hub-r{rank}"))
-                .spawn(move || reader_loop(&hub, rank, &stream))
-                .expect("spawn hub reader"),
-        );
+        spawn_reader(&hub, rank, stream, 0);
     }
 
-    // Monitor loop: op-window timeouts and heartbeat-stale evictions.
+    // Monitor loop: phase-2 dials (reconnect / late join), reconnect
+    // grace, op-window timeouts, heartbeat-stale evictions.
     loop {
         std::thread::sleep(Duration::from_millis(10));
+        // The listener stays open (§6): reconnects re-Hello with their
+        // rank; fresh Hellos wait in the lobby. Handshakes run in their
+        // own threads so a slow dialer cannot stall the monitor.
+        while let Ok((stream, _peer)) = listener.accept() {
+            let hub2 = Arc::clone(&hub);
+            let _ = std::thread::Builder::new()
+                .name("edit-hub-hs".into())
+                .spawn(move || handshake_phase2(&hub2, stream));
+        }
         let mut st = hub.state.lock().unwrap();
         if stop.load(Ordering::SeqCst) {
             st.shutdown = true;
@@ -844,6 +1102,19 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
             st.shutdown = true;
             break;
         }
+        // Reconnect grace (§6.2): a disconnected rank that has not
+        // re-Helloed within `heartbeat_timeout` is dead.
+        let lapsed: Vec<usize> = (0..st.alive.len())
+            .filter(|&r| {
+                st.alive[r]
+                    && !st.done[r]
+                    && !st.connected[r]
+                    && st.disconnected_at[r].elapsed() >= hub.cfg.heartbeat_timeout
+            })
+            .collect();
+        for r in lapsed {
+            evict(&hub, &mut st, r);
+        }
         // Only the head of the pending window is on the op-timeout
         // clock — queued ops start their window when they reach the
         // head (see `pop_front_pending`).
@@ -856,7 +1127,7 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
             // (a killed -STOP process, a hard hang) — timeout-then-evict.
             let stale: Vec<usize> = {
                 let p = st.pending.front().unwrap();
-                st.live_ranks()
+                st.participants(p)
                     .into_iter()
                     .filter(|&r| {
                         p.contribs[r].is_none()
@@ -876,7 +1147,7 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
                     let seq = p.seq;
                     let name = p.op.name();
                     let contributed: Vec<usize> = st
-                        .live_ranks()
+                        .participants(p)
                         .into_iter()
                         .filter(|&r| p.contribs[r].is_some())
                         .collect();
@@ -892,14 +1163,29 @@ fn serve(listener: TcpListener, cfg: RendezvousConfig, stop: Arc<AtomicBool>) ->
             }
         }
     }
-    drop(hub.state.lock().map(|mut st| st.shutdown = true));
+    {
+        let mut st = hub.state.lock().unwrap();
+        st.shutdown = true;
+        let g = st.generation;
+        for s in std::mem::take(&mut st.lobby) {
+            reply(&s, &Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, g, Vec::new()));
+        }
+    }
 
-    for h in readers {
-        let _ = h.join();
+    // Readers may still be registering (a handshake racing shutdown):
+    // drain until the registry stays empty.
+    loop {
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *hub.readers.lock().unwrap());
+        if handles.is_empty() {
+            break;
+        }
+        for h in handles {
+            let _ = h.join();
+        }
     }
     let st = hub.state.lock().unwrap();
     RendezvousReport {
-        joined: hub.cfg.world,
+        joined: st.joined,
         generations: st.generation,
         evicted: st.evicted.clone(),
         ops_done: st.ops_done,

@@ -41,6 +41,21 @@
 //! `heartbeat_interval`, so a worker busy in a long inner-step loop is
 //! never mistaken for dead; only a killed or wedged process goes
 //! silent and gets evicted by the hub (timeout-then-evict).
+//!
+//! # Reconnect with replay (WIRE_PROTOCOL.md §6)
+//!
+//! A dropped connection is **not** fatal: any IO failure on the hub
+//! link routes through [`SocketComm::drop_link`]-style recovery — the
+//! client redials with bounded exponential backoff
+//! ([`ConnectOpts::retry`]), re-Hellos with `{rank, generation, seq}`,
+//! swaps the stream under the shared writer (the heartbeat thread
+//! resumes automatically), discards any half-assembled frame, and
+//! re-sends every unresolved contribution at its original sequence
+//! number. The hub dedupes same-seq contributions and replays cached
+//! results (§4.3), so recovery is value-neutral: a netdrop-faulted run
+//! ends bitwise identical to a clean one. Only an explicit rejection
+//! (eviction, shutdown, protocol error) or an exhausted backoff budget
+//! surfaces as an error.
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
@@ -56,7 +71,8 @@ use crate::collectives::frame::{
     RANK_UNASSIGNED,
 };
 use crate::collectives::{
-    group, Collective, CommError, CommHandle, CommResult, HandleState, PIPELINE_WINDOW,
+    group, Collective, CommError, CommHandle, CommResult, HandleState, RetryPolicy,
+    PIPELINE_WINDOW,
 };
 
 /// Client connection knobs.
@@ -68,6 +84,12 @@ pub struct ConnectOpts {
     /// Liveness beacon period (must undercut the hub's
     /// `heartbeat_timeout` by a healthy margin).
     pub heartbeat_interval: Duration,
+    /// Reconnect policy after a dropped link (§6.1): `max_attempts`
+    /// redials with exponential backoff, each re-Hello given `timeout`
+    /// to complete. The budget must stay well under the hub's
+    /// `heartbeat_timeout` so a transient drop recovers before the
+    /// dead-peer detector evicts the rank.
+    pub retry: RetryPolicy,
 }
 
 impl Default for ConnectOpts {
@@ -75,6 +97,11 @@ impl Default for ConnectOpts {
         Self {
             connect_timeout: Duration::from_secs(10),
             heartbeat_interval: Duration::from_millis(100),
+            retry: RetryPolicy {
+                max_attempts: 5,
+                base_backoff: Duration::from_millis(20),
+                timeout: Duration::from_secs(2),
+            },
         }
     }
 }
@@ -88,6 +115,8 @@ pub struct WireStats {
     pub rx_bytes: u64,
     pub tx_frames: u64,
     pub rx_frames: u64,
+    /// Successful redial + re-Hello recoveries (§6.1).
+    pub reconnects: u64,
 }
 
 struct OpOutcome {
@@ -138,14 +167,23 @@ impl Pipeline {
 /// Socket-backed [`Collective`] handle; see the module docs.
 pub struct SocketComm {
     rank: usize,
-    world: usize,
-    stream: TcpStream,
+    /// Group size; grows when a Result live-mask or re-Welcome reveals
+    /// a mid-run joiner (§6.3) — membership can now expand, not only
+    /// degrade.
+    world: Cell<usize>,
+    /// Hub address, kept for redials (§6.1).
+    addr: String,
+    opts: ConnectOpts,
+    stream: RefCell<TcpStream>,
     writer: Arc<Mutex<TcpStream>>,
     seq: Cell<u64>,
     generation: Cell<u64>,
     live_mask: Cell<u64>,
     closed: Cell<bool>,
     stats: Cell<WireStats>,
+    /// Nonzero iff this handle was admitted mid-run: the seq of the
+    /// admission barrier the hub mapped the late Hello onto (§6.3).
+    joined_at_seq: u64,
     fb: RefCell<FrameBuffer>,
     qcodes: RefCell<Vec<i8>>,
     qscales: RefCell<Vec<f32>>,
@@ -177,10 +215,15 @@ impl SocketComm {
             write_frame(&mut w, &Frame::new(FrameKind::Hello, RANK_UNASSIGNED, 0, Vec::new()))?;
         }
         let welcome = read_one_frame(&stream, deadline)?;
-        let (rank, world) = match welcome.kind {
+        let (rank, world, start_seq) = match welcome.kind {
             FrameKind::Welcome => {
                 let mut r = PayloadReader::new(&welcome.payload);
-                (r.u32()? as usize, r.u32()? as usize)
+                let rank = r.u32()? as usize;
+                let world = r.u32()? as usize;
+                // start_seq (§6.3) is nonzero only for a mid-run
+                // joiner; absent on pre-v2 hubs.
+                let start_seq = if r.remaining() >= 8 { r.u64()? } else { 0 };
+                (rank, world, start_seq)
             }
             FrameKind::Error => {
                 let mut r = PayloadReader::new(&welcome.payload);
@@ -212,9 +255,10 @@ impl SocketComm {
                         std::thread::sleep(interval);
                         let Ok(mut w) = writer.lock() else { break };
                         let frame = Frame::new(FrameKind::Heartbeat, rank32, 0, Vec::new());
-                        if write_frame(&mut *w, &frame).is_err() {
-                            break;
-                        }
+                        // A write failure is NOT fatal: the link may be
+                        // mid-reconnect (§6.1). Keep beating — the next
+                        // tick lands on the swapped-in stream.
+                        let _ = write_frame(&mut *w, &frame);
                     }
                 })?
         };
@@ -222,14 +266,17 @@ impl SocketComm {
         let mask = if world >= 64 { u64::MAX } else { (1u64 << world) - 1 };
         Ok(SocketComm {
             rank,
-            world,
-            stream,
+            world: Cell::new(world),
+            addr: addr.to_string(),
+            opts,
+            stream: RefCell::new(stream),
             writer,
-            seq: Cell::new(0),
-            generation: Cell::new(0),
+            seq: Cell::new(start_seq),
+            generation: Cell::new(welcome.generation),
             live_mask: Cell::new(mask),
             closed: Cell::new(false),
             stats: Cell::new(WireStats::default()),
+            joined_at_seq: start_seq,
             fb: RefCell::new(FrameBuffer::new()),
             qcodes: RefCell::new(Vec::new()),
             qscales: RefCell::new(Vec::new()),
@@ -284,13 +331,14 @@ impl SocketComm {
 
     /// Die abruptly: sever the TCP stream with **no** Goodbye and stop
     /// heartbeating — from the hub's side this is indistinguishable
-    /// from a SIGKILLed worker process (reader EOF → immediate evict).
+    /// from a SIGKILLed worker process (reader EOF → reconnect grace →
+    /// eviction once the grace window lapses with no re-Hello, §6.2).
     /// Exists so in-process tests can exercise the crash path; a
     /// graceful exit is [`Self::close`].
     pub fn kill(&mut self) {
         self.closed.set(true);
         self.hb_stop.store(true, Ordering::SeqCst);
-        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        let _ = self.stream.borrow().shutdown(std::net::Shutdown::Both);
         if let Some(h) = self.hb.take() {
             let _ = h.join();
         }
@@ -320,6 +368,134 @@ impl SocketComm {
         CommError::Shutdown
     }
 
+    /// File a Result frame's live mask, growing `world` if the mask
+    /// reveals ranks admitted after our Welcome (§6.3).
+    fn note_mask(&self, mask: u64) {
+        self.live_mask.set(mask);
+        let top = (64 - mask.leading_zeros()) as usize;
+        if top > self.world.get() {
+            self.world.set(top);
+        }
+    }
+
+    /// Raw single-frame write over the shared writer (no recovery —
+    /// [`Self::recover`] builds on this and must not recurse).
+    fn send_frame(&self, frame: &Frame) -> io::Result<()> {
+        let Ok(mut w) = self.writer.lock() else {
+            return Err(io::Error::other("writer lock poisoned"));
+        };
+        write_frame(&mut *w, frame)
+    }
+
+    /// Re-establish a dropped hub link (§6.1): redial with bounded
+    /// exponential backoff ([`ConnectOpts::retry`]), re-Hello with
+    /// `{rank, generation, seq}`, swap the stream under the shared
+    /// writer (the heartbeat thread resumes on its next tick), discard
+    /// any half-assembled frame bytes, and re-send every unresolved
+    /// pipelined contribution in seq order. The hub dedupes same-seq
+    /// contributions and replays cached results, so recovery never
+    /// changes a fold (§4.3). Terminal if the hub rejects us (evicted /
+    /// shutdown); `Timeout` if the backoff budget runs dry.
+    ///
+    /// Callers must not hold a `fb` or `stream` borrow across this
+    /// call.
+    fn recover(&self) -> CommResult<()> {
+        if self.closed.get() {
+            return Err(CommError::Shutdown);
+        }
+        let rp = self.opts.retry;
+        for attempt in 0..rp.max_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(rp.backoff(attempt - 1));
+            }
+            let Ok(s) = try_connect(&self.addr, Duration::from_millis(500)) else {
+                continue;
+            };
+            let _ = s.set_nodelay(true);
+            let mut hello = PayloadWriter::default();
+            hello.u32(self.rank as u32).u64(self.generation.get()).u64(self.seq.get());
+            let frame = Frame::new(
+                FrameKind::Hello,
+                self.rank as u32,
+                self.generation.get(),
+                hello.finish(),
+            );
+            {
+                let mut w = &s;
+                if write_frame(&mut w, &frame).is_err() {
+                    continue;
+                }
+            }
+            let Ok(reply) = read_one_frame(&s, Instant::now() + rp.timeout) else {
+                continue;
+            };
+            match reply.kind {
+                FrameKind::Welcome => {
+                    let mut r = PayloadReader::new(&reply.payload);
+                    let (Ok(rank), Ok(world)) = (r.u32(), r.u32()) else {
+                        return Err(self.terminal());
+                    };
+                    if rank as usize != self.rank {
+                        return Err(self.terminal());
+                    }
+                    if world as usize > self.world.get() {
+                        self.world.set(world as usize);
+                    }
+                    let Ok(clone) = s.try_clone() else { continue };
+                    match self.writer.lock() {
+                        Ok(mut w) => *w = clone,
+                        Err(_) => return Err(self.terminal()),
+                    }
+                    *self.stream.borrow_mut() = s;
+                    self.fb.borrow_mut().clear();
+                    let mut st = self.stats.get();
+                    st.reconnects += 1;
+                    self.stats.set(st);
+                    // Seq replay: every unresolved pipelined op goes
+                    // out again at its original seq, in order.
+                    let frames: Vec<Frame> = self
+                        .pipeline
+                        .borrow()
+                        .ops
+                        .iter()
+                        .filter(|o| o.result.is_none())
+                        .map(|o| {
+                            Frame::new(
+                                FrameKind::Contribute,
+                                self.rank as u32,
+                                self.generation.get(),
+                                o.payload.clone(),
+                            )
+                        })
+                        .collect();
+                    for f in &frames {
+                        if self.send_frame(f).is_err() {
+                            break; // next IO failure recovers again
+                        }
+                        self.bump_stats(f.wire_len(), 0);
+                    }
+                    return Ok(());
+                }
+                // Error (evicted, protocol, version) or Shutdown: the
+                // hub explicitly refused us — terminal, not retryable.
+                FrameKind::Error | FrameKind::Shutdown => return Err(self.terminal()),
+                _ => continue,
+            }
+        }
+        Err(CommError::Timeout { op: "reconnect", waited: rp.timeout })
+    }
+
+    /// Recovery for a blocking op: reconnect, then re-send its
+    /// Contribute at the same seq (idempotent at the hub, §4.3/§6.2).
+    fn recover_and_resend(&self, frame: &Frame) -> CommResult<()> {
+        self.recover()?;
+        if self.send_frame(frame).is_err() {
+            return Err(self.terminal());
+        }
+        self.bump_stats(frame.wire_len(), 0);
+        Ok(())
+    }
+
     /// One Contribute → Result round trip; the heart of every op.
     fn op_round(&self, op: OpCode, payload: Vec<u8>, timeout: Duration) -> CommResult<OpOutcome> {
         if self.closed.get() {
@@ -331,18 +507,17 @@ impl SocketComm {
         self.flush_pipeline(timeout)?;
         let seq = self.seq.get();
         let frame = Frame::new(FrameKind::Contribute, self.rank as u32, self.generation.get(), payload);
-        {
-            let Ok(mut w) = self.writer.lock() else { return Err(self.terminal()) };
-            if write_frame(&mut *w, &frame).is_err() {
-                return Err(self.terminal());
-            }
+        if self.send_frame(&frame).is_err() {
+            // Dropped link: reconnect and re-send at the same seq.
+            self.recover_and_resend(&frame)?;
+        } else {
+            self.bump_stats(frame.wire_len(), 0);
         }
-        self.bump_stats(frame.wire_len(), 0);
 
         let deadline = Instant::now() + timeout;
-        let mut fb = self.fb.borrow_mut();
         loop {
-            match fb.poll() {
+            let polled = self.fb.borrow_mut().poll();
+            match polled {
                 Ok(Some((_v, reply))) => {
                     self.bump_stats(0, reply.wire_len());
                     self.generation.set(reply.generation);
@@ -358,7 +533,7 @@ impl SocketComm {
                             if rseq != seq {
                                 continue; // stale result from a prior attempt
                             }
-                            self.live_mask.set(mask);
+                            self.note_mask(mask);
                             self.seq.set(seq + 1);
                             return Ok(OpOutcome { data });
                         }
@@ -398,12 +573,19 @@ impl SocketComm {
                 return Err(CommError::Timeout { op: op.name(), waited: timeout });
             }
             let poll = (deadline - now).min(Duration::from_millis(50));
-            let _ = self.stream.set_read_timeout(Some(poll.max(Duration::from_millis(1))));
-            match fb.fill_from(&mut (&self.stream)) {
-                Ok(0) => return Err(self.terminal()),
+            let filled = {
+                let s = self.stream.borrow();
+                let _ = s.set_read_timeout(Some(poll.max(Duration::from_millis(1))));
+                self.fb.borrow_mut().fill_from(&mut (&*s))
+            };
+            match filled {
+                // EOF or a hard IO error: reconnect and re-contribute
+                // at the same seq — the hub replays a cached Result if
+                // the op completed while we were away (§6.2).
+                Ok(0) => self.recover_and_resend(&frame)?,
                 Ok(_) => {}
                 Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
-                Err(_) => return Err(self.terminal()),
+                Err(_) => self.recover_and_resend(&frame)?,
             }
         }
     }
@@ -421,7 +603,8 @@ impl SocketComm {
     // --- pipelined nonblocking surface (WIRE_PROTOCOL.md §4.2) ------------
 
     /// Send one Contribute frame carrying `payload` (first send and
-    /// same-seq re-sends share this path).
+    /// same-seq re-sends share this path). A write failure routes
+    /// through reconnect-with-replay before giving up (§6.1).
     fn send_contribute(&self, payload: &[u8]) -> CommResult<()> {
         let frame = Frame::new(
             FrameKind::Contribute,
@@ -429,9 +612,9 @@ impl SocketComm {
             self.generation.get(),
             payload.to_vec(),
         );
-        {
-            let Ok(mut w) = self.writer.lock() else { return Err(self.terminal()) };
-            if write_frame(&mut *w, &frame).is_err() {
+        if self.send_frame(&frame).is_err() {
+            self.recover()?;
+            if self.send_frame(&frame).is_err() {
                 return Err(self.terminal());
             }
         }
@@ -504,7 +687,7 @@ impl SocketComm {
                             if let Some(entry) =
                                 pl.ops.iter_mut().find(|o| o.seq == rseq && o.result.is_none())
                             {
-                                self.live_mask.set(mask);
+                                self.note_mask(mask);
                                 let applied = self.apply_pipeline_result(entry, &data);
                                 entry.result = Some(applied);
                             }
@@ -564,14 +747,19 @@ impl SocketComm {
                 return Err(CommError::Timeout { op: opname, waited: timeout });
             }
             let poll = (deadline - now).min(Duration::from_millis(50));
-            let _ = self.stream.set_read_timeout(Some(poll.max(Duration::from_millis(1))));
-            let filled = self.fb.borrow_mut().fill_from(&mut (&self.stream));
+            let filled = {
+                let s = self.stream.borrow();
+                let _ = s.set_read_timeout(Some(poll.max(Duration::from_millis(1))));
+                self.fb.borrow_mut().fill_from(&mut (&*s))
+            };
             match filled {
-                Ok(0) => return Err(self.terminal()),
+                // EOF / hard IO error: reconnect; `recover` re-sends
+                // every unresolved pipelined contribution itself.
+                Ok(0) => self.recover()?,
                 Ok(_) => {}
                 Err(e)
                     if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
-                Err(_) => return Err(self.terminal()),
+                Err(_) => self.recover()?,
             }
         }
     }
@@ -600,7 +788,7 @@ impl SocketComm {
         if self.closed.get() {
             return CommHandle::ready(Err(CommError::Shutdown));
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             // Degenerate group: the op is a no-op on the wire (weighted
             // is special-cased by its caller before reaching here).
             return CommHandle::ready(Ok(buf));
@@ -711,14 +899,25 @@ impl Collective for SocketComm {
     }
 
     fn size(&self) -> usize {
-        self.world
+        self.world.get()
+    }
+
+    fn drop_link(&self) {
+        // Sever the TCP link without marking the comm closed: the next
+        // op's IO failure routes through `recover` (§6.1). This is the
+        // `FaultKind::NetDrop` injection point.
+        let _ = self.stream.borrow().shutdown(std::net::Shutdown::Both);
+    }
+
+    fn late_joiner(&self) -> bool {
+        self.joined_at_seq > 0
     }
 
     fn try_barrier(&self, timeout: Duration) -> CommResult<()> {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             return Ok(());
         }
         let payload = self.begin(OpCode::Barrier).finish();
@@ -729,7 +928,7 @@ impl Collective for SocketComm {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             return Ok(());
         }
         let mut p = self.begin(OpCode::AllReduceMean);
@@ -752,7 +951,7 @@ impl Collective for SocketComm {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             return Ok(());
         }
         let (off, len) = shards[self.rank];
@@ -800,7 +999,7 @@ impl Collective for SocketComm {
             return Err(CommError::Shutdown);
         }
         let (off, len) = shards[self.rank];
-        if self.world == 1 {
+        if self.world.get() == 1 {
             // Degenerate group: the reference's zero-init single fold.
             let w = weights[0];
             for x in full[off..off + len].iter_mut() {
@@ -829,7 +1028,7 @@ impl Collective for SocketComm {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             return Ok(());
         }
         let (off, len) = shards[self.rank];
@@ -853,7 +1052,7 @@ impl Collective for SocketComm {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             return Ok(());
         }
         let mut p = self.begin(OpCode::Broadcast);
@@ -933,7 +1132,7 @@ impl Collective for SocketComm {
         if self.closed.get() {
             return CommHandle::ready(Err(CommError::Shutdown));
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             // Degenerate group: the reference's zero-init single fold —
             // a real computation even alone, unlike the other ops.
             let (off, len) = shards[self.rank];
@@ -1002,7 +1201,7 @@ impl SocketComm {
         if self.closed.get() {
             return Err(CommError::Shutdown);
         }
-        if self.world == 1 {
+        if self.world.get() == 1 {
             return Ok(());
         }
         let (off, len) = shards[self.rank];

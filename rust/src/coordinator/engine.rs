@@ -863,6 +863,13 @@ impl Trainer {
                 );
                 self.append_replica();
             }
+            FaultKind::NetDrop | FaultKind::NetDelay { .. } | FaultKind::Partition { .. } => {
+                anyhow::bail!(
+                    "fault plan: wire-level kinds (netdrop/netdelay/partition) target the \
+                     socket transport; pass them to `edit-train worker --net-plan`, not the \
+                     in-process trainer"
+                );
+            }
         }
         Ok(())
     }

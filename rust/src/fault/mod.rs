@@ -31,6 +31,16 @@
 //! or the seeded generator ([`FaultPlan::random`]) used by the chaos CI
 //! leg. Replica 0 is never a generated victim, so a generated plan can
 //! never crash the whole cluster.
+//!
+//! **Wire-level kinds** (`NetDrop`, `NetDelay`, `Partition`) target the
+//! socket transport, not the simulated trainer: they are consumed by
+//! the collective driver (`collectives/driver.rs`) at the start of the
+//! named round on the named *rank*, severing or delaying that worker's
+//! TCP link to the rendezvous hub. Because reconnect + seq replay is
+//! value-neutral (docs/WIRE_PROTOCOL.md §6) a net-faulted run ends at
+//! the bitwise digest of the clean run — same seed + same plan ⇒ same
+//! bits, exactly like the in-process kinds. The in-process trainer
+//! rejects them (it has no wire to fault).
 
 use crate::util::prng::{mix, Rng};
 
@@ -44,6 +54,27 @@ pub enum FaultKind {
     /// Revive a crashed replica, or live-append when the target index
     /// equals the current replica count.
     Join,
+    /// Sever the rank's TCP link to the hub once; the worker redials
+    /// and replays (wire-level, socket transport only).
+    NetDrop,
+    /// Stall the rank's wire activity by `ms` milliseconds before the
+    /// round's first collective (wire-level).
+    NetDelay { ms: u64 },
+    /// Sever the rank's link *and* keep it away for `secs` seconds
+    /// before redialling (wire-level). Must stay under the hub's
+    /// heartbeat eviction window for a value-neutral replay.
+    Partition { secs: f64 },
+}
+
+impl FaultKind {
+    /// True for the wire-level kinds consumed by the socket transport
+    /// driver rather than the in-process trainer.
+    pub fn is_net(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::NetDrop | FaultKind::NetDelay { .. } | FaultKind::Partition { .. }
+        )
+    }
 }
 
 /// One scheduled fault: `kind` applied to `replica` at the start of
@@ -85,9 +116,15 @@ impl FaultPlan {
     /// crash@ROUND:REPLICA+STEPS  crash STEPS inner steps into the round
     /// hang@ROUND:REPLICA:SECS    clock stall of SECS simulated seconds
     /// join@ROUND:REPLICA         revive (or live-append at index = N)
+    /// netdrop@ROUND:RANK         sever RANK's hub link once (wire)
+    /// netdelay@ROUND:RANK:MS     delay RANK's wire by MS ms (wire)
+    /// partition@ROUND:RANKS:SECS sever each of RANKS (a `+`-separated
+    ///                            set, e.g. `1+2`) for SECS seconds
     /// random:PAIRS[:ROUNDS]      PAIRS seeded crash+rejoin pairs drawn
     ///                            over the first ROUNDS rounds (default
     ///                            16), keyed on the run seed
+    /// random:PAIRS[:ROUNDS]:net  PAIRS seeded *wire* faults instead
+    ///                            (netdrop/netdelay/partition mix)
     /// ```
     ///
     /// `seed` keys the `random:` clause; `replicas` bounds its victims.
@@ -95,19 +132,36 @@ impl FaultPlan {
         let mut events = Vec::new();
         for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
             if let Some(rest) = clause.strip_prefix("random:") {
-                let mut it = rest.split(':');
+                let mut it = rest.split(':').peekable();
                 let pairs: usize = it
                     .next()
                     .and_then(|s| s.parse().ok())
                     .ok_or_else(|| format!("bad pair count in '{clause}'"))?;
-                let rounds: u64 = match it.next() {
-                    Some(s) => s.parse().map_err(|_| format!("bad round count in '{clause}'"))?,
-                    None => 16,
+                let rounds: u64 = match it.peek() {
+                    Some(&"net") | None => 16,
+                    Some(s) => {
+                        let r =
+                            s.parse().map_err(|_| format!("bad round count in '{clause}'"))?;
+                        it.next();
+                        r
+                    }
+                };
+                let net = match it.next() {
+                    Some("net") => true,
+                    Some(other) => {
+                        return Err(format!("trailing field '{other}' in '{clause}'"));
+                    }
+                    None => false,
                 };
                 if it.next().is_some() {
                     return Err(format!("trailing fields in '{clause}'"));
                 }
-                events.extend(Self::random(seed, replicas, rounds, pairs).events);
+                let generated = if net {
+                    Self::random_net(seed, replicas, rounds, pairs)
+                } else {
+                    Self::random(seed, replicas, rounds, pairs)
+                };
+                events.extend(generated.events);
                 continue;
             }
             let (kind, rest) = clause
@@ -169,6 +223,52 @@ impl FaultPlan {
                     }
                     events.push(FaultEvent { round, replica, kind: FaultKind::Join });
                 }
+                "netdrop" => {
+                    let replica: usize = replica_field
+                        .parse()
+                        .map_err(|_| format!("bad rank '{replica_field}' in '{clause}'"))?;
+                    if fields.next().is_some() {
+                        return Err(format!("trailing fields in '{clause}'"));
+                    }
+                    events.push(FaultEvent { round, replica, kind: FaultKind::NetDrop });
+                }
+                "netdelay" => {
+                    let replica: usize = replica_field
+                        .parse()
+                        .map_err(|_| format!("bad rank '{replica_field}' in '{clause}'"))?;
+                    let ms_field = fields
+                        .next()
+                        .ok_or_else(|| format!("missing milliseconds in '{clause}'"))?;
+                    let ms: u64 = ms_field
+                        .parse()
+                        .map_err(|_| format!("bad milliseconds '{ms_field}' in '{clause}'"))?;
+                    if fields.next().is_some() {
+                        return Err(format!("trailing fields in '{clause}'"));
+                    }
+                    events.push(FaultEvent { round, replica, kind: FaultKind::NetDelay { ms } });
+                }
+                "partition" => {
+                    // RANKS is a `+`-separated set: one event per rank.
+                    let secs_field = fields
+                        .next()
+                        .ok_or_else(|| format!("missing seconds in '{clause}'"))?;
+                    let secs: f64 = secs_field
+                        .parse()
+                        .map_err(|_| format!("bad seconds '{secs_field}' in '{clause}'"))?;
+                    if !(secs >= 0.0) || fields.next().is_some() {
+                        return Err(format!("bad partition clause '{clause}'"));
+                    }
+                    for rank in replica_field.split('+') {
+                        let replica: usize = rank
+                            .parse()
+                            .map_err(|_| format!("bad rank '{rank}' in '{clause}'"))?;
+                        events.push(FaultEvent {
+                            round,
+                            replica,
+                            kind: FaultKind::Partition { secs },
+                        });
+                    }
+                }
                 other => return Err(format!("unknown fault kind '{other}' in '{clause}'")),
             }
         }
@@ -209,6 +309,40 @@ impl FaultPlan {
         Self::new(events)
     }
 
+    /// Seeded *wire* faults for the chaos-multiproc CI leg: `pairs`
+    /// events cycling victims over ranks `1..replicas` (never 0),
+    /// each a netdrop, netdelay or short partition at a round drawn
+    /// from `[1, rounds)`. Delays stay in `[10, 160)` ms and partitions
+    /// under 0.7 s — comfortably inside the hub's heartbeat eviction
+    /// window, so reconnect + replay keeps the run value-neutral.
+    /// Pure function of `(seed, replicas, rounds, pairs)`.
+    pub fn random_net(seed: u64, replicas: usize, rounds: u64, pairs: usize) -> Self {
+        let mut events = Vec::new();
+        if replicas < 2 || rounds < 2 {
+            return Self::new(events);
+        }
+        let mut rng = Rng::new(mix(seed ^ 0x00FA_0175, 1));
+        for i in 0..pairs {
+            let victim = 1 + i % (replicas - 1);
+            let round = 1 + rng.below(rounds - 1);
+            let kind = match rng.below(3) {
+                0 => FaultKind::NetDrop,
+                1 => FaultKind::NetDelay { ms: 10 + rng.below(150) },
+                _ => FaultKind::Partition { secs: 0.1 + 0.1 * rng.below(6) as f64 },
+            };
+            events.push(FaultEvent { round, replica: victim, kind });
+        }
+        Self::new(events)
+    }
+
+    /// The wire-level events scheduled for `(round, rank)`, in spec
+    /// order — the per-round hook the socket driver consumes.
+    pub fn net_events_at(&self, round: u64, rank: usize) -> impl Iterator<Item = &FaultEvent> {
+        self.events
+            .iter()
+            .filter(move |e| e.round == round && e.replica == rank && e.kind.is_net())
+    }
+
     /// Human-readable one-line rendering (logs, CSV rows).
     pub fn describe(&self) -> String {
         let mut out = String::new();
@@ -227,6 +361,15 @@ impl FaultPlan {
                     out.push_str(&format!("hang@{}:{}:{}", e.round, e.replica, secs));
                 }
                 FaultKind::Join => out.push_str(&format!("join@{}:{}", e.round, e.replica)),
+                FaultKind::NetDrop => {
+                    out.push_str(&format!("netdrop@{}:{}", e.round, e.replica));
+                }
+                FaultKind::NetDelay { ms } => {
+                    out.push_str(&format!("netdelay@{}:{}:{}", e.round, e.replica, ms));
+                }
+                FaultKind::Partition { secs } => {
+                    out.push_str(&format!("partition@{}:{}:{}", e.round, e.replica, secs));
+                }
             }
         }
         out
@@ -335,5 +478,96 @@ mod tests {
         let p = FaultPlan::parse("crash@3:1+2,join@6:1,hang@2:0:4.5", 42, 4).unwrap();
         let q = FaultPlan::parse(&p.describe(), 42, 4).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn parses_net_clauses() {
+        let p =
+            FaultPlan::parse("netdrop@1:1, netdelay@2:0:250, partition@3:1+2:0.5", 42, 4).unwrap();
+        assert_eq!(p.events().len(), 4);
+        assert_eq!(p.events()[0], FaultEvent { round: 1, replica: 1, kind: FaultKind::NetDrop });
+        assert_eq!(p.events()[1], FaultEvent {
+            round: 2,
+            replica: 0,
+            kind: FaultKind::NetDelay { ms: 250 },
+        });
+        // The multi-rank partition set expands to one event per rank.
+        assert_eq!(p.events()[2], FaultEvent {
+            round: 3,
+            replica: 1,
+            kind: FaultKind::Partition { secs: 0.5 },
+        });
+        assert_eq!(p.events()[3], FaultEvent {
+            round: 3,
+            replica: 2,
+            kind: FaultKind::Partition { secs: 0.5 },
+        });
+        assert!(p.events().iter().all(|e| e.kind.is_net()));
+    }
+
+    #[test]
+    fn rejects_malformed_net_clauses() {
+        for bad in [
+            "netdrop@1",
+            "netdrop@1:1:9",
+            "netdelay@1:1",
+            "netdelay@1:1:x",
+            "partition@1:1",
+            "partition@1:1:-2",
+            "partition@1:1+x:0.5",
+            "random:2:net:9",
+            "random:2:16:net:x",
+        ] {
+            assert!(FaultPlan::parse(bad, 42, 4).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn net_describe_roundtrips_through_parse() {
+        let p = FaultPlan::parse("netdrop@1:1,netdelay@2:0:250,partition@3:1+2:0.5", 42, 4)
+            .unwrap();
+        let q = FaultPlan::parse(&p.describe(), 42, 4).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn random_net_is_seed_deterministic_and_spares_rank_zero() {
+        let a = FaultPlan::parse("random:4:net", 7, 3).unwrap();
+        let b = FaultPlan::random_net(7, 3, 16, 4);
+        assert_eq!(a, b, "CLI form must hit the same generator");
+        let c = FaultPlan::random_net(8, 3, 16, 4);
+        assert_ne!(a, c, "different seeds should differ");
+        assert_ne!(
+            FaultPlan::random(7, 3, 16, 4),
+            b,
+            "net stream must be decorrelated from the crash stream"
+        );
+        assert_eq!(a.events().len(), 4);
+        assert!(a.events().iter().all(|e| e.replica != 0));
+        assert!(a.events().iter().all(|e| e.kind.is_net()));
+        // Every delay/partition stays under the hub eviction window.
+        for e in a.events() {
+            match e.kind {
+                FaultKind::NetDelay { ms } => assert!(ms < 160),
+                FaultKind::Partition { secs } => assert!(secs < 0.7),
+                _ => {}
+            }
+        }
+        // Explicit-rounds form with the suffix also parses.
+        let d = FaultPlan::parse("random:4:8:net", 7, 3).unwrap();
+        assert_eq!(d, FaultPlan::random_net(7, 3, 8, 4));
+        assert!(d.events().iter().all(|e| e.round < 8));
+    }
+
+    #[test]
+    fn net_events_at_filters_round_and_rank() {
+        let p = FaultPlan::parse("netdrop@1:1,netdelay@1:1:20,crash@1:1,netdrop@2:1", 42, 4)
+            .unwrap();
+        let hits: Vec<_> = p.net_events_at(1, 1).collect();
+        assert_eq!(hits.len(), 2, "crash is not a net event");
+        assert_eq!(hits[0].kind, FaultKind::NetDrop);
+        assert_eq!(hits[1].kind, FaultKind::NetDelay { ms: 20 });
+        assert!(p.net_events_at(1, 0).next().is_none());
+        assert!(p.net_events_at(3, 1).next().is_none());
     }
 }

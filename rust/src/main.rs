@@ -71,6 +71,11 @@ fn usage() -> &'static str {
             --overlap (nonblocking layer-wise schedule, bitwise equal to
             blocking) — both paths print digest=0x... lines that must
             match bitwise at equal configs
+            --net-plan 'netdrop@R:N,netdelay@R:N:MS,partition@R:NS:SECS,
+            random:PAIRS:net' (wire-level chaos; digests must still match
+            a clean run) --checkpoint-every ROUNDS --checkpoint-dir DIR
+            --restore FILE.bin ({rank} in FILE expands to the assigned
+            rank; rejoins a fresh hub and replays bitwise)
   info:     [--model NAME]"
 }
 
@@ -435,12 +440,12 @@ fn cmd_rendezvous(args: &Args) -> Result<()> {
 /// anchor digest; at equal configs the lines must match exactly.
 fn cmd_worker(args: &Args) -> Result<()> {
     use edit_train::collectives::driver::{
-        run_local_group, run_worker, DriverConfig, DriverPayload,
+        run_local_group, run_worker_resumed, DriverConfig, DriverPayload, WorkerCheckpoint,
     };
     use edit_train::collectives::{Collective, ConnectOpts, SocketComm};
     let payload = args.str("payload", "f32");
     let d = DriverConfig::default();
-    let dcfg = DriverConfig {
+    let mut dcfg = DriverConfig {
         params: args.usize("params", d.params),
         rounds: args.usize("rounds", d.rounds),
         inner_steps: args.usize("inner-steps", d.inner_steps),
@@ -450,24 +455,63 @@ fn cmd_worker(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--payload: expected f32|int8, got '{payload}'"))?,
         modules: args.usize("modules", d.modules).max(1),
         overlap: args.flag("overlap"),
+        checkpoint_every: args.usize("checkpoint-every", 0),
+        checkpoint_dir: args.opt("checkpoint-dir").map(std::path::PathBuf::from),
         ..d
+    };
+    if let Some(dir) = &dcfg.checkpoint_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    // The wire-chaos plan needs the world size for `random:PAIRS:net`,
+    // so it is parsed per-branch once membership is known.
+    let parse_net_plan = |world: usize, seed: u64| -> Result<Option<FaultPlan>> {
+        args.opt("net-plan")
+            .map(|spec| {
+                FaultPlan::parse(spec, seed, world)
+                    .map_err(|e| anyhow::anyhow!("--net-plan: {e}"))
+            })
+            .transpose()
     };
 
     if let Some(addr) = args.opt("join") {
         let mut comm = SocketComm::connect(addr, ConnectOpts::default())
             .map_err(|e| anyhow::anyhow!("join {addr}: {e}"))?;
         let (rank, world) = (comm.rank(), comm.size());
+        if let Some(plan) = parse_net_plan(world, dcfg.seed)? {
+            dcfg.net_plan = plan;
+        }
+        let restored = match args.opt("restore") {
+            Some(tpl) => {
+                let path = tpl.replace("{rank}", &rank.to_string());
+                let ck = WorkerCheckpoint::load(std::path::Path::new(&path))
+                    .map_err(|e| anyhow::anyhow!("--restore {path}: {e}"))?;
+                ck.validate(&dcfg, rank, world)
+                    .map_err(|e| anyhow::anyhow!("--restore {path}: {e}"))?;
+                eprintln!("worker rank={rank} restored {path} (resuming at round {})", ck.round);
+                Some(ck)
+            }
+            None => None,
+        };
         eprintln!("worker rank={rank} world={world} joined {addr}");
-        let out = run_worker(&comm, &dcfg)?;
+        let out = run_worker_resumed(&comm, &dcfg, restored.as_ref())?;
         let stats = comm.wire_stats();
+        let world = comm.size(); // may have grown via mid-run joins
         comm.close();
         println!(
             "worker rank={rank} world={world} rounds={} digest={:#018x} evicted={:?} \
-             tx_bytes={} rx_bytes={}",
-            out.rounds_done, out.digest, out.evictions, stats.tx_bytes, stats.rx_bytes,
+             tx_bytes={} rx_bytes={} reconnects={}",
+            out.rounds_done,
+            out.digest,
+            out.evictions,
+            stats.tx_bytes,
+            stats.rx_bytes,
+            stats.reconnects,
         );
     } else {
         let world = args.usize("local", 2);
+        if let Some(plan) = parse_net_plan(world, dcfg.seed)? {
+            dcfg.net_plan = plan;
+        }
         let outs = run_local_group(world, &dcfg)?;
         for (rank, out) in outs.iter().enumerate() {
             println!(

@@ -1,0 +1,237 @@
+//! Adversarial-input property suite for the wire framing layer
+//! (`collectives::frame`): truncations at every byte boundary, random
+//! bit flips, oversized length fields, and arbitrary chunk splits. The
+//! contract under test is WIRE_PROTOCOL.md §2: a decoder facing corrupt
+//! or partial bytes returns `Err`/`None` — it never panics, never
+//! over-allocates from a forged length, and never loses the frame
+//! boundary on input that is merely *incomplete*.
+
+use std::io::{self, Read};
+
+use edit_train::collectives::frame::{
+    read_frame, read_frame_negotiating, write_frame, Frame, FrameBuffer, FrameKind,
+    PayloadReader, PayloadWriter, HEADER_LEN, MAX_PAYLOAD, PROTOCOL_VERSION, RANK_UNASSIGNED,
+};
+use edit_train::util::prng::Rng;
+
+/// A corpus covering every frame kind plus randomized payload shapes —
+/// the valid inputs the corruption tests start from.
+fn corpus(rng: &mut Rng) -> Vec<Frame> {
+    let mut frames = vec![
+        Frame::new(FrameKind::Hello, RANK_UNASSIGNED, 0, Vec::new()),
+        {
+            // Reconnect Hello: rank + generation + last-acked seq (§6.1).
+            let mut p = PayloadWriter::default();
+            p.u32(1).u64(3).u64(17);
+            Frame::new(FrameKind::Hello, 1, 3, p.finish())
+        },
+        {
+            // Welcome: rank + world + start_seq (§3.1, v2).
+            let mut p = PayloadWriter::default();
+            p.u32(2).u32(3).u64(9);
+            Frame::new(FrameKind::Welcome, 2, 1, p.finish())
+        },
+        {
+            // Contribute: op header + operand + shard table (§3.3).
+            let mut p = PayloadWriter::default();
+            p.u8(3).u64(5).f32s(&[1.5, -0.0, f32::NAN, f32::MIN_POSITIVE]).shards(&[
+                (0, 2),
+                (2, 2),
+            ]);
+            Frame::new(FrameKind::Contribute, 0, 2, p.finish())
+        },
+        {
+            // Error: seq + code + rank + message (§3.5).
+            let mut p = PayloadWriter::default();
+            p.u64(7).u8(1).u32(2).text("peer 2 evicted");
+            Frame::new(FrameKind::Error, RANK_UNASSIGNED, 2, p.finish())
+        },
+        Frame::new(FrameKind::Heartbeat, 0, 1, Vec::new()),
+        Frame::new(FrameKind::Goodbye, 1, 1, Vec::new()),
+        Frame::new(FrameKind::Shutdown, RANK_UNASSIGNED, 4, Vec::new()),
+    ];
+    for _ in 0..8 {
+        let len = rng.range(0, 2000);
+        let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let kinds = [FrameKind::Contribute, FrameKind::Result, FrameKind::Welcome];
+        let kind = kinds[rng.range(0, kinds.len())];
+        frames.push(Frame::new(kind, rng.below(4) as u32, rng.below(5), payload));
+    }
+    frames
+}
+
+fn encode(frame: &Frame) -> Vec<u8> {
+    let mut wire = Vec::new();
+    write_frame(&mut wire, frame).unwrap();
+    wire
+}
+
+#[test]
+fn truncation_at_every_boundary_is_an_error_not_a_panic() {
+    let mut rng = Rng::new(0xF5A3);
+    for frame in corpus(&mut rng) {
+        let wire = encode(&frame);
+        for cut in 0..wire.len() {
+            let prefix = &wire[..cut];
+            // Eager reader: a strict prefix can never parse completely.
+            assert!(
+                read_frame(&mut &prefix[..]).is_err(),
+                "prefix of {cut}/{} bytes parsed as a whole frame",
+                wire.len()
+            );
+            // Incremental assembler: a prefix is *incomplete*, not
+            // corrupt — it must stay parked at `None` awaiting bytes.
+            let mut fb = FrameBuffer::new();
+            fb.fill_from(&mut &prefix[..]).unwrap();
+            match fb.poll() {
+                Ok(None) => {}
+                Ok(Some(f)) => panic!("prefix of {cut} bytes yielded frame {:?}", f.1.kind),
+                Err(e) => panic!("prefix of {cut} bytes treated as corrupt: {e}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn random_bit_flips_never_panic_or_hang() {
+    let mut rng = Rng::new(0xB17F);
+    for frame in corpus(&mut rng) {
+        let wire = encode(&frame);
+        for _ in 0..64 {
+            let mut bytes = wire.clone();
+            let at = rng.range(0, bytes.len());
+            bytes[at] ^= 1 << rng.below(8);
+            // Any outcome is fine except a panic: a flip may land in the
+            // payload (frame still decodes, different bytes), the magic/
+            // kind/version/length (error), or an opcode (caller's
+            // PayloadReader rejects it later).
+            let _ = read_frame(&mut bytes.as_slice());
+            let _ = read_frame_negotiating(&mut bytes.as_slice());
+            let mut fb = FrameBuffer::new();
+            fb.fill_from(&mut bytes.as_slice()).unwrap();
+            let _ = fb.poll();
+        }
+    }
+}
+
+#[test]
+fn forged_length_fields_fail_before_allocating() {
+    // A corrupt length must be rejected by the MAX_PAYLOAD bound (or, if
+    // within the bound but past the bytes on hand, surface as truncation
+    // / remain incomplete) — never become a giant allocation.
+    for forged in [MAX_PAYLOAD + 1, u32::MAX as usize, (1 << 31) + 5] {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(b"EDTF");
+        wire.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        wire.push(FrameKind::Contribute as u8);
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&0u64.to_le_bytes());
+        wire.extend_from_slice(&(forged as u32).to_le_bytes());
+        wire.extend_from_slice(&[0u8; 16]);
+        assert!(read_frame(&mut wire.as_slice()).is_err(), "len={forged} accepted");
+        let mut fb = FrameBuffer::new();
+        fb.fill_from(&mut wire.as_slice()).unwrap();
+        assert!(fb.poll().is_err(), "len={forged} accepted by FrameBuffer");
+    }
+    // In-bound length with missing bytes: eager read errors (the stream
+    // ended), incremental stays incomplete.
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &Frame::new(FrameKind::Result, 0, 1, vec![0u8; 64])).unwrap();
+    wire.truncate(HEADER_LEN + 10);
+    assert!(read_frame(&mut wire.as_slice()).is_err());
+    let mut fb = FrameBuffer::new();
+    fb.fill_from(&mut wire.as_slice()).unwrap();
+    assert!(matches!(fb.poll(), Ok(None)));
+}
+
+#[test]
+fn payload_reader_fuzz_never_panics() {
+    let mut rng = Rng::new(0x9EAD);
+    for _ in 0..400 {
+        let len = rng.range(0, 64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let mut r = PayloadReader::new(&bytes);
+        for _ in 0..12 {
+            match rng.below(7) {
+                0 => {
+                    let _ = r.u8();
+                }
+                1 => {
+                    let _ = r.u32();
+                }
+                2 => {
+                    let _ = r.u64();
+                }
+                3 => {
+                    let _ = r.f32s();
+                }
+                4 => {
+                    let _ = r.i8s();
+                }
+                5 => {
+                    let _ = r.shards();
+                }
+                _ => {
+                    let _ = r.text();
+                }
+            }
+        }
+    }
+    // Forged element counts with a near-empty tail: every counted
+    // accessor must fail as truncation instead of reserving count*size.
+    let mut p = PayloadWriter::default();
+    p.u32(u32::MAX);
+    let forged = p.finish();
+    assert!(PayloadReader::new(&forged).f32s().is_err());
+    assert!(PayloadReader::new(&forged).i8s().is_err());
+    assert!(PayloadReader::new(&forged).shards().is_err());
+}
+
+/// `Read` adapter yielding the stream in random-sized chunks — models a
+/// TCP socket handing back arbitrary segment boundaries.
+struct Chunker<'a> {
+    data: &'a [u8],
+    pos: usize,
+    rng: Rng,
+}
+
+impl Read for Chunker<'_> {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let max = (self.data.len() - self.pos).min(out.len()).max(1);
+        let n = self.rng.range(1, max + 1);
+        out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn frame_buffer_reassembles_bitwise_across_any_chunking() {
+    let mut rng = Rng::new(0xC4A2);
+    let frames = corpus(&mut rng);
+    let mut stream = Vec::new();
+    for f in &frames {
+        write_frame(&mut stream, f).unwrap();
+    }
+    for trial in 0..20u64 {
+        let mut src = Chunker { data: &stream, pos: 0, rng: Rng::new(0x51D0 ^ trial) };
+        let mut fb = FrameBuffer::new();
+        let mut got = Vec::new();
+        loop {
+            while let Some((version, frame)) = fb.poll().unwrap() {
+                assert_eq!(version, PROTOCOL_VERSION);
+                got.push(frame);
+            }
+            if fb.fill_from(&mut src).unwrap() == 0 {
+                break;
+            }
+        }
+        while let Some((_, frame)) = fb.poll().unwrap() {
+            got.push(frame);
+        }
+        assert_eq!(got, frames, "trial {trial}: reassembly diverged");
+    }
+}

@@ -170,6 +170,47 @@ fn dropped_handle_neither_deadlocks_nor_leaks_a_slot() {
 }
 
 #[test]
+fn evicted_peer_pending_pipelined_ops_drain_deterministically() {
+    // Heartbeat/dead-peer detection × pipelining: rank 2 contributes to
+    // the first 3 pipelined ops, then dies abruptly with 3 more already
+    // issued by the survivors. The hub must (a) finish the fully
+    // contributed ops over all three ranks, (b) hold the tail open
+    // through the reconnect grace window (answering its op-timeout
+    // nudges, which the clients meet by re-sending the same seq), and
+    // (c) on eviction drain the victim's pending ops front-first over
+    // the survivors — so both survivors see means over 3 ranks for the
+    // first batch and means over 2 for the tail, bitwise.
+    const OPS: usize = 6;
+    const K: usize = 3; // ops rank 2 contributes to before dying
+    let outs = run_socket_group(3, |c: &mut SocketComm| {
+        let rank = c.rank();
+        c.try_barrier(T).unwrap();
+        let issued = if rank == 2 { K } else { OPS };
+        let handles: Vec<_> = (0..issued)
+            .map(|i| c.start_all_reduce_mean(vec![(rank * 2 + i) as f32; 11], T))
+            .collect();
+        let got: Vec<f32> =
+            handles.into_iter().map(|h| c.wait_handle(h).unwrap()[0]).collect();
+        if rank == 2 {
+            c.kill();
+        }
+        got
+    });
+    for i in 0..K {
+        // Ranks contribute r*2 + i; all three folded, mean = (6+3i)/3.
+        let want = (6 + 3 * i) as f32 / 3.0;
+        assert_eq!(outs[0][i].to_bits(), want.to_bits(), "op {i}: full fold");
+        assert_eq!(outs[2][i].to_bits(), want.to_bits(), "op {i}: on the victim");
+    }
+    for i in K..OPS {
+        // Only ranks 0 and 1 remain: mean = (2+2i)/2.
+        let want = (2 + 2 * i) as f32 / 2.0;
+        assert_eq!(outs[0][i].to_bits(), want.to_bits(), "op {i}: survivor fold");
+    }
+    assert_eq!(outs[0], outs[1], "survivors must agree bitwise");
+}
+
+#[test]
 fn overlapped_driver_schedule_matches_blocking_on_both_backends() {
     // The end-to-end tentpole property over the real wire: a 4-module
     // overlapped EDiT run (pipelined frames in flight while the next

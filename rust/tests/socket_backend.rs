@@ -12,11 +12,13 @@
 use std::time::Duration;
 
 use edit_train::collectives::driver::{
-    run_local_group, run_worker, DriverConfig, DriverPayload,
+    run_local_group, run_worker, run_worker_resumed, DriverConfig, DriverPayload,
+    WorkerCheckpoint,
 };
 use edit_train::collectives::{
     Collective, ConnectOpts, Rendezvous, RendezvousConfig, SocketComm, ThreadComm,
 };
+use edit_train::fault::FaultPlan;
 use edit_train::tensor::{ShardSpec, QUANT_CHUNK};
 
 const T: Duration = Duration::from_secs(10);
@@ -240,6 +242,122 @@ fn int8_payload_keeps_wire_ratio_on_real_frames() {
             "rank {rank}: f32 {f32_tx} B vs int8 {q8_tx} B = {ratio:.2}x < 3.5x"
         );
     }
+}
+
+#[test]
+fn netdrop_reconnect_digest_matches_clean_reference() {
+    // The tentpole acceptance property: a seeded wire-chaos plan (rank 1
+    // loses its link at round 1, rank 0 stalls 30ms at round 2) must
+    // leave the final anchor bitwise identical to the uninterrupted
+    // in-process reference — the drop is absorbed by reconnect + seq
+    // replay, never by changing the numerics.
+    let clean = DriverConfig { params: 257, rounds: 4, ..Default::default() };
+    let reference = run_local_group(2, &clean).unwrap();
+    let plan = FaultPlan::parse("netdrop@1:1,netdelay@2:0:30", clean.seed, 2).unwrap();
+    let chaotic = DriverConfig { net_plan: plan, ..clean.clone() };
+    let outs = run_socket_group(2, |c: &mut SocketComm| {
+        let out = run_worker(&*c, &chaotic).unwrap();
+        (out, c.wire_stats().reconnects)
+    });
+    assert_eq!(outs[0].0.anchor, outs[1].0.anchor, "ranks disagree after chaos");
+    assert_eq!(
+        outs[0].0.digest, reference[0].digest,
+        "chaos must not change the digest"
+    );
+    assert!(outs[1].1 >= 1, "rank 1 never exercised the reconnect path");
+}
+
+#[test]
+fn late_joiner_participates_from_next_round() {
+    // Two founders start a world=2 run; a third worker dials in mid-run.
+    // The hub parks it in the lobby, admits it at the next fresh round
+    // barrier, and the driver's join-sync broadcast hands it the round
+    // counter + anchor. Delay events at rounds 2 and 3 stretch the run
+    // so the joiner reliably lands mid-run.
+    let cfg = DriverConfig { params: 64, rounds: 8, ..Default::default() };
+    let plan = FaultPlan::parse(
+        "netdelay@2:0:150,netdelay@2:1:150,netdelay@3:0:150,netdelay@3:1:150",
+        cfg.seed,
+        2,
+    )
+    .unwrap();
+    let founders = DriverConfig { net_plan: plan, ..cfg.clone() };
+
+    let hub = Rendezvous::bind(
+        "127.0.0.1:0",
+        RendezvousConfig { world: 2, ..Default::default() },
+    )
+    .unwrap();
+    let addr = hub.addr().to_string();
+    let (outs, joiner) = std::thread::scope(|s| {
+        let fh: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                let cfg = &founders;
+                s.spawn(move || {
+                    let comm = SocketComm::connect(&addr, ConnectOpts::default()).unwrap();
+                    let out = run_worker(&comm, cfg).unwrap();
+                    comm.close();
+                    out
+                })
+            })
+            .collect();
+        let jh = {
+            let addr = addr.clone();
+            let cfg = &cfg;
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(200));
+                let comm = SocketComm::connect(&addr, ConnectOpts::default()).unwrap();
+                assert!(comm.late_joiner(), "expected admission as a late joiner");
+                let out = run_worker(&comm, cfg).unwrap();
+                comm.close();
+                out
+            })
+        };
+        let outs: Vec<_> = fh.into_iter().map(|h| h.join().unwrap()).collect();
+        (outs, jh.join().unwrap())
+    });
+    assert_eq!(outs[0].anchor, outs[1].anchor, "founders disagree");
+    assert_eq!(joiner.anchor, outs[0].anchor, "joiner must end on the group's anchor");
+    assert!(
+        joiner.rounds_done >= 1 && joiner.rounds_done < cfg.rounds,
+        "joiner should run a strict mid-run suffix, ran {} of {} rounds",
+        joiner.rounds_done,
+        cfg.rounds,
+    );
+}
+
+#[test]
+fn kill_and_restore_replays_bitwise_over_sockets() {
+    // Round-boundary checkpoint at round 3, then a brand-new hub and
+    // restored workers finishing rounds 3..5: the final digest must be
+    // bitwise identical to an uninterrupted 5-round reference.
+    let dir = std::env::temp_dir().join(format!("edit-sock-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let clean = DriverConfig { params: 257, rounds: 5, ..Default::default() };
+    let reference = run_local_group(2, &clean).unwrap();
+
+    let phase1 = DriverConfig {
+        rounds: 3,
+        checkpoint_every: 3,
+        checkpoint_dir: Some(dir.clone()),
+        ..clean.clone()
+    };
+    run_socket_group(2, |c: &mut SocketComm| run_worker(&*c, &phase1).unwrap());
+
+    let outs = run_socket_group(2, |c: &mut SocketComm| {
+        let path = dir.join(format!("ckpt-rank{}-round3.bin", c.rank()));
+        let ck = WorkerCheckpoint::load(&path).unwrap();
+        ck.validate(&clean, c.rank(), c.size()).unwrap();
+        run_worker_resumed(&*c, &clean, Some(&ck)).unwrap()
+    });
+    assert_eq!(outs[0].anchor, outs[1].anchor, "restored ranks disagree");
+    assert_eq!(
+        outs[0].digest, reference[0].digest,
+        "restored run must replay bitwise"
+    );
+    assert_eq!(outs[0].rounds_done, 2);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

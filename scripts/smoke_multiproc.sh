@@ -107,6 +107,118 @@ for mode in blocking overlapped; do
 done
 done
 
+# Start a hub on an ephemeral port, logging into $1/hub.log; sets
+# `addr` and `hub_pid`.
+start_hub() {
+    "$BIN" rendezvous --bind 127.0.0.1:0 --world 2 >"$1/hub.log" 2>&1 &
+    hub_pid=$!
+    PIDS+=("$hub_pid")
+    addr=""
+    for _ in $(seq 1 200); do
+        addr=$(sed -n 's/^rendezvous listening on \([^ ]*\).*/\1/p' "$1/hub.log" | head -n1)
+        [[ -n "$addr" ]] && break
+        if ! kill -0 "$hub_pid" 2>/dev/null; then
+            echo "smoke_multiproc: hub died before binding ($1)" >&2
+            cat "$1/hub.log" >&2
+            exit 1
+        fi
+        sleep 0.05
+    done
+    if [[ -z "$addr" ]]; then
+        echo "smoke_multiproc: hub never printed its address ($1)" >&2
+        exit 1
+    fi
+}
+
+# ---------------------------------------------------------------------------
+# Chaos leg: the same 2-process run under a seeded wire-fault plan —
+# rank 1 loses its TCP link at round 1 (reconnect + same-seq replay,
+# WIRE_PROTOCOL.md §6) and rank 0 stalls 30ms at round 2. The final
+# digest must STILL be bitwise identical to the clean in-process
+# reference: chaos may cost wall-clock, never bits.
+# ---------------------------------------------------------------------------
+out="$WORKDIR/chaos"
+mkdir -p "$out"
+plan='netdrop@1:1,netdelay@2:0:30'
+start_hub "$out"
+"$BIN" worker --join "$addr" --rounds 4 --net-plan "$plan" >"$out/w0.log" 2>&1 &
+w0=$!
+PIDS+=("$w0")
+"$BIN" worker --join "$addr" --rounds 4 --net-plan "$plan" >"$out/w1.log" 2>&1 &
+w1=$!
+PIDS+=("$w1")
+for pid in "$w0" "$w1" "$hub_pid"; do
+    if ! wait "$pid"; then
+        echo "smoke_multiproc: pid $pid exited non-zero (chaos)" >&2
+        tail -v -n +1 "$out"/*.log >&2
+        exit 1
+    fi
+done
+"$BIN" worker --local 2 --rounds 4 >"$out/local.log" 2>&1
+sock0=$(grep -o 'digest=0x[0-9a-f]*' "$out/w0.log" | head -n1)
+sock1=$(grep -o 'digest=0x[0-9a-f]*' "$out/w1.log" | head -n1)
+ref=$(grep -o 'digest=0x[0-9a-f]*' "$out/local.log" | sort -u)
+if [[ $(wc -l <<<"$ref") -ne 1 || -z "$sock0" || "$sock0" != "$ref" || "$sock1" != "$ref" ]]; then
+    echo "smoke_multiproc: chaos digests diverge: sock0=$sock0 sock1=$sock1 local=$ref" >&2
+    tail -v -n +1 "$out"/*.log >&2
+    fail=1
+elif ! grep -qh 'reconnects=[1-9]' "$out/w0.log" "$out/w1.log"; then
+    echo "smoke_multiproc: chaos run never exercised the reconnect path" >&2
+    tail -v -n +1 "$out"/*.log >&2
+    fail=1
+else
+    echo "smoke_multiproc: chaos OK — netdrop+reconnect run == clean in-process reference ($ref)"
+fi
+
+# ---------------------------------------------------------------------------
+# Restore leg: run 3 of 5 rounds with round-boundary checkpoints, kill
+# the world (processes exit), then restore both ranks against a brand
+# new hub and finish rounds 3..5. The digest must equal the clean
+# uninterrupted 5-round reference — kill + restore replays bitwise.
+# ---------------------------------------------------------------------------
+out="$WORKDIR/restore"
+mkdir -p "$out/ckpt"
+start_hub "$out"
+p1_pids=()
+for i in 0 1; do
+    "$BIN" worker --join "$addr" --rounds 3 --checkpoint-every 3 \
+        --checkpoint-dir "$out/ckpt" >"$out/p1-w$i.log" 2>&1 &
+    p1_pids+=("$!")
+    PIDS+=("$!")
+done
+for pid in "${p1_pids[@]}" "$hub_pid"; do
+    if ! wait "$pid"; then
+        echo "smoke_multiproc: restore phase-1 pid $pid failed" >&2
+        tail -v -n +1 "$out"/*.log >&2
+        exit 1
+    fi
+done
+start_hub "$out"
+p2_pids=()
+for i in 0 1; do
+    "$BIN" worker --join "$addr" --rounds 5 \
+        --restore "$out/ckpt/ckpt-rank{rank}-round3.bin" >"$out/p2-w$i.log" 2>&1 &
+    p2_pids+=("$!")
+    PIDS+=("$!")
+done
+for pid in "${p2_pids[@]}" "$hub_pid"; do
+    if ! wait "$pid"; then
+        echo "smoke_multiproc: restore phase-2 pid $pid failed" >&2
+        tail -v -n +1 "$out"/*.log >&2
+        exit 1
+    fi
+done
+"$BIN" worker --local 2 --rounds 5 >"$out/local.log" 2>&1
+res=$(grep -h -o 'digest=0x[0-9a-f]*' "$out/p2-w0.log" "$out/p2-w1.log" | sort -u)
+ref=$(grep -o 'digest=0x[0-9a-f]*' "$out/local.log" | sort -u)
+if [[ $(wc -l <<<"$res") -ne 1 || $(wc -l <<<"$ref") -ne 1 || "$res" != "$ref" ]]; then
+    echo "smoke_multiproc: restore digests diverge: restored=$res local=$ref" >&2
+    tail -v -n +1 "$out"/*.log >&2
+    fail=1
+else
+    echo "smoke_multiproc: restore OK — kill at round 3 + restore replays bitwise ($ref)"
+fi
+
 if [[ "$fail" -ne 0 ]]; then
     echo "smoke_multiproc: FAILED — socket backend diverges from ThreadComm" >&2
     exit 1
